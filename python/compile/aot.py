@@ -1,0 +1,229 @@
+"""AOT exporter: lower every L2 entry point to HLO *text* + write the
+artifact manifest the Rust runtime consumes.
+
+HLO text (not ``.serialize()``): jax ≥ 0.5 emits HloModuleProto with 64-bit
+instruction ids which the xla crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Usage:
+  python -m compile.aot --model test-8m --out-dir ../artifacts
+  python -m compile.aot --model tiny-124m --chunks 256,1024,4096 \
+      --prefill-chunk 256 --out-dir ../artifacts
+
+Artifacts land in ``<out-dir>/<model-name>/``:
+  manifest.json            — model spec + entry table (shapes, dtypes, meta)
+  <entry>.hlo.txt          — one XLA module per entry point
+
+Python runs ONLY here (build time); the Rust binary is self-contained once
+artifacts exist. `make artifacts` skips models whose manifest is newer than
+the python sources.
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+MANIFEST_VERSION = 1
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _io_entry(name, shape, dtype):
+    return {"name": name, "dtype": {jnp.float32: "f32", jnp.int32: "i32"}[dtype], "shape": list(shape)}
+
+
+def build_entries(spec: M.ModelSpec, chunks, prefill_chunk, block_k):
+    """Yield (entry_name, fn, input_descs, meta). input_descs drive both the
+    lowering specs and the manifest."""
+    h, hk, dh, d = spec.n_heads, spec.kv_heads, spec.d_head, spec.d_model
+    ff, vocab, smax = spec.d_ff, spec.vocab, spec.max_seq
+
+    entries = []
+
+    for T in chunks:
+        ins = [
+            ("valid", (1,), jnp.int32),
+            ("q", (h, dh), jnp.float32),
+            ("k", (T, hk, dh), jnp.float32),
+            ("v", (T, hk, dh), jnp.float32),
+        ]
+        bk = min(block_k, T)
+        fn = functools.partial(M.attn_partial, spec, bk)
+        entries.append((f"attn_partial_t{T}", fn, ins, {"chunk": T, "block_k": bk}))
+
+    if vocab > 0 and spec.d_ff > 0:
+        entries.append(
+            (
+                "embed",
+                functools.partial(M.embed, spec),
+                [("tok", (1,), jnp.int32), ("table", (vocab, d), jnp.float32)],
+                {},
+            )
+        )
+        entries.append(
+            (
+                "decode_qkv",
+                functools.partial(M.decode_qkv, spec),
+                [
+                    ("h", (d,), jnp.float32),
+                    ("pos", (1,), jnp.int32),
+                    ("gain", (d,), jnp.float32),
+                    ("wq", (d, h * dh), jnp.float32),
+                    ("wk", (d, hk * dh), jnp.float32),
+                    ("wv", (d, hk * dh), jnp.float32),
+                ],
+                {},
+            )
+        )
+        entries.append(
+            (
+                "decode_post",
+                functools.partial(M.decode_post, spec),
+                [
+                    ("h", (d,), jnp.float32),
+                    ("attn", (h * dh,), jnp.float32),
+                    ("wo", (h * dh, d), jnp.float32),
+                    ("gain2", (d,), jnp.float32),
+                    ("w1", (d, ff), jnp.float32),
+                    ("w3", (d, ff), jnp.float32),
+                    ("w2", (ff, d), jnp.float32),
+                ],
+                {},
+            )
+        )
+        entries.append(
+            (
+                "lm_head",
+                functools.partial(M.lm_head, spec),
+                [
+                    ("h", (d,), jnp.float32),
+                    ("gain", (d,), jnp.float32),
+                    ("w_out", (d, vocab), jnp.float32),
+                ],
+                {},
+            )
+        )
+        C = prefill_chunk
+        entries.append(
+            (
+                f"prefill_layer_c{C}",
+                functools.partial(M.prefill_layer, spec, min(128, C), block_k),
+                [
+                    ("h", (C, d), jnp.float32),
+                    ("past", (1,), jnp.int32),
+                    ("k_cache", (smax, hk, dh), jnp.float32),
+                    ("v_cache", (smax, hk, dh), jnp.float32),
+                    ("gain1", (d,), jnp.float32),
+                    ("wq", (d, h * dh), jnp.float32),
+                    ("wk", (d, hk * dh), jnp.float32),
+                    ("wv", (d, hk * dh), jnp.float32),
+                    ("wo", (h * dh, d), jnp.float32),
+                    ("gain2", (d,), jnp.float32),
+                    ("w1", (d, ff), jnp.float32),
+                    ("w3", (d, ff), jnp.float32),
+                    ("w2", (ff, d), jnp.float32),
+                ],
+                {"chunk": C, "smax": smax},
+            )
+        )
+
+    return entries
+
+
+def export_model(spec: M.ModelSpec, out_dir: str, chunks, prefill_chunk, block_k, verbose=True):
+    """Lower all entry points for `spec`; write HLO text + manifest.json."""
+    model_dir = os.path.join(out_dir, spec.name)
+    os.makedirs(model_dir, exist_ok=True)
+    manifest = {
+        "version": MANIFEST_VERSION,
+        "model": {
+            "name": spec.name,
+            "n_layers": spec.n_layers,
+            "d_model": spec.d_model,
+            "n_heads": spec.n_heads,
+            "kv_heads": spec.kv_heads,
+            "d_ff": spec.d_ff,
+            "vocab": spec.vocab,
+            "max_seq": spec.max_seq,
+            "rope_theta": spec.rope_theta,
+        },
+        "entries": {},
+    }
+    for name, fn, ins, meta in build_entries(spec, chunks, prefill_chunk, block_k):
+        arg_specs = [_spec(shape, dtype) for _, shape, dtype in ins]
+        lowered = jax.jit(fn).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(model_dir, fname), "w") as f:
+            f.write(text)
+        # output shapes from the lowered signature
+        outs = [
+            {"dtype": "f32" if s.dtype == jnp.float32 else "i32", "shape": list(s.shape)}
+            for s in jax.tree_util.tree_leaves(jax.eval_shape(fn, *arg_specs))
+        ]
+        manifest["entries"][name] = {
+            "file": fname,
+            "inputs": [_io_entry(n, s, t) for n, s, t in ins],
+            "outputs": outs,
+            "meta": meta,
+        }
+        if verbose:
+            print(f"  {spec.name}/{name}: {len(text)} chars, {len(ins)} in / {len(outs)} out")
+    with open(os.path.join(model_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    if verbose:
+        print(f"wrote {model_dir}/manifest.json ({len(manifest['entries'])} entries)")
+    return manifest
+
+
+def default_chunks(spec: M.ModelSpec):
+    """Chunk-size ladder for attn_partial: powers of 4 up to max_seq."""
+    out = []
+    t = 128
+    while t < spec.max_seq:
+        out.append(t)
+        t *= 4
+    out.append(spec.max_seq)
+    return sorted(set(out))
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--model", default="test-8m", choices=sorted(M.PRESETS))
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--chunks", default=None, help="comma-separated attn chunk sizes")
+    ap.add_argument("--prefill-chunk", type=int, default=128)
+    ap.add_argument("--block-k", type=int, default=128)
+    args = ap.parse_args()
+
+    spec = M.PRESETS[args.model]
+    chunks = (
+        [int(c) for c in args.chunks.split(",")] if args.chunks else default_chunks(spec)
+    )
+    for c in chunks:
+        if c % min(args.block_k, c) != 0:
+            raise SystemExit(f"chunk {c} not a multiple of block_k")
+    export_model(spec, args.out_dir, chunks, args.prefill_chunk, args.block_k)
+
+
+if __name__ == "__main__":
+    main()

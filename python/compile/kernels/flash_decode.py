@@ -1,0 +1,163 @@
+"""L1 Pallas kernel: single-query flash-decode attention over a KV chunk.
+
+This is the per-device kernel of the paper's Algorithm 3 — the local
+Flash-Attention-2 computation that produces the partial output ``o`` and the
+log-sum-exp ``lse`` which Tree Attention then AllReduces across devices.
+
+TPU-shaped design (see DESIGN.md §Hardware-Adaptation):
+  * the grid streams the KV chunk HBM→VMEM one ``(block_k, kv_heads, d_head)``
+    tile per step (``BlockSpec`` index map = the paper's CUDA thread-block
+    tiling);
+  * running ``m`` (max), ``l`` (denominator) and ``acc`` (numerator) live in
+    VMEM scratch and are carried across grid steps — the online-softmax
+    recurrence of Rabe & Staats / FA2;
+  * decode is a GEMV (memory-bound), so the kernel's job is VMEM residency,
+    not MXU occupancy; all math is vector-unit element-wise plus small
+    contractions.
+  * a ``valid`` scalar masks the tail so ONE compiled chunk size serves any
+    ragged shard length (the coordinator pads to the artifact's ``T``).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel is lowered to plain HLO; real-TPU performance is
+estimated analytically in DESIGN.md.
+"""
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_K = 128
+
+
+def _flash_decode_kernel(
+    valid_ref,
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    lse_ref,
+    m_scr,
+    l_scr,
+    acc_scr,
+    *,
+    block_k: int,
+    n_heads: int,
+    kv_heads: int,
+    d_head: int,
+    scale: float,
+):
+    """One grid step: fold KV tile ``i`` into the online-softmax state."""
+    i = pl.program_id(0)
+    g = n_heads // kv_heads
+
+    @pl.when(i == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, -jnp.inf)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # q: [n_heads, d_head] viewed as [kv_heads, group, d_head] for GQA.
+    q = q_ref[...].reshape(kv_heads, g, d_head) * scale
+    k = k_ref[...]  # [block_k, kv_heads, d_head]
+    v = v_ref[...]
+
+    # scores s[h, g, t] = q[h, g, :] · k[t, h, :]
+    s = jnp.einsum("hgd,thd->hgt", q, k, preferred_element_type=jnp.float32)
+
+    # Valid-length mask over the global token index.
+    idx = i * block_k + jax.lax.broadcasted_iota(jnp.int32, (1, 1, block_k), 2)
+    s = jnp.where(idx < valid_ref[0], s, -jnp.inf)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    # Correction factor exp(m_prev - m_new); guard -inf (empty) states.
+    corr = jnp.where(m_prev == -jnp.inf, 0.0, jnp.exp(m_prev - m_new))
+    corr = jnp.where(m_new == -jnp.inf, 1.0, corr)
+    p = jnp.where(s == -jnp.inf, 0.0, jnp.exp(s - m_new[..., None]))
+
+    l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1)
+    acc_scr[...] = acc_scr[...] * corr[..., None] + jnp.einsum(
+        "hgt,thd->hgd", p, v, preferred_element_type=jnp.float32
+    )
+    m_scr[...] = m_new
+
+    @pl.when(i == pl.num_programs(0) - 1)
+    def _finalize():
+        l = l_scr[...]
+        o_ref[...] = (acc_scr[...] / l[..., None]).reshape(n_heads, d_head)
+        lse_ref[...] = (m_scr[...] + jnp.log(l)).reshape(n_heads)
+
+
+def flash_decode(q, k, v, valid, *, block_k: int = DEFAULT_BLOCK_K, scale=None):
+    """Flash-decode a single query against a KV chunk.
+
+    Args:
+      q:     ``[n_heads, d_head]`` f32 query (one token).
+      k, v:  ``[T, kv_heads, d_head]`` f32 KV chunk, ``T % block_k == 0``.
+      valid: ``[1]`` i32 — number of leading tokens that are real; the rest
+             of the (padded) chunk is masked out.
+      block_k: KV tile length per grid step.
+      scale: logit scale; defaults to ``1/sqrt(d_head)``.
+
+    Returns:
+      ``(o, lse)`` with ``o: [n_heads, d_head]`` the locally-normalized
+      output and ``lse: [n_heads]`` the log-sum-exp of the (scaled) logits —
+      exactly the pair Algorithm 3 needs per shard.
+    """
+    T, kv_heads, d_head = k.shape
+    n_heads = q.shape[0]
+    if T % block_k != 0:
+        raise ValueError(f"chunk length {T} not a multiple of block_k {block_k}")
+    if n_heads % kv_heads != 0:
+        raise ValueError(f"n_heads {n_heads} not divisible by kv_heads {kv_heads}")
+    if scale is None:
+        scale = 1.0 / math.sqrt(d_head)
+    g = n_heads // kv_heads
+
+    kernel = functools.partial(
+        _flash_decode_kernel,
+        block_k=block_k,
+        n_heads=n_heads,
+        kv_heads=kv_heads,
+        d_head=d_head,
+        scale=float(scale),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(T // block_k,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((n_heads, d_head), lambda i: (0, 0)),
+            pl.BlockSpec((block_k, kv_heads, d_head), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_k, kv_heads, d_head), lambda i: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((n_heads, d_head), lambda i: (0, 0)),
+            pl.BlockSpec((n_heads,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_heads, d_head), jnp.float32),
+            jax.ShapeDtypeStruct((n_heads,), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((kv_heads, g), jnp.float32),
+            pltpu.VMEM((kv_heads, g), jnp.float32),
+            pltpu.VMEM((kv_heads, g, d_head), jnp.float32),
+        ],
+        interpret=True,
+    )(valid, q, k, v)
+
+
+def vmem_bytes(block_k: int, n_heads: int, kv_heads: int, d_head: int) -> int:
+    """Estimated VMEM residency of one grid step (f32), used by the §Perf
+    structural analysis: KV tile + q + scratch state + score tile."""
+    g = n_heads // kv_heads
+    kv_tile = 2 * block_k * kv_heads * d_head
+    q_b = n_heads * d_head
+    scratch = 2 * kv_heads * g + kv_heads * g * d_head
+    scores = kv_heads * g * block_k
+    return 4 * (kv_tile + q_b + scratch + scores)

@@ -1,0 +1,142 @@
+"""L1 Pallas kernel: causal flash-attention for prefill chunks.
+
+Computes attention of ``C`` new queries (global positions
+``past_len .. past_len+C``) against a padded KV cache of capacity ``S``
+that already contains the new tokens' K/V at those positions. Causal
+masking: key ``j`` is visible to query ``i`` iff ``j <= past_len + i``;
+cache slots past ``past_len + C`` are masked implicitly by the same rule.
+
+2-D grid: outer over query tiles, inner over KV tiles (the FA2 loop
+structure); online-softmax state for the current query tile lives in VMEM
+scratch and is reset at the start of each KV sweep.
+"""
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+
+
+def _flash_prefill_kernel(
+    past_ref,
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    m_scr,
+    l_scr,
+    acc_scr,
+    *,
+    block_q: int,
+    block_k: int,
+    n_heads: int,
+    kv_heads: int,
+    d_head: int,
+    scale: float,
+):
+    qi = pl.program_id(0)
+    ki = pl.program_id(1)
+    g = n_heads // kv_heads
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, -jnp.inf)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # q tile: [block_q, n_heads, d_head] -> [block_q, kv_heads, g, d_head]
+    q = q_ref[...].reshape(block_q, kv_heads, g, d_head) * scale
+    k = k_ref[...]  # [block_k, kv_heads, d_head]
+    v = v_ref[...]
+
+    s = jnp.einsum("qhgd,thd->qhgt", q, k, preferred_element_type=jnp.float32)
+
+    # causal mask on global indices: key j visible iff j <= past + q_pos
+    q_pos = past_ref[0] + qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, 1, 1, 1), 0
+    )
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (1, 1, 1, block_k), 3)
+    s = jnp.where(k_pos <= q_pos, s, -jnp.inf)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    corr = jnp.where(m_prev == -jnp.inf, 0.0, jnp.exp(m_prev - m_new))
+    corr = jnp.where(m_new == -jnp.inf, 1.0, corr)
+    p = jnp.where(s == -jnp.inf, 0.0, jnp.exp(s - m_new[..., None]))
+
+    l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1)
+    acc_scr[...] = acc_scr[...] * corr[..., None] + jnp.einsum(
+        "qhgt,thd->qhgd", p, v, preferred_element_type=jnp.float32
+    )
+    m_scr[...] = m_new
+
+    @pl.when(ki == pl.num_programs(1) - 1)
+    def _finalize():
+        l = l_scr[...]
+        o_ref[...] = (acc_scr[...] / l[..., None]).reshape(block_q, n_heads, d_head)
+
+
+def flash_prefill(
+    q,
+    k,
+    v,
+    past_len,
+    *,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    scale=None,
+):
+    """Causal flash attention for a prefill chunk.
+
+    Args:
+      q:        ``[C, n_heads, d_head]`` queries for the new tokens.
+      k, v:     ``[S, kv_heads, d_head]`` padded cache (new tokens already
+                written at ``past_len..past_len+C``).
+      past_len: ``[1]`` i32 — tokens already in the cache before this chunk.
+
+    Returns:
+      ``[C, n_heads, d_head]`` attention outputs.
+    """
+    C, n_heads, d_head = q.shape
+    S, kv_heads, _ = k.shape
+    if C % block_q != 0:
+        raise ValueError(f"chunk {C} not a multiple of block_q {block_q}")
+    if S % block_k != 0:
+        raise ValueError(f"cache {S} not a multiple of block_k {block_k}")
+    if scale is None:
+        scale = 1.0 / math.sqrt(d_head)
+    g = n_heads // kv_heads
+
+    kernel = functools.partial(
+        _flash_prefill_kernel,
+        block_q=block_q,
+        block_k=block_k,
+        n_heads=n_heads,
+        kv_heads=kv_heads,
+        d_head=d_head,
+        scale=float(scale),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(C // block_q, S // block_k),
+        in_specs=[
+            pl.BlockSpec((1,), lambda qi, ki: (0,)),
+            pl.BlockSpec((block_q, n_heads, d_head), lambda qi, ki: (qi, 0, 0)),
+            pl.BlockSpec((block_k, kv_heads, d_head), lambda qi, ki: (ki, 0, 0)),
+            pl.BlockSpec((block_k, kv_heads, d_head), lambda qi, ki: (ki, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_q, n_heads, d_head), lambda qi, ki: (qi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((C, n_heads, d_head), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, kv_heads, g), jnp.float32),
+            pltpu.VMEM((block_q, kv_heads, g), jnp.float32),
+            pltpu.VMEM((block_q, kv_heads, g, d_head), jnp.float32),
+        ],
+        interpret=True,
+    )(past_len, q, k, v)

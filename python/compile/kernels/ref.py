@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for the Pallas kernels — the build-time correctness
+signal. Everything here is dense, unoptimized, and obviously-correct;
+pytest/hypothesis compares the kernels against these across shapes."""
+
+import math
+
+import jax.numpy as jnp
+
+
+def _expand_gqa(x, n_heads):
+    """[T, kv_heads, d] -> [T, n_heads, d] by repeating each KV head."""
+    kv_heads = x.shape[1]
+    assert n_heads % kv_heads == 0
+    return jnp.repeat(x, n_heads // kv_heads, axis=1)
+
+
+def ref_decode(q, k, v, valid, scale=None):
+    """Dense single-query attention with valid-length masking.
+
+    q: [n_heads, d_head]; k, v: [T, kv_heads, d_head]; valid: int.
+    Returns (o [n_heads, d_head], lse [n_heads]).
+    """
+    T, _, d_head = k.shape
+    n_heads = q.shape[0]
+    if scale is None:
+        scale = 1.0 / math.sqrt(d_head)
+    kk = _expand_gqa(k, n_heads)
+    vv = _expand_gqa(v, n_heads)
+    s = jnp.einsum("hd,thd->ht", q, kk) * scale
+    mask = jnp.arange(T)[None, :] < valid
+    s = jnp.where(mask, s, -jnp.inf)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("ht,thd->hd", p, vv) / l[:, None]
+    lse = m[:, 0] + jnp.log(l)
+    return o, lse
+
+
+def ref_prefill(q, k, v, past_len, scale=None):
+    """Dense causal attention for a prefill chunk.
+
+    q: [C, n_heads, d_head] at global positions past_len..past_len+C;
+    k, v: [S, kv_heads, d_head] padded cache. Returns [C, n_heads, d_head].
+    """
+    C, n_heads, d_head = q.shape
+    S = k.shape[0]
+    if scale is None:
+        scale = 1.0 / math.sqrt(d_head)
+    kk = _expand_gqa(k, n_heads)
+    vv = _expand_gqa(v, n_heads)
+    s = jnp.einsum("qhd,thd->qht", q, kk) * scale
+    q_pos = past_len + jnp.arange(C)[:, None, None]
+    k_pos = jnp.arange(S)[None, None, :]
+    s = jnp.where(k_pos <= q_pos, s, -jnp.inf)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1)
+    return jnp.einsum("qht,thd->qhd", p, vv) / l[..., None]
+
+
+def combine_partials(os, lses):
+    """Reference combine of per-chunk flash outputs — the operator Tree
+    Attention AllReduces. os: list of [h, d]; lses: list of [h]."""
+    m = jnp.stack(lses).max(axis=0)  # [h]
+    num = sum(o * jnp.exp(lse - m)[:, None] for o, lse in zip(os, lses))
+    den = sum(jnp.exp(lse - m) for lse in lses)
+    return num / den[:, None], m + jnp.log(den)

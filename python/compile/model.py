@@ -1,0 +1,248 @@
+"""L2: Llama-style transformer pieces in JAX, calling the L1 Pallas kernels.
+
+Everything here is a *pure function of arrays* so each entry point can be
+AOT-lowered once by ``aot.py`` and executed from the Rust coordinator via
+PJRT. Weights are ordinary arguments (uploaded once to device buffers by the
+Rust runtime and passed per call), so ONE compiled executable serves every
+layer.
+
+Architecture (mirrors Llama 3): RMSNorm → GQA attention with RoPE →
+residual → RMSNorm → SwiGLU MLP → residual; untied embedding / LM head.
+
+Entry-point contract (argument order matters — Rust passes positionally;
+``aot.py`` records it in the manifest):
+
+  attn_partial_t{T}: (valid i32[1], q f32[h,dh], k f32[T,hk,dh],
+                      v f32[T,hk,dh]) -> (o f32[h,dh], lse f32[h])
+  embed:             (tok i32[1], table f32[vocab,d]) -> (h f32[d],)
+  decode_qkv:        (h f32[d], pos i32[1], gain f32[d], wq f32[d,h*dh],
+                      wk f32[d,hk*dh], wv f32[d,hk*dh])
+                     -> (q f32[h,dh], k f32[hk,dh], v f32[hk,dh])   [roped]
+  decode_post:       (h f32[d], attn f32[h*dh], wo f32[h*dh,d], gain2 f32[d],
+                      w1 f32[d,ff], w3 f32[d,ff], w2 f32[ff,d]) -> (h' f32[d],)
+  lm_head:           (h f32[d], gain f32[d], w_out f32[d,vocab])
+                     -> (logits f32[vocab],)
+  prefill_layer_c{C}:(h f32[C,d], past i32[1], k_cache f32[S,hk,dh],
+                      v_cache f32[S,hk,dh], gain1, wq, wk, wv, wo, gain2,
+                      w1, w3, w2)
+                     -> (h' f32[C,d], k_new f32[C,hk,dh], v_new f32[C,hk,dh])
+"""
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.flash_decode import flash_decode
+from .kernels.flash_prefill import flash_prefill
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    """Mirrors rust `config::ModelSpec` (keep presets in sync)."""
+
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    kv_heads: int
+    d_ff: int
+    vocab: int
+    max_seq: int
+    rope_theta: float
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+
+PRESETS = {
+    "test-8m": ModelSpec("test-8m", 2, 256, 4, 2, 512, 1024, 2048, 1e4),
+    "tiny-124m": ModelSpec("tiny-124m", 12, 768, 12, 4, 2048, 32000, 8192, 1e4),
+}
+
+
+# ---- building blocks -------------------------------------------------------
+
+
+def rmsnorm(x, gain, eps=1e-5):
+    """RMS normalization over the last axis."""
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * gain
+
+
+def rope(x, pos, theta):
+    """Rotary position embedding, GPT-NeoX half-split convention.
+
+    x: [..., n, d_head]; pos: scalar or [...] broadcastable int positions.
+    """
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = jnp.asarray(pos, jnp.float32)[..., None] * freqs  # [..., half]
+    cos = jnp.cos(angles)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def swiglu(x, w1, w3, w2):
+    """SwiGLU MLP: (silu(x·w1) ⊙ (x·w3)) · w2."""
+    return (jax.nn.silu(x @ w1) * (x @ w3)) @ w2
+
+
+# ---- decode-path entry points ----------------------------------------------
+
+
+def attn_partial(spec: ModelSpec, block_k: int, valid, q, k, v):
+    """Per-shard flash-decode partial: the L1 kernel with the model's scale.
+    This is the computation every simulated GPU runs in Algorithm 3 step 2."""
+    scale = 1.0 / math.sqrt(spec.d_head)
+    o, lse = flash_decode(q, k, v, valid, block_k=block_k, scale=scale)
+    return o, lse
+
+
+def embed(spec: ModelSpec, tok, table):
+    """Token embedding lookup."""
+    return (jnp.take(table, tok[0], axis=0),)
+
+
+def decode_qkv(spec: ModelSpec, h, pos, gain, wq, wk, wv):
+    """Pre-attention half of a decode layer: RMSNorm, QKV projections, RoPE.
+    Returns roped q (all heads) and the new token's roped k plus v."""
+    dh = spec.d_head
+    x = rmsnorm(h, gain)
+    q = (x @ wq).reshape(spec.n_heads, dh)
+    k = (x @ wk).reshape(spec.kv_heads, dh)
+    v = (x @ wv).reshape(spec.kv_heads, dh)
+    p = pos[0]
+    q = rope(q[None, :, :], p, spec.rope_theta)[0]
+    k = rope(k[None, :, :], p, spec.rope_theta)[0]
+    return q, k, v
+
+
+def decode_post(spec: ModelSpec, h, attn, wo, gain2, w1, w3, w2):
+    """Post-attention half of a decode layer: output projection + residual,
+    then RMSNorm + SwiGLU MLP + residual."""
+    h = h + attn @ wo
+    h = h + swiglu(rmsnorm(h, gain2), w1, w3, w2)
+    return (h,)
+
+
+def lm_head(spec: ModelSpec, h, gain, w_out):
+    """Final RMSNorm + LM head projection to logits."""
+    return (rmsnorm(h, gain) @ w_out,)
+
+
+# ---- prefill entry point ----------------------------------------------------
+
+
+def prefill_layer(
+    spec: ModelSpec,
+    block_q: int,
+    block_k: int,
+    h,
+    past,
+    k_cache,
+    v_cache,
+    gain1,
+    wq,
+    wk,
+    wv,
+    wo,
+    gain2,
+    w1,
+    w3,
+    w2,
+):
+    """One full transformer layer over a prefill chunk of C tokens.
+
+    ``k_cache``/``v_cache`` are this layer's padded caches holding
+    ``past`` already-processed tokens; the new tokens' (roped) K/V are
+    written at ``past..past+C`` before the causal flash attention, and also
+    returned so the coordinator can shard them across workers.
+    """
+    C = h.shape[0]
+    dh = spec.d_head
+    p0 = past[0]
+    positions = p0 + jnp.arange(C)
+
+    x = rmsnorm(h, gain1)
+    q = (x @ wq).reshape(C, spec.n_heads, dh)
+    k_new = (x @ wk).reshape(C, spec.kv_heads, dh)
+    v_new = (x @ wv).reshape(C, spec.kv_heads, dh)
+    q = rope(q, positions, spec.rope_theta)
+    k_new = rope(k_new, positions, spec.rope_theta)
+
+    k_full = jax.lax.dynamic_update_slice(k_cache, k_new, (p0, 0, 0))
+    v_full = jax.lax.dynamic_update_slice(v_cache, v_new, (p0, 0, 0))
+
+    attn = flash_prefill(
+        q, k_full, v_full, past, block_q=block_q, block_k=block_k,
+        scale=1.0 / math.sqrt(dh),
+    )
+    h = h + attn.reshape(C, spec.n_heads * dh) @ wo
+    h = h + swiglu(rmsnorm(h, gain2), w1, w3, w2)
+    return h, k_new, v_new
+
+
+# ---- pure-jnp full-model reference (for python tests only) ------------------
+
+
+def ref_full_forward(spec: ModelSpec, weights: dict, tokens):
+    """Dense reference forward over a whole sequence; returns logits [T,vocab].
+    Used by pytest to validate the composed entry points; never exported."""
+    T = tokens.shape[0]
+    dh = spec.d_head
+    h = weights["embed"][tokens]  # [T, d]
+    positions = jnp.arange(T)
+    for i in range(spec.n_layers):
+        lw = weights[f"layer{i}"]
+        x = rmsnorm(h, lw["gain1"])
+        q = rope((x @ lw["wq"]).reshape(T, spec.n_heads, dh), positions, spec.rope_theta)
+        k = rope((x @ lw["wk"]).reshape(T, spec.kv_heads, dh), positions, spec.rope_theta)
+        v = (x @ lw["wv"]).reshape(T, spec.kv_heads, dh)
+        g = spec.n_heads // spec.kv_heads
+        kk = jnp.repeat(k, g, axis=1)
+        vv = jnp.repeat(v, g, axis=1)
+        s = jnp.einsum("qhd,thd->qht", q, kk) / math.sqrt(dh)
+        mask = jnp.arange(T)[None, None, :] <= jnp.arange(T)[:, None, None]
+        s = jnp.where(mask, s, -jnp.inf)
+        a = jax.nn.softmax(s, axis=-1)
+        attn = jnp.einsum("qht,thd->qhd", a, vv).reshape(T, spec.n_heads * dh)
+        h = h + attn @ lw["wo"]
+        h = h + swiglu(rmsnorm(h, lw["gain2"]), lw["w1"], lw["w3"], lw["w2"])
+    return rmsnorm(h, weights["final_gain"]) @ weights["head"]
+
+
+def init_weights(spec: ModelSpec, seed: int = 0):
+    """Seeded synthetic weights (normal / sqrt(fan_in)). Python tests use
+    these; the Rust coordinator generates its own with the same recipe but a
+    different RNG (weight values never need to match across layers)."""
+    key = jax.random.PRNGKey(seed)
+    dh = spec.d_head
+
+    def nrm(key, shape, fan_in):
+        return jax.random.normal(key, shape, jnp.float32) / math.sqrt(fan_in)
+
+    keys = jax.random.split(key, spec.n_layers + 3)
+    weights = {
+        "embed": nrm(keys[0], (spec.vocab, spec.d_model), spec.d_model) * math.sqrt(spec.d_model),
+        "head": nrm(keys[1], (spec.d_model, spec.vocab), spec.d_model),
+        "final_gain": jnp.ones(spec.d_model),
+    }
+    for i in range(spec.n_layers):
+        lk = jax.random.split(keys[i + 2], 7)
+        weights[f"layer{i}"] = {
+            "gain1": jnp.ones(spec.d_model),
+            "gain2": jnp.ones(spec.d_model),
+            "wq": nrm(lk[0], (spec.d_model, spec.n_heads * dh), spec.d_model),
+            "wk": nrm(lk[1], (spec.d_model, spec.kv_heads * dh), spec.d_model),
+            "wv": nrm(lk[2], (spec.d_model, spec.kv_heads * dh), spec.d_model),
+            "wo": nrm(lk[3], (spec.n_heads * dh, spec.d_model), spec.n_heads * dh),
+            "w1": nrm(lk[4], (spec.d_model, spec.d_ff), spec.d_model),
+            "w3": nrm(lk[5], (spec.d_model, spec.d_ff), spec.d_model),
+            "w2": nrm(lk[6], (spec.d_ff, spec.d_model), spec.d_ff),
+        }
+    return weights

@@ -1,0 +1,126 @@
+//! Micro-benchmarks of the L3 hot paths — the §Perf profiling harness:
+//!   * attn-combine operator throughput (the AllReduce ReduceOp),
+//!   * network-simulator transfer posting rate,
+//!   * collective schedule generation,
+//!   * oracle partial computation (per-token-chunk GEMV),
+//!   * PJRT attn_partial call overhead (if artifacts are built).
+//! Wall-clock host measurements; drives the optimization loop recorded in
+//! EXPERIMENTS.md §Perf.
+
+use tree_attention::attnmath::{partial_from_chunk, AttnCombineOp, AttnShape};
+use tree_attention::bench::{bench_fn, Table};
+use tree_attention::collectives::{ring_allreduce_schedule, two_level_allreduce_schedule, ReduceOp};
+use tree_attention::netsim::NetSim;
+use tree_attention::util::{fmt_bytes, fmt_secs, Rng};
+use tree_attention::Topology;
+
+fn main() {
+    let mut table = Table::new("L3 hot-path micro-benchmarks", &["bench", "per iter", "throughput"]);
+
+    // -- attn combine op ----------------------------------------------------
+    let op = AttnCombineOp { d_head: 128 };
+    let blocks = 1024; // 1024 (b,h) blocks of 130 floats
+    let mut rng = Rng::seed(1);
+    let mut acc = rng.normal_vec(blocks * 130, 1.0);
+    let other = rng.normal_vec(blocks * 130, 1.0);
+    let r = bench_fn("attn_combine", 3, 10, 50, || {
+        op.combine(&mut acc, &other);
+    });
+    let bytes_per_iter = (blocks * 130 * 4) as f64;
+    table.row(vec![
+        "attn_combine (1024 blocks, dh=128)".into(),
+        fmt_secs(r.per_iter()),
+        format!("{}/s", fmt_bytes(r.throughput(bytes_per_iter) as u64)),
+    ]);
+
+    // -- netsim transfer posting rate ----------------------------------------
+    let topo = Topology::h100_dgx(4);
+    let sim = NetSim::new(topo.clone());
+    let mut i = 0u64;
+    let r = bench_fn("netsim_transfer", 3, 10, 10_000, || {
+        let src = (i % 31) as usize;
+        let dst = (src + 1 + (i % 7) as usize) % 32;
+        sim.transfer(src, dst, 4096, i as f64 * 1e-9);
+        i += 1;
+    });
+    table.row(vec![
+        "netsim transfer post".into(),
+        fmt_secs(r.per_iter()),
+        format!("{:.2}M events/s", 1e-6 / r.per_iter()),
+    ]);
+
+    // -- schedule generation --------------------------------------------------
+    let r = bench_fn("ring_sched_gen", 2, 10, 100, || {
+        std::hint::black_box(ring_allreduce_schedule(128, 2048));
+    });
+    table.row(vec![
+        "ring allreduce schedule (p=128)".into(),
+        fmt_secs(r.per_iter()),
+        format!("{:.0}k scheds/s", 1e-3 / r.per_iter()),
+    ]);
+    let r = bench_fn("twolevel_sched_gen", 2, 10, 100, || {
+        std::hint::black_box(two_level_allreduce_schedule(&topo, 16, 2));
+    });
+    table.row(vec![
+        "two-level schedule (4 nodes)".into(),
+        fmt_secs(r.per_iter()),
+        format!("{:.0}k scheds/s", 1e-3 / r.per_iter()),
+    ]);
+
+    // -- oracle partial (per-shard flash decode in pure rust) ----------------
+    let shape = AttnShape::mha(1, 16, 128);
+    let t = 2048;
+    let row_elems = shape.kv_heads * shape.d_head;
+    let q = rng.normal_vec(shape.q_elems(), 1.0);
+    let k = rng.normal_vec(t * row_elems, 1.0);
+    let v = rng.normal_vec(t * row_elems, 1.0);
+    let r = bench_fn("oracle_partial", 2, 8, 4, || {
+        std::hint::black_box(partial_from_chunk(shape, &q, &k, &v, t, 0.09));
+    });
+    let kv_bytes = (2 * t * row_elems * 4) as f64;
+    table.row(vec![
+        "oracle partial (t=2048, 16h x 128)".into(),
+        fmt_secs(r.per_iter()),
+        format!("{}/s KV", fmt_bytes(r.throughput(kv_bytes) as u64)),
+    ]);
+
+    // -- PJRT kernel call (if artifacts present) ------------------------------
+    if let Some(dir) = tree_attention::runtime::find_artifacts("artifacts", "test-8m") {
+        let engine = tree_attention::runtime::EngineHandle::spawn(&dir).unwrap();
+        let m = engine.model_spec().clone();
+        let t_art = 512usize;
+        let rowm = m.kv_heads * m.d_head();
+        let q = rng.normal_vec(m.n_heads * m.d_head(), 1.0);
+        let k = rng.normal_vec(t_art * rowm, 1.0);
+        let v = rng.normal_vec(t_art * rowm, 1.0);
+        let r = bench_fn("pjrt_attn_partial", 2, 8, 4, || {
+            engine
+                .call(
+                    "attn_partial_t512",
+                    vec![
+                        tree_attention::runtime::Arg::scalar_i32(t_art as i32),
+                        tree_attention::runtime::Arg::f32(q.clone(), &[m.n_heads, m.d_head()]),
+                        tree_attention::runtime::Arg::f32(k.clone(), &[t_art, m.kv_heads, m.d_head()]),
+                        tree_attention::runtime::Arg::f32(v.clone(), &[t_art, m.kv_heads, m.d_head()]),
+                    ],
+                )
+                .unwrap();
+        });
+        table.row(vec![
+            "pjrt attn_partial_t512 (e2e call)".into(),
+            fmt_secs(r.per_iter()),
+            format!("{:.0} calls/s", 1.0 / r.per_iter()),
+        ]);
+        let stats = engine.stats().unwrap();
+        println!(
+            "pjrt engine: {} calls, {} uploaded, exec share {:.0}%",
+            stats.calls,
+            fmt_bytes(stats.upload_bytes),
+            100.0 * stats.exec_seconds / (stats.calls.max(1) as f64 * r.per_iter())
+        );
+    } else {
+        println!("(artifacts not built — PJRT micro-bench skipped)");
+    }
+
+    table.print();
+}

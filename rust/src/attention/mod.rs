@@ -1,0 +1,270 @@
+//! Distributed decode-attention strategies — the paper's contribution
+//! (Tree Attention, Alg. 3) and its baseline (Ring Attention), plus the
+//! single-device reference. All strategies produce *exact* attention
+//! (verified against the oracle and each other); they differ in
+//! communication schedule, volume, virtual-time latency, and peak memory.
+
+pub mod memory;
+pub mod ring;
+pub mod single;
+pub mod tree;
+
+pub use memory::{peak_memory_model, MemoryModel};
+pub use ring::ring_decode;
+pub use single::single_decode;
+pub use tree::{tree_decode, tree_decode_unfused};
+
+use crate::attnmath::{partial_from_chunk, AttnPartial, AttnShape};
+use crate::netsim::TrafficCounters;
+use crate::runtime::{Arg, EngineHandle};
+
+/// A read-only view of one worker's KV shard for ONE layer.
+#[derive(Clone, Copy, Debug)]
+pub struct ShardKv<'a> {
+    /// `[len * kv_heads * d_head]` f32.
+    pub k: &'a [f32],
+    pub v: &'a [f32],
+    pub len: usize,
+}
+
+/// Where the per-shard flash partial is computed.
+#[derive(Clone)]
+pub enum ComputeBackend {
+    /// Pure-Rust oracle math (fast, always available; used by sweeps).
+    Oracle,
+    /// Compiled Pallas kernel via PJRT (`attn_partial_t{T}` artifacts) —
+    /// the real L1 path.
+    Pjrt(EngineHandle),
+}
+
+impl ComputeBackend {
+    /// Compute the exact partial `(n, d, m)` for a shard chunk.
+    pub fn partial(
+        &self,
+        shape: AttnShape,
+        scale: f32,
+        q: &[f32],
+        kv: ShardKv<'_>,
+    ) -> anyhow::Result<AttnPartial> {
+        if kv.len == 0 {
+            return Ok(AttnPartial::identity(shape));
+        }
+        match self {
+            ComputeBackend::Oracle => {
+                Ok(partial_from_chunk(shape, q, kv.k, kv.v, kv.len, scale))
+            }
+            ComputeBackend::Pjrt(engine) => {
+                // Pad the shard to the smallest compiled chunk size; the
+                // kernel's `valid` mask ignores the tail.
+                let row = shape.kv_heads * shape.d_head;
+                anyhow::ensure!(shape.batch == 1, "PJRT path is per-sequence (batch 1)");
+                // Manifest lookup happens inside the engine; pick T by probing
+                // known sizes (engine validates), so fetch via a tiny helper:
+                let t_art = engine.pick_attn_chunk(kv.len)?;
+                let mut k_pad = vec![0.0f32; t_art * row];
+                let mut v_pad = vec![0.0f32; t_art * row];
+                k_pad[..kv.len * row].copy_from_slice(kv.k);
+                v_pad[..kv.len * row].copy_from_slice(kv.v);
+                let outs = engine.call(
+                    &format!("attn_partial_t{t_art}"),
+                    vec![
+                        Arg::scalar_i32(kv.len as i32),
+                        Arg::f32(q.to_vec(), &[shape.n_heads, shape.d_head]),
+                        Arg::f32(k_pad, &[t_art, shape.kv_heads, shape.d_head]),
+                        Arg::f32(v_pad, &[t_art, shape.kv_heads, shape.d_head]),
+                    ],
+                )?;
+                Ok(AttnPartial::from_flash_output(shape, &outs[0].data, &outs[1].data))
+            }
+        }
+    }
+}
+
+/// Per-decode statistics (one attention layer, one token).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DecodeStats {
+    /// Virtual seconds from entry barrier to result availability.
+    pub sim_time: f64,
+    /// Communication rounds on the critical path.
+    pub comm_steps: usize,
+    /// Bytes moved, by tier.
+    pub traffic: TrafficCounters,
+    /// Max per-worker transient bytes (strategy buffers, not the cache).
+    pub peak_transient_bytes: u64,
+}
+
+/// Result of a distributed decode: exact attention output + stats.
+#[derive(Clone, Debug)]
+pub struct DecodeOutcome {
+    /// `[n_heads * d_head]` f32.
+    pub out: Vec<f32>,
+    pub stats: DecodeStats,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::VirtualCluster;
+    use crate::collectives::AllReduceAlgo;
+    use crate::config::Strategy;
+    use crate::topology::Topology;
+    use crate::util::Rng;
+
+    pub(crate) fn random_shards(
+        rng: &mut Rng,
+        shape: AttnShape,
+        lens: &[usize],
+    ) -> (Vec<f32>, Vec<Vec<f32>>, Vec<Vec<f32>>) {
+        let q = rng.normal_vec(shape.q_elems(), 1.0);
+        let row = shape.kv_heads * shape.d_head;
+        let ks: Vec<Vec<f32>> = lens.iter().map(|&l| rng.normal_vec(l * row, 1.0)).collect();
+        let vs: Vec<Vec<f32>> = lens.iter().map(|&l| rng.normal_vec(l * row, 1.0)).collect();
+        (q, ks, vs)
+    }
+
+    pub(crate) fn reference_of(
+        shape: AttnShape,
+        scale: f32,
+        q: &[f32],
+        ks: &[Vec<f32>],
+        vs: &[Vec<f32>],
+        lens: &[usize],
+    ) -> Vec<f32> {
+        let k_all: Vec<f32> = ks.concat();
+        let v_all: Vec<f32> = vs.concat();
+        let t: usize = lens.iter().sum();
+        crate::attnmath::ref_attention(shape, q, &k_all, &v_all, t, scale)
+    }
+
+    fn run_strategy(
+        strat: Strategy,
+        topo: Topology,
+        lens: &[usize],
+        seed: u64,
+    ) -> (Vec<f32>, Vec<f32>, DecodeStats) {
+        let shape = AttnShape::new(1, 8, 4, 16);
+        let scale = 0.25;
+        let mut rng = Rng::seed(seed);
+        let (q, ks, vs) = random_shards(&mut rng, shape, lens);
+        let shards: Vec<ShardKv> = (0..lens.len())
+            .map(|i| ShardKv { k: &ks[i], v: &vs[i], len: lens[i] })
+            .collect();
+        let mut cluster = VirtualCluster::new(topo);
+        let backend = ComputeBackend::Oracle;
+        let outcome = match strat {
+            Strategy::Tree => tree_decode(
+                &mut cluster, &backend, shape, scale, &q, &shards,
+                AllReduceAlgo::TwoLevel { inter_fanout: 2 }, 2,
+            )
+            .unwrap(),
+            Strategy::Ring => {
+                ring_decode(&mut cluster, &backend, shape, scale, &q, &shards, 2, false).unwrap()
+            }
+            Strategy::Single => {
+                single_decode(&mut cluster, &backend, shape, scale, &q, &shards, 2).unwrap()
+            }
+        };
+        let reference = reference_of(shape, scale, &q, &ks, &vs, lens);
+        (outcome.out, reference, outcome.stats)
+    }
+
+    #[test]
+    fn all_strategies_exact_vs_oracle() {
+        // The §6 footnote-1 claim: tree, ring and vanilla attention produce
+        // identical activations.
+        let topo = Topology::h100_dgx(1);
+        let lens = [100usize, 37, 64, 0, 12, 80, 55, 9];
+        for strat in [Strategy::Tree, Strategy::Ring, Strategy::Single] {
+            let (out, reference, _) = run_strategy(strat, topo.clone(), &lens, 99);
+            let d = crate::attnmath::max_abs_diff(&out, &reference);
+            assert!(d < 1e-4, "{}: diff {d}", strat.name());
+        }
+    }
+
+    #[test]
+    fn tree_faster_than_ring_multi_node() {
+        let topo = Topology::h100_dgx(4);
+        let lens = vec![4096usize; 32];
+        let (_, _, tree) = run_strategy(Strategy::Tree, topo.clone(), &lens, 5);
+        let (_, _, ring) = run_strategy(Strategy::Ring, topo, &lens, 5);
+        assert!(
+            tree.sim_time < ring.sim_time,
+            "tree {} vs ring {}",
+            tree.sim_time,
+            ring.sim_time
+        );
+        // and moves far less data
+        assert!(tree.traffic.total_bytes() * 10 < ring.traffic.total_bytes());
+    }
+
+    #[test]
+    fn ring_comm_volume_matches_eq10() {
+        // V_ring = 2·b·t·d·p elements (KV rotation), Eq. 10.
+        let shape_heads = 8usize;
+        let dh = 16usize;
+        let kvh = 4usize;
+        let p = 8usize;
+        let t = 64usize;
+        let topo = Topology::h100_dgx(1);
+        let lens = vec![t; p];
+        let (_, _, stats) = run_strategy(Strategy::Ring, topo, &lens, 7);
+        let _ = shape_heads;
+        // per rotation step each worker sends its chunk (k+v): 2*t*kvh*dh
+        // elements * 2 bytes; p workers * (p-1) steps.
+        let expected = (2 * t * kvh * dh) as u64 * 2 * (p as u64) * (p as u64 - 1);
+        assert_eq!(stats.traffic.total_bytes(), expected + q_broadcast_bytes(p, shape_heads * dh));
+    }
+
+    fn q_broadcast_bytes(p: usize, q_elems: usize) -> u64 {
+        // binomial broadcast sends p-1 copies of q
+        (p as u64 - 1) * q_elems as u64 * 2
+    }
+
+    #[test]
+    fn tree_comm_volume_matches_eq14_shape() {
+        // V_tree is independent of t (local reduction first): grow t, bytes
+        // must stay constant.
+        let topo = Topology::h100_dgx(1);
+        let (_, _, small) = run_strategy(Strategy::Tree, topo.clone(), &vec![32; 8], 3);
+        let (_, _, large) = run_strategy(Strategy::Tree, topo, &vec![4096; 8], 3);
+        assert_eq!(small.traffic.total_bytes(), large.traffic.total_bytes());
+    }
+
+    #[test]
+    fn empty_and_single_shard_edge_cases() {
+        let topo = Topology::h100_dgx(1);
+        // one worker holds everything, others empty
+        let lens = [128usize, 0, 0, 0, 0, 0, 0, 0];
+        for strat in [Strategy::Tree, Strategy::Ring] {
+            let (out, reference, _) = run_strategy(strat, topo.clone(), &lens, 11);
+            let d = crate::attnmath::max_abs_diff(&out, &reference);
+            assert!(d < 1e-4, "{}: diff {d}", strat.name());
+        }
+    }
+
+    #[test]
+    fn strategies_agree_prop() {
+        crate::util::prop::check("tree==ring==single on random shards", 25, |g| {
+            let p = *g.choose(&[2usize, 4, 8]);
+            let lens: Vec<usize> = (0..p).map(|_| g.usize_in(0..60)).collect();
+            if lens.iter().sum::<usize>() == 0 {
+                return;
+            }
+            let seed = g.rng().next_u64();
+            let topo = Topology::custom(
+                "flat",
+                1,
+                p,
+                crate::gpumodel::GpuKind::H100,
+                crate::topology::LinkSpec::nvlink4(),
+                crate::topology::LinkSpec::infiniband_ndr(),
+            );
+            let (t, r1, _) = run_strategy(Strategy::Tree, topo.clone(), &lens, seed);
+            let (r, _, _) = run_strategy(Strategy::Ring, topo.clone(), &lens, seed);
+            let (s, _, _) = run_strategy(Strategy::Single, topo, &lens, seed);
+            assert!(crate::attnmath::max_abs_diff(&t, &r1) < 1e-4);
+            assert!(crate::attnmath::max_abs_diff(&t, &r) < 1e-4);
+            assert!(crate::attnmath::max_abs_diff(&t, &s) < 1e-4);
+        });
+    }
+}

@@ -1,0 +1,215 @@
+//! Ring Attention decoding (Liu et al., 2023) — the state-of-the-art
+//! baseline the paper compares against.
+//!
+//! The query is broadcast to every worker; KV chunks then rotate around the
+//! logical ring for p−1 steps. At each step every worker folds the chunk it
+//! currently holds into its running online-softmax accumulator, then
+//! forwards that chunk to its neighbour. After p steps of compute (its own
+//! chunk + p−1 received), every worker holds the full attention output.
+//!
+//! Communication volume: each step moves the full K and V chunk —
+//! `2·b·t·d` elements per worker per step, `V_ring = 2btd·p` total per
+//! rotation (paper Eq. 10–11) — versus Tree Attention's tiny `(n, d, m)`
+//! wire. In decode there is (almost) nothing to hide the transfer behind:
+//! the per-chunk GEMV takes O(10⁻⁵) s while the transfer takes O(10⁻³) s
+//! (paper §6.3), which `overlap = true` demonstrates quantitatively.
+
+use super::{ComputeBackend, DecodeOutcome, DecodeStats, ShardKv};
+use crate::attnmath::{AttnPartial, AttnShape};
+use crate::cluster::VirtualCluster;
+use crate::collectives::broadcast_schedule;
+
+/// Run one ring-attention decode over sharded KV (one layer, one token).
+///
+/// `overlap`: if true, each worker posts its chunk-send *before* computing
+/// (modeling compute/communication overlap); if false (the realistic decode
+/// setting per §6.3) the send departs after the local compute finishes.
+pub fn ring_decode(
+    cluster: &mut VirtualCluster,
+    backend: &ComputeBackend,
+    shape: AttnShape,
+    scale: f32,
+    q: &[f32],
+    shards: &[ShardKv<'_>],
+    wire_bpe: u64,
+    overlap: bool,
+) -> anyhow::Result<DecodeOutcome> {
+    let p = cluster.world_size();
+    anyhow::ensure!(shards.len() == p, "need one shard per worker ({p})");
+    anyhow::ensure!(q.len() == shape.q_elems(), "q length");
+
+    let before_traffic = cluster.world.net.counters();
+    let t0 = cluster.world.barrier();
+
+    // -- broadcast q -------------------------------------------------------
+    let q_bytes = (q.len() as u64) * wire_bpe;
+    let bsched = broadcast_schedule(p, 0, 1);
+    let mut steps = bsched.n_steps();
+    for step in &bsched.steps {
+        for op in step {
+            cluster.world.send(op.src, op.dst, q_bytes);
+        }
+    }
+
+    let row = shape.kv_heads * shape.d_head;
+    // Worker-held rotating chunks (owned copies — they move between ranks).
+    let mut held: Vec<(Vec<f32>, Vec<f32>, usize)> = shards
+        .iter()
+        .map(|s| (s.k.to_vec(), s.v.to_vec(), s.len))
+        .collect();
+
+    // Peak memory model (Eq. 8): own chunk + incoming chunk + q + output.
+    // Track the *transient* parts: the incoming KV buffer + q + output.
+    let max_chunk_bytes = held
+        .iter()
+        .map(|(_, _, l)| 2 * (*l * row) as u64 * wire_bpe)
+        .max()
+        .unwrap_or(0);
+    let out_bytes = (shape.q_elems() as u64) * wire_bpe;
+    for w in 0..p {
+        cluster.mem.alloc(w, max_chunk_bytes + q_bytes + out_bytes);
+    }
+
+    let mut accs: Vec<AttnPartial> = vec![AttnPartial::identity(shape); p];
+
+    for step in 0..p {
+        let last = step == p - 1;
+        // The received chunk is needed only at the NEXT step, so arrivals
+        // are merged into the receiver's clock just before that step's
+        // compute — this is what lets `overlap = true` actually hide
+        // transfer time behind the current step's compute.
+        let mut arrivals = vec![f64::NEG_INFINITY; p];
+        // Overlap: post the forward-send before computing.
+        if overlap && !last {
+            for w in 0..p {
+                let bytes = 2 * (held[w].2 * row) as u64 * wire_bpe;
+                let arr = cluster.world.net.transfer(w, (w + 1) % p, bytes, cluster.world.clocks[w]);
+                arrivals[(w + 1) % p] = arr;
+            }
+        }
+        // Local compute: fold the currently-held chunk into the accumulator.
+        for w in 0..p {
+            let (k, v, len) = &held[w];
+            let t_comp =
+                cluster.gpu.decode_attention_time(shape.batch, *len, shape.kv_heads, shape.d_head);
+            cluster.world.compute(w, t_comp);
+            let part = backend.partial(shape, scale, q, ShardKv { k, v, len: *len })?;
+            accs[w].combine(&part);
+        }
+        // Rotate chunks for the next step.
+        if !last {
+            if !overlap {
+                for w in 0..p {
+                    let bytes = 2 * (held[w].2 * row) as u64 * wire_bpe;
+                    let arr = cluster.world.net.transfer(w, (w + 1) % p, bytes, cluster.world.clocks[w]);
+                    arrivals[(w + 1) % p] = arr;
+                }
+            }
+            for w in 0..p {
+                if cluster.world.clocks[w] < arrivals[w] {
+                    cluster.world.clocks[w] = arrivals[w];
+                }
+            }
+            steps += 1;
+            held.rotate_right(1);
+        }
+    }
+
+    let result = accs[0].finalize();
+    let t1 = cluster.world.barrier();
+
+    for w in 0..p {
+        cluster.mem.free(w, max_chunk_bytes + q_bytes + out_bytes);
+    }
+
+    // Exactness cross-check in debug builds: all workers converged.
+    #[cfg(debug_assertions)]
+    for (w, acc) in accs.iter().enumerate() {
+        let d = crate::attnmath::max_abs_diff(&acc.finalize(), &result);
+        debug_assert!(d < 1e-4, "worker {w} diverged by {d}");
+    }
+
+    Ok(DecodeOutcome {
+        out: result,
+        stats: DecodeStats {
+            sim_time: t1 - t0,
+            comm_steps: steps,
+            traffic: cluster.world.net.counters().since(&before_traffic),
+            peak_transient_bytes: cluster.mem.max_peak(),
+        },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::Topology;
+    use crate::util::Rng;
+
+    fn flat(p: usize) -> Topology {
+        Topology::custom(
+            "flat",
+            1,
+            p,
+            crate::gpumodel::GpuKind::H100,
+            crate::topology::LinkSpec::nvlink4(),
+            crate::topology::LinkSpec::infiniband_ndr(),
+        )
+    }
+
+    #[test]
+    fn ring_steps_linear_in_p() {
+        for p in [2usize, 4, 8] {
+            let shape = AttnShape::mha(1, 2, 8);
+            let mut rng = Rng::seed(31);
+            let lens = vec![16usize; p];
+            let (q, ks, vs) = super::super::tests::random_shards(&mut rng, shape, &lens);
+            let shards: Vec<ShardKv> =
+                (0..p).map(|i| ShardKv { k: &ks[i], v: &vs[i], len: lens[i] }).collect();
+            let mut c = VirtualCluster::new(flat(p));
+            let o = ring_decode(&mut c, &ComputeBackend::Oracle, shape, 1.0, &q, &shards, 2, false).unwrap();
+            // broadcast (log2 p) + p-1 rotation steps
+            assert_eq!(o.stats.comm_steps, (p as f64).log2().ceil() as usize + (p - 1));
+        }
+    }
+
+    #[test]
+    fn overlap_reduces_latency_when_compute_dominates() {
+        // Make compute huge relative to comm by using enormous chunks on a
+        // fast link: overlap must then help (the training-regime situation).
+        let shape = AttnShape::mha(1, 16, 128);
+        let p = 4;
+        let lens = vec![2000usize; p];
+        let mut rng = Rng::seed(32);
+        let (q, ks, vs) = super::super::tests::random_shards(&mut rng, shape, &lens);
+        let shards: Vec<ShardKv> =
+            (0..p).map(|i| ShardKv { k: &ks[i], v: &vs[i], len: lens[i] }).collect();
+        let topo = flat(p);
+        let mut c1 = VirtualCluster::new(topo.clone());
+        let no = ring_decode(&mut c1, &ComputeBackend::Oracle, shape, 0.1, &q, &shards, 2, false).unwrap();
+        let mut c2 = VirtualCluster::new(topo);
+        let yes = ring_decode(&mut c2, &ComputeBackend::Oracle, shape, 0.1, &q, &shards, 2, true).unwrap();
+        assert!(
+            yes.stats.sim_time < no.stats.sim_time,
+            "overlap {} vs sequential {}",
+            yes.stats.sim_time,
+            no.stats.sim_time
+        );
+        // identical numerics either way
+        assert!(crate::attnmath::max_abs_diff(&yes.out, &no.out) < 1e-6);
+    }
+
+    #[test]
+    fn uneven_shards_still_exact() {
+        let shape = AttnShape::new(1, 4, 2, 16);
+        let lens = [3usize, 50, 0, 7];
+        let mut rng = Rng::seed(33);
+        let (q, ks, vs) = super::super::tests::random_shards(&mut rng, shape, &lens);
+        let shards: Vec<ShardKv> =
+            (0..4).map(|i| ShardKv { k: &ks[i], v: &vs[i], len: lens[i] }).collect();
+        let reference = super::super::tests::reference_of(shape, 0.25, &q, &ks, &vs, &lens);
+        let mut c = VirtualCluster::new(flat(4));
+        let o = ring_decode(&mut c, &ComputeBackend::Oracle, shape, 0.25, &q, &shards, 2, false).unwrap();
+        assert!(crate::attnmath::max_abs_diff(&o.out, &reference) < 1e-4);
+    }
+}

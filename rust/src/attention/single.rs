@@ -1,0 +1,92 @@
+//! Single-device decode baseline: gather every shard to rank 0, compute
+//! full attention there. Correctness anchor + the "what if we didn't shard"
+//! comparison point (usually memory-infeasible at paper scale, which is the
+//! whole reason sequence parallelism exists).
+
+use super::{ComputeBackend, DecodeOutcome, DecodeStats, ShardKv};
+use crate::attnmath::AttnShape;
+use crate::cluster::VirtualCluster;
+
+/// Gather all KV to rank 0 and compute attention locally.
+pub fn single_decode(
+    cluster: &mut VirtualCluster,
+    backend: &ComputeBackend,
+    shape: AttnShape,
+    scale: f32,
+    q: &[f32],
+    shards: &[ShardKv<'_>],
+    wire_bpe: u64,
+) -> anyhow::Result<DecodeOutcome> {
+    let p = cluster.world_size();
+    anyhow::ensure!(shards.len() == p, "need one shard per worker ({p})");
+
+    let before_traffic = cluster.world.net.counters();
+    let t0 = cluster.world.barrier();
+
+    let row = shape.kv_heads * shape.d_head;
+    // Gather: every worker sends its chunk to rank 0.
+    let mut k_all = Vec::new();
+    let mut v_all = Vec::new();
+    let mut total = 0usize;
+    let mut steps = 0;
+    for (w, s) in shards.iter().enumerate() {
+        if w != 0 && s.len > 0 {
+            cluster.world.send(w, 0, 2 * (s.len * row) as u64 * wire_bpe);
+            steps = 1;
+        }
+        k_all.extend_from_slice(s.k);
+        v_all.extend_from_slice(s.v);
+        total += s.len;
+    }
+    cluster.mem.alloc(0, 2 * (total * row) as u64 * wire_bpe);
+
+    let t_comp = cluster.gpu.decode_attention_time(shape.batch, total, shape.kv_heads, shape.d_head);
+    cluster.world.compute(0, t_comp);
+    let out = backend
+        .partial(shape, scale, q, ShardKv { k: &k_all, v: &v_all, len: total })?
+        .finalize();
+    let t1 = cluster.world.barrier();
+    cluster.mem.free(0, 2 * (total * row) as u64 * wire_bpe);
+
+    Ok(DecodeOutcome {
+        out,
+        stats: DecodeStats {
+            sim_time: t1 - t0,
+            comm_steps: steps,
+            traffic: cluster.world.net.counters().since(&before_traffic),
+            peak_transient_bytes: cluster.mem.max_peak(),
+        },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::Topology;
+    use crate::util::Rng;
+
+    #[test]
+    fn matches_oracle_and_counts_gather_traffic() {
+        let shape = AttnShape::mha(1, 4, 8);
+        let lens = [10usize, 20, 30, 40];
+        let mut rng = Rng::seed(41);
+        let (q, ks, vs) = super::super::tests::random_shards(&mut rng, shape, &lens);
+        let shards: Vec<ShardKv> =
+            (0..4).map(|i| ShardKv { k: &ks[i], v: &vs[i], len: lens[i] }).collect();
+        let reference = super::super::tests::reference_of(shape, 0.5, &q, &ks, &vs, &lens);
+        let topo = Topology::custom(
+            "flat",
+            1,
+            4,
+            crate::gpumodel::GpuKind::H100,
+            crate::topology::LinkSpec::nvlink4(),
+            crate::topology::LinkSpec::infiniband_ndr(),
+        );
+        let mut c = VirtualCluster::new(topo);
+        let o = single_decode(&mut c, &ComputeBackend::Oracle, shape, 0.5, &q, &shards, 2).unwrap();
+        assert!(crate::attnmath::max_abs_diff(&o.out, &reference) < 1e-5);
+        // gather moved (20+30+40) tokens * row * 2 tensors * 2 bytes
+        let row = shape.kv_heads * shape.d_head;
+        assert_eq!(o.stats.traffic.total_bytes(), (90 * row * 2 * 2) as u64);
+    }
+}

@@ -1,0 +1,222 @@
+//! Tree Attention decoding — the paper's Algorithm 3.
+//!
+//! 1. Scatter (broadcast) the query to all p workers.
+//! 2. Each worker runs the flash-decode kernel over its local KV shard,
+//!    producing `(o, lse)` — equivalently the `(n, d, m)` partial.
+//! 3. One AllReduce of the fused `(n, d, m)` wire (the three AllReduces of
+//!    Alg. 3 fused into one payload of `bd + 2·b·n_h` elements — an
+//!    optimization the paper's own JAX code performs by reducing the
+//!    numerator and denominator together; the separate-allreduce variant is
+//!    available for the ablation bench).
+//! 4. Finalize `z = n / d` on the leader.
+//!
+//! The AllReduce algorithm is pluggable (ring / k-ary tree / two-level
+//! topology-aware) — §5.3's point is precisely that this collective can be
+//! made topology-aware, unlike Ring Attention's fixed P2P pattern.
+
+use super::{ComputeBackend, DecodeOutcome, DecodeStats, ShardKv};
+use crate::attnmath::{AttnCombineOp, AttnPartial, AttnShape};
+use crate::cluster::VirtualCluster;
+use crate::collectives::{broadcast_schedule, execute_data, AllReduceAlgo};
+
+/// Run one tree-attention decode over sharded KV (one layer, one token).
+///
+/// * `q` — `[n_heads * d_head]` f32, resident on rank 0 (the leader).
+/// * `shards[r]` — worker r's KV shard view.
+/// * `wire_bpe` — on-the-wire bytes/element (2 = bf16, the paper's setting).
+pub fn tree_decode(
+    cluster: &mut VirtualCluster,
+    backend: &ComputeBackend,
+    shape: AttnShape,
+    scale: f32,
+    q: &[f32],
+    shards: &[ShardKv<'_>],
+    algo: AllReduceAlgo,
+    wire_bpe: u64,
+) -> anyhow::Result<DecodeOutcome> {
+    let p = cluster.world_size();
+    anyhow::ensure!(shards.len() == p, "need one shard per worker ({p})");
+    anyhow::ensure!(q.len() == shape.q_elems(), "q length");
+
+    let before_traffic = cluster.world.net.counters();
+    let t0 = cluster.world.barrier();
+
+    // -- step 1: broadcast q (binomial tree) ------------------------------
+    let q_bytes = (q.len() as u64) * wire_bpe;
+    let bsched = broadcast_schedule(p, 0, 1);
+    let mut steps = bsched.n_steps();
+    for step in &bsched.steps {
+        for op in step {
+            cluster.world.send(op.src, op.dst, q_bytes);
+        }
+    }
+    // transient memory: every worker now holds q + its partial wire + output
+    let wire_elems = AttnPartial::wire_len(shape) as u64;
+    for w in 0..p {
+        cluster.mem.alloc(w, q_bytes + 2 * wire_elems * wire_bpe);
+    }
+
+    // -- step 2: local flash partials (parallel in virtual time) ----------
+    let mut wires: Vec<Vec<f32>> = Vec::with_capacity(p);
+    for (w, kv) in shards.iter().enumerate() {
+        let t_comp = cluster.gpu.decode_attention_time(
+            shape.batch,
+            kv.len,
+            shape.kv_heads,
+            shape.d_head,
+        );
+        cluster.world.compute(w, t_comp);
+        let partial = backend.partial(shape, scale, q, *kv)?;
+        wires.push(partial.to_wire());
+    }
+
+    // -- step 3: fused AllReduce of (n, d, m) ------------------------------
+    let op = AttnCombineOp { d_head: shape.d_head };
+    let sched = algo.schedule(&cluster.world, shape.batch * shape.n_heads);
+    let stats = execute_data(&mut cluster.world, &sched, &mut wires, &op, wire_bpe);
+    steps += stats.steps;
+
+    // -- step 4: finalize on the leader ------------------------------------
+    let result = AttnPartial::from_wire(shape, &wires[0]).finalize();
+    let t1 = cluster.world.barrier();
+
+    for w in 0..p {
+        cluster.mem.free(w, q_bytes + 2 * wire_elems * wire_bpe);
+    }
+
+    Ok(DecodeOutcome {
+        out: result,
+        stats: DecodeStats {
+            sim_time: t1 - t0,
+            comm_steps: steps,
+            traffic: cluster.world.net.counters().since(&before_traffic),
+            peak_transient_bytes: cluster.mem.max_peak(),
+        },
+    })
+}
+
+/// Ablation variant: the three *separate* AllReduces exactly as written in
+/// Alg. 3 (max, then numerator, then denominator) instead of the fused wire.
+pub fn tree_decode_unfused(
+    cluster: &mut VirtualCluster,
+    backend: &ComputeBackend,
+    shape: AttnShape,
+    scale: f32,
+    q: &[f32],
+    shards: &[ShardKv<'_>],
+    algo: AllReduceAlgo,
+    wire_bpe: u64,
+) -> anyhow::Result<DecodeOutcome> {
+    use crate::collectives::{MaxOp, SumOp};
+    let p = cluster.world_size();
+    anyhow::ensure!(shards.len() == p, "need one shard per worker ({p})");
+
+    let before_traffic = cluster.world.net.counters();
+    let t0 = cluster.world.barrier();
+
+    let q_bytes = (q.len() as u64) * wire_bpe;
+    let bsched = broadcast_schedule(p, 0, 1);
+    let mut steps = bsched.n_steps();
+    for step in &bsched.steps {
+        for op in step {
+            cluster.world.send(op.src, op.dst, q_bytes);
+        }
+    }
+
+    let mut partials: Vec<AttnPartial> = Vec::with_capacity(p);
+    for (w, kv) in shards.iter().enumerate() {
+        let t_comp =
+            cluster.gpu.decode_attention_time(shape.batch, kv.len, shape.kv_heads, shape.d_head);
+        cluster.world.compute(w, t_comp);
+        partials.push(backend.partial(shape, scale, q, *kv)?);
+    }
+
+    let bh = shape.batch * shape.n_heads;
+    // AllReduce 1: global max m (lse-style). Alg. 3 step 3.
+    let mut maxes: Vec<Vec<f32>> = partials.iter().map(|p| p.max.clone()).collect();
+    let sched1 = algo.schedule(&cluster.world, bh);
+    let s1 = execute_data(&mut cluster.world, &sched1, &mut maxes, &MaxOp, wire_bpe);
+    // Rescale local (n, d) to the global max. Alg. 3 step 4.
+    for (part, gmax) in partials.iter_mut().zip(&maxes) {
+        for i in 0..bh {
+            let w = if part.max[i] == f32::NEG_INFINITY { 0.0 } else { (part.max[i] - gmax[i]).exp() };
+            part.den[i] *= w;
+            for j in 0..shape.d_head {
+                part.num[i * shape.d_head + j] *= w;
+            }
+            part.max[i] = gmax[i];
+        }
+    }
+    // AllReduce 2: numerator. AllReduce 3: denominator. Alg. 3 step 5.
+    let mut nums: Vec<Vec<f32>> = partials.iter().map(|p| p.num.clone()).collect();
+    let sched2 = algo.schedule(&cluster.world, bh * shape.d_head);
+    let s2 = execute_data(&mut cluster.world, &sched2, &mut nums, &SumOp, wire_bpe);
+    let mut dens: Vec<Vec<f32>> = partials.iter().map(|p| p.den.clone()).collect();
+    let sched3 = algo.schedule(&cluster.world, bh);
+    let s3 = execute_data(&mut cluster.world, &sched3, &mut dens, &SumOp, wire_bpe);
+    steps += s1.steps + s2.steps + s3.steps;
+
+    let out: Vec<f32> = nums[0]
+        .iter()
+        .enumerate()
+        .map(|(i, n)| n / dens[0][i / shape.d_head])
+        .collect();
+    let t1 = cluster.world.barrier();
+
+    Ok(DecodeOutcome {
+        out,
+        stats: DecodeStats {
+            sim_time: t1 - t0,
+            comm_steps: steps,
+            traffic: cluster.world.net.counters().since(&before_traffic),
+            peak_transient_bytes: cluster.mem.max_peak(),
+        },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::Topology;
+    use crate::util::Rng;
+
+    #[test]
+    fn fused_and_unfused_agree_with_oracle() {
+        let shape = AttnShape::new(1, 8, 2, 32);
+        let scale = 1.0 / (32f32).sqrt();
+        let mut rng = Rng::seed(21);
+        let lens = [40usize, 25, 0, 61, 8, 90, 33, 77];
+        let (q, ks, vs) = super::super::tests::random_shards(&mut rng, shape, &lens);
+        let shards: Vec<ShardKv> = (0..8).map(|i| ShardKv { k: &ks[i], v: &vs[i], len: lens[i] }).collect();
+        let reference = super::super::tests::reference_of(shape, scale, &q, &ks, &vs, &lens);
+
+        let mut c1 = VirtualCluster::new(Topology::h100_dgx(1));
+        let fused = tree_decode(&mut c1, &ComputeBackend::Oracle, shape, scale, &q, &shards,
+                                AllReduceAlgo::Tree { fanout: 2 }, 2).unwrap();
+        let mut c2 = VirtualCluster::new(Topology::h100_dgx(1));
+        let unfused = tree_decode_unfused(&mut c2, &ComputeBackend::Oracle, shape, scale, &q, &shards,
+                                          AllReduceAlgo::Tree { fanout: 2 }, 2).unwrap();
+        assert!(crate::attnmath::max_abs_diff(&fused.out, &reference) < 1e-4);
+        assert!(crate::attnmath::max_abs_diff(&unfused.out, &reference) < 1e-4);
+        // The fused variant does strictly fewer communication rounds.
+        assert!(fused.stats.comm_steps < unfused.stats.comm_steps);
+        assert!(fused.stats.sim_time < unfused.stats.sim_time);
+    }
+
+    #[test]
+    fn allreduce_algo_changes_time_not_result() {
+        let shape = AttnShape::mha(1, 4, 16);
+        let mut rng = Rng::seed(22);
+        let lens = vec![64usize; 16];
+        let (q, ks, vs) = super::super::tests::random_shards(&mut rng, shape, &lens);
+        let shards: Vec<ShardKv> = (0..16).map(|i| ShardKv { k: &ks[i], v: &vs[i], len: lens[i] }).collect();
+        let mut outs = Vec::new();
+        for algo in [AllReduceAlgo::Ring, AllReduceAlgo::Tree { fanout: 4 }, AllReduceAlgo::TwoLevel { inter_fanout: 2 }] {
+            let mut c = VirtualCluster::new(Topology::h100_dgx(2));
+            let o = tree_decode(&mut c, &ComputeBackend::Oracle, shape, 0.3, &q, &shards, algo, 2).unwrap();
+            outs.push(o.out);
+        }
+        assert!(crate::attnmath::max_abs_diff(&outs[0], &outs[1]) < 1e-4);
+        assert!(crate::attnmath::max_abs_diff(&outs[0], &outs[2]) < 1e-4);
+    }
+}

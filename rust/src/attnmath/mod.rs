@@ -1,0 +1,575 @@
+//! Exact attention mathematics in pure Rust: the numerically-stable
+//! logsumexp/online-softmax machinery of the paper's §3–5, the associative
+//! combine operator over partial results `(n, d, m)` that Algorithms 1–3
+//! reduce with, and a reference (oracle) attention implementation used to
+//! verify every distributed strategy bit-for-bit (to fp tolerance).
+//!
+//! Layouts (row-major):
+//!   q:      `[batch, n_heads, d_head]`         (single decode query)
+//!   k, v:   `[batch, seq, kv_heads, d_head]`
+//!   out:    `[batch, n_heads, d_head]`
+//! GQA: query head `h` attends KV head `h / (n_heads / kv_heads)`.
+
+use crate::collectives::ReduceOp;
+
+/// Numerically stable log(Σ exp(x_i)). Returns -inf for an empty slice.
+pub fn logsumexp(xs: &[f32]) -> f32 {
+    if xs.is_empty() {
+        return f32::NEG_INFINITY;
+    }
+    let m = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    if m == f32::NEG_INFINITY {
+        return f32::NEG_INFINITY;
+    }
+    let s: f32 = xs.iter().map(|x| (x - m).exp()).sum();
+    m + s.ln()
+}
+
+/// In-place stable softmax.
+pub fn softmax_inplace(xs: &mut [f32]) {
+    if xs.is_empty() {
+        return;
+    }
+    let m = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f32;
+    for x in xs.iter_mut() {
+        *x = (*x - m).exp();
+        sum += *x;
+    }
+    for x in xs.iter_mut() {
+        *x /= sum;
+    }
+}
+
+/// Shape descriptor for a decode attention problem.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AttnShape {
+    pub batch: usize,
+    pub n_heads: usize,
+    pub kv_heads: usize,
+    pub d_head: usize,
+}
+
+impl AttnShape {
+    pub fn new(batch: usize, n_heads: usize, kv_heads: usize, d_head: usize) -> AttnShape {
+        assert!(n_heads % kv_heads == 0, "n_heads must be divisible by kv_heads");
+        AttnShape { batch, n_heads, kv_heads, d_head }
+    }
+
+    pub fn mha(batch: usize, n_heads: usize, d_head: usize) -> AttnShape {
+        AttnShape::new(batch, n_heads, n_heads, d_head)
+    }
+
+    /// Elements in a query / output tensor.
+    pub fn q_elems(&self) -> usize {
+        self.batch * self.n_heads * self.d_head
+    }
+
+    /// Elements in a K (or V) tensor of `t` tokens.
+    pub fn kv_elems(&self, t: usize) -> usize {
+        self.batch * t * self.kv_heads * self.d_head
+    }
+
+    /// GQA group size.
+    pub fn group(&self) -> usize {
+        self.n_heads / self.kv_heads
+    }
+}
+
+/// Partial attention state for a KV chunk: per (batch, head) the
+/// un-normalized numerator `n` (length d_head), denominator `d`, and running
+/// max `m`. This is exactly the `(n, d, m)` triple Algorithm 3 AllReduces.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AttnPartial {
+    pub shape: AttnShape,
+    /// `[batch, n_heads, d_head]` numerator (already scaled by exp(s - m)).
+    pub num: Vec<f32>,
+    /// `[batch, n_heads]` denominator.
+    pub den: Vec<f32>,
+    /// `[batch, n_heads]` running max of the logits.
+    pub max: Vec<f32>,
+}
+
+impl AttnPartial {
+    /// Identity element of the combine monoid (empty chunk).
+    pub fn identity(shape: AttnShape) -> AttnPartial {
+        AttnPartial {
+            shape,
+            num: vec![0.0; shape.q_elems()],
+            den: vec![0.0; shape.batch * shape.n_heads],
+            max: vec![f32::NEG_INFINITY; shape.batch * shape.n_heads],
+        }
+    }
+
+    /// Construct from a per-shard flash-decode output `(o, lse)` — the
+    /// contract of Flash Attention 2's forward (paper Alg. 3 step 2→4):
+    /// `n = o * exp(lse - m_ref)`, `d = exp(lse - m_ref)` with `m_ref = lse`
+    /// locally, i.e. `n = o`, `d = 1`, `m = lse`.
+    pub fn from_flash_output(shape: AttnShape, o: &[f32], lse: &[f32]) -> AttnPartial {
+        assert_eq!(o.len(), shape.q_elems());
+        assert_eq!(lse.len(), shape.batch * shape.n_heads);
+        AttnPartial {
+            shape,
+            num: o.to_vec(),
+            den: vec![1.0; lse.len()],
+            max: lse.to_vec(),
+        }
+    }
+
+    /// The associative combine (the heart of Tree Attention):
+    ///   m' = max(m_a, m_b)
+    ///   n' = n_a·exp(m_a − m') + n_b·exp(m_b − m')
+    ///   d' = d_a·exp(m_a − m') + d_b·exp(m_b − m')
+    pub fn combine(&mut self, other: &AttnPartial) {
+        assert_eq!(self.shape, other.shape);
+        let bh = self.den.len();
+        let dh = self.shape.d_head;
+        for i in 0..bh {
+            let (ma, mb) = (self.max[i], other.max[i]);
+            let m = ma.max(mb);
+            if m == f32::NEG_INFINITY {
+                continue; // both empty
+            }
+            // exp(-inf - m) = 0 handles one-sided identity.
+            let wa = if ma == f32::NEG_INFINITY { 0.0 } else { (ma - m).exp() };
+            let wb = if mb == f32::NEG_INFINITY { 0.0 } else { (mb - m).exp() };
+            self.den[i] = self.den[i] * wa + other.den[i] * wb;
+            self.max[i] = m;
+            let base = i * dh;
+            for j in 0..dh {
+                self.num[base + j] = self.num[base + j] * wa + other.num[base + j] * wb;
+            }
+        }
+    }
+
+    /// Final attention output `z = n / d`, shape `[batch, n_heads, d_head]`.
+    pub fn finalize(&self) -> Vec<f32> {
+        let dh = self.shape.d_head;
+        let mut out = vec![0.0f32; self.num.len()];
+        for i in 0..self.den.len() {
+            let d = self.den[i];
+            for j in 0..dh {
+                out[i * dh + j] = self.num[i * dh + j] / d;
+            }
+        }
+        out
+    }
+
+    // ---- wire format ----------------------------------------------------
+    // Per (batch, head) block: [ n_0 .. n_{dh-1}, d, m ]  => block_len = dh+2.
+    // This is the AllReduce payload of Alg. 3 (numerator + denominator + max
+    // fused into ONE collective — see `AttnCombineOp`).
+
+    pub fn wire_block_len(shape: AttnShape) -> usize {
+        shape.d_head + 2
+    }
+
+    pub fn wire_len(shape: AttnShape) -> usize {
+        shape.batch * shape.n_heads * Self::wire_block_len(shape)
+    }
+
+    pub fn to_wire(&self) -> Vec<f32> {
+        let dh = self.shape.d_head;
+        let bh = self.den.len();
+        let mut w = Vec::with_capacity(bh * (dh + 2));
+        for i in 0..bh {
+            w.extend_from_slice(&self.num[i * dh..(i + 1) * dh]);
+            w.push(self.den[i]);
+            w.push(self.max[i]);
+        }
+        w
+    }
+
+    pub fn from_wire(shape: AttnShape, w: &[f32]) -> AttnPartial {
+        let dh = shape.d_head;
+        let bh = shape.batch * shape.n_heads;
+        assert_eq!(w.len(), bh * (dh + 2), "wire length mismatch");
+        let mut p = AttnPartial::identity(shape);
+        for i in 0..bh {
+            let blk = &w[i * (dh + 2)..(i + 1) * (dh + 2)];
+            p.num[i * dh..(i + 1) * dh].copy_from_slice(&blk[..dh]);
+            p.den[i] = blk[dh];
+            p.max[i] = blk[dh + 1];
+        }
+        p
+    }
+}
+
+/// `ReduceOp` over the wire format — lets the generic collectives (ring,
+/// k-ary tree, two-level) reduce attention partials exactly like NCCL
+/// reduces gradients. Blocks of `d_head + 2` floats are combined with the
+/// online-softmax rule; segmentation respects block boundaries.
+#[derive(Clone, Copy, Debug)]
+pub struct AttnCombineOp {
+    pub d_head: usize,
+}
+
+impl ReduceOp for AttnCombineOp {
+    fn combine(&self, acc: &mut [f32], other: &[f32]) {
+        let bl = self.d_head + 2;
+        assert_eq!(acc.len() % bl, 0, "buffer not block-aligned");
+        assert_eq!(acc.len(), other.len());
+        for (a, o) in acc.chunks_exact_mut(bl).zip(other.chunks_exact(bl)) {
+            let dh = self.d_head;
+            let (ma, mb) = (a[dh + 1], o[dh + 1]);
+            let m = ma.max(mb);
+            if m == f32::NEG_INFINITY {
+                continue;
+            }
+            let wa = if ma == f32::NEG_INFINITY { 0.0 } else { (ma - m).exp() };
+            let wb = if mb == f32::NEG_INFINITY { 0.0 } else { (mb - m).exp() };
+            for j in 0..dh {
+                a[j] = a[j] * wa + o[j] * wb;
+            }
+            a[dh] = a[dh] * wa + o[dh] * wb;
+            a[dh + 1] = m;
+        }
+    }
+
+    fn block_len(&self) -> usize {
+        self.d_head + 2
+    }
+
+    fn name(&self) -> &'static str {
+        "attn_combine"
+    }
+}
+
+/// Compute the exact partial `(n, d, m)` for one KV chunk in pure Rust —
+/// the oracle counterpart of the Pallas flash-decode kernel, and the CPU
+/// fallback compute path.
+///
+/// `k`/`v` are `[batch, t, kv_heads, d_head]`; `scale` is usually
+/// `1/sqrt(d_head)`.
+pub fn partial_from_chunk(
+    shape: AttnShape,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    t: usize,
+    scale: f32,
+) -> AttnPartial {
+    assert_eq!(q.len(), shape.q_elems());
+    assert_eq!(k.len(), shape.kv_elems(t));
+    assert_eq!(v.len(), shape.kv_elems(t));
+    let (b, h, hk, dh) = (shape.batch, shape.n_heads, shape.kv_heads, shape.d_head);
+    let group = shape.group();
+    let mut p = AttnPartial::identity(shape);
+    if t == 0 {
+        return p;
+    }
+    let kv_row = hk * dh; // elems per token
+    for bi in 0..b {
+        for hi in 0..h {
+            let kv_h = hi / group;
+            let q_off = (bi * h + hi) * dh;
+            let qv = &q[q_off..q_off + dh];
+            // logits
+            let mut logits = Vec::with_capacity(t);
+            for ti in 0..t {
+                let k_off = bi * t * kv_row + ti * kv_row + kv_h * dh;
+                let mut dot = 0.0f32;
+                for j in 0..dh {
+                    dot += qv[j] * k[k_off + j];
+                }
+                logits.push(dot * scale);
+            }
+            let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut den = 0.0f32;
+            let num = &mut p.num[q_off..q_off + dh];
+            for ti in 0..t {
+                let w = (logits[ti] - m).exp();
+                den += w;
+                let v_off = bi * t * kv_row + ti * kv_row + kv_h * dh;
+                for j in 0..dh {
+                    num[j] += w * v[v_off + j];
+                }
+            }
+            p.den[bi * h + hi] = den;
+            p.max[bi * h + hi] = m;
+        }
+    }
+    p
+}
+
+/// Reference exact attention for a single decode query over `t` tokens:
+/// softmax(q·Kᵀ·scale)·V, computed densely. The oracle for everything.
+pub fn ref_attention(
+    shape: AttnShape,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    t: usize,
+    scale: f32,
+) -> Vec<f32> {
+    partial_from_chunk(shape, q, k, v, t, scale).finalize()
+}
+
+/// Round-trip f32 through bf16 (truncation with round-to-nearest-even),
+/// used to emulate the paper's bf16 wire/compute precision in tests.
+pub fn bf16_round(x: f32) -> f32 {
+    let bits = x.to_bits();
+    // round to nearest even on the lower 16 bits
+    let rounded = bits.wrapping_add(0x7FFF + ((bits >> 16) & 1));
+    f32::from_bits(rounded & 0xFFFF_0000)
+}
+
+pub fn bf16_round_slice(xs: &mut [f32]) {
+    for x in xs.iter_mut() {
+        *x = bf16_round(*x);
+    }
+}
+
+/// Max |a-b| over two equal-length slices.
+pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f32::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+    use crate::util::Rng;
+
+    fn rand_problem(rng: &mut Rng, shape: AttnShape, t: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let q = rng.normal_vec(shape.q_elems(), 1.0);
+        let k = rng.normal_vec(shape.kv_elems(t), 1.0);
+        let v = rng.normal_vec(shape.kv_elems(t), 1.0);
+        (q, k, v)
+    }
+
+    #[test]
+    fn logsumexp_matches_naive_in_safe_range() {
+        let xs = [0.1f32, -0.5, 2.0, 1.0];
+        let naive = xs.iter().map(|x| x.exp()).sum::<f32>().ln();
+        assert!((logsumexp(&xs) - naive).abs() < 1e-6);
+    }
+
+    #[test]
+    fn logsumexp_stable_for_large_inputs() {
+        let xs = [1000.0f32, 1000.0];
+        let l = logsumexp(&xs);
+        assert!((l - (1000.0 + 2f32.ln())).abs() < 1e-3);
+        assert!(logsumexp(&[]).is_infinite());
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let mut xs = vec![1.0f32, 2.0, 3.0, 400.0];
+        softmax_inplace(&mut xs);
+        assert!((xs.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(xs[3] > 0.99);
+    }
+
+    #[test]
+    fn single_chunk_partial_equals_reference() {
+        let shape = AttnShape::mha(2, 4, 16);
+        let mut rng = Rng::seed(1);
+        let (q, k, v) = rand_problem(&mut rng, shape, 33);
+        let z1 = ref_attention(shape, &q, &k, &v, 33, 0.25);
+        let z2 = partial_from_chunk(shape, &q, &k, &v, 33, 0.25).finalize();
+        assert!(max_abs_diff(&z1, &z2) < 1e-6);
+    }
+
+    #[test]
+    fn chunked_combine_is_exact() {
+        // Tree Attention's core claim: combining per-chunk partials is an
+        // EXACT computation of attention (paper §6 footnote 1).
+        let shape = AttnShape::new(1, 8, 2, 32); // GQA 4:1
+        let mut rng = Rng::seed(2);
+        let t = 100;
+        let (q, k, v) = rand_problem(&mut rng, shape, t);
+        let reference = ref_attention(shape, &q, &k, &v, t, 0.17);
+
+        let kv_row = shape.kv_heads * shape.d_head;
+        let mut acc = AttnPartial::identity(shape);
+        // uneven chunks: 13 + 37 + 50
+        for (start, len) in [(0usize, 13usize), (13, 37), (50, 50)] {
+            let kc = &k[start * kv_row..(start + len) * kv_row];
+            let vc = &v[start * kv_row..(start + len) * kv_row];
+            let part = partial_from_chunk(shape, &q, kc, vc, len, 0.17);
+            acc.combine(&part);
+        }
+        assert!(max_abs_diff(&acc.finalize(), &reference) < 1e-5);
+    }
+
+    #[test]
+    fn combine_is_associative_prop() {
+        check("attn combine associativity", 64, |g| {
+            let shape = AttnShape::mha(1, 2, g.pow2(2, 4));
+            let rng = g.rng();
+            let mk = |rng: &mut Rng| {
+                let t = 5;
+                let q = rng.normal_vec(shape.q_elems(), 1.0);
+                let k = rng.normal_vec(shape.kv_elems(t), 1.0);
+                let v = rng.normal_vec(shape.kv_elems(t), 1.0);
+                partial_from_chunk(shape, &q, &k, &v, t, 1.0)
+            };
+            // Note: different chunks of the SAME query — combine requires a
+            // shared q, so build partials from one q by reusing the rng
+            // stream per partial with the same q.
+            let t = 30;
+            let q = rng.normal_vec(shape.q_elems(), 1.0);
+            let k = rng.normal_vec(shape.kv_elems(t), 1.0);
+            let v = rng.normal_vec(shape.kv_elems(t), 1.0);
+            let _ = mk; // silence
+            let kv_row = shape.kv_heads * shape.d_head;
+            let chunk = |s: usize, l: usize| {
+                partial_from_chunk(
+                    shape,
+                    &q,
+                    &k[s * kv_row..(s + l) * kv_row],
+                    &v[s * kv_row..(s + l) * kv_row],
+                    l,
+                    1.0,
+                )
+            };
+            let (a, b, c) = (chunk(0, 10), chunk(10, 10), chunk(20, 10));
+            // (a∘b)∘c
+            let mut left = a.clone();
+            left.combine(&b);
+            left.combine(&c);
+            // a∘(b∘c)
+            let mut bc = b.clone();
+            bc.combine(&c);
+            let mut right = a.clone();
+            right.combine(&bc);
+            assert!(
+                max_abs_diff(&left.finalize(), &right.finalize()) < 1e-5,
+                "associativity violated"
+            );
+        });
+    }
+
+    #[test]
+    fn identity_element_neutral() {
+        let shape = AttnShape::mha(1, 2, 8);
+        let mut rng = Rng::seed(3);
+        let (q, k, v) = rand_problem(&mut rng, shape, 17);
+        let p = partial_from_chunk(shape, &q, &k, &v, 17, 0.3);
+        let mut left = AttnPartial::identity(shape);
+        left.combine(&p);
+        let mut right = p.clone();
+        right.combine(&AttnPartial::identity(shape));
+        assert!(max_abs_diff(&left.finalize(), &p.finalize()) < 1e-7);
+        assert!(max_abs_diff(&right.finalize(), &p.finalize()) < 1e-7);
+    }
+
+    #[test]
+    fn wire_roundtrip() {
+        let shape = AttnShape::mha(2, 3, 5);
+        let mut rng = Rng::seed(4);
+        let (q, k, v) = rand_problem(&mut rng, shape, 9);
+        let p = partial_from_chunk(shape, &q, &k, &v, 9, 1.0);
+        let w = p.to_wire();
+        assert_eq!(w.len(), AttnPartial::wire_len(shape));
+        let p2 = AttnPartial::from_wire(shape, &w);
+        assert_eq!(p, p2);
+    }
+
+    #[test]
+    fn wire_op_matches_struct_combine() {
+        let shape = AttnShape::mha(1, 4, 8);
+        let mut rng = Rng::seed(5);
+        let (q, k, v) = rand_problem(&mut rng, shape, 40);
+        let kv_row = shape.kv_heads * shape.d_head;
+        let pa = partial_from_chunk(shape, &q, &k[..20 * kv_row], &v[..20 * kv_row], 20, 0.2);
+        let pb = partial_from_chunk(shape, &q, &k[20 * kv_row..], &v[20 * kv_row..], 20, 0.2);
+        // struct combine
+        let mut s = pa.clone();
+        s.combine(&pb);
+        // wire combine
+        let op = AttnCombineOp { d_head: shape.d_head };
+        let mut wa = pa.to_wire();
+        let wb = pb.to_wire();
+        crate::collectives::ReduceOp::combine(&op, &mut wa, &wb);
+        let from_wire = AttnPartial::from_wire(shape, &wa);
+        assert!(max_abs_diff(&s.finalize(), &from_wire.finalize()) < 1e-6);
+    }
+
+    #[test]
+    fn from_flash_output_contract() {
+        // o = n/d, lse = m + ln d   =>   from_flash(o, lse) combined over
+        // chunks must equal the full attention.
+        let shape = AttnShape::mha(1, 2, 16);
+        let mut rng = Rng::seed(6);
+        let (q, k, v) = rand_problem(&mut rng, shape, 64);
+        let reference = ref_attention(shape, &q, &k, &v, 64, 0.125);
+        let kv_row = shape.kv_heads * shape.d_head;
+        let mut acc = AttnPartial::identity(shape);
+        for c in 0..4 {
+            let (s, l) = (c * 16, 16);
+            let p = partial_from_chunk(shape, &q, &k[s * kv_row..(s + l) * kv_row], &v[s * kv_row..(s + l) * kv_row], l, 0.125);
+            // convert to flash (o, lse) then back via from_flash_output
+            let o = p.finalize();
+            let lse: Vec<f32> = p
+                .max
+                .iter()
+                .zip(&p.den)
+                .map(|(m, d)| m + d.ln())
+                .collect();
+            acc.combine(&AttnPartial::from_flash_output(shape, &o, &lse));
+        }
+        assert!(max_abs_diff(&acc.finalize(), &reference) < 1e-5);
+    }
+
+    #[test]
+    fn bf16_round_properties() {
+        assert_eq!(bf16_round(1.0), 1.0);
+        assert_eq!(bf16_round(0.0), 0.0);
+        let x = 1.2345678f32;
+        let r = bf16_round(x);
+        assert!((r - x).abs() / x < 0.01, "bf16 relative error < 1%");
+        assert_eq!(bf16_round(r), r, "idempotent");
+    }
+
+    #[test]
+    fn combine_order_invariance_prop() {
+        // Reducing partials in ANY permutation / tree shape gives the same
+        // result (to fp tolerance) — the property that makes topology-aware
+        // reduction legal (paper §5.1).
+        check("combine order invariance", 32, |g| {
+            let shape = AttnShape::mha(1, 2, 8);
+            let nchunks = g.usize_in(2..7);
+            let t_each = g.usize_in(1..9);
+            let t = nchunks * t_each;
+            let rng = g.rng();
+            let q = rng.normal_vec(shape.q_elems(), 1.0);
+            let k = rng.normal_vec(shape.kv_elems(t), 1.0);
+            let v = rng.normal_vec(shape.kv_elems(t), 1.0);
+            let kv_row = shape.kv_heads * shape.d_head;
+            let parts: Vec<AttnPartial> = (0..nchunks)
+                .map(|c| {
+                    let s = c * t_each;
+                    partial_from_chunk(
+                        shape,
+                        &q,
+                        &k[s * kv_row..(s + t_each) * kv_row],
+                        &v[s * kv_row..(s + t_each) * kv_row],
+                        t_each,
+                        0.35,
+                    )
+                })
+                .collect();
+            // sequential order
+            let mut seq = AttnPartial::identity(shape);
+            for p in &parts {
+                seq.combine(p);
+            }
+            // random permutation order
+            let mut order: Vec<usize> = (0..nchunks).collect();
+            g.rng().shuffle(&mut order);
+            let mut perm = AttnPartial::identity(shape);
+            for &i in &order {
+                perm.combine(&parts[i]);
+            }
+            let reference = ref_attention(shape, &q, &k, &v, t, 0.35);
+            assert!(max_abs_diff(&seq.finalize(), &reference) < 1e-4);
+            assert!(max_abs_diff(&perm.finalize(), &seq.finalize()) < 1e-4);
+        });
+    }
+}

@@ -1,0 +1,170 @@
+//! Benchmark support: a micro-bench harness (criterion is unavailable in
+//! the offline crate set), paper-style table rendering, and result JSON
+//! output. Every `benches/*.rs` target is a `harness = false` main that
+//! uses these helpers and prints the rows/series of one paper table/figure.
+
+pub mod papersim;
+
+use crate::ser::Json;
+use crate::util::{Stopwatch, Summary};
+
+/// Result of one micro-benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    /// Seconds per iteration.
+    pub summary: Summary,
+    pub iters: usize,
+}
+
+impl BenchResult {
+    pub fn per_iter(&self) -> f64 {
+        self.summary.mean
+    }
+    pub fn throughput(&self, units_per_iter: f64) -> f64 {
+        units_per_iter / self.summary.mean
+    }
+}
+
+/// Measure `f` with warmup; reports per-iteration wall time over `samples`
+/// timed batches of `batch` iterations each.
+pub fn bench_fn<F: FnMut()>(name: &str, warmup: usize, samples: usize, batch: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut per_iter = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let sw = Stopwatch::start();
+        for _ in 0..batch {
+            f();
+        }
+        per_iter.push(sw.elapsed_s() / batch as f64);
+    }
+    BenchResult { name: name.to_string(), summary: Summary::of(&per_iter), iters: samples * batch }
+}
+
+/// A markdown-ish table that mirrors the paper's presentation.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row width");
+        self.rows.push(cells);
+    }
+
+    /// Render with aligned columns.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("\n## {}\n\n", self.title));
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("|");
+            for (c, w) in cells.iter().zip(widths) {
+                line.push_str(&format!(" {c:<w$} |"));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        sep.push('\n');
+        out.push_str(&sep);
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Write a results JSON file under `bench_results/` (created on demand).
+pub fn write_results(name: &str, value: &Json) -> anyhow::Result<std::path::PathBuf> {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("bench_results");
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join(format!("{name}.json"));
+    std::fs::write(&path, value.to_string_pretty())?;
+    Ok(path)
+}
+
+/// Format a speedup the way the paper's tables do ("×4").
+pub fn fmt_speedup(baseline: f64, ours: f64) -> String {
+    if ours <= 0.0 {
+        return "—".into();
+    }
+    format!("×{:.0}", (baseline / ours).round().max(1.0))
+}
+
+/// Format seconds with paper-style precision ("2.57").
+pub fn fmt_s2(x: f64) -> String {
+    format!("{x:.2}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_fn_measures_something() {
+        let mut acc = 0u64;
+        let r = bench_fn("spin", 1, 5, 10, || {
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+        });
+        assert!(r.per_iter() > 0.0);
+        assert_eq!(r.iters, 50);
+        assert!(r.throughput(1000.0) > 0.0);
+        std::hint::black_box(acc);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("Demo", &["a", "long-header", "c"]);
+        t.row(vec!["1".into(), "2".into(), "3".into()]);
+        t.row(vec!["xxx".into(), "y".into(), "zzzz".into()]);
+        let s = t.render();
+        assert!(s.contains("## Demo"));
+        assert!(s.contains("| long-header |"));
+        let lines: Vec<&str> = s.lines().filter(|l| l.starts_with('|')).collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines.iter().all(|l| l.len() == lines[0].len()), "aligned");
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn speedup_formatting() {
+        assert_eq!(fmt_speedup(8.0, 2.0), "×4");
+        assert_eq!(fmt_speedup(2.57, 0.60), "×4");
+        assert_eq!(fmt_speedup(1.0, 0.0), "—");
+        assert_eq!(fmt_speedup(1.0, 2.0), "×1");
+    }
+}

@@ -1,0 +1,66 @@
+//! The virtual cluster: the simulated-GPU world the decode strategies run
+//! against. Bundles the discrete-event network ([`SimWorld`]), the per-GPU
+//! analytic compute model, and the transient-memory tracker.
+//!
+//! Design note: the coordinator drives all workers from one thread — PJRT
+//! calls are serialized through the device-service thread anyway (one CPU),
+//! and *virtual* time comes from the simulator, so host-thread parallelism
+//! would change nothing about the measured results while making them
+//! nondeterministic. Worker concurrency is therefore expressed in virtual
+//! time (per-rank clocks), not host threads.
+
+use crate::gpumodel::GpuModel;
+use crate::kvcache::MemTracker;
+use crate::netsim::SimWorld;
+use crate::topology::Topology;
+
+/// A simulated GPU cluster.
+pub struct VirtualCluster {
+    pub world: SimWorld,
+    pub gpu: GpuModel,
+    pub mem: MemTracker,
+}
+
+impl VirtualCluster {
+    pub fn new(topo: Topology) -> VirtualCluster {
+        let gpu = GpuModel::new(topo.gpu);
+        let p = topo.world_size();
+        VirtualCluster { world: SimWorld::new(topo), gpu, mem: MemTracker::new(p) }
+    }
+
+    pub fn world_size(&self) -> usize {
+        self.world.world_size()
+    }
+
+    pub fn topology(&self) -> &Topology {
+        self.world.topology()
+    }
+
+    /// Reset clocks, network counters, and memory peaks (new experiment).
+    pub fn reset(&mut self) {
+        self.world.reset();
+        self.mem.reset();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_reset() {
+        let mut c = VirtualCluster::new(Topology::h100_dgx(2));
+        assert_eq!(c.world_size(), 16);
+        c.world.compute(3, 1.0);
+        c.mem.alloc(0, 100);
+        c.reset();
+        assert_eq!(c.world.max_clock(), 0.0);
+        assert_eq!(c.mem.max_peak(), 0);
+    }
+
+    #[test]
+    fn gpu_model_matches_topology_kind() {
+        let c = VirtualCluster::new(Topology::rtx4090_pcie(2));
+        assert_eq!(c.gpu.kind.name(), "RTX4090");
+    }
+}

@@ -1,0 +1,464 @@
+//! Collective communication over the simulated cluster — the substrate the
+//! paper's §5.3 builds on. We implement the schedules NCCL uses (ring
+//! reduce-scatter + allgather; k-ary tree reduce + broadcast; the two-level
+//! "ring within a node, tree across nodes" hierarchy) plus the point-to-
+//! point ring shift that Ring Attention's KV rotation needs.
+//!
+//! A collective is described once as a [`Schedule`] — a list of steps, each
+//! a set of concurrent block-granular sends — and then executed either:
+//!   * with real data ([`execute_data`]): moves f32 blocks between per-rank
+//!     buffers and applies the [`ReduceOp`]; used on the actual decode path,
+//!   * or cost-only ([`execute_cost`]): posts the same transfers to the
+//!     network simulator without touching data; used by paper-scale
+//!     benchmarks where materializing Ring Attention's multi-GB KV payloads
+//!     would be pointless.
+//! Both executors advance the same virtual clocks, so timing is identical.
+
+pub mod schedules;
+
+pub use schedules::*;
+
+use crate::netsim::{SimWorld, TrafficCounters};
+use crate::topology::Rank;
+use std::ops::Range;
+
+/// Element-wise (or block-wise) reduction operator over f32 buffers.
+/// `block_len` is the segmentation granularity: schedules only split
+/// buffers at multiples of it (1 for ordinary elementwise ops; `d_head+2`
+/// for the attention combine — see `attnmath::AttnCombineOp`).
+pub trait ReduceOp: Sync {
+    fn combine(&self, acc: &mut [f32], other: &[f32]);
+    fn block_len(&self) -> usize {
+        1
+    }
+    fn name(&self) -> &'static str;
+}
+
+/// Elementwise sum.
+#[derive(Clone, Copy, Debug)]
+pub struct SumOp;
+impl ReduceOp for SumOp {
+    fn combine(&self, acc: &mut [f32], other: &[f32]) {
+        for (a, o) in acc.iter_mut().zip(other) {
+            *a += o;
+        }
+    }
+    fn name(&self) -> &'static str {
+        "sum"
+    }
+}
+
+/// Elementwise max.
+#[derive(Clone, Copy, Debug)]
+pub struct MaxOp;
+impl ReduceOp for MaxOp {
+    fn combine(&self, acc: &mut [f32], other: &[f32]) {
+        for (a, o) in acc.iter_mut().zip(other) {
+            *a = a.max(*o);
+        }
+    }
+    fn name(&self) -> &'static str {
+        "max"
+    }
+}
+
+/// What the receiver does with an arriving segment.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RecvMode {
+    /// Combine into the local buffer with the ReduceOp.
+    Reduce,
+    /// Overwrite the local segment (gather/broadcast phases).
+    Copy,
+}
+
+/// One block-granular point-to-point send within a schedule step.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SendOp {
+    pub src: Rank,
+    pub dst: Rank,
+    /// Block index range into the logical buffer (block = `op.block_len()`
+    /// elements at execution time).
+    pub blocks: Range<usize>,
+    pub mode: RecvMode,
+}
+
+/// A schedule: sequential steps of concurrent sends. All sends within a step
+/// depart simultaneously (subject to port contention in the simulator);
+/// step `i+1` begins only after every rank finished step `i`.
+#[derive(Clone, Debug, Default)]
+pub struct Schedule {
+    pub steps: Vec<Vec<SendOp>>,
+    /// Total logical blocks in the buffer this schedule was generated for.
+    pub nblocks: usize,
+    /// World size.
+    pub p: usize,
+    pub algo: &'static str,
+}
+
+impl Schedule {
+    /// Number of communication rounds.
+    pub fn n_steps(&self) -> usize {
+        self.steps.len()
+    }
+
+    /// Total blocks sent across all steps (volume in block units).
+    pub fn total_blocks_sent(&self) -> usize {
+        self.steps
+            .iter()
+            .flat_map(|s| s.iter())
+            .map(|op| op.blocks.len())
+            .sum()
+    }
+
+    /// Maximum number of sequential rounds any single rank participates in —
+    /// the latency-critical path length in "rounds".
+    pub fn critical_steps(&self) -> usize {
+        self.n_steps()
+    }
+
+    /// Sanity-check invariants: ranks and block ranges in bounds, no rank
+    /// sending to itself.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        for (i, step) in self.steps.iter().enumerate() {
+            for op in step {
+                anyhow::ensure!(op.src < self.p && op.dst < self.p, "step {i}: rank out of range");
+                anyhow::ensure!(op.src != op.dst, "step {i}: self-send");
+                anyhow::ensure!(
+                    op.blocks.end <= self.nblocks && op.blocks.start < op.blocks.end,
+                    "step {i}: bad block range {:?} (nblocks={})",
+                    op.blocks,
+                    self.nblocks
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Execution statistics for one collective.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ExecStats {
+    /// Communication rounds.
+    pub steps: usize,
+    /// Virtual seconds from entry barrier to all-ranks completion.
+    pub sim_time: f64,
+    /// Bytes/messages moved, by tier.
+    pub traffic: TrafficCounters,
+}
+
+/// Execute a schedule moving real data. `bufs[r]` is rank r's buffer; all
+/// must have length `schedule.nblocks * op.block_len()`. `wire_bytes_per_elem`
+/// models the on-the-wire precision (2 for bf16, the paper's setting).
+pub fn execute_data(
+    world: &mut SimWorld,
+    schedule: &Schedule,
+    bufs: &mut [Vec<f32>],
+    op: &dyn ReduceOp,
+    wire_bytes_per_elem: u64,
+) -> ExecStats {
+    let bl = op.block_len();
+    let elems = schedule.nblocks * bl;
+    assert_eq!(bufs.len(), schedule.p, "one buffer per rank");
+    for (r, b) in bufs.iter().enumerate() {
+        assert_eq!(b.len(), elems, "rank {r} buffer length");
+    }
+    let before = world.net.counters();
+    let t0 = world.barrier();
+    for step in &schedule.steps {
+        // Snapshot payloads first so intra-step sends observe pre-step data
+        // (all sends in a step are concurrent).
+        let payloads: Vec<Vec<f32>> = step
+            .iter()
+            .map(|s| bufs[s.src][s.blocks.start * bl..s.blocks.end * bl].to_vec())
+            .collect();
+        for (sendop, payload) in step.iter().zip(payloads) {
+            let bytes = (payload.len() as u64) * wire_bytes_per_elem;
+            world.send(sendop.src, sendop.dst, bytes);
+            let dst_seg = &mut bufs[sendop.dst][sendop.blocks.start * bl..sendop.blocks.end * bl];
+            match sendop.mode {
+                RecvMode::Reduce => op.combine(dst_seg, &payload),
+                RecvMode::Copy => dst_seg.copy_from_slice(&payload),
+            }
+        }
+        // Step barrier: every rank waits for the slowest participant.
+        step_barrier(world, step);
+    }
+    let t1 = world.barrier();
+    ExecStats {
+        steps: schedule.n_steps(),
+        sim_time: t1 - t0,
+        traffic: world.net.counters().since(&before),
+    }
+}
+
+/// Execute a schedule for timing/volume only (no data). `block_elems` is the
+/// element count per block (what `op.block_len()` would be).
+pub fn execute_cost(
+    world: &mut SimWorld,
+    schedule: &Schedule,
+    block_elems: usize,
+    wire_bytes_per_elem: u64,
+) -> ExecStats {
+    let before = world.net.counters();
+    let t0 = world.barrier();
+    for step in &schedule.steps {
+        for s in step {
+            let bytes = (s.blocks.len() * block_elems) as u64 * wire_bytes_per_elem;
+            world.send(s.src, s.dst, bytes);
+        }
+        step_barrier(world, step);
+    }
+    let t1 = world.barrier();
+    ExecStats {
+        steps: schedule.n_steps(),
+        sim_time: t1 - t0,
+        traffic: world.net.counters().since(&before),
+    }
+}
+
+/// After a step, participating ranks synchronize pairwise: the receiver's
+/// clock already advanced to the arrival time; the *sender* may proceed
+/// immediately (non-blocking send semantics, like NCCL's async launch), so
+/// we do not force a global barrier between steps — only the data
+/// dependencies implied by received messages. However, a rank that will
+/// *send* in the next step must have finished receiving what it forwards;
+/// schedules express that by block dependencies which the per-rank clock
+/// merge in `SimWorld::send` already captures (receiver clock = max(own,
+/// arrival)). So the step barrier is a no-op by default; kept as a hook for
+/// synchronous-collective ablations.
+fn step_barrier(_world: &mut SimWorld, _step: &[SendOp]) {}
+
+/// High-level algorithm selector used by config / CLI / benches.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AllReduceAlgo {
+    /// NCCL-style ring: reduce-scatter + allgather, 2(p-1) steps.
+    Ring,
+    /// Flat k-ary tree: reduce to root then broadcast, 2·ceil(log_k p) steps.
+    Tree { fanout: usize },
+    /// Topology-aware: intra-node reduce → inter-node tree allreduce among
+    /// node leaders → intra-node broadcast (what NCCL does across DGX nodes).
+    TwoLevel { inter_fanout: usize },
+}
+
+impl AllReduceAlgo {
+    pub fn name(&self) -> String {
+        match self {
+            AllReduceAlgo::Ring => "ring".into(),
+            AllReduceAlgo::Tree { fanout } => format!("tree{fanout}"),
+            AllReduceAlgo::TwoLevel { inter_fanout } => format!("twolevel{inter_fanout}"),
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<AllReduceAlgo> {
+        match s {
+            "ring" => Ok(AllReduceAlgo::Ring),
+            "tree" | "tree2" => Ok(AllReduceAlgo::Tree { fanout: 2 }),
+            "tree4" => Ok(AllReduceAlgo::Tree { fanout: 4 }),
+            "tree8" => Ok(AllReduceAlgo::Tree { fanout: 8 }),
+            "twolevel" | "twolevel2" => Ok(AllReduceAlgo::TwoLevel { inter_fanout: 2 }),
+            "twolevel4" => Ok(AllReduceAlgo::TwoLevel { inter_fanout: 4 }),
+            other => anyhow::bail!("unknown allreduce algo '{other}'"),
+        }
+    }
+
+    /// Build the schedule for this algorithm on the given world.
+    pub fn schedule(&self, world: &SimWorld, nblocks: usize) -> Schedule {
+        match *self {
+            AllReduceAlgo::Ring => ring_allreduce_schedule(world.world_size(), nblocks),
+            AllReduceAlgo::Tree { fanout } => {
+                tree_allreduce_schedule(world.world_size(), nblocks, fanout)
+            }
+            AllReduceAlgo::TwoLevel { inter_fanout } => {
+                two_level_allreduce_schedule(world.topology(), nblocks, inter_fanout)
+            }
+        }
+    }
+}
+
+/// Convenience: allreduce real data with the chosen algorithm.
+pub fn allreduce(
+    world: &mut SimWorld,
+    algo: AllReduceAlgo,
+    bufs: &mut [Vec<f32>],
+    op: &dyn ReduceOp,
+    wire_bytes_per_elem: u64,
+) -> ExecStats {
+    let nblocks = bufs[0].len() / op.block_len();
+    assert_eq!(bufs[0].len() % op.block_len(), 0, "buffer not block-aligned");
+    let schedule = algo.schedule(world, nblocks);
+    execute_data(world, &schedule, bufs, op, wire_bytes_per_elem)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::Topology;
+    use crate::util::prop::check;
+    use crate::util::Rng;
+
+    fn world(nodes: usize, gpn: usize) -> SimWorld {
+        SimWorld::new(Topology::custom(
+            "test",
+            nodes,
+            gpn,
+            crate::gpumodel::GpuKind::H100,
+            crate::topology::LinkSpec::nvlink4(),
+            crate::topology::LinkSpec::infiniband_ndr(),
+        ))
+    }
+
+    fn random_bufs(rng: &mut Rng, p: usize, elems: usize) -> Vec<Vec<f32>> {
+        (0..p).map(|_| rng.normal_vec(elems, 1.0)).collect()
+    }
+
+    fn expected_sum(bufs: &[Vec<f32>]) -> Vec<f32> {
+        let mut out = vec![0.0f32; bufs[0].len()];
+        for b in bufs {
+            for (o, x) in out.iter_mut().zip(b) {
+                *o += x;
+            }
+        }
+        out
+    }
+
+    fn assert_allreduced(bufs: &[Vec<f32>], expect: &[f32], tol: f32) {
+        for (r, b) in bufs.iter().enumerate() {
+            let d = crate::attnmath::max_abs_diff(b, expect);
+            assert!(d <= tol, "rank {r} diverges by {d}");
+        }
+    }
+
+    #[test]
+    fn allreduce_all_algos_correct_sum() {
+        let mut rng = Rng::seed(10);
+        for algo in [
+            AllReduceAlgo::Ring,
+            AllReduceAlgo::Tree { fanout: 2 },
+            AllReduceAlgo::Tree { fanout: 4 },
+            AllReduceAlgo::TwoLevel { inter_fanout: 2 },
+        ] {
+            let mut w = world(2, 4);
+            let mut bufs = random_bufs(&mut rng, 8, 64);
+            let expect = expected_sum(&bufs);
+            let stats = allreduce(&mut w, algo, &mut bufs, &SumOp, 2);
+            assert_allreduced(&bufs, &expect, 1e-4);
+            assert!(stats.sim_time > 0.0);
+            assert!(stats.traffic.total_bytes() > 0);
+        }
+    }
+
+    #[test]
+    fn allreduce_max_correct() {
+        let mut rng = Rng::seed(11);
+        let mut w = world(1, 4);
+        let mut bufs = random_bufs(&mut rng, 4, 32);
+        let mut expect = vec![f32::NEG_INFINITY; 32];
+        for b in &bufs {
+            for (e, x) in expect.iter_mut().zip(b) {
+                *e = e.max(*x);
+            }
+        }
+        allreduce(&mut w, AllReduceAlgo::Tree { fanout: 2 }, &mut bufs, &MaxOp, 4);
+        assert_allreduced(&bufs, &expect, 0.0);
+    }
+
+    #[test]
+    fn allreduce_attn_combine_over_cluster() {
+        use crate::attnmath::{partial_from_chunk, ref_attention, AttnCombineOp, AttnPartial, AttnShape};
+        let shape = AttnShape::mha(1, 4, 16);
+        let p = 8;
+        let t_each = 12;
+        let mut rng = Rng::seed(12);
+        let q = rng.normal_vec(shape.q_elems(), 1.0);
+        let k = rng.normal_vec(shape.kv_elems(p * t_each), 1.0);
+        let v = rng.normal_vec(shape.kv_elems(p * t_each), 1.0);
+        let kv_row = shape.kv_heads * shape.d_head;
+        let mut bufs: Vec<Vec<f32>> = (0..p)
+            .map(|r| {
+                let s = r * t_each;
+                partial_from_chunk(
+                    shape,
+                    &q,
+                    &k[s * kv_row..(s + t_each) * kv_row],
+                    &v[s * kv_row..(s + t_each) * kv_row],
+                    t_each,
+                    0.25,
+                )
+                .to_wire()
+            })
+            .collect();
+        let op = AttnCombineOp { d_head: shape.d_head };
+        for algo in [AllReduceAlgo::Ring, AllReduceAlgo::Tree { fanout: 2 }, AllReduceAlgo::TwoLevel { inter_fanout: 2 }] {
+            let mut w = world(2, 4);
+            let mut bb = bufs.clone();
+            allreduce(&mut w, algo, &mut bb, &op, 2);
+            let reference = ref_attention(shape, &q, &k, &v, p * t_each, 0.25);
+            for r in 0..p {
+                let got = AttnPartial::from_wire(shape, &bb[r]).finalize();
+                let d = crate::attnmath::max_abs_diff(&got, &reference);
+                assert!(d < 1e-4, "{} rank {r} diff {d}", algo.name());
+            }
+        }
+        bufs.clear();
+    }
+
+    #[test]
+    fn cost_and_data_executors_agree_on_time() {
+        let mut rng = Rng::seed(13);
+        let nblocks = 64;
+        let sched = ring_allreduce_schedule(8, nblocks);
+        let mut w1 = world(2, 4);
+        let mut bufs = random_bufs(&mut rng, 8, nblocks);
+        let s1 = execute_data(&mut w1, &sched, &mut bufs, &SumOp, 2);
+        let mut w2 = world(2, 4);
+        let s2 = execute_cost(&mut w2, &sched, 1, 2);
+        assert!((s1.sim_time - s2.sim_time).abs() < 1e-12);
+        assert_eq!(s1.traffic, s2.traffic);
+    }
+
+    #[test]
+    fn tree_beats_ring_latency_small_payload_many_ranks() {
+        // The paper's headline asymptotics: for small payloads (decode), the
+        // tree's O(log p) rounds beat the ring's O(p) rounds.
+        let nblocks = 130; // small payload (order of bd + 2bnh blocks)
+        for nodes in [4usize, 8, 16] {
+            let mut wr = world(nodes, 8);
+            let ring = execute_cost(&mut wr, &ring_allreduce_schedule(nodes * 8, nblocks), 1, 2);
+            let mut wt = world(nodes, 8);
+            let sched = two_level_allreduce_schedule(wt.topology(), nblocks, 2);
+            let two = execute_cost(&mut wt, &sched, 1, 2);
+            assert!(
+                two.sim_time < ring.sim_time,
+                "{nodes} nodes: twolevel {} vs ring {}",
+                two.sim_time,
+                ring.sim_time
+            );
+        }
+    }
+
+    #[test]
+    fn allreduce_prop_random_worlds() {
+        check("allreduce correct on random worlds", 40, |g| {
+            let nodes = g.usize_in(1..5);
+            let gpn = *g.choose(&[1usize, 2, 4]);
+            let p = nodes * gpn;
+            if p < 2 {
+                return;
+            }
+            let nblocks = g.usize_in(1..40);
+            let algo = *g.choose(&[
+                AllReduceAlgo::Ring,
+                AllReduceAlgo::Tree { fanout: 2 },
+                AllReduceAlgo::Tree { fanout: 3 },
+                AllReduceAlgo::TwoLevel { inter_fanout: 2 },
+            ]);
+            let mut bufs: Vec<Vec<f32>> =
+                (0..p).map(|_| g.rng().normal_vec(nblocks, 1.0)).collect();
+            let expect = expected_sum(&bufs);
+            let mut w = world(nodes, gpn);
+            let stats = allreduce(&mut w, algo, &mut bufs, &SumOp, 2);
+            assert_allreduced(&bufs, &expect, 1e-4);
+            assert!(stats.steps > 0);
+        });
+    }
+}

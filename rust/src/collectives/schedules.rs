@@ -1,0 +1,382 @@
+//! Schedule generators for the collective algorithms.
+//!
+//! Each generator emits a [`Schedule`](super::Schedule) — steps of
+//! concurrent block-granular sends — matching the communication pattern of
+//! the corresponding NCCL algorithm:
+//!
+//! * **ring**: reduce-scatter + allgather, `2(p−1)` rounds each moving
+//!   `nblocks/p` blocks per rank — bandwidth-optimal, latency ∝ p.
+//! * **k-ary tree**: reduce-to-root + broadcast, `2·depth` rounds each
+//!   moving the full buffer — latency ∝ log_k p, the right choice for the
+//!   small payloads of decode (paper §5.3, Theorem 1).
+//! * **two-level**: intra-node tree reduce → inter-node tree allreduce among
+//!   node leaders → intra-node broadcast; keeps the slow inter-node fabric
+//!   to `O(log #nodes)` small messages — the topology-aware pattern the
+//!   paper credits for Tree Attention's cluster-scale wins.
+//! * **binomial broadcast** and the **ring shift** used by Ring Attention's
+//!   KV rotation.
+
+use super::{RecvMode, Schedule, SendOp};
+use crate::topology::{Rank, Topology};
+
+/// Balanced contiguous partition of `nblocks` into `p` segments; segment i
+/// may be empty when `nblocks < p`.
+pub fn segment(nblocks: usize, p: usize, i: usize) -> std::ops::Range<usize> {
+    let start = i * nblocks / p;
+    let end = (i + 1) * nblocks / p;
+    start..end
+}
+
+/// NCCL-style ring allreduce: reduce-scatter then allgather.
+pub fn ring_allreduce_schedule(p: usize, nblocks: usize) -> Schedule {
+    assert!(p >= 1);
+    let mut steps = Vec::new();
+    if p > 1 {
+        // Reduce-scatter: step s, rank r sends segment (r - s) mod p to r+1.
+        for s in 0..p - 1 {
+            let mut ops = Vec::with_capacity(p);
+            for r in 0..p {
+                let seg = segment(nblocks, p, (r + p - s % p) % p);
+                if seg.is_empty() {
+                    continue;
+                }
+                ops.push(SendOp { src: r, dst: (r + 1) % p, blocks: seg, mode: RecvMode::Reduce });
+            }
+            steps.push(ops);
+        }
+        // Allgather: step s, rank r sends segment (r + 1 - s) mod p to r+1.
+        for s in 0..p - 1 {
+            let mut ops = Vec::with_capacity(p);
+            for r in 0..p {
+                let seg = segment(nblocks, p, (r + 1 + p - s % p) % p);
+                if seg.is_empty() {
+                    continue;
+                }
+                ops.push(SendOp { src: r, dst: (r + 1) % p, blocks: seg, mode: RecvMode::Copy });
+            }
+            steps.push(ops);
+        }
+    }
+    Schedule { steps, nblocks, p, algo: "ring" }
+}
+
+// ---- k-ary tree helpers ---------------------------------------------------
+
+/// Parent of `i` in the k-ary heap tree rooted at 0 (None for the root).
+pub fn tree_parent(i: usize, k: usize) -> Option<usize> {
+    if i == 0 {
+        None
+    } else {
+        Some((i - 1) / k)
+    }
+}
+
+/// Children of `i` in the k-ary heap tree over `p` ranks.
+pub fn tree_children(i: usize, k: usize, p: usize) -> Vec<usize> {
+    (1..=k).map(|j| k * i + j).filter(|&c| c < p).collect()
+}
+
+/// Depth of `i` (root = 0).
+pub fn tree_depth(i: usize, k: usize) -> usize {
+    let mut d = 0;
+    let mut n = i;
+    while let Some(parent) = tree_parent(n, k) {
+        n = parent;
+        d += 1;
+    }
+    d
+}
+
+/// Maximum depth of the k-ary heap tree over `p` ranks.
+pub fn tree_max_depth(p: usize, k: usize) -> usize {
+    (0..p).map(|i| tree_depth(i, k)).max().unwrap_or(0)
+}
+
+/// Flat k-ary tree allreduce over ranks `0..p`: reduce up, broadcast down.
+pub fn tree_allreduce_schedule(p: usize, nblocks: usize, fanout: usize) -> Schedule {
+    let ranks: Vec<Rank> = (0..p).collect();
+    let mut steps = tree_reduce_steps(&ranks, nblocks, fanout);
+    steps.extend(tree_broadcast_steps(&ranks, nblocks, fanout));
+    Schedule { steps, nblocks, p, algo: "tree" }
+}
+
+/// Reduce phase of a k-ary tree over an explicit rank set (`members[0]` is
+/// the root). One step per depth level, deepest first; every member at that
+/// depth sends its full buffer to its parent (RecvMode::Reduce).
+fn tree_reduce_steps(members: &[Rank], nblocks: usize, k: usize) -> Vec<Vec<SendOp>> {
+    let n = members.len();
+    let max_d = tree_max_depth(n, k);
+    let mut steps = Vec::new();
+    for depth in (1..=max_d).rev() {
+        let mut ops = Vec::new();
+        for i in 0..n {
+            if tree_depth(i, k) == depth {
+                let parent = tree_parent(i, k).unwrap();
+                ops.push(SendOp {
+                    src: members[i],
+                    dst: members[parent],
+                    blocks: 0..nblocks,
+                    mode: RecvMode::Reduce,
+                });
+            }
+        }
+        if !ops.is_empty() {
+            steps.push(ops);
+        }
+    }
+    steps
+}
+
+/// Broadcast phase: root-down, one step per depth level.
+fn tree_broadcast_steps(members: &[Rank], nblocks: usize, k: usize) -> Vec<Vec<SendOp>> {
+    let n = members.len();
+    let max_d = tree_max_depth(n, k);
+    let mut steps = Vec::new();
+    for depth in 1..=max_d {
+        let mut ops = Vec::new();
+        for i in 0..n {
+            if tree_depth(i, k) == depth {
+                let parent = tree_parent(i, k).unwrap();
+                ops.push(SendOp {
+                    src: members[parent],
+                    dst: members[i],
+                    blocks: 0..nblocks,
+                    mode: RecvMode::Copy,
+                });
+            }
+        }
+        if !ops.is_empty() {
+            steps.push(ops);
+        }
+    }
+    steps
+}
+
+/// Topology-aware two-level allreduce (what NCCL effectively does on DGX
+/// clusters, and the pattern Tree Attention rides on):
+///   1. binary-tree reduce within each node to the node leader (NVLink),
+///   2. `inter_fanout`-ary tree allreduce among node leaders (IB),
+///   3. binary-tree broadcast within each node (NVLink).
+pub fn two_level_allreduce_schedule(
+    topo: &Topology,
+    nblocks: usize,
+    inter_fanout: usize,
+) -> Schedule {
+    let p = topo.world_size();
+    let mut steps: Vec<Vec<SendOp>> = Vec::new();
+
+    // Phase 1: intra-node reduce to leaders — all nodes proceed in parallel,
+    // so merge per-node step lists index-wise.
+    let mut node_steps: Vec<Vec<Vec<SendOp>>> = Vec::new();
+    for node in 0..topo.n_nodes {
+        let members: Vec<Rank> =
+            (0..topo.gpus_per_node).map(|l| node * topo.gpus_per_node + l).collect();
+        node_steps.push(tree_reduce_steps(&members, nblocks, 2));
+    }
+    merge_parallel(&mut steps, node_steps);
+
+    // Phase 2: inter-node tree allreduce among leaders.
+    if topo.n_nodes > 1 {
+        let leaders = topo.node_leaders();
+        let mut inter = tree_reduce_steps(&leaders, nblocks, inter_fanout);
+        inter.extend(tree_broadcast_steps(&leaders, nblocks, inter_fanout));
+        steps.extend(inter);
+    }
+
+    // Phase 3: intra-node broadcast from leaders.
+    let mut node_bcast: Vec<Vec<Vec<SendOp>>> = Vec::new();
+    for node in 0..topo.n_nodes {
+        let members: Vec<Rank> =
+            (0..topo.gpus_per_node).map(|l| node * topo.gpus_per_node + l).collect();
+        node_bcast.push(tree_broadcast_steps(&members, nblocks, 2));
+    }
+    merge_parallel(&mut steps, node_bcast);
+
+    Schedule { steps, nblocks, p, algo: "twolevel" }
+}
+
+/// Append per-group step lists, merging same-index steps across groups
+/// (groups run concurrently).
+fn merge_parallel(steps: &mut Vec<Vec<SendOp>>, groups: Vec<Vec<Vec<SendOp>>>) {
+    let depth = groups.iter().map(|g| g.len()).max().unwrap_or(0);
+    for d in 0..depth {
+        let mut merged = Vec::new();
+        for g in &groups {
+            if let Some(ops) = g.get(d) {
+                merged.extend(ops.iter().cloned());
+            }
+        }
+        if !merged.is_empty() {
+            steps.push(merged);
+        }
+    }
+}
+
+/// Binomial-tree broadcast of the full buffer from `root`.
+pub fn broadcast_schedule(p: usize, root: Rank, nblocks: usize) -> Schedule {
+    // Re-index so root is 0, then double the informed set each step.
+    let reindex = |v: usize| (v + root) % p;
+    let mut steps = Vec::new();
+    let mut informed = 1usize;
+    while informed < p {
+        let mut ops = Vec::new();
+        for i in 0..informed.min(p - informed) {
+            ops.push(SendOp {
+                src: reindex(i),
+                dst: reindex(i + informed),
+                blocks: 0..nblocks,
+                mode: RecvMode::Copy,
+            });
+        }
+        steps.push(ops);
+        informed *= 2;
+    }
+    Schedule { steps, nblocks, p, algo: "broadcast" }
+}
+
+/// One ring-shift round: every rank forwards its full buffer to the next
+/// rank (Ring Attention's KV rotation). Repeated p−1 times by the caller.
+pub fn ring_shift_schedule(p: usize, nblocks: usize) -> Schedule {
+    let mut ops = Vec::with_capacity(p);
+    for r in 0..p {
+        ops.push(SendOp { src: r, dst: (r + 1) % p, blocks: 0..nblocks, mode: RecvMode::Copy });
+    }
+    Schedule { steps: vec![ops], nblocks, p, algo: "ring_shift" }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn ring_step_count() {
+        for p in [2usize, 3, 8, 16] {
+            let s = ring_allreduce_schedule(p, p * 4);
+            assert_eq!(s.n_steps(), 2 * (p - 1));
+            s.validate().unwrap();
+        }
+        assert_eq!(ring_allreduce_schedule(1, 8).n_steps(), 0);
+    }
+
+    #[test]
+    fn ring_volume_bandwidth_optimal() {
+        // Each rank sends ~2(p-1)/p of the buffer: total ≈ 2(p-1)·nblocks.
+        let (p, nblocks) = (8, 64);
+        let s = ring_allreduce_schedule(p, nblocks);
+        let total = s.total_blocks_sent();
+        assert_eq!(total, 2 * (p - 1) * nblocks / p * p / p * p); // 2*(p-1)*nblocks/p per rank * p ranks
+        assert_eq!(total, 2 * (p - 1) * nblocks);
+    }
+
+    #[test]
+    fn tree_structure_helpers() {
+        assert_eq!(tree_parent(0, 2), None);
+        assert_eq!(tree_parent(1, 2), Some(0));
+        assert_eq!(tree_parent(4, 2), Some(1));
+        assert_eq!(tree_children(0, 2, 5), vec![1, 2]);
+        assert_eq!(tree_children(1, 2, 5), vec![3, 4]);
+        assert_eq!(tree_depth(0, 2), 0);
+        assert_eq!(tree_depth(4, 2), 2);
+        assert_eq!(tree_max_depth(8, 2), 3);
+        assert_eq!(tree_max_depth(9, 2), 3);
+        assert_eq!(tree_max_depth(16, 4), 2);
+    }
+
+    #[test]
+    fn tree_step_count_logarithmic() {
+        // 2 * ceil-ish log_k(p) steps.
+        let s = tree_allreduce_schedule(16, 8, 2);
+        assert_eq!(s.n_steps(), 2 * tree_max_depth(16, 2));
+        assert_eq!(tree_max_depth(16, 2), 4);
+        let s4 = tree_allreduce_schedule(16, 8, 4);
+        assert_eq!(s4.n_steps(), 2 * tree_max_depth(16, 4));
+        assert!(s4.n_steps() < s.n_steps());
+        s.validate().unwrap();
+        s4.validate().unwrap();
+    }
+
+    #[test]
+    fn two_level_uses_inter_links_only_between_leaders() {
+        let topo = crate::topology::Topology::h100_dgx(4);
+        let s = two_level_allreduce_schedule(&topo, 8, 2);
+        s.validate().unwrap();
+        for step in &s.steps {
+            for op in step {
+                if topo.tier(op.src, op.dst) == crate::topology::Tier::Inter {
+                    assert_eq!(topo.local_of(op.src), 0, "inter send from leader only");
+                    assert_eq!(topo.local_of(op.dst), 0, "inter send to leader only");
+                }
+            }
+        }
+        // Inter-node messages: tree among 4 leaders = 3 reduce + 3 bcast.
+        let inter_msgs: usize = s
+            .steps
+            .iter()
+            .flatten()
+            .filter(|op| topo.tier(op.src, op.dst) == crate::topology::Tier::Inter)
+            .count();
+        assert_eq!(inter_msgs, 6);
+    }
+
+    #[test]
+    fn broadcast_informs_everyone() {
+        check("broadcast reaches all ranks", 50, |g| {
+            let p = g.usize_in(1..33);
+            let root = g.usize_in(0..p);
+            let s = broadcast_schedule(p, root, 4);
+            s.validate().unwrap();
+            let mut informed = vec![false; p];
+            informed[root] = true;
+            for step in &s.steps {
+                // all sources must already be informed (uses pre-step state)
+                let snapshot = informed.clone();
+                for op in step {
+                    assert!(snapshot[op.src], "src {} not informed yet", op.src);
+                    informed[op.dst] = true;
+                }
+            }
+            assert!(informed.iter().all(|&b| b), "p={p} root={root}");
+            // log2 depth
+            assert!(s.n_steps() <= (p as f64).log2().ceil() as usize + 1);
+        });
+    }
+
+    #[test]
+    fn ring_shift_single_step_full_buffer() {
+        let s = ring_shift_schedule(4, 10);
+        assert_eq!(s.n_steps(), 1);
+        assert_eq!(s.total_blocks_sent(), 40);
+        s.validate().unwrap();
+    }
+
+    #[test]
+    fn schedules_valid_prop() {
+        check("all schedules validate", 80, |g| {
+            let p = g.usize_in(2..40);
+            let nblocks = g.usize_in(1..100);
+            ring_allreduce_schedule(p, nblocks).validate().unwrap();
+            tree_allreduce_schedule(p, nblocks, *g.choose(&[2, 3, 4, 8])).validate().unwrap();
+            broadcast_schedule(p, g.usize_in(0..p), nblocks).validate().unwrap();
+            ring_shift_schedule(p, nblocks).validate().unwrap();
+            let nodes = g.usize_in(1..5);
+            let topo = crate::topology::Topology::h100_dgx(nodes);
+            two_level_allreduce_schedule(&topo, nblocks, 2).validate().unwrap();
+        });
+    }
+
+    #[test]
+    fn segment_partition_covers_exactly() {
+        check("segments partition blocks", 60, |g| {
+            let nblocks = g.usize_in(0..50);
+            let p = g.usize_in(1..20);
+            let mut covered = 0;
+            for i in 0..p {
+                let s = segment(nblocks, p, i);
+                assert_eq!(s.start, covered);
+                covered = s.end;
+            }
+            assert_eq!(covered, nblocks);
+        });
+    }
+}

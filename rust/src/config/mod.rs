@@ -1,0 +1,420 @@
+//! Typed configuration for the whole system: cluster description, model
+//! architecture, and run/serving parameters. Loadable from JSON files
+//! (`ser::Json`), overridable from CLI `key=value` pairs, with presets for
+//! the paper's testbeds and models.
+
+use crate::gpumodel::GpuKind;
+use crate::ser::Json;
+use crate::topology::Topology;
+use std::path::Path;
+
+/// Which distributed decode strategy to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Strategy {
+    /// Tree Attention (paper Alg. 3): local flash partials + AllReduce.
+    Tree,
+    /// Ring Attention (Liu et al. 2023): rotate KV chunks around a ring.
+    Ring,
+    /// Everything on one device (correctness baseline).
+    Single,
+}
+
+impl Strategy {
+    pub fn parse(s: &str) -> anyhow::Result<Strategy> {
+        match s {
+            "tree" => Ok(Strategy::Tree),
+            "ring" => Ok(Strategy::Ring),
+            "single" => Ok(Strategy::Single),
+            other => anyhow::bail!("unknown strategy '{other}' (tree | ring | single)"),
+        }
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            Strategy::Tree => "tree",
+            Strategy::Ring => "ring",
+            Strategy::Single => "single",
+        }
+    }
+}
+
+/// Cluster configuration (maps to a `Topology` + GPU cost model).
+#[derive(Clone, Debug)]
+pub struct ClusterSpec {
+    pub preset: String,
+    pub n_nodes: usize,
+    pub gpus_per_node: usize,
+}
+
+impl ClusterSpec {
+    pub fn topology(&self) -> anyhow::Result<Topology> {
+        Topology::preset(&self.preset, self.n_nodes, self.gpus_per_node)
+    }
+
+    pub fn world_size(&self) -> usize {
+        self.n_nodes * self.gpus_per_node
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<ClusterSpec> {
+        Ok(ClusterSpec {
+            preset: j.opt_str("preset", "h100_dgx").to_string(),
+            n_nodes: j.opt_usize("n_nodes", 1),
+            gpus_per_node: j.opt_usize("gpus_per_node", 8),
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("preset", Json::str(&self.preset)),
+            ("n_nodes", Json::num(self.n_nodes as f64)),
+            ("gpus_per_node", Json::num(self.gpus_per_node as f64)),
+        ])
+    }
+}
+
+impl Default for ClusterSpec {
+    fn default() -> Self {
+        ClusterSpec { preset: "h100_dgx".into(), n_nodes: 1, gpus_per_node: 8 }
+    }
+}
+
+/// Transformer architecture (Llama-style: RMSNorm, RoPE, SwiGLU, GQA).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelSpec {
+    pub name: String,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub kv_heads: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    pub max_seq: usize,
+    pub rope_theta: f64,
+}
+
+impl ModelSpec {
+    pub fn d_head(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// Total parameter count (tied embeddings not assumed; lm head counted).
+    pub fn param_count(&self) -> u64 {
+        let d = self.d_model as u64;
+        let dh = self.d_head() as u64;
+        let per_layer = d * (self.n_heads as u64 * dh)        // wq
+            + 2 * d * (self.kv_heads as u64 * dh)             // wk, wv
+            + (self.n_heads as u64 * dh) * d                  // wo
+            + 3 * d * self.d_ff as u64                        // w1, w2, w3
+            + 2 * d;                                          // two rmsnorm gains
+        self.n_layers as u64 * per_layer
+            + 2 * (self.vocab as u64 * d)                     // embed + head
+            + d                                               // final norm
+    }
+
+    /// Bytes of KV cache per token (bf16).
+    pub fn kv_bytes_per_token(&self) -> u64 {
+        2 * self.n_layers as u64 * self.kv_heads as u64 * self.d_head() as u64 * 2
+    }
+
+    /// The attention-block-only config of the paper's §6.1 experiments:
+    /// 16 heads of dimension 128.
+    pub fn paper_block() -> ModelSpec {
+        ModelSpec {
+            name: "paper-block".into(),
+            n_layers: 1,
+            d_model: 2048,
+            n_heads: 16,
+            kv_heads: 16,
+            d_ff: 0,
+            vocab: 0,
+            max_seq: 8 << 20,
+            rope_theta: 5e5,
+        }
+    }
+
+    /// Llama-3.1-8B dimensions (Table 1 timing model).
+    pub fn llama31_8b() -> ModelSpec {
+        ModelSpec {
+            name: "llama31-8b".into(),
+            n_layers: 32,
+            d_model: 4096,
+            n_heads: 32,
+            kv_heads: 8,
+            d_ff: 14336,
+            vocab: 128256,
+            max_seq: 512 * 1024,
+            rope_theta: 5e5,
+        }
+    }
+
+    /// Llama-3.2-1B dimensions (Table 2 timing model).
+    pub fn llama32_1b() -> ModelSpec {
+        ModelSpec {
+            name: "llama32-1b".into(),
+            n_layers: 16,
+            d_model: 2048,
+            n_heads: 32,
+            kv_heads: 8,
+            d_ff: 8192,
+            vocab: 128256,
+            max_seq: 128 * 1024,
+            rope_theta: 5e5,
+        }
+    }
+
+    /// ~124M-parameter model used for real-numerics end-to-end runs on CPU
+    /// (the shapes `python/compile/aot.py` compiles by default).
+    pub fn tiny_124m() -> ModelSpec {
+        ModelSpec {
+            name: "tiny-124m".into(),
+            n_layers: 12,
+            d_model: 768,
+            n_heads: 12,
+            kv_heads: 4,
+            d_ff: 2048,
+            vocab: 32000,
+            max_seq: 8192,
+            rope_theta: 1e4,
+        }
+    }
+
+    /// Even smaller model for fast integration tests.
+    pub fn test_8m() -> ModelSpec {
+        ModelSpec {
+            name: "test-8m".into(),
+            n_layers: 2,
+            d_model: 256,
+            n_heads: 4,
+            kv_heads: 2,
+            d_ff: 512,
+            vocab: 1024,
+            max_seq: 2048,
+            rope_theta: 1e4,
+        }
+    }
+
+    pub fn preset(name: &str) -> anyhow::Result<ModelSpec> {
+        match name {
+            "paper-block" => Ok(Self::paper_block()),
+            "llama31-8b" => Ok(Self::llama31_8b()),
+            "llama32-1b" => Ok(Self::llama32_1b()),
+            "tiny-124m" => Ok(Self::tiny_124m()),
+            "test-8m" => Ok(Self::test_8m()),
+            other => anyhow::bail!(
+                "unknown model preset '{other}' (paper-block | llama31-8b | llama32-1b | tiny-124m | test-8m)"
+            ),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<ModelSpec> {
+        if let Some(preset) = j.get("preset").and_then(|v| v.as_str()) {
+            return Self::preset(preset);
+        }
+        Ok(ModelSpec {
+            name: j.opt_str("name", "custom").to_string(),
+            n_layers: j.req_usize("n_layers")?,
+            d_model: j.req_usize("d_model")?,
+            n_heads: j.req_usize("n_heads")?,
+            kv_heads: j.opt_usize("kv_heads", j.req_usize("n_heads")?),
+            d_ff: j.req_usize("d_ff")?,
+            vocab: j.req_usize("vocab")?,
+            max_seq: j.opt_usize("max_seq", 8192),
+            rope_theta: j.opt_f64("rope_theta", 1e4),
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("n_layers", Json::num(self.n_layers as f64)),
+            ("d_model", Json::num(self.d_model as f64)),
+            ("n_heads", Json::num(self.n_heads as f64)),
+            ("kv_heads", Json::num(self.kv_heads as f64)),
+            ("d_ff", Json::num(self.d_ff as f64)),
+            ("vocab", Json::num(self.vocab as f64)),
+            ("max_seq", Json::num(self.max_seq as f64)),
+            ("rope_theta", Json::Num(self.rope_theta)),
+        ])
+    }
+}
+
+/// Parameters of one run (decode/serve/bench).
+#[derive(Clone, Debug)]
+pub struct RunSpec {
+    pub cluster: ClusterSpec,
+    pub model: ModelSpec,
+    pub strategy: Strategy,
+    pub seq_len: usize,
+    pub decode_tokens: usize,
+    pub batch: usize,
+    pub seed: u64,
+    /// bytes per wire element (2 = bf16).
+    pub wire_bpe: u64,
+    /// AllReduce algorithm for tree attention's combine.
+    pub allreduce: crate::collectives::AllReduceAlgo,
+    pub artifacts_dir: String,
+}
+
+impl Default for RunSpec {
+    fn default() -> Self {
+        RunSpec {
+            cluster: ClusterSpec::default(),
+            model: ModelSpec::tiny_124m(),
+            strategy: Strategy::Tree,
+            seq_len: 4096,
+            decode_tokens: 10,
+            batch: 1,
+            seed: 0xC0FFEE,
+            wire_bpe: 2,
+            allreduce: crate::collectives::AllReduceAlgo::TwoLevel { inter_fanout: 2 },
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+impl RunSpec {
+    pub fn from_json(j: &Json) -> anyhow::Result<RunSpec> {
+        let mut spec = RunSpec::default();
+        if let Some(c) = j.get("cluster") {
+            spec.cluster = ClusterSpec::from_json(c)?;
+        }
+        if let Some(m) = j.get("model") {
+            spec.model = ModelSpec::from_json(m)?;
+        }
+        if let Some(s) = j.get("strategy").and_then(|v| v.as_str()) {
+            spec.strategy = Strategy::parse(s)?;
+        }
+        if let Some(a) = j.get("allreduce").and_then(|v| v.as_str()) {
+            spec.allreduce = crate::collectives::AllReduceAlgo::parse(a)?;
+        }
+        spec.seq_len = j.opt_usize("seq_len", spec.seq_len);
+        spec.decode_tokens = j.opt_usize("decode_tokens", spec.decode_tokens);
+        spec.batch = j.opt_usize("batch", spec.batch);
+        spec.seed = j.opt_f64("seed", spec.seed as f64) as u64;
+        spec.wire_bpe = j.opt_usize("wire_bpe", spec.wire_bpe as usize) as u64;
+        spec.artifacts_dir = j.opt_str("artifacts_dir", &spec.artifacts_dir).to_string();
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<RunSpec> {
+        Self::from_json(&crate::ser::parse_file(path)?)
+    }
+
+    /// Apply a `key=value` CLI override (dotted paths for nesting).
+    pub fn apply_override(&mut self, kv: &str) -> anyhow::Result<()> {
+        let (key, value) = kv
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("override '{kv}' must be key=value"))?;
+        match key {
+            "strategy" => self.strategy = Strategy::parse(value)?,
+            "allreduce" => self.allreduce = crate::collectives::AllReduceAlgo::parse(value)?,
+            "seq_len" => self.seq_len = value.parse()?,
+            "decode_tokens" => self.decode_tokens = value.parse()?,
+            "batch" => self.batch = value.parse()?,
+            "seed" => self.seed = value.parse()?,
+            "wire_bpe" => self.wire_bpe = value.parse()?,
+            "artifacts_dir" => self.artifacts_dir = value.to_string(),
+            "cluster.preset" => self.cluster.preset = value.to_string(),
+            "cluster.n_nodes" => self.cluster.n_nodes = value.parse()?,
+            "cluster.gpus_per_node" => self.cluster.gpus_per_node = value.parse()?,
+            "model.preset" => self.model = ModelSpec::preset(value)?,
+            other => anyhow::bail!("unknown config key '{other}'"),
+        }
+        self.validate()
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.cluster.world_size() >= 1, "cluster must have ≥1 device");
+        anyhow::ensure!(self.model.n_heads % self.model.kv_heads == 0, "n_heads % kv_heads != 0");
+        anyhow::ensure!(self.model.d_model % self.model.n_heads == 0, "d_model % n_heads != 0");
+        anyhow::ensure!(self.seq_len >= 1, "seq_len must be ≥ 1");
+        anyhow::ensure!(self.batch >= 1, "batch must be ≥ 1");
+        anyhow::ensure!(self.wire_bpe == 2 || self.wire_bpe == 4, "wire_bpe must be 2 or 4");
+        Ok(())
+    }
+
+    pub fn gpu_kind(&self) -> anyhow::Result<GpuKind> {
+        Ok(self.cluster.topology()?.gpu)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_counts_roughly_right() {
+        // 8B model: ~8.0e9 params.
+        let p = ModelSpec::llama31_8b().param_count() as f64;
+        assert!((6.5e9..9.5e9).contains(&p), "8B params = {p}");
+        let t = ModelSpec::tiny_124m().param_count() as f64;
+        assert!((9.0e7..1.6e8).contains(&t), "124M params = {t}");
+        let one = ModelSpec::llama32_1b().param_count() as f64;
+        assert!((0.9e9..1.8e9).contains(&one), "1B params = {one}");
+    }
+
+    #[test]
+    fn kv_bytes_per_token() {
+        let m = ModelSpec::llama31_8b();
+        // 32 layers * 8 kv heads * 128 dh * 2 (k+v) * 2 bytes = 262144
+        assert_eq!(m.kv_bytes_per_token(), 32 * 8 * 128 * 2 * 2);
+    }
+
+    #[test]
+    fn model_json_roundtrip() {
+        let m = ModelSpec::tiny_124m();
+        let j = m.to_json();
+        let m2 = ModelSpec::from_json(&j).unwrap();
+        assert_eq!(m, m2);
+    }
+
+    #[test]
+    fn runspec_from_json_and_overrides() {
+        let j = crate::ser::parse(
+            r#"{
+                "cluster": {"preset": "h100_dgx", "n_nodes": 2, "gpus_per_node": 8},
+                "model": {"preset": "llama32-1b"},
+                "strategy": "ring",
+                "seq_len": 65536
+            }"#,
+        )
+        .unwrap();
+        let mut spec = RunSpec::from_json(&j).unwrap();
+        assert_eq!(spec.strategy, Strategy::Ring);
+        assert_eq!(spec.seq_len, 65536);
+        assert_eq!(spec.cluster.world_size(), 16);
+        assert_eq!(spec.model.name, "llama32-1b");
+
+        spec.apply_override("strategy=tree").unwrap();
+        assert_eq!(spec.strategy, Strategy::Tree);
+        spec.apply_override("cluster.n_nodes=4").unwrap();
+        assert_eq!(spec.cluster.n_nodes, 4);
+        assert!(spec.apply_override("bogus=1").is_err());
+        assert!(spec.apply_override("no-equals").is_err());
+    }
+
+    #[test]
+    fn validate_catches_bad_configs() {
+        let mut spec = RunSpec::default();
+        spec.model.kv_heads = 5; // 12 % 5 != 0
+        assert!(spec.validate().is_err());
+        let mut spec = RunSpec::default();
+        spec.wire_bpe = 3;
+        assert!(spec.validate().is_err());
+    }
+
+    #[test]
+    fn strategy_parse() {
+        assert_eq!(Strategy::parse("tree").unwrap(), Strategy::Tree);
+        assert_eq!(Strategy::parse("ring").unwrap(), Strategy::Ring);
+        assert!(Strategy::parse("star").is_err());
+    }
+
+    #[test]
+    fn model_presets_resolve() {
+        for name in ["paper-block", "llama31-8b", "llama32-1b", "tiny-124m", "test-8m"] {
+            assert!(ModelSpec::preset(name).is_ok(), "{name}");
+        }
+        assert!(ModelSpec::preset("gpt-17t").is_err());
+    }
+}

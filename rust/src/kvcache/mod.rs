@@ -1,0 +1,388 @@
+//! Sequence-sharded, paged KV cache — the distributed state Tree/Ring
+//! Attention operate over.
+//!
+//! Tokens are grouped into fixed-size *pages*; pages are assigned to
+//! workers round-robin, so shards stay balanced as decode appends tokens
+//! (the paper shards the sequence axis across GPUs; the assignment policy
+//! is legal because attention is permutation-invariant over KV positions —
+//! the softmax reduction is order-free).
+//!
+//! Each worker's shard is a contiguous host-side buffer per layer
+//! (`[len, kv_heads, d_head]` f32 for K and V), ready to pad-and-upload to
+//! the `attn_partial_t{T}` executable. Byte accounting tracks current and
+//! peak usage per worker for the Fig. 4 memory experiments.
+
+use crate::attnmath::AttnShape;
+
+/// Static layout parameters of a cache.
+#[derive(Clone, Copy, Debug)]
+pub struct CacheSpec {
+    pub n_layers: usize,
+    pub kv_heads: usize,
+    pub d_head: usize,
+    pub n_workers: usize,
+    /// Tokens per page (the shard-assignment granularity).
+    pub page_size: usize,
+    /// Bytes per stored element on the simulated device (2 = bf16).
+    pub elem_bytes: u64,
+}
+
+impl CacheSpec {
+    pub fn kv_row(&self) -> usize {
+        self.kv_heads * self.d_head
+    }
+
+    /// Device bytes for one token across all layers (K and V).
+    pub fn bytes_per_token(&self) -> u64 {
+        2 * self.n_layers as u64 * self.kv_row() as u64 * self.elem_bytes
+    }
+}
+
+/// One worker's shard: per-layer contiguous K/V buffers.
+#[derive(Clone, Debug)]
+pub struct WorkerShard {
+    /// `k[layer]`, `v[layer]`: [len * kv_row] f32, host-side.
+    pub k: Vec<Vec<f32>>,
+    pub v: Vec<Vec<f32>>,
+    /// Tokens held.
+    pub len: usize,
+}
+
+impl WorkerShard {
+    fn new(n_layers: usize) -> WorkerShard {
+        WorkerShard { k: vec![Vec::new(); n_layers], v: vec![Vec::new(); n_layers], len: 0 }
+    }
+}
+
+/// A token mid-append: decode appends one layer at a time (attention at
+/// layer l needs layer l's row before layer l+1 is computed), so the row
+/// data lands immediately but shard lengths update only at commit.
+#[derive(Clone, Copy, Debug)]
+struct PendingToken {
+    worker: usize,
+    layers_done: usize,
+}
+
+/// The sharded cache for ONE sequence.
+#[derive(Clone, Debug)]
+pub struct ShardedKvCache {
+    pub spec: CacheSpec,
+    shards: Vec<WorkerShard>,
+    /// Total tokens stored (across workers).
+    total_len: usize,
+    /// Peak device bytes per worker (simulated bf16 accounting).
+    peak_bytes: Vec<u64>,
+    pending: Option<PendingToken>,
+}
+
+impl ShardedKvCache {
+    pub fn new(spec: CacheSpec) -> ShardedKvCache {
+        assert!(spec.n_workers >= 1 && spec.page_size >= 1);
+        ShardedKvCache {
+            shards: (0..spec.n_workers).map(|_| WorkerShard::new(spec.n_layers)).collect(),
+            peak_bytes: vec![0; spec.n_workers],
+            total_len: 0,
+            pending: None,
+            spec,
+        }
+    }
+
+    /// Worker that owns global token index `t` (round-robin by page).
+    pub fn worker_of(&self, t: usize) -> usize {
+        (t / self.spec.page_size) % self.spec.n_workers
+    }
+
+    pub fn total_len(&self) -> usize {
+        self.total_len
+    }
+
+    pub fn shard(&self, w: usize) -> &WorkerShard {
+        &self.shards[w]
+    }
+
+    pub fn shard_len(&self, w: usize) -> usize {
+        self.shards[w].len
+    }
+
+    pub fn shard_lens(&self) -> Vec<usize> {
+        self.shards.iter().map(|s| s.len).collect()
+    }
+
+    /// Append one token's K/V for every layer at once. Returns the owner.
+    pub fn append_token(&mut self, k_layers: &[Vec<f32>], v_layers: &[Vec<f32>]) -> usize {
+        assert_eq!(k_layers.len(), self.spec.n_layers);
+        assert_eq!(v_layers.len(), self.spec.n_layers);
+        for l in 0..self.spec.n_layers {
+            self.append_token_layer(l, &k_layers[l], &v_layers[l]);
+        }
+        self.commit_token()
+    }
+
+    /// Append the pending token's K/V for ONE layer (layers must arrive in
+    /// order 0..n_layers; finish with [`commit_token`](Self::commit_token)).
+    /// This matches the decode dataflow: layer l's attention needs layer
+    /// l's new row before layer l+1 has computed anything.
+    pub fn append_token_layer(&mut self, layer: usize, k_row: &[f32], v_row: &[f32]) {
+        let row = self.spec.kv_row();
+        assert_eq!(k_row.len(), row, "layer {layer} k row");
+        assert_eq!(v_row.len(), row, "layer {layer} v row");
+        let w = self.worker_of(self.total_len);
+        let pending = self.pending.get_or_insert(PendingToken { worker: w, layers_done: 0 });
+        assert_eq!(pending.layers_done, layer, "layers must be appended in order");
+        self.shards[w].k[layer].extend_from_slice(k_row);
+        self.shards[w].v[layer].extend_from_slice(v_row);
+        self.pending.as_mut().unwrap().layers_done += 1;
+    }
+
+    /// Rows of the in-flight token visible to worker `w` at `layer`
+    /// (1 if the pending token lives on `w` and `layer` was appended).
+    pub fn pending_rows(&self, layer: usize, w: usize) -> usize {
+        match &self.pending {
+            Some(p) if p.worker == w && layer < p.layers_done => 1,
+            _ => 0,
+        }
+    }
+
+    /// Commit the pending token (all layers must have been appended).
+    /// Returns the owning worker.
+    pub fn commit_token(&mut self) -> usize {
+        let p = self.pending.take().expect("no pending token");
+        assert_eq!(p.layers_done, self.spec.n_layers, "token missing layers");
+        self.shards[p.worker].len += 1;
+        self.total_len += 1;
+        self.update_peak(p.worker);
+        p.worker
+    }
+
+    /// Bulk-append a prefill chunk for ONE layer: `k`/`v` are
+    /// `[n_tokens * kv_row]` starting at global position `start`.
+    /// (The coordinator calls this per layer as prefill_layer outputs land.)
+    pub fn append_chunk_layer(&mut self, layer: usize, start: usize, n_tokens: usize, k: &[f32], v: &[f32]) {
+        let row = self.spec.kv_row();
+        assert_eq!(k.len(), n_tokens * row);
+        assert_eq!(v.len(), n_tokens * row);
+        for t in 0..n_tokens {
+            let w = self.worker_of(start + t);
+            self.shards[w].k[layer].extend_from_slice(&k[t * row..(t + 1) * row]);
+            self.shards[w].v[layer].extend_from_slice(&v[t * row..(t + 1) * row]);
+        }
+    }
+
+    /// Finish a bulk prefill of `n_tokens` tokens starting at `start`
+    /// (updates lengths and accounting once, after all layers are appended).
+    pub fn commit_chunk(&mut self, start: usize, n_tokens: usize) {
+        assert_eq!(start, self.total_len, "chunks must be committed in order");
+        for t in 0..n_tokens {
+            let w = self.worker_of(start + t);
+            self.shards[w].len += 1;
+        }
+        self.total_len += n_tokens;
+        for w in 0..self.spec.n_workers {
+            self.update_peak(w);
+        }
+        // integrity: every layer buffer matches the shard length
+        for (wi, s) in self.shards.iter().enumerate() {
+            for l in 0..self.spec.n_layers {
+                debug_assert_eq!(s.k[l].len(), s.len * self.spec.kv_row(), "worker {wi} layer {l}");
+            }
+        }
+    }
+
+    /// Current simulated device bytes held by worker `w` (bf16 K+V).
+    pub fn worker_bytes(&self, w: usize) -> u64 {
+        self.shards[w].len as u64 * self.spec.bytes_per_token()
+    }
+
+    pub fn peak_worker_bytes(&self, w: usize) -> u64 {
+        self.peak_bytes[w]
+    }
+
+    pub fn max_peak_bytes(&self) -> u64 {
+        self.peak_bytes.iter().copied().max().unwrap_or(0)
+    }
+
+    fn update_peak(&mut self, w: usize) {
+        let b = self.worker_bytes(w);
+        if b > self.peak_bytes[w] {
+            self.peak_bytes[w] = b;
+        }
+    }
+
+    /// Attention shape for this cache's model dims, given query head count.
+    pub fn attn_shape(&self, n_heads: usize) -> AttnShape {
+        AttnShape::new(1, n_heads, self.spec.kv_heads, self.d_head())
+    }
+
+    pub fn d_head(&self) -> usize {
+        self.spec.d_head
+    }
+}
+
+/// Scoped tracker for *transient* per-worker buffer allocations (incoming KV
+/// chunks, partial-result wires, outputs) — the quantities Eq. 8/9 model.
+/// Strategies register allocations; the tracker reports per-worker peaks.
+#[derive(Clone, Debug)]
+pub struct MemTracker {
+    current: Vec<i64>,
+    peak: Vec<i64>,
+}
+
+impl MemTracker {
+    pub fn new(n_workers: usize) -> MemTracker {
+        MemTracker { current: vec![0; n_workers], peak: vec![0; n_workers] }
+    }
+
+    /// Record an allocation of `bytes` on worker `w`.
+    pub fn alloc(&mut self, w: usize, bytes: u64) {
+        self.current[w] += bytes as i64;
+        if self.current[w] > self.peak[w] {
+            self.peak[w] = self.current[w];
+        }
+    }
+
+    /// Record a release.
+    pub fn free(&mut self, w: usize, bytes: u64) {
+        self.current[w] -= bytes as i64;
+        debug_assert!(self.current[w] >= 0, "negative memory on worker {w}");
+    }
+
+    pub fn peak(&self, w: usize) -> u64 {
+        self.peak[w].max(0) as u64
+    }
+
+    pub fn max_peak(&self) -> u64 {
+        self.peak.iter().copied().max().unwrap_or(0).max(0) as u64
+    }
+
+    pub fn reset(&mut self) {
+        self.current.iter_mut().for_each(|c| *c = 0);
+        self.peak.iter_mut().for_each(|p| *p = 0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    fn spec(workers: usize, page: usize) -> CacheSpec {
+        CacheSpec { n_layers: 2, kv_heads: 2, d_head: 4, n_workers: workers, page_size: page, elem_bytes: 2 }
+    }
+
+    fn row_of(t: usize, row: usize) -> Vec<f32> {
+        (0..row).map(|j| (t * 100 + j) as f32).collect()
+    }
+
+    #[test]
+    fn round_robin_page_assignment() {
+        let c = ShardedKvCache::new(spec(4, 16));
+        assert_eq!(c.worker_of(0), 0);
+        assert_eq!(c.worker_of(15), 0);
+        assert_eq!(c.worker_of(16), 1);
+        assert_eq!(c.worker_of(63), 3);
+        assert_eq!(c.worker_of(64), 0);
+    }
+
+    #[test]
+    fn append_token_balances_and_accounts() {
+        let s = spec(2, 4);
+        let mut c = ShardedKvCache::new(s);
+        let row = s.kv_row();
+        for t in 0..16 {
+            let k = vec![row_of(t, row), row_of(t + 1000, row)];
+            let v = k.clone();
+            c.append_token(&k, &v);
+        }
+        assert_eq!(c.total_len(), 16);
+        assert_eq!(c.shard_lens(), vec![8, 8]);
+        assert_eq!(c.worker_bytes(0), 8 * s.bytes_per_token());
+        assert_eq!(c.peak_worker_bytes(0), c.worker_bytes(0));
+    }
+
+    #[test]
+    fn shard_data_layout_is_contiguous_per_layer() {
+        let s = spec(2, 2);
+        let mut c = ShardedKvCache::new(s);
+        let row = s.kv_row();
+        for t in 0..6 {
+            let k = vec![row_of(t, row), row_of(t, row)];
+            c.append_token(&k, &k.clone());
+        }
+        // pages: tokens 0,1 -> w0; 2,3 -> w1; 4,5 -> w0
+        assert_eq!(c.shard_len(0), 4);
+        assert_eq!(c.shard_len(1), 2);
+        let k0 = &c.shard(0).k[0];
+        assert_eq!(k0.len(), 4 * row);
+        // first element of token 4's row is 400
+        assert_eq!(k0[2 * row], 400.0);
+    }
+
+    #[test]
+    fn chunk_append_matches_token_append() {
+        let s = spec(3, 4);
+        let row = s.kv_row();
+        let n = 20;
+        let k_flat: Vec<f32> = (0..n).flat_map(|t| row_of(t, row)).collect();
+        let v_flat: Vec<f32> = (0..n).flat_map(|t| row_of(t + 7, row)).collect();
+
+        let mut bulk = ShardedKvCache::new(s);
+        for l in 0..s.n_layers {
+            bulk.append_chunk_layer(l, 0, n, &k_flat, &v_flat);
+        }
+        bulk.commit_chunk(0, n);
+
+        let mut single = ShardedKvCache::new(s);
+        for t in 0..n {
+            let k = vec![row_of(t, row); s.n_layers];
+            let v = vec![row_of(t + 7, row); s.n_layers];
+            single.append_token(&k, &v);
+        }
+        assert_eq!(bulk.shard_lens(), single.shard_lens());
+        for w in 0..s.n_workers {
+            assert_eq!(bulk.shard(w).k[0], single.shard(w).k[0], "worker {w}");
+            assert_eq!(bulk.shard(w).v[1], single.shard(w).v[1], "worker {w}");
+        }
+    }
+
+    #[test]
+    fn shard_balance_prop() {
+        check("pages balance within one page", 50, |g| {
+            let workers = g.usize_in(1..9);
+            let page = g.pow2(0, 5);
+            let s = spec(workers, page);
+            let mut c = ShardedKvCache::new(s);
+            let n = g.usize_in(1..400);
+            let row = s.kv_row();
+            let zero = vec![vec![0.0f32; row]; s.n_layers];
+            for _ in 0..n {
+                c.append_token(&zero, &zero.clone());
+            }
+            let lens = c.shard_lens();
+            assert_eq!(lens.iter().sum::<usize>(), n);
+            let max = *lens.iter().max().unwrap();
+            let min = *lens.iter().min().unwrap();
+            assert!(max - min <= page, "imbalance {max}-{min} > page {page}");
+        });
+    }
+
+    #[test]
+    fn mem_tracker_peak_tracking() {
+        let mut m = MemTracker::new(2);
+        m.alloc(0, 100);
+        m.alloc(0, 50);
+        m.free(0, 100);
+        m.alloc(0, 20);
+        assert_eq!(m.peak(0), 150);
+        assert_eq!(m.peak(1), 0);
+        assert_eq!(m.max_peak(), 150);
+        m.reset();
+        assert_eq!(m.max_peak(), 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn commit_out_of_order_panics() {
+        let mut c = ShardedKvCache::new(spec(2, 4));
+        c.commit_chunk(5, 3);
+    }
+}

@@ -1,0 +1,37 @@
+//! # tree-attention
+//!
+//! A reproduction of **“Tree Attention: Topology-aware Decoding for
+//! Long-Context Attention on GPU Clusters”** (Shyam, Pilault et al., 2024)
+//! as a three-layer Rust + JAX + Pallas system:
+//!
+//! * **L1** — Pallas flash-decode / flash-prefill kernels
+//!   (`python/compile/kernels/`), AOT-lowered to HLO text.
+//! * **L2** — a Llama-style JAX model (`python/compile/model.py`) calling
+//!   those kernels, exported per entry point.
+//! * **L3** — this crate: the coordinator. Sequence-sharded KV cache,
+//!   Tree-Attention and Ring-Attention decode schedulers, NCCL-style
+//!   collectives over a discrete-event two-tier network simulator, a PJRT
+//!   runtime that executes the compiled artifacts, and a serving layer.
+//!
+//! Numerics are always real (compiled XLA executables or the pure-Rust
+//! oracle); cluster *timing* comes from the simulator calibrated to the
+//! paper's testbeds (H100 DGX, MI300X, PCIe RTX 4090). See `DESIGN.md`.
+
+pub mod attention;
+pub mod attnmath;
+pub mod bench;
+pub mod cluster;
+pub mod collectives;
+pub mod config;
+pub mod gpumodel;
+pub mod kvcache;
+pub mod model;
+pub mod netsim;
+pub mod runtime;
+pub mod ser;
+pub mod serve;
+pub mod topology;
+pub mod util;
+
+pub use config::{ClusterSpec, ModelSpec, RunSpec, Strategy};
+pub use topology::Topology;

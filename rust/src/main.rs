@@ -1,0 +1,376 @@
+//! `treeattn` — CLI launcher for the Tree Attention reproduction.
+//!
+//! Subcommands:
+//!   info                      — print presets, artifact status, topology
+//!   validate                  — run the exactness checks (tree≡ring≡oracle)
+//!   decode [opts]             — prefill + decode one sequence, print stats
+//!   serve  [opts]             — batch-serve a synthetic workload
+//!   sweep  [opts]             — ring-vs-tree latency sweep (simulated)
+//!
+//! Options are `key=value` pairs applied to the RunSpec (see config module),
+//! plus `--config <file.json>`. Examples:
+//!   treeattn decode model.preset=test-8m strategy=tree seq_len=512
+//!   treeattn sweep cluster.n_nodes=16
+//!   treeattn serve decode_tokens=8 batch=4
+
+use tree_attention::attention::{tree_decode, ComputeBackend, ShardKv};
+use tree_attention::attnmath::AttnShape;
+use tree_attention::bench::Table;
+use tree_attention::cluster::VirtualCluster;
+use tree_attention::collectives::AllReduceAlgo;
+use tree_attention::config::{ModelSpec, RunSpec};
+use tree_attention::model::{ExecutorConfig, ModelExecutor};
+use tree_attention::runtime::{find_artifacts, EngineHandle};
+use tree_attention::serve::{synthetic_workload, ServeConfig, Server};
+use tree_attention::util::{fmt_bytes, fmt_secs, fmt_tokens, Rng};
+use tree_attention::Topology;
+
+fn main() {
+    tree_attention::util::init_logging();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let result = match cmd {
+        "info" => cmd_info(),
+        "validate" => cmd_validate(),
+        "decode" => parse_spec(&args[1..]).and_then(|spec| cmd_decode(&spec)),
+        "serve" => parse_spec(&args[1..]).and_then(|spec| cmd_serve(&spec)),
+        "sweep" => parse_spec(&args[1..]).and_then(|spec| cmd_sweep(&spec)),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            print_help();
+            Err(anyhow::anyhow!("unknown command '{other}'"))
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "treeattn — Tree Attention reproduction\n\
+         usage: treeattn <info|validate|decode|serve|sweep> [--config f.json] [key=value ...]\n\
+         keys: strategy=tree|ring|single  allreduce=ring|tree|twolevel\n\
+         \x20     model.preset=test-8m|tiny-124m  cluster.preset=h100_dgx|mi300x|rtx4090_pcie\n\
+         \x20     cluster.n_nodes=N cluster.gpus_per_node=G seq_len=N decode_tokens=N batch=N"
+    );
+}
+
+fn parse_spec(args: &[String]) -> anyhow::Result<RunSpec> {
+    let mut spec = RunSpec::default();
+    let mut i = 0;
+    while i < args.len() {
+        if args[i] == "--config" {
+            anyhow::ensure!(i + 1 < args.len(), "--config needs a path");
+            spec = RunSpec::load(std::path::Path::new(&args[i + 1]))?;
+            i += 2;
+        } else {
+            spec.apply_override(&args[i])?;
+            i += 1;
+        }
+    }
+    Ok(spec)
+}
+
+fn cmd_info() -> anyhow::Result<()> {
+    println!("tree-attention reproduction — system info\n");
+    println!("model presets:");
+    for name in ["paper-block", "llama31-8b", "llama32-1b", "tiny-124m", "test-8m"] {
+        let m = ModelSpec::preset(name)?;
+        println!(
+            "  {name:<12} layers={:<3} d={:<5} heads={}/{:<3} params={:.1}M",
+            m.n_layers,
+            m.d_model,
+            m.n_heads,
+            m.kv_heads,
+            m.param_count() as f64 / 1e6
+        );
+    }
+    println!("\ncluster presets:");
+    for (name, t) in [
+        ("h100_dgx(2)", Topology::h100_dgx(2)),
+        ("mi300x(1,4)", Topology::mi300x(1, 4)),
+        ("rtx4090_pcie(2)", Topology::rtx4090_pcie(2)),
+    ] {
+        println!(
+            "  {name:<16} {} GPUs, intra {:.0} GB/s, inter {:.0} GB/s",
+            t.world_size(),
+            t.intra.bandwidth_bps / 1e9,
+            t.inter.bandwidth_bps / 1e9
+        );
+    }
+    println!("\nartifacts:");
+    for model in ["test-8m", "tiny-124m"] {
+        match find_artifacts("artifacts", model) {
+            Some(p) => println!("  {model:<10} OK   {}", p.display()),
+            None => println!("  {model:<10} MISSING (run `make artifacts`)"),
+        }
+    }
+    Ok(())
+}
+
+fn cmd_validate() -> anyhow::Result<()> {
+    println!("validating exactness: tree ≡ ring ≡ single ≡ oracle (pure rust math)…");
+    let shape = AttnShape::new(1, 16, 4, 64);
+    let scale = 1.0 / 8.0;
+    let mut rng = Rng::seed(2024);
+    let p = 8;
+    let lens: Vec<usize> = (0..p).map(|i| 100 + i * 37).collect();
+    let row = shape.kv_heads * shape.d_head;
+    let q = rng.normal_vec(shape.q_elems(), 1.0);
+    let ks: Vec<Vec<f32>> = lens.iter().map(|&l| rng.normal_vec(l * row, 1.0)).collect();
+    let vs: Vec<Vec<f32>> = lens.iter().map(|&l| rng.normal_vec(l * row, 1.0)).collect();
+    let shards: Vec<ShardKv> =
+        (0..p).map(|i| ShardKv { k: &ks[i], v: &vs[i], len: lens[i] }).collect();
+    let k_all: Vec<f32> = ks.concat();
+    let v_all: Vec<f32> = vs.concat();
+    let reference = tree_attention::attnmath::ref_attention(
+        shape,
+        &q,
+        &k_all,
+        &v_all,
+        lens.iter().sum(),
+        scale,
+    );
+
+    let mut cluster = VirtualCluster::new(Topology::h100_dgx(1));
+    let tree = tree_decode(
+        &mut cluster,
+        &ComputeBackend::Oracle,
+        shape,
+        scale,
+        &q,
+        &shards,
+        AllReduceAlgo::TwoLevel { inter_fanout: 2 },
+        2,
+    )?;
+    let d = tree_attention::attnmath::max_abs_diff(&tree.out, &reference);
+    println!("  tree vs oracle   max|Δ| = {d:.2e}  (sim {})", fmt_secs(tree.stats.sim_time));
+    anyhow::ensure!(d < 1e-4, "tree deviates from oracle");
+
+    if let Some(dir) = find_artifacts("artifacts", "test-8m") {
+        println!("validating PJRT path: compiled pallas kernel ≡ oracle…");
+        let engine = EngineHandle::spawn(&dir)?;
+        let m = engine.model_spec().clone();
+        let shape = AttnShape::new(1, m.n_heads, m.kv_heads, m.d_head());
+        let q = rng.normal_vec(shape.q_elems(), 1.0);
+        let lens = [100usize, 55];
+        let row = m.kv_heads * m.d_head();
+        let ks: Vec<Vec<f32>> = lens.iter().map(|&l| rng.normal_vec(l * row, 1.0)).collect();
+        let vs: Vec<Vec<f32>> = lens.iter().map(|&l| rng.normal_vec(l * row, 1.0)).collect();
+        let shards: Vec<ShardKv> =
+            (0..2).map(|i| ShardKv { k: &ks[i], v: &vs[i], len: lens[i] }).collect();
+        let scale = 1.0 / (m.d_head() as f32).sqrt();
+        let mut cluster = VirtualCluster::new(Topology::rtx4090_pcie(2));
+        let pjrt = tree_decode(
+            &mut cluster,
+            &ComputeBackend::Pjrt(engine),
+            shape,
+            scale,
+            &q,
+            &shards,
+            AllReduceAlgo::Ring,
+            2,
+        )?;
+        let k_all: Vec<f32> = ks.concat();
+        let v_all: Vec<f32> = vs.concat();
+        let reference =
+            tree_attention::attnmath::ref_attention(shape, &q, &k_all, &v_all, 155, scale);
+        let d = tree_attention::attnmath::max_abs_diff(&pjrt.out, &reference);
+        println!("  pjrt vs oracle   max|Δ| = {d:.2e}");
+        anyhow::ensure!(d < 1e-3, "PJRT path deviates from oracle");
+    } else {
+        println!("  (artifacts not built — PJRT validation skipped; run `make artifacts`)");
+    }
+    println!("all validations passed ✓");
+    Ok(())
+}
+
+fn cmd_decode(spec: &RunSpec) -> anyhow::Result<()> {
+    let dir = find_artifacts(&spec.artifacts_dir, &spec.model.name).ok_or_else(|| {
+        anyhow::anyhow!("artifacts for '{}' not found — run `make artifacts`", spec.model.name)
+    })?;
+    let engine = EngineHandle::spawn(&dir)?;
+    let topo = spec.cluster.topology()?;
+    let n_workers = topo.world_size();
+    let exec = ModelExecutor::new(
+        engine,
+        ExecutorConfig {
+            n_workers,
+            page_size: 16,
+            strategy: spec.strategy,
+            allreduce: spec.allreduce,
+            wire_bpe: spec.wire_bpe,
+        },
+        spec.seed,
+    )?;
+    let mut cluster = VirtualCluster::new(topo);
+    let mut rng = Rng::seed(spec.seed);
+    let vocab = exec.spec.vocab;
+    let prompt: Vec<i32> = (0..spec.seq_len).map(|_| rng.below(vocab) as i32).collect();
+
+    println!(
+        "decode: model={} strategy={} workers={n_workers} prompt={} tokens={}",
+        exec.spec.name,
+        spec.strategy.name(),
+        fmt_tokens(spec.seq_len),
+        spec.decode_tokens
+    );
+    let mut seq = exec.start_sequence();
+    let wall = std::time::Instant::now();
+    let prefill_sim = exec.prefill(&mut seq, &prompt, &mut cluster)?;
+    exec.finish_prefill(&mut seq);
+    println!(
+        "  prefill: {} (simulated {}), wall {}",
+        fmt_tokens(spec.seq_len),
+        fmt_secs(prefill_sim),
+        fmt_secs(wall.elapsed().as_secs_f64())
+    );
+
+    let mut attn_sim = 0.0;
+    let mut bytes = 0u64;
+    let mut toks = Vec::new();
+    for _ in 0..spec.decode_tokens {
+        let (t, stats) = exec.decode_step(&mut seq, &mut cluster)?;
+        toks.push(t);
+        attn_sim += stats.attn_sim_time;
+        bytes += stats.bytes;
+    }
+    println!("  decoded {toks:?}");
+    println!(
+        "  attention sim time {} ({} per token), comm volume {}",
+        fmt_secs(attn_sim),
+        fmt_secs(attn_sim / spec.decode_tokens.max(1) as f64),
+        fmt_bytes(bytes)
+    );
+    println!("  shard lengths: {:?}", seq.cache.shard_lens());
+    println!("  peak KV bytes/worker: {}", fmt_bytes(seq.cache.max_peak_bytes()));
+    Ok(())
+}
+
+fn cmd_serve(spec: &RunSpec) -> anyhow::Result<()> {
+    let dir = find_artifacts(&spec.artifacts_dir, &spec.model.name).ok_or_else(|| {
+        anyhow::anyhow!("artifacts for '{}' not found — run `make artifacts`", spec.model.name)
+    })?;
+    let engine = EngineHandle::spawn(&dir)?;
+    let topo = spec.cluster.topology()?;
+    let exec = ModelExecutor::new(
+        engine,
+        ExecutorConfig {
+            n_workers: topo.world_size(),
+            page_size: 16,
+            strategy: spec.strategy,
+            allreduce: spec.allreduce,
+            wire_bpe: spec.wire_bpe,
+        },
+        spec.seed,
+    )?;
+    let mut cluster = VirtualCluster::new(topo);
+    let reqs = synthetic_workload(
+        spec.batch * 2,
+        (spec.seq_len / 2).max(1),
+        spec.seq_len,
+        spec.decode_tokens,
+        exec.spec.vocab,
+        spec.seed,
+    );
+    println!(
+        "serving {} requests (batch {}) with {} on {}…",
+        reqs.len(),
+        spec.batch,
+        spec.strategy.name(),
+        cluster.topology().name
+    );
+    let mut server = Server::new(&exec, &mut cluster, ServeConfig { max_batch: spec.batch });
+    let (results, metrics) = server.run(reqs)?;
+    let mut table = Table::new("Serving results", &["req", "out toks", "TTFT(sim)", "TPOT(sim)", "total(sim)"]);
+    for r in &results {
+        table.row(vec![
+            r.id.to_string(),
+            r.tokens.len().to_string(),
+            fmt_secs(r.ttft_sim),
+            fmt_secs(r.tpot_sim),
+            fmt_secs(r.total_sim),
+        ]);
+    }
+    table.print();
+    println!(
+        "\ncompleted {} | throughput {:.1} tok/s (simulated cluster) | {:.2} tok/s (host wall)",
+        metrics.completed, metrics.throughput_sim, metrics.throughput_wall
+    );
+    Ok(())
+}
+
+fn cmd_sweep(spec: &RunSpec) -> anyhow::Result<()> {
+    // Pure-simulation ring-vs-tree sweep at paper scale (no PJRT needed).
+    let shape = AttnShape::new(1, 16, 16, 128); // the paper's attention block
+    let mut table = Table::new(
+        "Ring vs Tree decode latency (simulated H100 DGX cluster)",
+        &["nodes", "GPUs", "seq len", "ring (sim)", "tree (sim)", "speedup"],
+    );
+    for nodes in [1usize, 2, 4, 8, 16] {
+        let topo = Topology::h100_dgx(nodes);
+        let p = topo.world_size();
+        let seq = spec.seq_len.max(p * 128);
+        let t_local = seq / p;
+        let ring = sim_ring_latency(&topo, t_local, shape, spec.wire_bpe);
+        let tree = sim_tree_latency(&topo, t_local, shape, spec.wire_bpe, spec.allreduce);
+        table.row(vec![
+            nodes.to_string(),
+            p.to_string(),
+            fmt_tokens(seq),
+            fmt_secs(ring),
+            fmt_secs(tree),
+            format!("×{:.1}", ring / tree),
+        ]);
+    }
+    table.print();
+    Ok(())
+}
+
+/// Cost-only ring decode latency (shared shape with the benches).
+pub fn sim_ring_latency(topo: &Topology, t_local: usize, shape: AttnShape, wire_bpe: u64) -> f64 {
+    use tree_attention::collectives::{execute_cost, ring_shift_schedule};
+    let mut cluster = VirtualCluster::new(topo.clone());
+    let p = topo.world_size();
+    let row = shape.kv_heads * shape.d_head;
+    let chunk_elems = 2 * t_local * row;
+    let t0 = cluster.world.barrier();
+    for step in 0..p {
+        for w in 0..p {
+            let t = cluster.gpu.decode_attention_time(1, t_local, shape.kv_heads, shape.d_head);
+            cluster.world.compute(w, t);
+        }
+        if step < p - 1 {
+            let sched = ring_shift_schedule(p, 1);
+            execute_cost(&mut cluster.world, &sched, chunk_elems, wire_bpe);
+        }
+    }
+    cluster.world.barrier() - t0
+}
+
+/// Cost-only tree decode latency.
+pub fn sim_tree_latency(
+    topo: &Topology,
+    t_local: usize,
+    shape: AttnShape,
+    wire_bpe: u64,
+    algo: AllReduceAlgo,
+) -> f64 {
+    use tree_attention::collectives::execute_cost;
+    let mut cluster = VirtualCluster::new(topo.clone());
+    let p = topo.world_size();
+    let t0 = cluster.world.barrier();
+    for w in 0..p {
+        let t = cluster.gpu.decode_attention_time(1, t_local, shape.kv_heads, shape.d_head);
+        cluster.world.compute(w, t);
+    }
+    let nblocks = shape.batch * shape.n_heads;
+    let sched = algo.schedule(&cluster.world, nblocks);
+    execute_cost(&mut cluster.world, &sched, shape.d_head + 2, wire_bpe);
+    cluster.world.barrier() - t0
+}

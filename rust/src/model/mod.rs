@@ -1,0 +1,420 @@
+//! Model executor: drives the compiled Llama-style artifacts through a full
+//! prefill + distributed-decode pipeline — the L3 ↔ L2/L1 integration.
+//!
+//! Per decode step and layer, the executor:
+//!   1. runs `decode_qkv` (RMSNorm + projections + RoPE) on the leader,
+//!   2. appends the new token's K/V to the owning worker's shard,
+//!   3. dispatches the distributed attention strategy (tree / ring / single)
+//!      over the sharded cache — real kernel numerics via PJRT, virtual
+//!      cluster timing via the simulator,
+//!   4. runs `decode_post` (residual + MLP), and finally `lm_head`.
+//!
+//! Weights are synthetic (seeded), generated host-side once, uploaded once
+//! as persistent device buffers, and kept host-side only where the
+//! coordinator itself needs them (the embedding table for lookups).
+
+pub mod weights;
+
+pub use weights::WeightStore;
+
+use crate::attention::{ring_decode, single_decode, tree_decode, ComputeBackend, DecodeStats, ShardKv};
+use crate::attnmath::AttnShape;
+use crate::cluster::VirtualCluster;
+use crate::collectives::AllReduceAlgo;
+use crate::config::{ModelSpec, Strategy};
+use crate::kvcache::{CacheSpec, ShardedKvCache};
+use crate::runtime::{Arg, EngineHandle};
+
+/// Executor configuration knobs.
+#[derive(Clone, Debug)]
+pub struct ExecutorConfig {
+    pub n_workers: usize,
+    pub page_size: usize,
+    pub strategy: Strategy,
+    pub allreduce: AllReduceAlgo,
+    pub wire_bpe: u64,
+}
+
+impl Default for ExecutorConfig {
+    fn default() -> Self {
+        ExecutorConfig {
+            n_workers: 4,
+            page_size: 16,
+            strategy: Strategy::Tree,
+            allreduce: AllReduceAlgo::TwoLevel { inter_fanout: 2 },
+            wire_bpe: 2,
+        }
+    }
+}
+
+/// Per-sequence state: token history + sharded KV cache (+ the leader's
+/// padded prefill caches while prefill is still possible).
+pub struct SequenceState {
+    pub tokens: Vec<i32>,
+    pub cache: ShardedKvCache,
+    /// Leader-side padded caches `[max_seq * kv_row]` per layer, used by the
+    /// `prefill_layer` artifact; dropped after prefill to free memory.
+    prefill_k: Vec<Vec<f32>>,
+    prefill_v: Vec<Vec<f32>>,
+    /// Hidden state of the last processed token (input to lm_head).
+    last_hidden: Option<Vec<f32>>,
+}
+
+/// Aggregate statistics of one decode step (all layers).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepStats {
+    /// Virtual seconds of distributed attention across all layers.
+    pub attn_sim_time: f64,
+    /// Virtual seconds of leader-side dense compute (qkv/post/head).
+    pub linear_sim_time: f64,
+    pub comm_steps: usize,
+    pub bytes: u64,
+    /// Host wall-clock seconds (PJRT execution etc.).
+    pub wall_time: f64,
+}
+
+impl StepStats {
+    pub fn sim_total(&self) -> f64 {
+        self.attn_sim_time + self.linear_sim_time
+    }
+}
+
+/// The executor.
+pub struct ModelExecutor {
+    pub engine: EngineHandle,
+    pub spec: ModelSpec,
+    pub cfg: ExecutorConfig,
+    weights: WeightStore,
+    prefill_chunk: usize,
+}
+
+impl ModelExecutor {
+    /// Build an executor over a spawned engine; generates + uploads the
+    /// synthetic weights.
+    pub fn new(engine: EngineHandle, cfg: ExecutorConfig, seed: u64) -> anyhow::Result<ModelExecutor> {
+        let spec = engine.model_spec().clone();
+        let prefill_chunk = engine
+            .manifest()
+            .prefill_chunk()
+            .ok_or_else(|| anyhow::anyhow!("artifacts lack a prefill_layer entry"))?;
+        let weights = WeightStore::generate(&spec, seed);
+        weights.register_all(&engine)?;
+        Ok(ModelExecutor { engine, spec, cfg, weights, prefill_chunk })
+    }
+
+    pub fn prefill_chunk(&self) -> usize {
+        self.prefill_chunk
+    }
+
+    fn kv_row(&self) -> usize {
+        self.spec.kv_heads * self.spec.d_head()
+    }
+
+    fn attn_shape(&self) -> AttnShape {
+        AttnShape::new(1, self.spec.n_heads, self.spec.kv_heads, self.spec.d_head())
+    }
+
+    /// Start an empty sequence.
+    pub fn start_sequence(&self) -> SequenceState {
+        let spec = CacheSpec {
+            n_layers: self.spec.n_layers,
+            kv_heads: self.spec.kv_heads,
+            d_head: self.spec.d_head(),
+            n_workers: self.cfg.n_workers,
+            page_size: self.cfg.page_size,
+            elem_bytes: self.cfg.wire_bpe,
+        };
+        let smax_row = self.spec.max_seq * self.kv_row();
+        SequenceState {
+            tokens: Vec::new(),
+            cache: ShardedKvCache::new(spec),
+            prefill_k: vec![vec![0.0; smax_row]; self.spec.n_layers],
+            prefill_v: vec![vec![0.0; smax_row]; self.spec.n_layers],
+            last_hidden: None,
+        }
+    }
+
+    /// Prefill `prompt` tokens (chunked through the `prefill_layer_c{C}`
+    /// artifact), populating the sharded cache. Returns virtual seconds
+    /// (the prefill stage modeled as sequence-parallel across workers —
+    /// identical for tree and ring, as in the paper's Table 1 protocol).
+    pub fn prefill(&self, seq: &mut SequenceState, prompt: &[i32], cluster: &mut VirtualCluster) -> anyhow::Result<f64> {
+        anyhow::ensure!(!prompt.is_empty(), "empty prompt");
+        anyhow::ensure!(
+            seq.tokens.len() + prompt.len() <= self.spec.max_seq,
+            "sequence would exceed max_seq {}",
+            self.spec.max_seq
+        );
+        anyhow::ensure!(!seq.prefill_k.is_empty(), "prefill caches already dropped");
+        let c = self.prefill_chunk;
+        let d = self.spec.d_model;
+        let row = self.kv_row();
+        let p = self.cfg.n_workers;
+        let mut sim_time = 0.0;
+
+        let mut done = 0;
+        while done < prompt.len() {
+            let start_pos = seq.tokens.len() + done;
+            let n = (prompt.len() - done).min(c);
+            // Build the chunk's embeddings on the leader (padded to C).
+            let mut h = vec![0.0f32; c * d];
+            for (i, &tok) in prompt[done..done + n].iter().enumerate() {
+                let trow = self.weights.embed_row(tok as usize)?;
+                h[i * d..(i + 1) * d].copy_from_slice(trow);
+            }
+            for layer in 0..self.spec.n_layers {
+                let outs = self.engine.call(
+                    &format!("prefill_layer_c{c}"),
+                    vec![
+                        Arg::f32(h.clone(), &[c, d]),
+                        Arg::scalar_i32(start_pos as i32),
+                        Arg::f32(seq.prefill_k[layer].clone(), &[self.spec.max_seq, self.spec.kv_heads, self.spec.d_head()]),
+                        Arg::f32(seq.prefill_v[layer].clone(), &[self.spec.max_seq, self.spec.kv_heads, self.spec.d_head()]),
+                        Arg::weight(&format!("layer{layer}.gain1")),
+                        Arg::weight(&format!("layer{layer}.wq")),
+                        Arg::weight(&format!("layer{layer}.wk")),
+                        Arg::weight(&format!("layer{layer}.wv")),
+                        Arg::weight(&format!("layer{layer}.wo")),
+                        Arg::weight(&format!("layer{layer}.gain2")),
+                        Arg::weight(&format!("layer{layer}.w1")),
+                        Arg::weight(&format!("layer{layer}.w3")),
+                        Arg::weight(&format!("layer{layer}.w2")),
+                    ],
+                )?;
+                h = outs[0].data.clone();
+                let k_new = &outs[1].data;
+                let v_new = &outs[2].data;
+                // Write the new rows into the leader's padded caches…
+                let off = start_pos * row;
+                seq.prefill_k[layer][off..off + n * row].copy_from_slice(&k_new[..n * row]);
+                seq.prefill_v[layer][off..off + n * row].copy_from_slice(&v_new[..n * row]);
+                // …and shard them across workers.
+                seq.cache.append_chunk_layer(layer, start_pos, n, &k_new[..n * row], &v_new[..n * row]);
+
+                // Virtual time: causal flash attention + linear parts,
+                // sequence-parallel over p workers.
+                let ctx = start_pos + n;
+                sim_time += cluster
+                    .gpu
+                    .prefill_attention_time(1, n, ctx, self.spec.n_heads, self.spec.d_head())
+                    / p as f64;
+                let layer_params = (self.spec.param_count()
+                    - 2 * (self.spec.vocab as u64 * d as u64))
+                    / self.spec.n_layers as u64;
+                sim_time += cluster.gpu.gemm_time(2.0 * n as f64 * layer_params as f64) / p as f64;
+            }
+            seq.cache.commit_chunk(start_pos, n);
+            // keep the last real token's hidden state for the first decode
+            if done + n == prompt.len() {
+                seq.last_hidden = Some(h[(n - 1) * d..n * d].to_vec());
+            }
+            done += n;
+        }
+        seq.tokens.extend_from_slice(prompt);
+        cluster.world.compute(0, sim_time);
+        cluster.world.barrier();
+        Ok(sim_time)
+    }
+
+    /// Release the leader-side prefill caches (no more prefill possible).
+    pub fn finish_prefill(&self, seq: &mut SequenceState) {
+        seq.prefill_k = Vec::new();
+        seq.prefill_v = Vec::new();
+    }
+
+    /// Logits for the last processed token (runs `lm_head`).
+    pub fn logits(&self, seq: &SequenceState) -> anyhow::Result<Vec<f32>> {
+        let h = seq
+            .last_hidden
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("no token processed yet"))?;
+        let outs = self.engine.call(
+            "lm_head",
+            vec![Arg::f32(h.clone(), &[self.spec.d_model]), Arg::weight("final.gain"), Arg::weight("head.w")],
+        )?;
+        Ok(outs[0].data.clone())
+    }
+
+    /// Greedy-decode one token: returns (token, stats). The new token's KV
+    /// lands in the sharded cache; `seq.tokens` gains the token.
+    pub fn decode_step(&self, seq: &mut SequenceState, cluster: &mut VirtualCluster) -> anyhow::Result<(i32, StepStats)> {
+        let wall = std::time::Instant::now();
+        anyhow::ensure!(seq.tokens.len() < self.spec.max_seq, "sequence full");
+        let logits = self.logits(seq)?;
+        let next = argmax(&logits) as i32;
+        let stats = self.ingest_token(seq, next, cluster)?;
+        let mut stats = stats;
+        stats.wall_time = wall.elapsed().as_secs_f64();
+        Ok((next, stats))
+    }
+
+    /// Process `token` through the decode path (qkv → distributed attention
+    /// → post), appending its KV and updating `last_hidden`.
+    pub fn ingest_token(&self, seq: &mut SequenceState, token: i32, cluster: &mut VirtualCluster) -> anyhow::Result<StepStats> {
+        let d = self.spec.d_model;
+        let dh = self.spec.d_head();
+        let h_heads = self.spec.n_heads;
+        let kv_h = self.spec.kv_heads;
+        let pos = seq.tokens.len();
+        let shape = self.attn_shape();
+        let scale = 1.0 / (dh as f32).sqrt();
+        let backend = ComputeBackend::Pjrt(self.engine.clone());
+        let mut stats = StepStats::default();
+
+        let mut h = self.weights.embed_row(token as usize)?.to_vec();
+        for layer in 0..self.spec.n_layers {
+            // -- leader: qkv + rope (dense, on the leader GPU) --------------
+            let outs = self.engine.call(
+                "decode_qkv",
+                vec![
+                    Arg::f32(h.clone(), &[d]),
+                    Arg::scalar_i32(pos as i32),
+                    Arg::weight(&format!("layer{layer}.gain1")),
+                    Arg::weight(&format!("layer{layer}.wq")),
+                    Arg::weight(&format!("layer{layer}.wk")),
+                    Arg::weight(&format!("layer{layer}.wv")),
+                ],
+            )?;
+            let q = outs[0].data.clone();
+            let k_new = outs[1].data.clone();
+            let v_new = outs[2].data.clone();
+            let qkv_flops = 2.0 * (d * (h_heads * dh + 2 * kv_h * dh)) as f64;
+            let t_lin = cluster.gpu.gemm_time(qkv_flops);
+            cluster.world.compute(0, t_lin);
+            stats.linear_sim_time += t_lin;
+
+            // -- append this layer's new KV to the owning shard -------------
+            seq.cache.append_token_layer(layer, &k_new, &v_new);
+
+            // -- distributed attention over the sharded cache ----------------
+            // (borrowed views — no per-layer copies of the KV shards; see
+            // EXPERIMENTS.md §Perf for the before/after)
+            let shards: Vec<ShardKv> = (0..self.cfg.n_workers)
+                .map(|w| {
+                    let s = seq.cache.shard(w);
+                    let extra = seq.cache.pending_rows(layer, w);
+                    ShardKv { k: &s.k[layer], v: &s.v[layer], len: s.len + extra }
+                })
+                .collect();
+            let outcome = match self.cfg.strategy {
+                Strategy::Tree => tree_decode(cluster, &backend, shape, scale, &q, &shards, self.cfg.allreduce, self.cfg.wire_bpe)?,
+                Strategy::Ring => ring_decode(cluster, &backend, shape, scale, &q, &shards, self.cfg.wire_bpe, false)?,
+                Strategy::Single => single_decode(cluster, &backend, shape, scale, &q, &shards, self.cfg.wire_bpe)?,
+            };
+            accumulate(&mut stats, &outcome.stats);
+
+            // -- leader: output projection + MLP ----------------------------
+            let outs = self.engine.call(
+                "decode_post",
+                vec![
+                    Arg::f32(h, &[d]),
+                    Arg::f32(outcome.out, &[h_heads * dh]),
+                    Arg::weight(&format!("layer{layer}.wo")),
+                    Arg::weight(&format!("layer{layer}.gain2")),
+                    Arg::weight(&format!("layer{layer}.w1")),
+                    Arg::weight(&format!("layer{layer}.w3")),
+                    Arg::weight(&format!("layer{layer}.w2")),
+                ],
+            )?;
+            h = outs[0].data.clone();
+            let post_flops = 2.0 * (h_heads * dh * d + 3 * d * self.spec.d_ff) as f64;
+            let t_post = cluster.gpu.gemm_time(post_flops);
+            cluster.world.compute(0, t_post);
+            stats.linear_sim_time += t_post;
+        }
+        seq.cache.commit_token();
+        seq.tokens.push(token);
+        seq.last_hidden = Some(h);
+        Ok(stats)
+    }
+}
+
+fn accumulate(stats: &mut StepStats, d: &DecodeStats) {
+    stats.attn_sim_time += d.sim_time;
+    stats.comm_steps += d.comm_steps;
+    stats.bytes += d.traffic.total_bytes();
+}
+
+/// Index of the maximum element (first on ties).
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, x) in xs.iter().enumerate() {
+        if *x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::find_artifacts;
+    use crate::topology::Topology;
+
+    fn executor(strategy: Strategy, workers: usize) -> Option<(ModelExecutor, VirtualCluster)> {
+        let dir = find_artifacts("artifacts", "test-8m")?;
+        let engine = EngineHandle::spawn(&dir).unwrap();
+        let cfg = ExecutorConfig { n_workers: workers, strategy, ..Default::default() };
+        let exec = ModelExecutor::new(engine, cfg, 1234).unwrap();
+        let topo = Topology::custom(
+            "test",
+            1,
+            workers,
+            crate::gpumodel::GpuKind::H100,
+            crate::topology::LinkSpec::nvlink4(),
+            crate::topology::LinkSpec::infiniband_ndr(),
+        );
+        Some((exec, VirtualCluster::new(topo)))
+    }
+
+    #[test]
+    fn argmax_basic() {
+        assert_eq!(argmax(&[1.0, 5.0, 3.0]), 1);
+        assert_eq!(argmax(&[2.0, 2.0]), 0);
+    }
+
+    #[test]
+    fn prefill_then_decode_produces_tokens() {
+        let Some((exec, mut cluster)) = executor(Strategy::Tree, 4) else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let mut seq = exec.start_sequence();
+        let prompt: Vec<i32> = (0..200).map(|i| (i * 7) % 1024).collect();
+        let sim = exec.prefill(&mut seq, &prompt, &mut cluster).unwrap();
+        assert!(sim > 0.0);
+        assert_eq!(seq.cache.total_len(), 200);
+        exec.finish_prefill(&mut seq);
+        let (tok, stats) = exec.decode_step(&mut seq, &mut cluster).unwrap();
+        assert!((0..1024).contains(&tok));
+        assert_eq!(seq.cache.total_len(), 201);
+        assert!(stats.attn_sim_time > 0.0);
+        assert!(stats.bytes > 0);
+    }
+
+    #[test]
+    fn tree_ring_single_generate_identical_tokens() {
+        // The end-to-end exactness claim: strategy choice must not change
+        // the decoded token stream.
+        let mut streams = Vec::new();
+        for strategy in [Strategy::Tree, Strategy::Ring, Strategy::Single] {
+            let Some((exec, mut cluster)) = executor(strategy, 2) else {
+                eprintln!("skipping: artifacts not built");
+                return;
+            };
+            let mut seq = exec.start_sequence();
+            let prompt: Vec<i32> = (0..64).map(|i| (i * 13) % 1024).collect();
+            exec.prefill(&mut seq, &prompt, &mut cluster).unwrap();
+            exec.finish_prefill(&mut seq);
+            let mut toks = Vec::new();
+            for _ in 0..5 {
+                let (t, _) = exec.decode_step(&mut seq, &mut cluster).unwrap();
+                toks.push(t);
+            }
+            streams.push(toks);
+        }
+        assert_eq!(streams[0], streams[1], "tree vs ring");
+        assert_eq!(streams[0], streams[2], "tree vs single");
+    }
+}

@@ -1,0 +1,120 @@
+//! Synthetic weight generation + registration.
+//!
+//! Real Llama checkpoints are gated (see DESIGN.md substitutions); decode
+//! *latency* depends on tensor shapes, not values, so seeded Gaussian
+//! weights (std = 1/√fan_in, the usual init) exercise the identical
+//! compute/communication path. The store keeps host copies only for what
+//! the coordinator itself reads (the embedding table); everything else
+//! lives on-device after `register_all`.
+
+use crate::config::ModelSpec;
+use crate::runtime::EngineHandle;
+use crate::util::Rng;
+
+/// One named weight tensor.
+#[derive(Clone, Debug)]
+pub struct WeightTensor {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+/// All model weights, host-side.
+pub struct WeightStore {
+    pub spec: ModelSpec,
+    tensors: Vec<WeightTensor>,
+    embed_index: usize,
+}
+
+impl WeightStore {
+    /// Deterministically generate all weights for `spec`.
+    pub fn generate(spec: &ModelSpec, seed: u64) -> WeightStore {
+        let mut rng = Rng::seed(seed);
+        let d = spec.d_model;
+        let dh = spec.d_head();
+        let (h, hk, ff, vocab) = (spec.n_heads, spec.kv_heads, spec.d_ff, spec.vocab);
+        let mut tensors = Vec::new();
+        let mut push = |name: String, shape: Vec<usize>, data: Vec<f32>| {
+            tensors.push(WeightTensor { name, shape, data });
+        };
+
+        let inv = |fan_in: usize| 1.0 / (fan_in as f32).sqrt();
+        push("embed.table".into(), vec![vocab, d], rng.normal_vec(vocab * d, 1.0));
+        push("head.w".into(), vec![d, vocab], rng.normal_vec(d * vocab, inv(d)));
+        push("final.gain".into(), vec![d], vec![1.0; d]);
+        for l in 0..spec.n_layers {
+            push(format!("layer{l}.gain1"), vec![d], vec![1.0; d]);
+            push(format!("layer{l}.gain2"), vec![d], vec![1.0; d]);
+            push(format!("layer{l}.wq"), vec![d, h * dh], rng.normal_vec(d * h * dh, inv(d)));
+            push(format!("layer{l}.wk"), vec![d, hk * dh], rng.normal_vec(d * hk * dh, inv(d)));
+            push(format!("layer{l}.wv"), vec![d, hk * dh], rng.normal_vec(d * hk * dh, inv(d)));
+            push(format!("layer{l}.wo"), vec![h * dh, d], rng.normal_vec(h * dh * d, inv(h * dh)));
+            push(format!("layer{l}.w1"), vec![d, ff], rng.normal_vec(d * ff, inv(d)));
+            push(format!("layer{l}.w3"), vec![d, ff], rng.normal_vec(d * ff, inv(d)));
+            push(format!("layer{l}.w2"), vec![ff, d], rng.normal_vec(ff * d, inv(ff)));
+        }
+        let embed_index = tensors.iter().position(|t| t.name == "embed.table").unwrap();
+        WeightStore { spec: spec.clone(), tensors, embed_index }
+    }
+
+    /// Upload every tensor as a persistent device buffer.
+    pub fn register_all(&self, engine: &EngineHandle) -> anyhow::Result<()> {
+        for t in &self.tensors {
+            engine.register_weight(&t.name, t.data.clone(), t.shape.clone())?;
+        }
+        Ok(())
+    }
+
+    /// Host-side embedding row lookup (the coordinator embeds tokens itself
+    /// instead of a per-token device call).
+    pub fn embed_row(&self, token: usize) -> anyhow::Result<&[f32]> {
+        let t = &self.tensors[self.embed_index];
+        let d = self.spec.d_model;
+        anyhow::ensure!(token < self.spec.vocab, "token {token} out of vocab {}", self.spec.vocab);
+        Ok(&t.data[token * d..(token + 1) * d])
+    }
+
+    pub fn total_params(&self) -> u64 {
+        self.tensors.iter().map(|t| t.data.len() as u64).sum()
+    }
+
+    pub fn tensor(&self, name: &str) -> Option<&WeightTensor> {
+        self.tensors.iter().find(|t| t.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_complete() {
+        let spec = ModelSpec::test_8m();
+        let a = WeightStore::generate(&spec, 7);
+        let b = WeightStore::generate(&spec, 7);
+        assert_eq!(a.tensor("layer0.wq").unwrap().data, b.tensor("layer0.wq").unwrap().data);
+        let c = WeightStore::generate(&spec, 8);
+        assert_ne!(a.tensor("layer0.wq").unwrap().data, c.tensor("layer0.wq").unwrap().data);
+        // param count ≈ spec.param_count()
+        let diff = a.total_params() as i64 - spec.param_count() as i64;
+        assert!(diff.unsigned_abs() < spec.d_model as u64 * 4, "param accounting off by {diff}");
+    }
+
+    #[test]
+    fn embed_lookup_bounds() {
+        let spec = ModelSpec::test_8m();
+        let w = WeightStore::generate(&spec, 1);
+        assert_eq!(w.embed_row(0).unwrap().len(), spec.d_model);
+        assert!(w.embed_row(spec.vocab).is_err());
+    }
+
+    #[test]
+    fn init_scales_sane() {
+        let spec = ModelSpec::test_8m();
+        let w = WeightStore::generate(&spec, 2);
+        let wq = &w.tensor("layer0.wq").unwrap().data;
+        let var: f32 = wq.iter().map(|x| x * x).sum::<f32>() / wq.len() as f32;
+        let expect = 1.0 / spec.d_model as f32;
+        assert!((var / expect - 1.0).abs() < 0.1, "var {var} vs {expect}");
+    }
+}

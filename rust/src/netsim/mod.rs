@@ -1,0 +1,310 @@
+//! Discrete-event network simulator for the two-tier GPU-cluster fabric.
+//!
+//! Model: every device has four *resource timelines* — intra-node egress and
+//! ingress (NVLink/xGMI/PCIe ports through the switch) and inter-node NIC
+//! egress and ingress (IB/RoCE, one NIC per GPU as in the DGX reference
+//! design). A point-to-point transfer of `bytes` departing at virtual time
+//! `t_dep` occupies the sender's egress and the receiver's ingress for the
+//! full serialization time `α + bytes/β` of the route's tier, starting at
+//! `max(t_dep, egress_free, ingress_free)`. This is the Hockney α–β model
+//! with port contention — the standard model for analyzing NCCL-style
+//! collectives — and it reproduces the paper's Fig. 2 bandwidth hierarchy
+//! and the §6.3 comm/compute-gap argument directly.
+//!
+//! The simulator is deliberately *time-stamped resource occupancy* rather
+//! than a global event queue: callers (collective schedules, the cluster
+//! runtime) post transfers in program order; per-port `free_at` timelines
+//! serialize contending transfers regardless of posting order skew within a
+//! step. All state is behind a mutex so concurrently-running worker threads
+//! can share one simulator.
+
+use crate::topology::{Rank, Tier, Topology};
+use std::sync::Mutex;
+
+/// Byte/message counters, split by tier — the paper's §6.3 communication-
+/// volume accounting comes straight from these.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct TrafficCounters {
+    pub intra_bytes: u64,
+    pub inter_bytes: u64,
+    pub intra_msgs: u64,
+    pub inter_msgs: u64,
+}
+
+impl TrafficCounters {
+    pub fn total_bytes(&self) -> u64 {
+        self.intra_bytes + self.inter_bytes
+    }
+    pub fn total_msgs(&self) -> u64 {
+        self.intra_msgs + self.inter_msgs
+    }
+    /// Difference since an earlier snapshot.
+    pub fn since(&self, earlier: &TrafficCounters) -> TrafficCounters {
+        TrafficCounters {
+            intra_bytes: self.intra_bytes - earlier.intra_bytes,
+            inter_bytes: self.inter_bytes - earlier.inter_bytes,
+            intra_msgs: self.intra_msgs - earlier.intra_msgs,
+            inter_msgs: self.inter_msgs - earlier.inter_msgs,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+struct SimState {
+    /// Per-device resource timelines: the virtual time at which each port
+    /// becomes free. Indexed by rank.
+    intra_egress: Vec<f64>,
+    intra_ingress: Vec<f64>,
+    nic_egress: Vec<f64>,
+    nic_ingress: Vec<f64>,
+    counters: TrafficCounters,
+}
+
+/// The shared network simulator.
+pub struct NetSim {
+    topo: Topology,
+    state: Mutex<SimState>,
+}
+
+impl NetSim {
+    pub fn new(topo: Topology) -> NetSim {
+        let p = topo.world_size();
+        NetSim {
+            topo,
+            state: Mutex::new(SimState {
+                intra_egress: vec![0.0; p],
+                intra_ingress: vec![0.0; p],
+                nic_egress: vec![0.0; p],
+                nic_ingress: vec![0.0; p],
+                counters: TrafficCounters::default(),
+            }),
+        }
+    }
+
+    pub fn topology(&self) -> &Topology {
+        &self.topo
+    }
+
+    /// Post a point-to-point transfer departing at `t_dep`; returns the
+    /// virtual arrival time at `dst`. Self-sends are free and instantaneous.
+    pub fn transfer(&self, src: Rank, dst: Rank, bytes: u64, t_dep: f64) -> f64 {
+        if src == dst {
+            return t_dep;
+        }
+        let tier = self.topo.tier(src, dst);
+        let link = self.topo.link_for_tier(tier);
+        let mut guard = self.state.lock().unwrap();
+        let st = &mut *guard;
+        let (egress, ingress) = match tier {
+            Tier::Intra => (&mut st.intra_egress, &mut st.intra_ingress),
+            Tier::Inter => (&mut st.nic_egress, &mut st.nic_ingress),
+        };
+        let start = t_dep.max(egress[src]).max(ingress[dst]);
+        let done = start + link.latency_s + bytes as f64 / link.bandwidth_bps;
+        egress[src] = done;
+        ingress[dst] = done;
+        match tier {
+            Tier::Intra => {
+                st.counters.intra_bytes += bytes;
+                st.counters.intra_msgs += 1;
+            }
+            Tier::Inter => {
+                st.counters.inter_bytes += bytes;
+                st.counters.inter_msgs += 1;
+            }
+        }
+        done
+    }
+
+    /// Uncontended transfer time for the route (no state change).
+    pub fn ideal_transfer_time(&self, src: Rank, dst: Rank, bytes: u64) -> f64 {
+        if src == dst {
+            0.0
+        } else {
+            self.topo.link(src, dst).transfer_time(bytes)
+        }
+    }
+
+    /// Snapshot the traffic counters.
+    pub fn counters(&self) -> TrafficCounters {
+        self.state.lock().unwrap().counters
+    }
+
+    /// Reset port timelines and counters (new experiment, same topology).
+    pub fn reset(&self) {
+        let mut st = self.state.lock().unwrap();
+        let st = &mut *st;
+        for v in [&mut st.intra_egress, &mut st.intra_ingress, &mut st.nic_egress, &mut st.nic_ingress] {
+            v.iter_mut().for_each(|x| *x = 0.0);
+        }
+        st.counters = TrafficCounters::default();
+    }
+}
+
+/// A simulated world: the network plus one virtual clock per rank. This is
+/// what collective schedules execute against. A rank's clock advances when
+/// it computes (`compute`) or receives a message (`send` updates the
+/// receiver's clock to the arrival time, Lamport-style).
+pub struct SimWorld {
+    pub net: NetSim,
+    pub clocks: Vec<f64>,
+}
+
+impl SimWorld {
+    pub fn new(topo: Topology) -> SimWorld {
+        let p = topo.world_size();
+        SimWorld { net: NetSim::new(topo), clocks: vec![0.0; p] }
+    }
+
+    pub fn world_size(&self) -> usize {
+        self.clocks.len()
+    }
+
+    pub fn topology(&self) -> &Topology {
+        self.net.topology()
+    }
+
+    /// Transfer `bytes` from `src` to `dst`, departing at src's current
+    /// clock; advances dst's clock to the arrival (if later).
+    pub fn send(&mut self, src: Rank, dst: Rank, bytes: u64) {
+        let arrive = self.net.transfer(src, dst, bytes, self.clocks[src]);
+        if self.clocks[dst] < arrive {
+            self.clocks[dst] = arrive;
+        }
+    }
+
+    /// Advance `rank`'s clock by a compute interval.
+    pub fn compute(&mut self, rank: Rank, secs: f64) {
+        assert!(secs >= 0.0);
+        self.clocks[rank] += secs;
+    }
+
+    /// Synchronize all ranks to the maximum clock; returns that time.
+    pub fn barrier(&mut self) -> f64 {
+        let t = self.max_clock();
+        self.clocks.iter_mut().for_each(|c| *c = t);
+        t
+    }
+
+    pub fn max_clock(&self) -> f64 {
+        self.clocks.iter().cloned().fold(0.0, f64::max)
+    }
+
+    /// Reset clocks and network state.
+    pub fn reset(&mut self) {
+        self.net.reset();
+        self.clocks.iter_mut().for_each(|c| *c = 0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{LinkSpec, Topology};
+    use crate::gpumodel::GpuKind;
+
+    fn t2x8() -> Topology {
+        Topology::h100_dgx(2)
+    }
+
+    #[test]
+    fn transfer_uses_right_tier() {
+        let sim = NetSim::new(t2x8());
+        let intra = sim.transfer(0, 1, 1 << 20, 0.0);
+        let inter = sim.transfer(2, 10, 1 << 20, 0.0);
+        assert!(inter > intra, "inter-node slower: {inter} vs {intra}");
+        let c = sim.counters();
+        assert_eq!(c.intra_bytes, 1 << 20);
+        assert_eq!(c.inter_bytes, 1 << 20);
+        assert_eq!(c.total_msgs(), 2);
+    }
+
+    #[test]
+    fn self_send_free() {
+        let sim = NetSim::new(t2x8());
+        assert_eq!(sim.transfer(3, 3, 1 << 30, 5.0), 5.0);
+        assert_eq!(sim.counters().total_bytes(), 0);
+    }
+
+    #[test]
+    fn egress_serializes_contending_sends() {
+        let sim = NetSim::new(t2x8());
+        let b = 1u64 << 24;
+        let one = sim.transfer(0, 1, b, 0.0);
+        let two = sim.transfer(0, 2, b, 0.0); // same egress port
+        assert!(two >= one + (one - 0.0) * 0.5, "second send waits: {one} then {two}");
+        // distinct egress ports do not contend
+        sim.reset();
+        let a = sim.transfer(0, 1, b, 0.0);
+        let c = sim.transfer(2, 3, b, 0.0);
+        assert!((a - c).abs() < 1e-12, "parallel disjoint transfers");
+    }
+
+    #[test]
+    fn ingress_serializes_fan_in() {
+        let sim = NetSim::new(t2x8());
+        let b = 1u64 << 24;
+        let first = sim.transfer(1, 0, b, 0.0);
+        let second = sim.transfer(2, 0, b, 0.0); // same ingress port
+        assert!(second > first);
+    }
+
+    #[test]
+    fn nic_and_nvlink_ports_are_independent() {
+        let sim = NetSim::new(t2x8());
+        let b = 1u64 << 24;
+        let intra = sim.transfer(0, 1, b, 0.0);
+        // inter-node send from 0 uses the NIC, not the NVLink egress
+        let inter = sim.transfer(0, 8, b, 0.0);
+        let expected = sim.ideal_transfer_time(0, 8, b);
+        assert!((inter - expected).abs() < 1e-12, "NIC unaffected by NVLink use ({intra})");
+    }
+
+    #[test]
+    fn world_send_advances_receiver_clock() {
+        let mut w = SimWorld::new(t2x8());
+        w.compute(0, 1.0);
+        w.send(0, 1, 1 << 20);
+        assert!(w.clocks[1] > 1.0);
+        assert!((w.clocks[0] - 1.0).abs() < 1e-12, "sender clock unchanged by send");
+    }
+
+    #[test]
+    fn world_barrier_synchronizes() {
+        let mut w = SimWorld::new(t2x8());
+        w.compute(3, 2.5);
+        let t = w.barrier();
+        assert_eq!(t, 2.5);
+        assert!(w.clocks.iter().all(|&c| c == 2.5));
+    }
+
+    #[test]
+    fn receiver_clock_is_max_merge() {
+        let mut w = SimWorld::new(t2x8());
+        w.compute(1, 100.0); // receiver already far ahead
+        w.send(0, 1, 1 << 20);
+        assert_eq!(w.clocks[1], 100.0, "late message does not move clock back");
+    }
+
+    #[test]
+    fn fig2_shape_bandwidth_hierarchy() {
+        // Achieved bandwidth curves: intra strictly dominates inter across
+        // message sizes, both saturating with size (paper Fig. 2).
+        let topo = t2x8();
+        for exp in 10..30 {
+            let bytes = 1u64 << exp;
+            let bi = topo.intra.achieved_bandwidth(bytes);
+            let bx = topo.inter.achieved_bandwidth(bytes);
+            assert!(bi > bx);
+        }
+    }
+
+    #[test]
+    fn custom_topology_params_respected() {
+        let slow = LinkSpec { class: crate::topology::LinkClass::Custom, bandwidth_bps: 1e9, latency_s: 1e-3 };
+        let topo = Topology::custom("slow", 1, 2, GpuKind::H100, slow, slow);
+        let sim = NetSim::new(topo);
+        let t = sim.transfer(0, 1, 1_000_000_000, 0.0);
+        assert!((t - (1e-3 + 1.0)).abs() < 1e-9);
+    }
+}

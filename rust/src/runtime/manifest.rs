@@ -1,0 +1,202 @@
+//! Artifact manifest: the typed mirror of `artifacts/<model>/manifest.json`
+//! written by `python/compile/aot.py`. The Rust side validates every call
+//! against these shapes before touching PJRT.
+
+use crate::config::ModelSpec;
+use crate::ser::Json;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// One input or output tensor description.
+#[derive(Clone, Debug, PartialEq)]
+pub struct IoSpec {
+    pub name: String,
+    pub dtype: String, // "f32" | "i32"
+    pub shape: Vec<usize>,
+}
+
+impl IoSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> anyhow::Result<IoSpec> {
+        let shape = j
+            .req("shape")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("shape must be an array"))?
+            .iter()
+            .map(|v| v.as_usize().ok_or_else(|| anyhow::anyhow!("bad shape element")))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(IoSpec {
+            name: j.opt_str("name", "").to_string(),
+            dtype: j.req_str("dtype")?.to_string(),
+            shape,
+        })
+    }
+}
+
+/// One compiled entry point.
+#[derive(Clone, Debug)]
+pub struct ManifestEntry {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+    pub meta: BTreeMap<String, i64>,
+}
+
+/// The whole manifest: model spec + entry table.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub version: usize,
+    pub model: ModelSpec,
+    pub entries: BTreeMap<String, ManifestEntry>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> anyhow::Result<Manifest> {
+        Self::from_json(&crate::ser::parse_file(path)?)
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Manifest> {
+        let version = j.req_usize("version")?;
+        anyhow::ensure!(version == 1, "unsupported manifest version {version}");
+        let model = ModelSpec::from_json(j.req("model")?)?;
+        let mut entries = BTreeMap::new();
+        let raw = j
+            .req("entries")?
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("entries must be an object"))?;
+        for (name, e) in raw {
+            let inputs = e
+                .req("inputs")?
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("inputs must be an array"))?
+                .iter()
+                .map(IoSpec::from_json)
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            let outputs = e
+                .req("outputs")?
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("outputs must be an array"))?
+                .iter()
+                .map(IoSpec::from_json)
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            let mut meta = BTreeMap::new();
+            if let Some(m) = e.get("meta").and_then(|m| m.as_obj()) {
+                for (k, v) in m {
+                    if let Some(x) = v.as_i64() {
+                        meta.insert(k.clone(), x);
+                    }
+                }
+            }
+            entries.insert(
+                name.clone(),
+                ManifestEntry { name: name.clone(), file: e.req_str("file")?.to_string(), inputs, outputs, meta },
+            );
+        }
+        Ok(Manifest { version, model, entries })
+    }
+
+    pub fn entry(&self, name: &str) -> Option<&ManifestEntry> {
+        self.entries.get(name)
+    }
+
+    pub fn entry_names(&self) -> Vec<String> {
+        self.entries.keys().cloned().collect()
+    }
+
+    /// Available attn_partial chunk sizes, ascending (from entry meta).
+    pub fn attn_chunk_sizes(&self) -> Vec<usize> {
+        let mut out: Vec<usize> = self
+            .entries
+            .values()
+            .filter(|e| e.name.starts_with("attn_partial_t"))
+            .filter_map(|e| e.meta.get("chunk").map(|&c| c as usize))
+            .collect();
+        out.sort_unstable();
+        out
+    }
+
+    /// Smallest compiled chunk size that fits `len` tokens.
+    pub fn pick_attn_chunk(&self, len: usize) -> anyhow::Result<usize> {
+        self.attn_chunk_sizes()
+            .into_iter()
+            .find(|&c| c >= len)
+            .ok_or_else(|| anyhow::anyhow!("no attn_partial artifact fits {len} tokens"))
+    }
+
+    /// Prefill chunk size (from the single prefill_layer entry), if present.
+    pub fn prefill_chunk(&self) -> Option<usize> {
+        self.entries
+            .values()
+            .find(|e| e.name.starts_with("prefill_layer_c"))
+            .and_then(|e| e.meta.get("chunk").map(|&c| c as usize))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Json {
+        crate::ser::parse(
+            r#"{
+          "version": 1,
+          "model": {"name":"m","n_layers":2,"d_model":256,"n_heads":4,
+                    "kv_heads":2,"d_ff":512,"vocab":1024,"max_seq":2048,"rope_theta":10000.0},
+          "entries": {
+            "attn_partial_t128": {"file":"attn_partial_t128.hlo.txt",
+              "inputs":[{"name":"valid","dtype":"i32","shape":[1]},
+                        {"name":"q","dtype":"f32","shape":[4,64]}],
+              "outputs":[{"dtype":"f32","shape":[4,64]}],
+              "meta":{"chunk":128}},
+            "attn_partial_t512": {"file":"x.hlo.txt","inputs":[],"outputs":[],
+              "meta":{"chunk":512}},
+            "prefill_layer_c128": {"file":"p.hlo.txt","inputs":[],"outputs":[],
+              "meta":{"chunk":128,"smax":2048}}
+          }
+        }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_model_and_entries() {
+        let m = Manifest::from_json(&sample()).unwrap();
+        assert_eq!(m.model.d_model, 256);
+        assert_eq!(m.entries.len(), 3);
+        let e = m.entry("attn_partial_t128").unwrap();
+        assert_eq!(e.inputs[1].shape, vec![4, 64]);
+        assert_eq!(e.inputs[1].elems(), 256);
+        assert_eq!(e.meta["chunk"], 128);
+    }
+
+    #[test]
+    fn chunk_selection() {
+        let m = Manifest::from_json(&sample()).unwrap();
+        assert_eq!(m.attn_chunk_sizes(), vec![128, 512]);
+        assert_eq!(m.pick_attn_chunk(1).unwrap(), 128);
+        assert_eq!(m.pick_attn_chunk(128).unwrap(), 128);
+        assert_eq!(m.pick_attn_chunk(129).unwrap(), 512);
+        assert!(m.pick_attn_chunk(513).is_err());
+        assert_eq!(m.prefill_chunk(), Some(128));
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let j = crate::ser::parse(r#"{"version": 9, "model": {}, "entries": {}}"#).unwrap();
+        assert!(Manifest::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn loads_real_manifest_if_built() {
+        if let Some(dir) = crate::runtime::find_artifacts("artifacts", "test-8m") {
+            let m = Manifest::load(&dir.join("manifest.json")).unwrap();
+            assert_eq!(m.model.name, "test-8m");
+            assert!(!m.attn_chunk_sizes().is_empty());
+            assert!(m.prefill_chunk().is_some());
+        }
+    }
+}

@@ -1,0 +1,495 @@
+//! PJRT runtime: loads the HLO-text artifacts produced by
+//! `python/compile/aot.py`, compiles them on the PJRT CPU client, and
+//! executes them from the coordinator's hot path. Python never runs here.
+//!
+//! Two layers:
+//!  * [`Engine`] — single-threaded owner of the PJRT client, the compiled
+//!    executables (lazily compiled, cached), and named persistent weight
+//!    buffers (uploaded once, passed by reference per call via `execute_b`).
+//!  * [`EngineHandle`] — a clonable, `Send` handle that proxies calls to a
+//!    dedicated device-service thread over channels, because `PjRtBuffer` /
+//!    `PjRtLoadedExecutable` are not `Send`. This mirrors a real GPU's
+//!    stream queue: one submission queue, in-order execution.
+
+pub mod manifest;
+
+pub use manifest::{IoSpec, Manifest, ManifestEntry};
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+use std::sync::Arc;
+
+/// An argument to an entry-point call.
+#[derive(Clone, Debug)]
+pub enum Arg {
+    /// f32 tensor uploaded for this call.
+    F32(Vec<f32>, Vec<usize>),
+    /// i32 tensor uploaded for this call.
+    I32(Vec<i32>, Vec<usize>),
+    /// Reference to a registered persistent weight buffer.
+    Weight(String),
+}
+
+impl Arg {
+    pub fn scalar_i32(v: i32) -> Arg {
+        Arg::I32(vec![v], vec![1])
+    }
+    pub fn f32(data: Vec<f32>, shape: &[usize]) -> Arg {
+        Arg::F32(data, shape.to_vec())
+    }
+    pub fn weight(name: &str) -> Arg {
+        Arg::Weight(name.to_string())
+    }
+}
+
+/// A returned tensor (always f32 in our entry-point contract).
+#[derive(Clone, Debug)]
+pub struct OutTensor {
+    pub data: Vec<f32>,
+    pub shape: Vec<usize>,
+}
+
+/// Execution statistics for profiling the L3 hot path.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EngineStats {
+    pub calls: u64,
+    pub exec_seconds: f64,
+    pub upload_bytes: u64,
+    pub download_bytes: u64,
+}
+
+/// Single-threaded PJRT engine (not `Send` — see [`EngineHandle`]).
+pub struct Engine {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    weights: HashMap<String, xla::PjRtBuffer>,
+    stats: EngineStats,
+}
+
+impl Engine {
+    /// Open an artifact directory (must contain `manifest.json`).
+    pub fn load(dir: &Path) -> anyhow::Result<Engine> {
+        let manifest = Manifest::load(&dir.join("manifest.json"))?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("creating PJRT CPU client: {e}"))?;
+        Ok(Engine {
+            client,
+            dir: dir.to_path_buf(),
+            manifest,
+            executables: HashMap::new(),
+            weights: HashMap::new(),
+            stats: EngineStats::default(),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        self.stats
+    }
+
+    /// Upload and register a persistent named weight buffer.
+    pub fn register_weight(&mut self, name: &str, data: &[f32], shape: &[usize]) -> anyhow::Result<()> {
+        let buf = self
+            .client
+            .buffer_from_host_buffer(data, shape, None)
+            .map_err(|e| anyhow::anyhow!("uploading weight {name}: {e}"))?;
+        self.stats.upload_bytes += (data.len() * 4) as u64;
+        self.weights.insert(name.to_string(), buf);
+        Ok(())
+    }
+
+    pub fn has_weight(&self, name: &str) -> bool {
+        self.weights.contains_key(name)
+    }
+
+    /// Compile (or fetch cached) an entry point.
+    fn executable(&mut self, entry: &str) -> anyhow::Result<&xla::PjRtLoadedExecutable> {
+        if !self.executables.contains_key(entry) {
+            let e = self
+                .manifest
+                .entry(entry)
+                .ok_or_else(|| anyhow::anyhow!("entry '{entry}' not in manifest at {}", self.dir.display()))?;
+            let path = self.dir.join(&e.file);
+            let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+                .map_err(|err| anyhow::anyhow!("parsing {}: {err}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|err| anyhow::anyhow!("compiling {entry}: {err}"))?;
+            crate::tlog!(Debug, "compiled entry '{entry}'");
+            self.executables.insert(entry.to_string(), exe);
+        }
+        Ok(&self.executables[entry])
+    }
+
+    /// Pre-compile all manifest entries (warm start for serving).
+    pub fn compile_all(&mut self) -> anyhow::Result<()> {
+        let names: Vec<String> = self.manifest.entry_names();
+        for n in &names {
+            self.executable(n)?;
+        }
+        Ok(())
+    }
+
+    /// Execute an entry point. Shapes are validated against the manifest;
+    /// outputs are downloaded to host vectors.
+    pub fn call(&mut self, entry: &str, args: &[Arg]) -> anyhow::Result<Vec<OutTensor>> {
+        // Validate against the manifest before touching the device.
+        let espec = self
+            .manifest
+            .entry(entry)
+            .ok_or_else(|| anyhow::anyhow!("entry '{entry}' not in manifest"))?
+            .clone();
+        anyhow::ensure!(
+            args.len() == espec.inputs.len(),
+            "entry '{entry}' expects {} args, got {}",
+            espec.inputs.len(),
+            args.len()
+        );
+        for (i, (a, spec)) in args.iter().zip(&espec.inputs).enumerate() {
+            let (len, dtype) = match a {
+                Arg::F32(d, s) => {
+                    anyhow::ensure!(s == &spec.shape, "{entry} arg {i} ({}) shape {:?} != {:?}", spec.name, s, spec.shape);
+                    (d.len(), "f32")
+                }
+                Arg::I32(d, s) => {
+                    anyhow::ensure!(s == &spec.shape, "{entry} arg {i} ({}) shape {:?} != {:?}", spec.name, s, spec.shape);
+                    (d.len(), "i32")
+                }
+                Arg::Weight(_) => (spec.shape.iter().product(), spec.dtype.as_str()),
+            };
+            anyhow::ensure!(dtype == spec.dtype, "{entry} arg {i} ({}) dtype {dtype} != {}", spec.name, spec.dtype);
+            anyhow::ensure!(len == spec.shape.iter().product::<usize>(), "{entry} arg {i} length");
+        }
+
+        // Ensure the executable is compiled before borrowing weights.
+        self.executable(entry)?;
+
+        // Upload per-call activations; resolve weight refs.
+        let mut uploaded: Vec<xla::PjRtBuffer> = Vec::new();
+        let mut order: Vec<(bool, usize)> = Vec::new();
+        let mut weight_keys: Vec<&str> = Vec::new();
+        for a in args {
+            match a {
+                Arg::F32(d, s) => {
+                    let b = self.client.buffer_from_host_buffer(d, s, None)?;
+                    self.stats.upload_bytes += (d.len() * 4) as u64;
+                    order.push((false, uploaded.len()));
+                    uploaded.push(b);
+                }
+                Arg::I32(d, s) => {
+                    let b = self.client.buffer_from_host_buffer(d, s, None)?;
+                    self.stats.upload_bytes += (d.len() * 4) as u64;
+                    order.push((false, uploaded.len()));
+                    uploaded.push(b);
+                }
+                Arg::Weight(name) => {
+                    anyhow::ensure!(self.weights.contains_key(name.as_str()), "weight '{name}' not registered");
+                    order.push((true, weight_keys.len()));
+                    weight_keys.push(name);
+                }
+            }
+        }
+        let arg_refs: Vec<&xla::PjRtBuffer> = order
+            .iter()
+            .map(|&(is_w, idx)| {
+                if is_w {
+                    &self.weights[weight_keys[idx]]
+                } else {
+                    &uploaded[idx]
+                }
+            })
+            .collect();
+
+        let t0 = std::time::Instant::now();
+        let exe = &self.executables[entry];
+        let result = exe
+            .execute_b(&arg_refs)
+            .map_err(|e| anyhow::anyhow!("executing {entry}: {e}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("downloading {entry} result: {e}"))?;
+        self.stats.calls += 1;
+        self.stats.exec_seconds += t0.elapsed().as_secs_f64();
+
+        // aot.py lowers with return_tuple=True: single tuple of outputs.
+        let parts = lit.to_tuple().map_err(|e| anyhow::anyhow!("untupling {entry}: {e}"))?;
+        anyhow::ensure!(
+            parts.len() == espec.outputs.len(),
+            "{entry}: {} outputs, manifest says {}",
+            parts.len(),
+            espec.outputs.len()
+        );
+        let mut outs = Vec::with_capacity(parts.len());
+        for (p, ospec) in parts.into_iter().zip(&espec.outputs) {
+            let data = p
+                .to_vec::<f32>()
+                .map_err(|e| anyhow::anyhow!("downloading {entry} output: {e}"))?;
+            self.stats.download_bytes += (data.len() * 4) as u64;
+            outs.push(OutTensor { data, shape: ospec.shape.clone() });
+        }
+        Ok(outs)
+    }
+}
+
+// ---- device-service thread --------------------------------------------------
+
+enum Request {
+    Call { entry: String, args: Vec<Arg>, reply: mpsc::Sender<anyhow::Result<Vec<OutTensor>>> },
+    RegisterWeight { name: String, data: Vec<f32>, shape: Vec<usize>, reply: mpsc::Sender<anyhow::Result<()>> },
+    CompileAll { reply: mpsc::Sender<anyhow::Result<()>> },
+    Stats { reply: mpsc::Sender<EngineStats> },
+    Shutdown,
+}
+
+/// Clonable, `Send` handle to an [`Engine`] running on its own thread.
+/// All calls are synchronous RPCs over a channel — in-order, serialized,
+/// like submissions to a single GPU stream.
+#[derive(Clone)]
+pub struct EngineHandle {
+    tx: mpsc::Sender<Request>,
+    /// The manifest, loaded eagerly at spawn (plain data, shareable).
+    manifest: Arc<Manifest>,
+    // Keeps the shutdown guard alive as long as any handle exists.
+    _guard: Arc<ShutdownGuard>,
+}
+
+struct ShutdownGuard {
+    tx: mpsc::Sender<Request>,
+    join: std::sync::Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl Drop for ShutdownGuard {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Request::Shutdown);
+        if let Some(j) = self.join.lock().unwrap().take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl EngineHandle {
+    /// Spawn the device-service thread for the given artifact directory.
+    pub fn spawn(dir: &Path) -> anyhow::Result<EngineHandle> {
+        let manifest = Arc::new(Manifest::load(&dir.join("manifest.json"))?);
+        let (tx, rx) = mpsc::channel::<Request>();
+        let dir = dir.to_path_buf();
+        let (init_tx, init_rx) = mpsc::channel::<anyhow::Result<()>>();
+        let join = std::thread::Builder::new()
+            .name("pjrt-engine".into())
+            .spawn(move || {
+                let mut engine = match Engine::load(&dir) {
+                    Ok(e) => {
+                        let _ = init_tx.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = init_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Request::Call { entry, args, reply } => {
+                            let _ = reply.send(engine.call(&entry, &args));
+                        }
+                        Request::RegisterWeight { name, data, shape, reply } => {
+                            let _ = reply.send(engine.register_weight(&name, &data, &shape));
+                        }
+                        Request::CompileAll { reply } => {
+                            let _ = reply.send(engine.compile_all());
+                        }
+                        Request::Stats { reply } => {
+                            let _ = reply.send(engine.stats());
+                        }
+                        Request::Shutdown => break,
+                    }
+                }
+            })?;
+        init_rx.recv().map_err(|_| anyhow::anyhow!("engine thread died during init"))??;
+        let guard = Arc::new(ShutdownGuard { tx: tx.clone(), join: std::sync::Mutex::new(Some(join)) });
+        Ok(EngineHandle { tx, manifest, _guard: guard })
+    }
+
+    /// The artifact manifest (loaded at spawn; immutable).
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Model dimensions these artifacts were compiled for.
+    pub fn model_spec(&self) -> &crate::config::ModelSpec {
+        &self.manifest.model
+    }
+
+    /// Smallest compiled attn_partial chunk that fits `len` tokens.
+    pub fn pick_attn_chunk(&self, len: usize) -> anyhow::Result<usize> {
+        self.manifest.pick_attn_chunk(len)
+    }
+
+    pub fn call(&self, entry: &str, args: Vec<Arg>) -> anyhow::Result<Vec<OutTensor>> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(Request::Call { entry: entry.to_string(), args, reply: rtx })
+            .map_err(|_| anyhow::anyhow!("engine thread gone"))?;
+        rrx.recv().map_err(|_| anyhow::anyhow!("engine thread gone"))?
+    }
+
+    pub fn register_weight(&self, name: &str, data: Vec<f32>, shape: Vec<usize>) -> anyhow::Result<()> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(Request::RegisterWeight { name: name.to_string(), data, shape, reply: rtx })
+            .map_err(|_| anyhow::anyhow!("engine thread gone"))?;
+        rrx.recv().map_err(|_| anyhow::anyhow!("engine thread gone"))?
+    }
+
+    pub fn compile_all(&self) -> anyhow::Result<()> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(Request::CompileAll { reply: rtx })
+            .map_err(|_| anyhow::anyhow!("engine thread gone"))?;
+        rrx.recv().map_err(|_| anyhow::anyhow!("engine thread gone"))?
+    }
+
+    pub fn stats(&self) -> anyhow::Result<EngineStats> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx.send(Request::Stats { reply: rtx }).map_err(|_| anyhow::anyhow!("engine thread gone"))?;
+        rrx.recv().map_err(|_| anyhow::anyhow!("engine thread gone"))
+    }
+}
+
+/// Locate an artifact model directory, trying `<artifacts_dir>/<model>`
+/// relative to the CWD and to the crate root (so tests work from anywhere).
+pub fn find_artifacts(artifacts_dir: &str, model: &str) -> Option<PathBuf> {
+    let candidates = [
+        PathBuf::from(artifacts_dir).join(model),
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join(artifacts_dir).join(model),
+    ];
+    candidates.into_iter().find(|p| p.join("manifest.json").exists())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_dir() -> Option<PathBuf> {
+        find_artifacts("artifacts", "test-8m")
+    }
+
+    #[test]
+    fn manifest_loads_and_lists_entries() {
+        let Some(dir) = test_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let engine = Engine::load(&dir).unwrap();
+        let names = engine.manifest().entry_names();
+        assert!(names.iter().any(|n| n.starts_with("attn_partial_t")));
+        assert!(names.contains(&"decode_qkv".to_string()));
+    }
+
+    #[test]
+    fn call_validates_shapes() {
+        let Some(dir) = test_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let mut engine = Engine::load(&dir).unwrap();
+        // wrong arg count
+        assert!(engine.call("lm_head", &[]).is_err());
+        // wrong shape
+        let bad = vec![
+            Arg::f32(vec![0.0; 10], &[10]),
+            Arg::f32(vec![0.0; 256], &[256]),
+            Arg::f32(vec![0.0; 256 * 1024], &[256, 1024]),
+        ];
+        assert!(engine.call("lm_head", &bad).is_err());
+        // unknown entry
+        assert!(engine.call("nope", &[]).is_err());
+    }
+
+    #[test]
+    fn attn_partial_matches_rust_oracle() {
+        let Some(dir) = test_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        use crate::attnmath::{partial_from_chunk, AttnShape};
+        let mut engine = Engine::load(&dir).unwrap();
+        let m = engine.manifest().model.clone();
+        let shape = AttnShape::new(1, m.n_heads, m.kv_heads, m.d_head());
+        let mut rng = crate::util::Rng::seed(42);
+        let t_art = 128;
+        let valid = 100usize;
+        let q = rng.normal_vec(shape.q_elems(), 1.0);
+        let mut k = rng.normal_vec(shape.kv_elems(t_art), 1.0);
+        let mut v = rng.normal_vec(shape.kv_elems(t_art), 1.0);
+        // zero the padded tail so the oracle sees exactly the valid tokens
+        let row = m.kv_heads * m.d_head();
+        for x in k[valid * row..].iter_mut() {
+            *x = 0.0;
+        }
+        for x in v[valid * row..].iter_mut() {
+            *x = 0.0;
+        }
+        let outs = engine
+            .call(
+                "attn_partial_t128",
+                &[
+                    Arg::scalar_i32(valid as i32),
+                    Arg::f32(q.clone(), &[m.n_heads, m.d_head()]),
+                    Arg::f32(k.clone(), &[t_art, m.kv_heads, m.d_head()]),
+                    Arg::f32(v.clone(), &[t_art, m.kv_heads, m.d_head()]),
+                ],
+            )
+            .unwrap();
+        let o = &outs[0];
+        let lse = &outs[1];
+        let scale = 1.0 / (m.d_head() as f32).sqrt();
+        let oracle = partial_from_chunk(shape, &q, &k[..valid * row], &v[..valid * row], valid, scale);
+        let o_ref = oracle.finalize();
+        let d = crate::attnmath::max_abs_diff(&o.data, &o_ref);
+        assert!(d < 1e-4, "o diff {d}");
+        let lse_ref: Vec<f32> =
+            oracle.max.iter().zip(&oracle.den).map(|(m, d)| m + d.ln()).collect();
+        let dl = crate::attnmath::max_abs_diff(&lse.data, &lse_ref);
+        assert!(dl < 1e-4, "lse diff {dl}");
+    }
+
+    #[test]
+    fn engine_handle_roundtrip_and_weights() {
+        let Some(dir) = test_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let h = EngineHandle::spawn(&dir).unwrap();
+        let m = Engine::load(&dir).unwrap().manifest().model.clone();
+        // lm_head with weight args registered once
+        let mut rng = crate::util::Rng::seed(7);
+        let gain = vec![1.0f32; m.d_model];
+        let w_out = rng.normal_vec(m.d_model * m.vocab, 0.02);
+        h.register_weight("final_gain", gain.clone(), vec![m.d_model]).unwrap();
+        h.register_weight("head", w_out.clone(), vec![m.d_model, m.vocab]).unwrap();
+        let hvec = rng.normal_vec(m.d_model, 1.0);
+        let outs = h
+            .call(
+                "lm_head",
+                vec![Arg::f32(hvec.clone(), &[m.d_model]), Arg::weight("final_gain"), Arg::weight("head")],
+            )
+            .unwrap();
+        assert_eq!(outs[0].shape, vec![m.vocab]);
+        assert!(outs[0].data.iter().all(|x| x.is_finite()));
+        // missing weight errors cleanly
+        assert!(h
+            .call("lm_head", vec![Arg::f32(hvec, &[m.d_model]), Arg::weight("nope"), Arg::weight("head")])
+            .is_err());
+        let stats = h.stats().unwrap();
+        assert!(stats.calls >= 1);
+    }
+}

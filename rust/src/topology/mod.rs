@@ -1,0 +1,308 @@
+//! Cluster topology model: devices, nodes, and the two-tier interconnect
+//! hierarchy the paper's §5.3 exploits (high-bandwidth intra-node links,
+//! comparatively slow inter-node NICs).
+//!
+//! A `Topology` describes *what the hardware is*; the discrete-event network
+//! simulator (`crate::netsim`) describes *when bytes arrive*. Presets model
+//! the paper's three testbeds: H100 DGX (NVLink 4.0 + InfiniBand NDR),
+//! AMD MI300X (Infinity Fabric/xGMI + RoCE), and PCIe-connected RTX 4090s.
+
+use crate::gpumodel::GpuKind;
+
+/// Interconnect technology for a link tier.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum LinkClass {
+    /// NVLink 4.0 through NVSwitch (all-to-all within a DGX H100 node).
+    NvLink4,
+    /// InfiniBand NDR, one 400 Gb/s NIC per GPU (DGX reference design).
+    InfiniBandNdr,
+    /// AMD Infinity Fabric (xGMI) within an MI300X node.
+    InfinityFabric,
+    /// RoCE v2 Ethernet between AMD nodes.
+    RoCe,
+    /// PCIe 4.0 x16 peer-to-peer (consumer multi-GPU, no NVLink).
+    Pcie4,
+    /// Free parameters for experiments.
+    Custom,
+}
+
+/// Physical parameters of a link tier: the α–β model
+/// (`transfer_time = alpha + bytes / beta`) standard in collective-
+/// communication analysis (Hockney model).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinkSpec {
+    pub class: LinkClass,
+    /// Per-direction achievable bandwidth in bytes/second.
+    pub bandwidth_bps: f64,
+    /// One-way latency in seconds (includes software launch overhead).
+    pub latency_s: f64,
+}
+
+impl LinkSpec {
+    /// Effective time to move `bytes` over this link, uncontended.
+    pub fn transfer_time(&self, bytes: u64) -> f64 {
+        self.latency_s + bytes as f64 / self.bandwidth_bps
+    }
+
+    /// Achieved bandwidth for a message of `bytes` (the Fig. 2 curve):
+    /// small messages are latency-bound, large ones approach `bandwidth_bps`.
+    pub fn achieved_bandwidth(&self, bytes: u64) -> f64 {
+        bytes as f64 / self.transfer_time(bytes)
+    }
+
+    pub fn nvlink4() -> LinkSpec {
+        // 900 GB/s aggregate bidirectional per GPU => ~450 GB/s per direction.
+        LinkSpec { class: LinkClass::NvLink4, bandwidth_bps: 450e9, latency_s: 2.0e-6 }
+    }
+
+    pub fn infiniband_ndr() -> LinkSpec {
+        // 400 Gb/s per NIC = 50 GB/s, one NIC per GPU.
+        LinkSpec { class: LinkClass::InfiniBandNdr, bandwidth_bps: 50e9, latency_s: 5.0e-6 }
+    }
+
+    pub fn infinity_fabric() -> LinkSpec {
+        // MI300X xGMI: ~448 GB/s aggregate to peers.
+        LinkSpec { class: LinkClass::InfinityFabric, bandwidth_bps: 448e9, latency_s: 2.5e-6 }
+    }
+
+    pub fn roce() -> LinkSpec {
+        LinkSpec { class: LinkClass::RoCe, bandwidth_bps: 50e9, latency_s: 8.0e-6 }
+    }
+
+    pub fn pcie4() -> LinkSpec {
+        // PCIe 4.0 x16 between consumer GPUs: no P2P DMA on RTX 4090, so
+        // NCCL stages transfers through pinned host memory — measured
+        // effective GPU-to-GPU bandwidth is ~2-3 GB/s, not the 32 GB/s raw
+        // link rate (this is what makes Ring Attention so painful on the
+        // paper's Table 2 testbed).
+        LinkSpec { class: LinkClass::Pcie4, bandwidth_bps: 2.5e9, latency_s: 30.0e-6 }
+    }
+}
+
+/// Which tier of the hierarchy a route crosses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Tier {
+    /// Same node: scale-up fabric (NVLink / xGMI / PCIe).
+    Intra,
+    /// Different nodes: scale-out fabric (IB / RoCE).
+    Inter,
+}
+
+/// A device's global rank. Ranks are dense in `0..topology.world_size()` and
+/// laid out node-major: rank = node * gpus_per_node + local.
+pub type Rank = usize;
+
+/// Description of a (possibly multi-node) GPU cluster.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    pub name: String,
+    pub n_nodes: usize,
+    pub gpus_per_node: usize,
+    pub gpu: GpuKind,
+    pub intra: LinkSpec,
+    pub inter: LinkSpec,
+}
+
+impl Topology {
+    /// Total device count.
+    pub fn world_size(&self) -> usize {
+        self.n_nodes * self.gpus_per_node
+    }
+
+    /// Node index that owns `rank`.
+    pub fn node_of(&self, rank: Rank) -> usize {
+        assert!(rank < self.world_size(), "rank {rank} out of range");
+        rank / self.gpus_per_node
+    }
+
+    /// Local index of `rank` within its node.
+    pub fn local_of(&self, rank: Rank) -> usize {
+        rank % self.gpus_per_node
+    }
+
+    /// Which tier a message from `src` to `dst` crosses.
+    pub fn tier(&self, src: Rank, dst: Rank) -> Tier {
+        if self.node_of(src) == self.node_of(dst) {
+            Tier::Intra
+        } else {
+            Tier::Inter
+        }
+    }
+
+    /// Link spec for the given route.
+    pub fn link(&self, src: Rank, dst: Rank) -> &LinkSpec {
+        match self.tier(src, dst) {
+            Tier::Intra => &self.intra,
+            Tier::Inter => &self.inter,
+        }
+    }
+
+    /// Link spec by tier.
+    pub fn link_for_tier(&self, tier: Tier) -> &LinkSpec {
+        match tier {
+            Tier::Intra => &self.intra,
+            Tier::Inter => &self.inter,
+        }
+    }
+
+    /// All ranks on the same node as `rank` (including itself).
+    pub fn node_peers(&self, rank: Rank) -> Vec<Rank> {
+        let node = self.node_of(rank);
+        (0..self.gpus_per_node)
+            .map(|l| node * self.gpus_per_node + l)
+            .collect()
+    }
+
+    /// One representative rank per node (local index 0) — the "node leaders"
+    /// used by hierarchical collectives.
+    pub fn node_leaders(&self) -> Vec<Rank> {
+        (0..self.n_nodes).map(|n| n * self.gpus_per_node).collect()
+    }
+
+    /// True if the cluster spans more than one node.
+    pub fn is_multi_node(&self) -> bool {
+        self.n_nodes > 1
+    }
+
+    // ---- presets (the paper's testbeds) -------------------------------
+
+    /// DGX H100 cluster: 8 GPUs/node, NVLink 4.0 within, IB NDR across.
+    /// The paper's main latency experiments use 1–16 of these nodes.
+    pub fn h100_dgx(n_nodes: usize) -> Topology {
+        Topology {
+            name: format!("h100-dgx-{n_nodes}node"),
+            n_nodes,
+            gpus_per_node: 8,
+            gpu: GpuKind::H100,
+            intra: LinkSpec::nvlink4(),
+            inter: LinkSpec::infiniband_ndr(),
+        }
+    }
+
+    /// AMD MI300X node(s): Infinity Fabric within, RoCE across (§6.4).
+    pub fn mi300x(n_nodes: usize, gpus_per_node: usize) -> Topology {
+        Topology {
+            name: format!("mi300x-{n_nodes}x{gpus_per_node}"),
+            n_nodes,
+            gpus_per_node,
+            gpu: GpuKind::Mi300x,
+            intra: LinkSpec::infinity_fabric(),
+            inter: LinkSpec::roce(),
+        }
+    }
+
+    /// Two RTX 4090s over PCIe (Appendix C.3 testbed).
+    pub fn rtx4090_pcie(gpus: usize) -> Topology {
+        Topology {
+            name: format!("rtx4090-pcie-{gpus}"),
+            n_nodes: 1,
+            gpus_per_node: gpus,
+            gpu: GpuKind::Rtx4090,
+            intra: LinkSpec::pcie4(),
+            inter: LinkSpec::roce(), // unused (single node)
+        }
+    }
+
+    /// Fully custom topology for ablations.
+    pub fn custom(
+        name: &str,
+        n_nodes: usize,
+        gpus_per_node: usize,
+        gpu: GpuKind,
+        intra: LinkSpec,
+        inter: LinkSpec,
+    ) -> Topology {
+        Topology { name: name.to_string(), n_nodes, gpus_per_node, gpu, intra, inter }
+    }
+
+    /// Look up a preset by name (used by the CLI / config files).
+    pub fn preset(name: &str, n_nodes: usize, gpus_per_node: usize) -> anyhow::Result<Topology> {
+        match name {
+            "h100_dgx" => Ok(Topology::h100_dgx(n_nodes)),
+            "mi300x" => Ok(Topology::mi300x(n_nodes, gpus_per_node)),
+            "rtx4090_pcie" => Ok(Topology::rtx4090_pcie(gpus_per_node)),
+            other => anyhow::bail!(
+                "unknown topology preset '{other}' (expected h100_dgx | mi300x | rtx4090_pcie)"
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rank_layout_node_major() {
+        let t = Topology::h100_dgx(2);
+        assert_eq!(t.world_size(), 16);
+        assert_eq!(t.node_of(0), 0);
+        assert_eq!(t.node_of(7), 0);
+        assert_eq!(t.node_of(8), 1);
+        assert_eq!(t.local_of(9), 1);
+    }
+
+    #[test]
+    fn tier_detection() {
+        let t = Topology::h100_dgx(2);
+        assert_eq!(t.tier(0, 7), Tier::Intra);
+        assert_eq!(t.tier(7, 8), Tier::Inter);
+        assert_eq!(t.link(0, 1).class, LinkClass::NvLink4);
+        assert_eq!(t.link(0, 8).class, LinkClass::InfiniBandNdr);
+    }
+
+    #[test]
+    fn node_peers_and_leaders() {
+        let t = Topology::h100_dgx(2);
+        assert_eq!(t.node_peers(9), vec![8, 9, 10, 11, 12, 13, 14, 15]);
+        assert_eq!(t.node_leaders(), vec![0, 8]);
+    }
+
+    #[test]
+    fn transfer_time_alpha_beta() {
+        let l = LinkSpec::infiniband_ndr();
+        // 1 GiB at 50 GB/s ≈ 21.5 ms ≫ latency
+        let t = l.transfer_time(1 << 30);
+        assert!((t - (5e-6 + (1u64 << 30) as f64 / 50e9)).abs() < 1e-12);
+        // Tiny message is latency-bound.
+        assert!(l.transfer_time(8) < 6e-6);
+    }
+
+    #[test]
+    fn achieved_bandwidth_monotone_in_size() {
+        // This is the Fig. 2 qualitative shape: bigger messages => closer to
+        // peak; intra-node curve strictly above inter-node at all sizes.
+        let intra = LinkSpec::nvlink4();
+        let inter = LinkSpec::infiniband_ndr();
+        let sizes = [1u64 << 10, 1 << 16, 1 << 20, 1 << 26, 1 << 30];
+        let mut prev = 0.0;
+        for &s in &sizes {
+            let bw = intra.achieved_bandwidth(s);
+            assert!(bw > prev, "monotone");
+            assert!(bw > inter.achieved_bandwidth(s), "intra beats inter");
+            prev = bw;
+        }
+        // Asymptote approaches the peak within 10% for 1 GiB.
+        assert!(intra.achieved_bandwidth(1 << 30) > 0.9 * 450e9);
+    }
+
+    #[test]
+    fn single_node_is_all_intra() {
+        let t = Topology::rtx4090_pcie(2);
+        assert!(!t.is_multi_node());
+        assert_eq!(t.tier(0, 1), Tier::Intra);
+        assert_eq!(t.link(0, 1).class, LinkClass::Pcie4);
+    }
+
+    #[test]
+    fn preset_lookup() {
+        assert!(Topology::preset("h100_dgx", 2, 8).is_ok());
+        assert!(Topology::preset("nope", 1, 1).is_err());
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_range_rank_panics() {
+        Topology::h100_dgx(1).node_of(8);
+    }
+}

@@ -1,0 +1,252 @@
+//! Shared substrate utilities: deterministic RNG, statistics, a tiny
+//! leveled logger, a scoped thread pool, a property-test harness, and
+//! human-readable formatting helpers.
+//!
+//! The offline build environment provides no `rand`, `criterion`,
+//! `proptest`, or `env_logger`, so these are first-class modules of the
+//! library rather than dev-dependencies.
+
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+pub use rng::Rng;
+pub use stats::{Ewma, Histogram, Summary};
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+/// Log levels in increasing verbosity.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+static LOG_LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
+/// Set the global log level (also reads `TREEATTN_LOG` at init).
+pub fn set_log_level(level: Level) {
+    LOG_LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// Initialize logging from the `TREEATTN_LOG` environment variable
+/// (`error|warn|info|debug|trace`). Safe to call repeatedly.
+pub fn init_logging() {
+    if let Ok(v) = std::env::var("TREEATTN_LOG") {
+        let level = match v.to_ascii_lowercase().as_str() {
+            "error" => Level::Error,
+            "warn" => Level::Warn,
+            "debug" => Level::Debug,
+            "trace" => Level::Trace,
+            _ => Level::Info,
+        };
+        set_log_level(level);
+    }
+}
+
+/// True if a message at `level` should be emitted.
+pub fn log_enabled(level: Level) -> bool {
+    (level as u8) <= LOG_LEVEL.load(Ordering::Relaxed)
+}
+
+/// Emit a log line (used by the `tlog!` macro).
+pub fn log_emit(level: Level, module: &str, msg: std::fmt::Arguments<'_>) {
+    if log_enabled(level) {
+        let tag = match level {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        eprintln!("[{tag}] {module}: {msg}");
+    }
+}
+
+/// Leveled logging macro: `tlog!(Info, "built {} shards", n)`.
+#[macro_export]
+macro_rules! tlog {
+    ($level:ident, $($arg:tt)*) => {
+        $crate::util::log_emit(
+            $crate::util::Level::$level,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
+}
+
+/// Wall-clock stopwatch for coarse phase timing in benches/CLI.
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Stopwatch {
+        Stopwatch { start: Instant::now() }
+    }
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed_s() * 1e3
+    }
+}
+
+/// Format a byte count with binary units ("1.50 GiB").
+pub fn fmt_bytes(bytes: u64) -> String {
+    const UNITS: [&str; 6] = ["B", "KiB", "MiB", "GiB", "TiB", "PiB"];
+    let mut v = bytes as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{bytes} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+/// Format seconds with an adaptive unit ("12.3 µs", "4.56 ms", "1.23 s").
+pub fn fmt_secs(s: f64) -> String {
+    let a = s.abs();
+    if a >= 1.0 {
+        format!("{s:.3} s")
+    } else if a >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if a >= 1e-6 {
+        format!("{:.2} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Format a large count with thousands separators ("5,120,000").
+pub fn fmt_count(n: u64) -> String {
+    let s = n.to_string();
+    let bytes = s.as_bytes();
+    let mut out = String::with_capacity(s.len() + s.len() / 3);
+    for (i, c) in bytes.iter().enumerate() {
+        if i > 0 && (bytes.len() - i) % 3 == 0 {
+            out.push(',');
+        }
+        out.push(*c as char);
+    }
+    out
+}
+
+/// Format a token count like the paper ("80k", "1.28M", "5.12M").
+pub fn fmt_tokens(n: usize) -> String {
+    if n >= 1_000_000 {
+        let m = n as f64 / 1e6;
+        if (m - m.round()).abs() < 1e-9 {
+            format!("{}M", m.round() as u64)
+        } else {
+            format!("{m:.2}M")
+        }
+    } else if n >= 1000 {
+        format!("{}k", n / 1000)
+    } else {
+        n.to_string()
+    }
+}
+
+/// Run `f` on `n` scoped worker threads, passing each its index.
+/// Panics in workers are propagated to the caller.
+pub fn scoped_parallel<F>(n: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..n)
+            .map(|i| {
+                let f = &f;
+                s.spawn(move || f(i))
+            })
+            .collect();
+        for h in handles {
+            h.join().expect("worker thread panicked");
+        }
+    });
+}
+
+/// Parallel map over a slice with a bounded worker count; preserves order.
+pub fn par_map<T, U, F>(items: &[T], workers: usize, f: F) -> Vec<U>
+where
+    T: Sync,
+    U: Send,
+    F: Fn(&T) -> U + Sync,
+{
+    use std::sync::atomic::AtomicUsize;
+    use std::sync::Mutex;
+    let workers = workers.max(1).min(items.len().max(1));
+    let next = AtomicUsize::new(0);
+    let out: Vec<Mutex<Option<U>>> = (0..items.len()).map(|_| Mutex::new(None)).collect();
+    scoped_parallel(workers, |_| loop {
+        let i = next.fetch_add(1, Ordering::Relaxed);
+        if i >= items.len() {
+            break;
+        }
+        let v = f(&items[i]);
+        *out[i].lock().unwrap() = Some(v);
+    });
+    out.into_iter()
+        .map(|m| m.into_inner().unwrap().expect("par_map slot filled"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_bytes_units() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.00 KiB");
+        assert_eq!(fmt_bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+
+    #[test]
+    fn fmt_secs_units() {
+        assert_eq!(fmt_secs(1.5), "1.500 s");
+        assert_eq!(fmt_secs(0.0025), "2.500 ms");
+        assert_eq!(fmt_secs(2.5e-6), "2.50 µs");
+    }
+
+    #[test]
+    fn fmt_count_separators() {
+        assert_eq!(fmt_count(5_120_000), "5,120,000");
+        assert_eq!(fmt_count(999), "999");
+        assert_eq!(fmt_count(1000), "1,000");
+    }
+
+    #[test]
+    fn fmt_tokens_paper_style() {
+        assert_eq!(fmt_tokens(80_000), "80k");
+        assert_eq!(fmt_tokens(5_120_000), "5.12M");
+        assert_eq!(fmt_tokens(1_000_000), "1M");
+        assert_eq!(fmt_tokens(640), "640");
+    }
+
+    #[test]
+    fn par_map_preserves_order() {
+        let xs: Vec<u64> = (0..1000).collect();
+        let ys = par_map(&xs, 8, |x| x * 2);
+        assert_eq!(ys, xs.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn scoped_parallel_runs_all() {
+        use std::sync::atomic::AtomicUsize;
+        let counter = AtomicUsize::new(0);
+        scoped_parallel(16, |_| {
+            counter.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(counter.load(Ordering::SeqCst), 16);
+    }
+}

@@ -1,0 +1,129 @@
+//! Cross-module integration tests exercising the PUBLIC API only —
+//! the paths a downstream user composes: artifacts → engine → executor →
+//! strategies → serving, plus the collective/simulator stack at scale.
+
+use tree_attention::attention::{ring_decode, single_decode, tree_decode, ComputeBackend, ShardKv};
+use tree_attention::attnmath::{max_abs_diff, ref_attention, AttnShape};
+use tree_attention::cluster::VirtualCluster;
+use tree_attention::collectives::AllReduceAlgo;
+use tree_attention::config::{RunSpec, Strategy};
+use tree_attention::model::{ExecutorConfig, ModelExecutor};
+use tree_attention::runtime::{find_artifacts, EngineHandle};
+use tree_attention::serve::{synthetic_workload, ServeConfig, Server};
+use tree_attention::util::Rng;
+use tree_attention::Topology;
+
+fn flat(p: usize) -> Topology {
+    Topology::custom(
+        "flat",
+        1,
+        p,
+        tree_attention::gpumodel::GpuKind::H100,
+        tree_attention::topology::LinkSpec::nvlink4(),
+        tree_attention::topology::LinkSpec::infiniband_ndr(),
+    )
+}
+
+/// §6 footnote 1, over the compiled-kernel path: tree decoding through the
+/// real Pallas artifact equals ring decoding equals the dense oracle.
+#[test]
+fn pjrt_strategies_agree_with_oracle() {
+    let Some(dir) = find_artifacts("artifacts", "test-8m") else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let engine = EngineHandle::spawn(&dir).unwrap();
+    let m = engine.model_spec().clone();
+    let shape = AttnShape::new(1, m.n_heads, m.kv_heads, m.d_head());
+    let scale = 1.0 / (m.d_head() as f32).sqrt();
+    let row = m.kv_heads * m.d_head();
+    let p = 4;
+    let lens = [77usize, 128, 3, 0];
+    let mut rng = Rng::seed(1);
+    let q = rng.normal_vec(shape.q_elems(), 1.0);
+    let ks: Vec<Vec<f32>> = lens.iter().map(|&l| rng.normal_vec(l * row, 1.0)).collect();
+    let vs: Vec<Vec<f32>> = lens.iter().map(|&l| rng.normal_vec(l * row, 1.0)).collect();
+    let shards: Vec<ShardKv> =
+        (0..p).map(|i| ShardKv { k: &ks[i], v: &vs[i], len: lens[i] }).collect();
+    let reference = ref_attention(shape, &q, &ks.concat(), &vs.concat(), lens.iter().sum(), scale);
+    let backend = ComputeBackend::Pjrt(engine);
+
+    let mut c = VirtualCluster::new(flat(p));
+    let tree = tree_decode(&mut c, &backend, shape, scale, &q, &shards, AllReduceAlgo::Tree { fanout: 2 }, 2).unwrap();
+    assert!(max_abs_diff(&tree.out, &reference) < 1e-3, "tree/pjrt vs oracle");
+
+    let mut c = VirtualCluster::new(flat(p));
+    let ring = ring_decode(&mut c, &backend, shape, scale, &q, &shards, 2, false).unwrap();
+    assert!(max_abs_diff(&ring.out, &reference) < 1e-3, "ring/pjrt vs oracle");
+
+    let mut c = VirtualCluster::new(flat(p));
+    let single = single_decode(&mut c, &backend, shape, scale, &q, &shards, 2).unwrap();
+    assert!(max_abs_diff(&single.out, &reference) < 1e-3, "single/pjrt vs oracle");
+
+    assert!(max_abs_diff(&tree.out, &ring.out) < 1e-3);
+}
+
+/// Full serving pipeline over the compiled model: tree and ring decode the
+/// same workload to identical token streams, and tree is faster in
+/// simulated time.
+#[test]
+fn serving_pipeline_tree_vs_ring() {
+    let Some(dir) = find_artifacts("artifacts", "test-8m") else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let engine = EngineHandle::spawn(&dir).unwrap();
+    let vocab = engine.model_spec().vocab;
+    let mut streams = Vec::new();
+    let mut tpots = Vec::new();
+    for strategy in [Strategy::Tree, Strategy::Ring] {
+        let exec = ModelExecutor::new(
+            engine.clone(),
+            ExecutorConfig { n_workers: 2, page_size: 8, strategy, ..Default::default() },
+            7,
+        )
+        .unwrap();
+        let mut cluster = VirtualCluster::new(flat(2));
+        let reqs = synthetic_workload(2, 32, 64, 3, vocab, 5);
+        let mut server = Server::new(&exec, &mut cluster, ServeConfig { max_batch: 2 });
+        let (results, metrics) = server.run(reqs).unwrap();
+        streams.push(results.iter().map(|r| r.tokens.clone()).collect::<Vec<_>>());
+        tpots.push(metrics.tpot_sim.mean);
+    }
+    assert_eq!(streams[0], streams[1], "token streams must be identical");
+    assert!(tpots[0] < tpots[1], "tree TPOT {} !< ring TPOT {}", tpots[0], tpots[1]);
+}
+
+/// Config round trip through the public RunSpec API.
+#[test]
+fn runspec_public_api() {
+    let mut spec = RunSpec::default();
+    spec.apply_override("strategy=ring").unwrap();
+    spec.apply_override("cluster.preset=rtx4090_pcie").unwrap();
+    spec.apply_override("cluster.n_nodes=1").unwrap();
+    spec.apply_override("cluster.gpus_per_node=2").unwrap();
+    let topo = spec.cluster.topology().unwrap();
+    assert_eq!(topo.world_size(), 2);
+    assert_eq!(spec.strategy, Strategy::Ring);
+}
+
+/// The headline asymptotics through public API: at 128 GPUs / 5.12M tokens
+/// the simulated tree-vs-ring speedup lands in the paper's ballpark (×8).
+#[test]
+fn paper_headline_speedup_in_band() {
+    use tree_attention::bench::papersim::sim_attention;
+    let topo = Topology::h100_dgx(16);
+    let shape = AttnShape::mha(1, 16, 128);
+    let ring = sim_attention(&topo, Strategy::Ring, 5_120_000, shape, 2, AllReduceAlgo::Ring, false);
+    let tree = sim_attention(&topo, Strategy::Tree, 5_120_000, shape, 2,
+                             AllReduceAlgo::TwoLevel { inter_fanout: 2 }, false);
+    let speedup = ring.sim_time / tree.sim_time;
+    // Paper measures "close to x8" at this scale; its own asymptotic analysis
+    // predicts more. Our simulator (which omits JAX-at-scale dispatch
+    // overheads beyond the calibrated launch cost) lands between the
+    // measurement and the pure wire-time prediction.
+    assert!(speedup > 4.0 && speedup < 120.0, "headline speedup {speedup}");
+    // Thm 1: comm rounds O(p) vs O(log p)
+    assert!(ring.comm_steps > 100);
+    assert!(tree.comm_steps < 30);
+}
