@@ -15,6 +15,7 @@ use tree_attention::util::{fmt_secs, fmt_tokens, Rng};
 use tree_attention::Topology;
 
 fn main() {
+    let quick = tree_attention::bench::quick_mode();
     let shape = AttnShape::mha(1, 16, 128);
 
     // ---- 1. collective algorithm sweep (cost-only, paper scale) ----------
@@ -22,7 +23,8 @@ fn main() {
         "Ablation 1 — AllReduce algorithm for the tree-decode combine (seq 2.56M)",
         &["nodes", "GPUs", "ring AR", "tree2", "tree4", "tree8", "two-level"],
     );
-    for nodes in [2usize, 4, 8, 16] {
+    let node_counts: Vec<usize> = if quick { vec![2, 16] } else { vec![2, 4, 8, 16] };
+    for &nodes in &node_counts {
         let topo = Topology::h100_dgx(nodes);
         let seq = 2_560_000;
         let run = |algo| sim_attention(&topo, Strategy::Tree, seq, shape, 2, algo, false).sim_time;
@@ -44,9 +46,10 @@ fn main() {
         "Ablation 2 — fused (n,d,m) AllReduce vs Alg. 3's three AllReduces",
         &["GPUs", "fused time", "unfused time", "fused steps", "unfused steps"],
     );
-    for p in [4usize, 8, 16] {
+    let worlds: Vec<usize> = if quick { vec![4] } else { vec![4, 8, 16] };
+    for &p in &worlds {
         let mut rng = Rng::seed(77);
-        let t = 256;
+        let t = if quick { 64 } else { 256 };
         let row = shape.kv_heads * shape.d_head;
         let q = rng.normal_vec(shape.q_elems(), 1.0);
         let ks: Vec<Vec<f32>> = (0..p).map(|_| rng.normal_vec(t * row, 1.0)).collect();
@@ -81,7 +84,8 @@ fn main() {
         &["seq len", "no overlap", "overlap", "saved"],
     );
     let topo = Topology::h100_dgx(1);
-    for seq in [160_000usize, 640_000, 2_560_000] {
+    let seqs: Vec<usize> = if quick { vec![640_000] } else { vec![160_000, 640_000, 2_560_000] };
+    for &seq in &seqs {
         let no = sim_attention(&topo, Strategy::Ring, seq, shape, 2, AllReduceAlgo::Ring, false);
         let yes = sim_attention(&topo, Strategy::Ring, seq, shape, 2, AllReduceAlgo::Ring, true);
         table.row(vec![
@@ -99,7 +103,7 @@ fn main() {
 
     // ---- 4. ring decode with its own chunks only vs measured compute share
     let mut rng = Rng::seed(5);
-    let t = 512;
+    let t = if quick { 128 } else { 512 };
     let row = shape.kv_heads * shape.d_head;
     let p = 8;
     let q = rng.normal_vec(shape.q_elems(), 1.0);

@@ -28,8 +28,10 @@ fn main() {
         "§6.3 — comm volume per decode step (elements), analytic vs measured",
         &["p", "t=N/p", "V_ring Eq.10", "ring measured", "V_tree Eq.14", "tree measured"],
     );
-    for p in [2usize, 4, 8] {
-        let t = 1024usize;
+    let quick = tree_attention::bench::quick_mode();
+    let worlds: Vec<usize> = if quick { vec![2, 4] } else { vec![2, 4, 8] };
+    for &p in &worlds {
+        let t = if quick { 128usize } else { 1024usize };
         let mut rng = Rng::seed(9);
         let q = rng.normal_vec(shape.q_elems(), 1.0);
         let ks: Vec<Vec<f32>> = (0..p).map(|_| rng.normal_vec(t * row, 1.0)).collect();

@@ -17,7 +17,12 @@ fn main() {
         &["msg size", "intra GB/s", "inter GB/s", "ratio"],
     );
     let mut series = Vec::new();
-    for exp in [10u32, 12, 14, 16, 18, 20, 22, 24, 26, 28, 30] {
+    let exps: Vec<u32> = if tree_attention::bench::quick_mode() {
+        vec![10, 20, 30]
+    } else {
+        vec![10, 12, 14, 16, 18, 20, 22, 24, 26, 28, 30]
+    };
+    for &exp in &exps {
         let bytes = 1u64 << exp;
         // measured through the simulator (fresh sim per size: uncontended)
         let sim = NetSim::new(topo.clone());

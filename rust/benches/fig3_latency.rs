@@ -27,17 +27,25 @@ fn ring(topo: &Topology, seq: usize) -> f64 {
 }
 
 fn main() {
+    let quick = tree_attention::bench::quick_mode();
     let mut results = Vec::new();
 
+    let node_counts: Vec<usize> = if quick { vec![1, 16] } else { vec![1, 8, 16] };
+    let seqs: Vec<usize> = if quick {
+        vec![80_000, 640_000, 5_120_000]
+    } else {
+        vec![80_000, 160_000, 320_000, 640_000, 1_280_000, 2_560_000, 5_120_000]
+    };
+
     // ---- (a) relative execution time vs sequence length ------------------
-    for nodes in [1usize, 8, 16] {
+    for &nodes in &node_counts {
         let topo = Topology::h100_dgx(nodes);
         let base = ring(&topo, 80_000); // index: Ring Attention @ 80k
         let mut table = Table::new(
             &format!("Fig 3a — relative exec time vs seq len ({nodes} node(s), {} GPUs; 1.0 = ring@80k)", topo.world_size()),
             &["seq len", "ring (rel)", "tree (rel)", "speedup"],
         );
-        for seq in [80_000usize, 160_000, 320_000, 640_000, 1_280_000, 2_560_000, 5_120_000] {
+        for &seq in &seqs {
             let r = ring(&topo, seq);
             let t = tree(&topo, seq);
             table.row(vec![
@@ -66,9 +74,11 @@ fn main() {
         "Fig 3b — absolute exec time vs cluster size (H100 DGX)",
         &["GPUs", "seq len", "ring", "tree", "speedup"],
     );
-    for nodes in [1usize, 2, 4, 8, 16] {
+    let b_nodes: Vec<usize> = if quick { vec![1, 16] } else { vec![1, 2, 4, 8, 16] };
+    let b_seqs: Vec<usize> = if quick { vec![5_120_000] } else { vec![1_280_000, 2_560_000, 5_120_000] };
+    for &nodes in &b_nodes {
         let topo = Topology::h100_dgx(nodes);
-        for seq in [1_280_000usize, 2_560_000, 5_120_000] {
+        for &seq in &b_seqs {
             let r = ring(&topo, seq);
             let t = tree(&topo, seq);
             table.row(vec![

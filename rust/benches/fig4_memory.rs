@@ -23,8 +23,11 @@ fn main() {
         "Fig 4 — peak memory per device (Eq. 8/9 model, 2x RTX 4090, bf16)",
         &["hidden", "seq len", "ring", "tree", "gap", "ratio"],
     );
-    for d in [2048usize, 4096, 8192] {
-        for seq in [128_000usize, 256_000, 512_000] {
+    let quick = tree_attention::bench::quick_mode();
+    let hiddens: Vec<usize> = if quick { vec![2048, 4096] } else { vec![2048, 4096, 8192] };
+    let seqs: Vec<usize> = if quick { vec![256_000] } else { vec![128_000, 256_000, 512_000] };
+    for &d in &hiddens {
+        for &seq in &seqs {
             let n_heads = d / 128;
             let ring_b = peak_memory_model(Strategy::Ring, 1, seq, p, d, n_heads, 2);
             let tree_b = peak_memory_model(Strategy::Tree, 1, seq, p, d, n_heads, 2);
@@ -63,7 +66,8 @@ fn main() {
     );
     let shape = AttnShape::mha(1, 16, 128);
     let row = shape.kv_heads * shape.d_head;
-    for seq in [2048usize, 4096, 8192] {
+    let measured_seqs: Vec<usize> = if quick { vec![2048] } else { vec![2048, 4096, 8192] };
+    for &seq in &measured_seqs {
         let t_local = seq / p;
         let mut rng = Rng::seed(4);
         let q = rng.normal_vec(shape.q_elems(), 1.0);

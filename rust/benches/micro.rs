@@ -15,6 +15,9 @@ use tree_attention::util::{fmt_bytes, fmt_secs, Rng};
 use tree_attention::Topology;
 
 fn main() {
+    // Quick mode shrinks sample counts so the CI smoke job stays cheap.
+    let quick = tree_attention::bench::quick_mode();
+    let (warm, samples) = if quick { (1, 3) } else { (3, 10) };
     let mut table = Table::new("L3 hot-path micro-benchmarks", &["bench", "per iter", "throughput"]);
 
     // -- attn combine op ----------------------------------------------------
@@ -23,7 +26,7 @@ fn main() {
     let mut rng = Rng::seed(1);
     let mut acc = rng.normal_vec(blocks * 130, 1.0);
     let other = rng.normal_vec(blocks * 130, 1.0);
-    let r = bench_fn("attn_combine", 3, 10, 50, || {
+    let r = bench_fn("attn_combine", warm, samples, if quick { 10 } else { 50 }, || {
         op.combine(&mut acc, &other);
     });
     let bytes_per_iter = (blocks * 130 * 4) as f64;
@@ -37,7 +40,7 @@ fn main() {
     let topo = Topology::h100_dgx(4);
     let sim = NetSim::new(topo.clone());
     let mut i = 0u64;
-    let r = bench_fn("netsim_transfer", 3, 10, 10_000, || {
+    let r = bench_fn("netsim_transfer", warm, samples, if quick { 1000 } else { 10_000 }, || {
         let src = (i % 31) as usize;
         let dst = (src + 1 + (i % 7) as usize) % 32;
         sim.transfer(src, dst, 4096, i as f64 * 1e-9);
@@ -50,7 +53,7 @@ fn main() {
     ]);
 
     // -- schedule generation --------------------------------------------------
-    let r = bench_fn("ring_sched_gen", 2, 10, 100, || {
+    let r = bench_fn("ring_sched_gen", warm, samples, if quick { 20 } else { 100 }, || {
         std::hint::black_box(ring_allreduce_schedule(128, 2048));
     });
     table.row(vec![
@@ -58,7 +61,7 @@ fn main() {
         fmt_secs(r.per_iter()),
         format!("{:.0}k scheds/s", 1e-3 / r.per_iter()),
     ]);
-    let r = bench_fn("twolevel_sched_gen", 2, 10, 100, || {
+    let r = bench_fn("twolevel_sched_gen", warm, samples, if quick { 20 } else { 100 }, || {
         std::hint::black_box(two_level_allreduce_schedule(&topo, 16, 2));
     });
     table.row(vec![
@@ -74,7 +77,7 @@ fn main() {
     let q = rng.normal_vec(shape.q_elems(), 1.0);
     let k = rng.normal_vec(t * row_elems, 1.0);
     let v = rng.normal_vec(t * row_elems, 1.0);
-    let r = bench_fn("oracle_partial", 2, 8, 4, || {
+    let r = bench_fn("oracle_partial", warm, if quick { 3 } else { 8 }, if quick { 2 } else { 4 }, || {
         std::hint::black_box(partial_from_chunk(shape, &q, &k, &v, t, 0.09));
     });
     let kv_bytes = (2 * t * row_elems * 4) as f64;
@@ -93,7 +96,7 @@ fn main() {
         let q = rng.normal_vec(m.n_heads * m.d_head(), 1.0);
         let k = rng.normal_vec(t_art * rowm, 1.0);
         let v = rng.normal_vec(t_art * rowm, 1.0);
-        let r = bench_fn("pjrt_attn_partial", 2, 8, 4, || {
+        let r = bench_fn("pjrt_attn_partial", warm, if quick { 3 } else { 8 }, if quick { 2 } else { 4 }, || {
             engine
                 .call(
                     "attn_partial_t512",

@@ -17,7 +17,11 @@ fn main() {
         ("8x H100 (NVLink 4.0)", Topology::h100_dgx(1)),
         ("4x MI300X (Infinity Fabric)", Topology::mi300x(1, 4)),
     ];
-    let seqs = [32_000usize, 64_000, 128_000, 256_000];
+    let seqs: Vec<usize> = if tree_attention::bench::quick_mode() {
+        vec![32_000, 256_000]
+    } else {
+        vec![32_000, 64_000, 128_000, 256_000]
+    };
     let n_tokens = 10;
 
     let mut results = Vec::new();

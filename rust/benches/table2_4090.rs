@@ -13,7 +13,11 @@ use tree_attention::Topology;
 fn main() {
     let model = ModelSpec::llama32_1b();
     let topo = Topology::rtx4090_pcie(2);
-    let seqs = [8_000usize, 16_000, 20_000, 32_000];
+    let seqs: Vec<usize> = if tree_attention::bench::quick_mode() {
+        vec![8_000, 32_000]
+    } else {
+        vec![8_000, 16_000, 20_000, 32_000]
+    };
     let n_tokens = 10;
 
     let mut table = Table::new(

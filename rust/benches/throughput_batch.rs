@@ -1,0 +1,161 @@
+//! Continuous-batching throughput: tokens/s and p50/p99 token latency for
+//! batched tree-decode, swept over batch width × context length × topology
+//! preset. This is the serving-layer headline the ROADMAP's "heavy traffic"
+//! north star asks for: the paper makes ONE decode step cheap; this bench
+//! shows how iteration-level batching turns that into cluster throughput.
+//!
+//! Two parts:
+//!   1. paper-scale sweep (cost-only, like the figure benches): per-round
+//!      latency and tokens/s from the calibrated simulator — the acceptance
+//!      check that tokens/s strictly increases from batch 1 to 8 at 128k
+//!      context on the H100-DGX preset runs here;
+//!   2. real-numerics run of the actual `TreeBatcher` scheduler (oracle
+//!      backend, reduced context): p50/p99 round latencies under admission
+//!      control + an exactness check that batched outputs are bit-identical
+//!      to looping the single-request decode.
+//!
+//! `--quick` (or TREEATTN_BENCH_QUICK=1) shrinks the sweep for CI smoke.
+
+use tree_attention::attention::ComputeBackend;
+use tree_attention::attnmath::AttnShape;
+use tree_attention::bench::papersim::sim_batched_tree_decode;
+use tree_attention::bench::{quick_mode, Table};
+use tree_attention::cluster::VirtualCluster;
+use tree_attention::collectives::AllReduceAlgo;
+use tree_attention::ser::Json;
+use tree_attention::serve::{synthetic_decode_workload, BatcherConfig, TreeBatcher};
+use tree_attention::util::{fmt_secs, fmt_tokens};
+use tree_attention::Topology;
+
+const SHAPE: AttnShape = AttnShape { batch: 1, n_heads: 16, kv_heads: 16, d_head: 128 };
+const TWOLEVEL: AllReduceAlgo = AllReduceAlgo::TwoLevel { inter_fanout: 2 };
+
+fn main() {
+    let quick = quick_mode();
+    let mut results = Vec::new();
+
+    // ---- part 1: paper-scale sweep (cost-only) ---------------------------
+    let batches: Vec<usize> = vec![1, 2, 4, 8, 16, 32];
+    let contexts: Vec<usize> =
+        if quick { vec![128_000] } else { vec![32_000, 128_000, 512_000] };
+    let topos: Vec<Topology> = if quick {
+        vec![Topology::h100_dgx(1)]
+    } else {
+        vec![Topology::h100_dgx(1), Topology::h100_dgx(4), Topology::mi300x(1, 8)]
+    };
+
+    for topo in &topos {
+        let mut table = Table::new(
+            &format!(
+                "Batched tree-decode throughput — {} ({} GPUs)",
+                topo.name,
+                topo.world_size()
+            ),
+            &["ctx/session", "batch", "round latency", "tok/s", "comm bytes/round"],
+        );
+        for &ctx in &contexts {
+            for &b in &batches {
+                let r = sim_batched_tree_decode(topo, b, ctx, SHAPE, 2, TWOLEVEL);
+                let tps = b as f64 / r.sim_time;
+                table.row(vec![
+                    fmt_tokens(ctx),
+                    b.to_string(),
+                    fmt_secs(r.sim_time),
+                    format!("{tps:.0}"),
+                    r.traffic.total_bytes().to_string(),
+                ]);
+                results.push(Json::obj(vec![
+                    ("topo", Json::str(&topo.name)),
+                    ("ctx", Json::num(ctx as f64)),
+                    ("batch", Json::num(b as f64)),
+                    ("round_s", Json::num(r.sim_time)),
+                    ("tok_per_s", Json::num(tps)),
+                ]));
+            }
+        }
+        table.print();
+    }
+
+    // ---- acceptance check: strict increase batch 1 → 8 @ 128k, H100 DGX --
+    let topo = Topology::h100_dgx(1);
+    let mut prev = 0.0;
+    for b in [1usize, 2, 4, 8] {
+        let r = sim_batched_tree_decode(&topo, b, 128_000, SHAPE, 2, TWOLEVEL);
+        let tps = b as f64 / r.sim_time;
+        assert!(
+            tps > prev,
+            "throughput must strictly increase: batch {b} gives {tps:.0} tok/s (prev {prev:.0})"
+        );
+        prev = tps;
+    }
+    println!("\nacceptance ✓ tokens/s strictly increases from batch 1 to 8 at 128k ctx (H100 DGX)");
+
+    // ---- part 2: real scheduler, real numerics (reduced scale) -----------
+    let (n_req, ctx_lo, ctx_hi, n_tok) = if quick { (6, 64, 128, 3) } else { (16, 256, 1024, 6) };
+    let scale = 1.0 / (SHAPE.d_head as f32).sqrt();
+    let mut table = Table::new(
+        "TreeBatcher scheduler — oracle numerics, 8x H100 (reduced context)",
+        &["max batch", "tok/s (sim)", "p50 tok lat", "p99 tok lat", "rounds", "peak B"],
+    );
+    for max_batch in [1usize, 4, 8] {
+        let batcher = TreeBatcher::new(
+            SHAPE,
+            scale,
+            BatcherConfig {
+                max_batch,
+                page_size: 16,
+                pages_per_worker: 4096,
+                algo: TWOLEVEL,
+                wire_bpe: 2,
+                seed: 7,
+            },
+        );
+        let reqs = synthetic_decode_workload(n_req, ctx_lo, ctx_hi, n_tok, 7);
+        let mut cluster = VirtualCluster::new(Topology::h100_dgx(1));
+        let (_, m) = batcher.run(&mut cluster, &ComputeBackend::Oracle, reqs).unwrap();
+        assert_eq!(m.completed, n_req);
+        table.row(vec![
+            max_batch.to_string(),
+            format!("{:.1}", m.throughput_sim),
+            fmt_secs(m.token_latency.p50),
+            fmt_secs(m.token_latency.p99),
+            m.rounds.to_string(),
+            m.peak_active.to_string(),
+        ]);
+        results.push(Json::obj(vec![
+            ("scheduler", Json::str("tree_batcher")),
+            ("max_batch", Json::num(max_batch as f64)),
+            ("tok_per_s", Json::num(m.throughput_sim)),
+            ("p50_s", Json::num(m.token_latency.p50)),
+            ("p99_s", Json::num(m.token_latency.p99)),
+        ]));
+    }
+    table.print();
+
+    // ---- exactness: batched scheduler ≡ single-request oracle ------------
+    let batcher = TreeBatcher::new(
+        SHAPE,
+        scale,
+        BatcherConfig {
+            max_batch: 4,
+            page_size: 8,
+            pages_per_worker: 1024,
+            algo: AllReduceAlgo::Tree { fanout: 2 },
+            wire_bpe: 2,
+            seed: 11,
+        },
+    );
+    let reqs = synthetic_decode_workload(4, 32, 96, 3, 11);
+    let mut cluster = VirtualCluster::new(Topology::h100_dgx(1));
+    let (res, _) = batcher.run(&mut cluster, &ComputeBackend::Oracle, reqs.clone()).unwrap();
+    for r in &reqs {
+        let got = res.iter().find(|x| x.id == r.id).unwrap();
+        let mut c2 = VirtualCluster::new(Topology::h100_dgx(1));
+        let want = batcher.replay_single(&mut c2, &ComputeBackend::Oracle, r).unwrap();
+        assert_eq!(got.outputs, want, "request {} diverged from single-request decode", r.id);
+    }
+    println!("\nexactness ✓ batched outputs bit-identical to single-request tree_decode");
+
+    let path = tree_attention::bench::write_results("throughput_batch", &Json::arr(results)).unwrap();
+    println!("results written to {}", path.display());
+}

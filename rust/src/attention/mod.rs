@@ -12,7 +12,7 @@ pub mod tree;
 pub use memory::{peak_memory_model, MemoryModel};
 pub use ring::ring_decode;
 pub use single::single_decode;
-pub use tree::{tree_decode, tree_decode_unfused};
+pub use tree::{tree_decode, tree_decode_batch, tree_decode_unfused, BatchDecodeOutcome, BatchEntry};
 
 use crate::attnmath::{partial_from_chunk, AttnPartial, AttnShape};
 use crate::netsim::TrafficCounters;
@@ -75,6 +75,66 @@ impl ComputeBackend {
                     ],
                 )?;
                 Ok(AttnPartial::from_flash_output(shape, &outs[0].data, &outs[1].data))
+            }
+        }
+    }
+
+    /// Per-shard partials for MANY sessions resident on one worker.
+    ///
+    /// Oracle: a plain loop. PJRT: ONE engine round-trip for the whole
+    /// session set via [`EngineHandle::call_many`] — the per-worker half of
+    /// iteration-level batching (B kernel submissions, one queue crossing).
+    pub fn partial_batch(
+        &self,
+        shape: AttnShape,
+        scale: f32,
+        qs: &[&[f32]],
+        kvs: &[ShardKv<'_>],
+    ) -> anyhow::Result<Vec<AttnPartial>> {
+        anyhow::ensure!(qs.len() == kvs.len(), "one query per session");
+        match self {
+            ComputeBackend::Oracle => {
+                qs.iter().zip(kvs).map(|(q, kv)| self.partial(shape, scale, q, *kv)).collect()
+            }
+            ComputeBackend::Pjrt(engine) => {
+                anyhow::ensure!(shape.batch == 1, "PJRT path is per-sequence (batch 1)");
+                let row = shape.kv_heads * shape.d_head;
+                let mut calls: Vec<(String, Vec<Arg>)> = Vec::new();
+                // call index per session; empty shards contribute no call.
+                let mut call_of: Vec<Option<usize>> = Vec::with_capacity(qs.len());
+                for (q, kv) in qs.iter().zip(kvs) {
+                    if kv.len == 0 {
+                        call_of.push(None);
+                        continue;
+                    }
+                    let t_art = engine.pick_attn_chunk(kv.len)?;
+                    let mut k_pad = vec![0.0f32; t_art * row];
+                    let mut v_pad = vec![0.0f32; t_art * row];
+                    k_pad[..kv.len * row].copy_from_slice(kv.k);
+                    v_pad[..kv.len * row].copy_from_slice(kv.v);
+                    call_of.push(Some(calls.len()));
+                    calls.push((
+                        format!("attn_partial_t{t_art}"),
+                        vec![
+                            Arg::scalar_i32(kv.len as i32),
+                            Arg::f32(q.to_vec(), &[shape.n_heads, shape.d_head]),
+                            Arg::f32(k_pad, &[t_art, shape.kv_heads, shape.d_head]),
+                            Arg::f32(v_pad, &[t_art, shape.kv_heads, shape.d_head]),
+                        ],
+                    ));
+                }
+                let outs = engine.call_many(calls)?;
+                call_of
+                    .into_iter()
+                    .map(|c| match c {
+                        None => Ok(AttnPartial::identity(shape)),
+                        Some(i) => Ok(AttnPartial::from_flash_output(
+                            shape,
+                            &outs[i][0].data,
+                            &outs[i][1].data,
+                        )),
+                    })
+                    .collect()
             }
         }
     }

@@ -15,7 +15,7 @@
 //! made topology-aware, unlike Ring Attention's fixed P2P pattern.
 
 use super::{ComputeBackend, DecodeOutcome, DecodeStats, ShardKv};
-use crate::attnmath::{AttnCombineOp, AttnPartial, AttnShape};
+use crate::attnmath::{batched_shape, AttnCombineOp, AttnPartial, AttnShape};
 use crate::cluster::VirtualCluster;
 use crate::collectives::{broadcast_schedule, execute_data, AllReduceAlgo};
 
@@ -86,6 +86,117 @@ pub fn tree_decode(
 
     Ok(DecodeOutcome {
         out: result,
+        stats: DecodeStats {
+            sim_time: t1 - t0,
+            comm_steps: steps,
+            traffic: cluster.world.net.counters().since(&before_traffic),
+            peak_transient_bytes: cluster.mem.max_peak(),
+        },
+    })
+}
+
+/// One session's inputs to a batched decode round: its query and its view
+/// of the per-worker KV shards (one [`ShardKv`] per rank).
+pub struct BatchEntry<'a> {
+    /// `[n_heads * d_head]` f32.
+    pub q: &'a [f32],
+    /// `shards[r]` — worker r's shard of THIS session's KV.
+    pub shards: Vec<ShardKv<'a>>,
+}
+
+/// Result of one batched decode round.
+pub struct BatchDecodeOutcome {
+    /// Per-session attention output, `[n_heads * d_head]` each.
+    pub outs: Vec<Vec<f32>>,
+    pub stats: DecodeStats,
+}
+
+/// Batched tree-attention decode: ONE round for B concurrent sessions with
+/// heterogeneous sequence lengths, in a SINGLE fused AllReduce.
+///
+/// Each worker computes one flash partial per resident session, stacks the
+/// per-session `(n, d, m)` wires session-major (which is exactly the wire of
+/// the batched shape — see `attnmath::AttnPartial::stack_wires`), and the
+/// cluster AllReduces one payload of `B · n_heads` blocks. The collective
+/// cost is thus one launch and `O(log p)` rounds regardless of B — this is
+/// what makes iteration-level batching amortize the NCCL-launch-dominated
+/// decode step (the serving-layer counterpart of the paper's §5.3 argument).
+///
+/// Numerics note: with full-buffer collectives (`Tree`/`TwoLevel`) every
+/// block is combined in the same order as a single-session `tree_decode`,
+/// so batched outputs are bit-identical to looping sessions one at a time.
+/// `Ring` segments the buffer by block index, so the combine order (and the
+/// last-ulp rounding) depends on the batch width; results remain exact to
+/// fp tolerance.
+pub fn tree_decode_batch(
+    cluster: &mut VirtualCluster,
+    backend: &ComputeBackend,
+    shape: AttnShape,
+    scale: f32,
+    entries: &[BatchEntry<'_>],
+    algo: AllReduceAlgo,
+    wire_bpe: u64,
+) -> anyhow::Result<BatchDecodeOutcome> {
+    let p = cluster.world_size();
+    let b = entries.len();
+    anyhow::ensure!(shape.batch == 1, "per-session shape must have batch 1");
+    anyhow::ensure!(b >= 1, "empty batch");
+    for (s, e) in entries.iter().enumerate() {
+        anyhow::ensure!(e.shards.len() == p, "session {s}: need one shard per worker ({p})");
+        anyhow::ensure!(e.q.len() == shape.q_elems(), "session {s}: q length");
+    }
+    let bshape = batched_shape(shape, b);
+
+    let before_traffic = cluster.world.net.counters();
+    let t0 = cluster.world.barrier();
+
+    // -- step 1: broadcast the stacked queries (one binomial tree) --------
+    let q_bytes = (bshape.q_elems() as u64) * wire_bpe;
+    let bsched = broadcast_schedule(p, 0, 1);
+    let mut steps = bsched.n_steps();
+    for step in &bsched.steps {
+        for op in step {
+            cluster.world.send(op.src, op.dst, q_bytes);
+        }
+    }
+    let wire_elems = AttnPartial::wire_len(bshape) as u64;
+    for w in 0..p {
+        cluster.mem.alloc(w, q_bytes + 2 * wire_elems * wire_bpe);
+    }
+
+    // -- step 2: per-worker flash partials, one launch over all sessions --
+    let qs: Vec<&[f32]> = entries.iter().map(|e| e.q).collect();
+    let mut wires: Vec<Vec<f32>> = Vec::with_capacity(p);
+    for w in 0..p {
+        let kvs: Vec<ShardKv<'_>> = entries.iter().map(|e| e.shards[w]).collect();
+        let total_len: usize = kvs.iter().map(|kv| kv.len).sum();
+        let t_comp =
+            cluster.gpu.decode_attention_time(1, total_len, shape.kv_heads, shape.d_head);
+        cluster.world.compute(w, t_comp);
+        let parts = backend.partial_batch(shape, scale, &qs, &kvs)?;
+        let session_wires: Vec<Vec<f32>> = parts.iter().map(|part| part.to_wire()).collect();
+        wires.push(AttnPartial::stack_wires(shape, &session_wires));
+    }
+
+    // -- step 3: ONE fused AllReduce over B·n_heads blocks -----------------
+    let op = AttnCombineOp { d_head: shape.d_head };
+    let sched = algo.schedule(&cluster.world, b * shape.n_heads);
+    let stats = execute_data(&mut cluster.world, &sched, &mut wires, &op, wire_bpe);
+    steps += stats.steps;
+
+    // -- step 4: finalize per session on the leader ------------------------
+    let outs: Vec<Vec<f32>> = AttnPartial::unstack_wire(shape, &wires[0], b)
+        .iter()
+        .map(|part| part.finalize())
+        .collect();
+    let t1 = cluster.world.barrier();
+
+    for w in 0..p {
+        cluster.mem.free(w, q_bytes + 2 * wire_elems * wire_bpe);
+    }
+
+    Ok(BatchDecodeOutcome {
+        outs,
         stats: DecodeStats {
             sim_time: t1 - t0,
             comm_steps: steps,
@@ -201,6 +312,129 @@ mod tests {
         // The fused variant does strictly fewer communication rounds.
         assert!(fused.stats.comm_steps < unfused.stats.comm_steps);
         assert!(fused.stats.sim_time < unfused.stats.sim_time);
+    }
+
+    /// Build a batch of sessions with heterogeneous per-worker shard lengths.
+    fn random_batch(
+        rng: &mut Rng,
+        shape: AttnShape,
+        session_lens: &[Vec<usize>],
+    ) -> (Vec<Vec<f32>>, Vec<Vec<Vec<f32>>>, Vec<Vec<Vec<f32>>>) {
+        let row = shape.kv_heads * shape.d_head;
+        let mut qs = Vec::new();
+        let mut ks = Vec::new();
+        let mut vs = Vec::new();
+        for lens in session_lens {
+            qs.push(rng.normal_vec(shape.q_elems(), 1.0));
+            ks.push(lens.iter().map(|&l| rng.normal_vec(l * row, 1.0)).collect::<Vec<_>>());
+            vs.push(lens.iter().map(|&l| rng.normal_vec(l * row, 1.0)).collect::<Vec<_>>());
+        }
+        (qs, ks, vs)
+    }
+
+    fn entries_of<'a>(
+        session_lens: &[Vec<usize>],
+        qs: &'a [Vec<f32>],
+        ks: &'a [Vec<Vec<f32>>],
+        vs: &'a [Vec<Vec<f32>>],
+    ) -> Vec<BatchEntry<'a>> {
+        session_lens
+            .iter()
+            .enumerate()
+            .map(|(s, lens)| BatchEntry {
+                q: &qs[s],
+                shards: (0..lens.len())
+                    .map(|w| ShardKv { k: &ks[s][w], v: &vs[s][w], len: lens[w] })
+                    .collect(),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn batched_decode_bit_identical_to_single_loop() {
+        // The serving-layer exactness claim: one fused batched AllReduce
+        // (full-buffer tree/two-level schedules) produces per-session outputs
+        // BIT-IDENTICAL to decoding each session alone.
+        let shape = AttnShape::new(1, 8, 2, 32);
+        let scale = 1.0 / (32f32).sqrt();
+        let p = 8;
+        let session_lens: Vec<Vec<usize>> = vec![
+            vec![40, 25, 0, 61, 8, 90, 33, 77],
+            vec![3, 3, 3, 3, 3, 3, 3, 3],
+            vec![0, 0, 0, 128, 0, 0, 0, 0],
+        ];
+        let mut rng = Rng::seed(77);
+        let (qs, ks, vs) = random_batch(&mut rng, shape, &session_lens);
+        let entries = entries_of(&session_lens, &qs, &ks, &vs);
+
+        for algo in [AllReduceAlgo::Tree { fanout: 2 }, AllReduceAlgo::TwoLevel { inter_fanout: 2 }] {
+            let mut cb = VirtualCluster::new(Topology::h100_dgx(1));
+            let batched = tree_decode_batch(
+                &mut cb, &ComputeBackend::Oracle, shape, scale, &entries, algo, 2,
+            )
+            .unwrap();
+            assert_eq!(batched.outs.len(), session_lens.len());
+            for (s, lens) in session_lens.iter().enumerate() {
+                let shards: Vec<ShardKv> = (0..p)
+                    .map(|w| ShardKv { k: &ks[s][w], v: &vs[s][w], len: lens[w] })
+                    .collect();
+                let mut c1 = VirtualCluster::new(Topology::h100_dgx(1));
+                let single = tree_decode(
+                    &mut c1, &ComputeBackend::Oracle, shape, scale, &qs[s], &shards, algo, 2,
+                )
+                .unwrap();
+                assert_eq!(batched.outs[s], single.out, "session {s} ({})", algo.name());
+            }
+        }
+    }
+
+    #[test]
+    fn batched_decode_matches_oracle_under_ring_allreduce() {
+        // Ring segments the wire by block index, so combine order differs
+        // from the single-session run — exact only to fp tolerance.
+        let shape = AttnShape::new(1, 4, 4, 16);
+        let session_lens: Vec<Vec<usize>> = vec![vec![17, 30, 5, 0], vec![64, 1, 2, 3]];
+        let mut rng = Rng::seed(78);
+        let (qs, ks, vs) = random_batch(&mut rng, shape, &session_lens);
+        let entries = entries_of(&session_lens, &qs, &ks, &vs);
+        let mut c = VirtualCluster::new(Topology::h100_dgx(1));
+        let batched =
+            tree_decode_batch(&mut c, &ComputeBackend::Oracle, shape, 0.25, &entries, AllReduceAlgo::Ring, 2)
+                .unwrap();
+        for (s, lens) in session_lens.iter().enumerate() {
+            let reference = super::super::tests::reference_of(shape, 0.25, &qs[s], &ks[s], &vs[s], lens);
+            assert!(
+                crate::attnmath::max_abs_diff(&batched.outs[s], &reference) < 1e-4,
+                "session {s}"
+            );
+        }
+    }
+
+    #[test]
+    fn batched_decode_single_collective_regardless_of_batch() {
+        // The fused-payload claim: the number of collective MESSAGES (and
+        // rounds) is the same for batch 1 and batch 8 — only bytes grow.
+        let shape = AttnShape::new(1, 4, 2, 16);
+        let p = 8;
+        let lens = vec![16usize; p];
+        let mk = |b: usize| {
+            let session_lens: Vec<Vec<usize>> = vec![lens.clone(); b];
+            let mut rng = Rng::seed(79);
+            let (qs, ks, vs) = random_batch(&mut rng, shape, &session_lens);
+            let entries = entries_of(&session_lens, &qs, &ks, &vs);
+            let mut c = VirtualCluster::new(Topology::h100_dgx(1));
+            let out = tree_decode_batch(
+                &mut c, &ComputeBackend::Oracle, shape, 0.3, &entries,
+                AllReduceAlgo::Tree { fanout: 2 }, 2,
+            )
+            .unwrap();
+            out.stats
+        };
+        let one = mk(1);
+        let eight = mk(8);
+        assert_eq!(one.comm_steps, eight.comm_steps, "same rounds");
+        assert_eq!(one.traffic.total_msgs(), eight.traffic.total_msgs(), "same message count");
+        assert!(eight.traffic.total_bytes() > one.traffic.total_bytes(), "bytes grow with B");
     }
 
     #[test]

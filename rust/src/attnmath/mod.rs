@@ -193,6 +193,44 @@ impl AttnPartial {
         }
         p
     }
+
+    // ---- batched wire format -------------------------------------------
+    // Stacking per-session wires session-major is EXACTLY the wire of the
+    // batched shape `{ batch: n, ..shape }`, because the wire layout is
+    // (batch, head)-block-major. This is what lets the continuous-batching
+    // scheduler fuse B heterogeneous sessions into ONE AllReduce payload:
+    // the collective still moves a single (n, d, m) wire per decode step,
+    // just with B·n_heads blocks instead of n_heads.
+
+    /// Stack per-session wires (each `wire_len(shape)` long, `shape.batch`
+    /// must be 1) into one batched wire for `batched_shape(shape, n)`.
+    pub fn stack_wires(shape: AttnShape, wires: &[Vec<f32>]) -> Vec<f32> {
+        assert_eq!(shape.batch, 1, "per-session shape must have batch 1");
+        let wl = Self::wire_len(shape);
+        let mut out = Vec::with_capacity(wl * wires.len());
+        for w in wires {
+            assert_eq!(w.len(), wl, "session wire length mismatch");
+            out.extend_from_slice(w);
+        }
+        out
+    }
+
+    /// Split a batched wire back into per-session partials (inverse of
+    /// [`stack_wires`](Self::stack_wires)).
+    pub fn unstack_wire(shape: AttnShape, batched: &[f32], n: usize) -> Vec<AttnPartial> {
+        assert_eq!(shape.batch, 1, "per-session shape must have batch 1");
+        let wl = Self::wire_len(shape);
+        assert_eq!(batched.len(), wl * n, "batched wire length mismatch");
+        (0..n)
+            .map(|s| AttnPartial::from_wire(shape, &batched[s * wl..(s + 1) * wl]))
+            .collect()
+    }
+}
+
+/// The batched shape for `n` sessions sharing one per-session `shape`.
+pub fn batched_shape(shape: AttnShape, n: usize) -> AttnShape {
+    assert_eq!(shape.batch, 1, "per-session shape must have batch 1");
+    AttnShape { batch: n, ..shape }
 }
 
 /// `ReduceOp` over the wire format — lets the generic collectives (ring,
@@ -515,6 +553,46 @@ mod tests {
             acc.combine(&AttnPartial::from_flash_output(shape, &o, &lse));
         }
         assert!(max_abs_diff(&acc.finalize(), &reference) < 1e-5);
+    }
+
+    #[test]
+    fn stacked_wires_equal_batched_wire() {
+        // Stacking B per-session wires must reproduce the wire of the
+        // batched-shape partial built from the same data — the invariant the
+        // fused batched AllReduce relies on.
+        let shape = AttnShape::new(1, 4, 2, 8);
+        let b = 3;
+        let t = 11;
+        let mut rng = Rng::seed(31);
+        // One batched problem…
+        let bshape = batched_shape(shape, b);
+        let q = rng.normal_vec(bshape.q_elems(), 1.0);
+        let k = rng.normal_vec(bshape.kv_elems(t), 1.0);
+        let v = rng.normal_vec(bshape.kv_elems(t), 1.0);
+        let batched = partial_from_chunk(bshape, &q, &k, &v, t, 0.4);
+        // …and the same problem as B separate sessions.
+        let qe = shape.q_elems();
+        let ke = shape.kv_elems(t);
+        let wires: Vec<Vec<f32>> = (0..b)
+            .map(|s| {
+                partial_from_chunk(
+                    shape,
+                    &q[s * qe..(s + 1) * qe],
+                    &k[s * ke..(s + 1) * ke],
+                    &v[s * ke..(s + 1) * ke],
+                    t,
+                    0.4,
+                )
+                .to_wire()
+            })
+            .collect();
+        let stacked = AttnPartial::stack_wires(shape, &wires);
+        assert_eq!(stacked, batched.to_wire());
+        // round trip
+        let parts = AttnPartial::unstack_wire(shape, &stacked, b);
+        for (s, p) in parts.iter().enumerate() {
+            assert_eq!(p.to_wire(), wires[s], "session {s}");
+        }
     }
 
     #[test]

@@ -26,6 +26,16 @@ impl BenchResult {
     }
 }
 
+/// True when the bench process was started in quick/smoke mode: `--quick`
+/// on the command line or `TREEATTN_BENCH_QUICK=1` in the environment.
+/// Benches shrink their sweeps under this flag so the CI smoke job can
+/// catch bit-rot in the figure-reproduction harnesses without paying the
+/// full sweep cost.
+pub fn quick_mode() -> bool {
+    std::env::args().any(|a| a == "--quick")
+        || std::env::var("TREEATTN_BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+}
+
 /// Measure `f` with warmup; reports per-iteration wall time over `samples`
 /// timed batches of `batch` iterations each.
 pub fn bench_fn<F: FnMut()>(name: &str, warmup: usize, samples: usize, batch: usize, mut f: F) -> BenchResult {

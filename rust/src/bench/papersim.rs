@@ -114,6 +114,58 @@ pub fn sim_attention(
     SimAttn { sim_time: t1 - t0, traffic: cluster.world.net.counters().since(&before), comm_steps }
 }
 
+/// Simulated latency of ONE continuous-batched tree-decode round: `b`
+/// concurrent sessions, each with `seq_len` context sharded over the
+/// cluster, coalesced into a single fused `(n, d, m)` AllReduce of
+/// `b · n_heads` blocks (mirrors `attention::tree_decode_batch` cost-only,
+/// at serving scale where materializing the KV would be pointless).
+///
+/// The serving story this quantifies: the round pays ONE collective launch
+/// regardless of b, so tokens/s = b / sim_time rises monotonically with
+/// batch width until KV streaming saturates the HBM roofline.
+pub fn sim_batched_tree_decode(
+    topo: &Topology,
+    b: usize,
+    seq_len: usize,
+    shape: AttnShape,
+    wire_bpe: u64,
+    algo: AllReduceAlgo,
+) -> SimAttn {
+    assert!(b >= 1 && shape.batch == 1, "per-session shape, b >= 1");
+    let mut cluster = VirtualCluster::new(topo.clone());
+    let p = topo.world_size();
+    let t_local = seq_len.div_ceil(p);
+    let before = cluster.world.net.counters();
+    let t0 = cluster.world.barrier();
+    let mut comm_steps = 0;
+
+    // Broadcast the stacked queries (the router holds all B of them).
+    let q_bytes = (b * shape.q_elems()) as u64 * wire_bpe;
+    let bsched = crate::collectives::broadcast_schedule(p, 0, 1);
+    comm_steps += bsched.n_steps();
+    for step in &bsched.steps {
+        for op in step {
+            cluster.world.send(op.src, op.dst, q_bytes);
+        }
+    }
+
+    for w in 0..p {
+        // One fused flash-decode launch over ALL resident session shards…
+        let t = cluster.gpu.decode_attention_time(1, b * t_local, shape.kv_heads, shape.d_head);
+        cluster.world.compute(w, t);
+        // …and ONE collective launch for the whole round (same p^1.5 dispatch
+        // scaling as `sim_attention`, amortized over the batch).
+        let launch = cluster.gpu.comm_launch_s * (p as f64 / 8.0).powf(1.5).max(1.0);
+        cluster.world.compute(w, launch);
+    }
+    let sched = algo.schedule(&cluster.world, b * shape.n_heads);
+    let s = execute_cost(&mut cluster.world, &sched, shape.d_head + 2, wire_bpe);
+    comm_steps += s.steps;
+
+    let t1 = cluster.world.barrier();
+    SimAttn { sim_time: t1 - t0, traffic: cluster.world.net.counters().since(&before), comm_steps }
+}
+
 /// Simulated full-model decode time for `n_tokens` tokens (Table 1/2
 /// protocol): per token, every layer runs one distributed attention plus
 /// the leader-side linear work; plus the LM head.
@@ -196,6 +248,37 @@ mod tests {
             let speedup = ring / tree;
             assert!((1.2..30.0).contains(&speedup), "seq {seq}: speedup {speedup}");
         }
+    }
+
+    #[test]
+    fn batched_decode_throughput_strictly_increases_to_batch8() {
+        // The serving acceptance criterion: at 128k context on the H100-DGX
+        // preset, batched tree-decode tokens/s strictly increases from
+        // batch 1 through batch 8 (the fused collective launch amortizes).
+        let shape = AttnShape::mha(1, 16, 128);
+        let topo = Topology::h100_dgx(1);
+        let mut prev = 0.0;
+        for b in [1usize, 2, 4, 8] {
+            let r = sim_batched_tree_decode(&topo, b, 128_000, shape, 2,
+                                            AllReduceAlgo::TwoLevel { inter_fanout: 2 });
+            let tps = b as f64 / r.sim_time;
+            assert!(tps > prev, "batch {b}: {tps} tok/s not > {prev}");
+            prev = tps;
+        }
+    }
+
+    #[test]
+    fn batched_decode_single_collective_launch() {
+        // Message count of the round is independent of batch width — only
+        // payload bytes grow (the "one (n,d,m) wire per step" invariant).
+        let shape = AttnShape::mha(1, 16, 128);
+        let topo = Topology::h100_dgx(2);
+        let algo = AllReduceAlgo::TwoLevel { inter_fanout: 2 };
+        let one = sim_batched_tree_decode(&topo, 1, 64_000, shape, 2, algo);
+        let eight = sim_batched_tree_decode(&topo, 8, 64_000, shape, 2, algo);
+        assert_eq!(one.traffic.total_msgs(), eight.traffic.total_msgs());
+        assert_eq!(one.comm_steps, eight.comm_steps);
+        assert!(eight.traffic.total_bytes() > one.traffic.total_bytes());
     }
 
     #[test]

@@ -252,6 +252,12 @@ pub struct RunSpec {
     /// AllReduce algorithm for tree attention's combine.
     pub allreduce: crate::collectives::AllReduceAlgo,
     pub artifacts_dir: String,
+    /// Tokens per KV page (shard-assignment and admission granularity).
+    pub page_size: usize,
+    /// Paged-KV capacity per worker, in pages (admission control budget).
+    pub pages_per_worker: usize,
+    /// Number of requests in serve / serve-bench workloads.
+    pub requests: usize,
 }
 
 impl Default for RunSpec {
@@ -267,6 +273,9 @@ impl Default for RunSpec {
             wire_bpe: 2,
             allreduce: crate::collectives::AllReduceAlgo::TwoLevel { inter_fanout: 2 },
             artifacts_dir: "artifacts".into(),
+            page_size: 16,
+            pages_per_worker: 4096,
+            requests: 16,
         }
     }
 }
@@ -292,6 +301,9 @@ impl RunSpec {
         spec.seed = j.opt_f64("seed", spec.seed as f64) as u64;
         spec.wire_bpe = j.opt_usize("wire_bpe", spec.wire_bpe as usize) as u64;
         spec.artifacts_dir = j.opt_str("artifacts_dir", &spec.artifacts_dir).to_string();
+        spec.page_size = j.opt_usize("page_size", spec.page_size);
+        spec.pages_per_worker = j.opt_usize("pages_per_worker", spec.pages_per_worker);
+        spec.requests = j.opt_usize("requests", spec.requests);
         spec.validate()?;
         Ok(spec)
     }
@@ -314,6 +326,9 @@ impl RunSpec {
             "seed" => self.seed = value.parse()?,
             "wire_bpe" => self.wire_bpe = value.parse()?,
             "artifacts_dir" => self.artifacts_dir = value.to_string(),
+            "page_size" => self.page_size = value.parse()?,
+            "pages_per_worker" => self.pages_per_worker = value.parse()?,
+            "requests" => self.requests = value.parse()?,
             "cluster.preset" => self.cluster.preset = value.to_string(),
             "cluster.n_nodes" => self.cluster.n_nodes = value.parse()?,
             "cluster.gpus_per_node" => self.cluster.gpus_per_node = value.parse()?,
@@ -330,6 +345,9 @@ impl RunSpec {
         anyhow::ensure!(self.seq_len >= 1, "seq_len must be ≥ 1");
         anyhow::ensure!(self.batch >= 1, "batch must be ≥ 1");
         anyhow::ensure!(self.wire_bpe == 2 || self.wire_bpe == 4, "wire_bpe must be 2 or 4");
+        anyhow::ensure!(self.page_size >= 1, "page_size must be ≥ 1");
+        anyhow::ensure!(self.pages_per_worker >= 1, "pages_per_worker must be ≥ 1");
+        anyhow::ensure!(self.requests >= 1, "requests must be ≥ 1");
         Ok(())
     }
 
@@ -391,6 +409,25 @@ mod tests {
         assert_eq!(spec.cluster.n_nodes, 4);
         assert!(spec.apply_override("bogus=1").is_err());
         assert!(spec.apply_override("no-equals").is_err());
+    }
+
+    #[test]
+    fn batching_knobs_roundtrip() {
+        let j = crate::ser::parse(
+            r#"{"page_size": 8, "pages_per_worker": 64, "requests": 5, "batch": 4}"#,
+        )
+        .unwrap();
+        let mut spec = RunSpec::from_json(&j).unwrap();
+        assert_eq!(spec.page_size, 8);
+        assert_eq!(spec.pages_per_worker, 64);
+        assert_eq!(spec.requests, 5);
+        assert_eq!(spec.batch, 4);
+        spec.apply_override("page_size=32").unwrap();
+        spec.apply_override("pages_per_worker=128").unwrap();
+        spec.apply_override("requests=9").unwrap();
+        assert_eq!((spec.page_size, spec.pages_per_worker, spec.requests), (32, 128, 9));
+        assert!(spec.apply_override("page_size=0").is_err());
+        assert!(spec.apply_override("requests=0").is_err());
     }
 
     #[test]

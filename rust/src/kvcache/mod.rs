@@ -218,6 +218,85 @@ impl ShardedKvCache {
     }
 }
 
+/// Fixed-capacity page accounting for MANY sessions sharing one worker set —
+/// the admission-control substrate of the continuous-batching scheduler.
+///
+/// Every session's tokens map to pages exactly as [`ShardedKvCache`] assigns
+/// them (page `j` of a sequence lives on worker `j % n_workers`), so a
+/// reservation of `pages_for_span(...)` is a faithful worst-case footprint
+/// of that session on each worker's device memory. The batcher reserves a
+/// request's full span (prompt + max new tokens) at admission and releases
+/// it at retirement: deterministic, fragmentation-free, and sufficient to
+/// express "the cache is full, the queue must wait" — the vLLM-style
+/// admission decision — without modeling page tables.
+#[derive(Clone, Debug)]
+pub struct PagePool {
+    pub n_workers: usize,
+    pub pages_per_worker: usize,
+    used: Vec<usize>,
+}
+
+impl PagePool {
+    pub fn new(n_workers: usize, pages_per_worker: usize) -> PagePool {
+        assert!(n_workers >= 1 && pages_per_worker >= 1);
+        PagePool { n_workers, pages_per_worker, used: vec![0; n_workers] }
+    }
+
+    /// Per-worker page counts for a sequence of `tokens` tokens assigned
+    /// round-robin by page (the [`ShardedKvCache`] policy).
+    pub fn pages_for_span(n_workers: usize, page_size: usize, tokens: usize) -> Vec<usize> {
+        assert!(n_workers >= 1 && page_size >= 1);
+        let total_pages = tokens.div_ceil(page_size);
+        let mut need = vec![total_pages / n_workers; n_workers];
+        for item in need.iter_mut().take(total_pages % n_workers) {
+            *item += 1;
+        }
+        need
+    }
+
+    /// True if `need` could EVER be satisfied on an empty pool (requests
+    /// exceeding this are rejected outright rather than queued forever).
+    pub fn fits_capacity(&self, need: &[usize]) -> bool {
+        need.iter().all(|&n| n <= self.pages_per_worker)
+    }
+
+    /// Reserve `need[w]` pages on each worker if every worker has room;
+    /// returns false (reserving nothing) otherwise.
+    pub fn try_reserve(&mut self, need: &[usize]) -> bool {
+        assert_eq!(need.len(), self.n_workers);
+        if self.used.iter().zip(need).any(|(&u, &n)| u + n > self.pages_per_worker) {
+            return false;
+        }
+        for (u, n) in self.used.iter_mut().zip(need) {
+            *u += n;
+        }
+        true
+    }
+
+    /// Release a prior reservation.
+    pub fn release(&mut self, need: &[usize]) {
+        assert_eq!(need.len(), self.n_workers);
+        for (u, n) in self.used.iter_mut().zip(need) {
+            assert!(*u >= *n, "releasing more pages than reserved");
+            *u -= n;
+        }
+    }
+
+    pub fn used_pages(&self, w: usize) -> usize {
+        self.used[w]
+    }
+
+    pub fn free_pages(&self, w: usize) -> usize {
+        self.pages_per_worker - self.used[w]
+    }
+
+    /// Fraction of total pool capacity currently reserved.
+    pub fn utilization(&self) -> f64 {
+        let total = (self.n_workers * self.pages_per_worker) as f64;
+        self.used.iter().sum::<usize>() as f64 / total
+    }
+}
+
 /// Scoped tracker for *transient* per-worker buffer allocations (incoming KV
 /// chunks, partial-result wires, outputs) — the quantities Eq. 8/9 model.
 /// Strategies register allocations; the tracker reports per-worker peaks.
@@ -363,6 +442,60 @@ mod tests {
             let min = *lens.iter().min().unwrap();
             assert!(max - min <= page, "imbalance {max}-{min} > page {page}");
         });
+    }
+
+    #[test]
+    fn pages_for_span_matches_cache_assignment() {
+        check("pool span accounting matches ShardedKvCache", 50, |g| {
+            let workers = g.usize_in(1..9);
+            let page = g.pow2(0, 5);
+            let tokens = g.usize_in(0..300);
+            let need = PagePool::pages_for_span(workers, page, tokens);
+            assert_eq!(need.iter().sum::<usize>(), tokens.div_ceil(page), "total pages");
+            // Worker w's page count must cover exactly the tokens the cache
+            // would place there.
+            let s = spec(workers, page);
+            let mut c = ShardedKvCache::new(s);
+            let zero = vec![vec![0.0f32; s.kv_row()]; s.n_layers];
+            for _ in 0..tokens {
+                c.append_token(&zero, &zero.clone());
+            }
+            for w in 0..workers {
+                assert_eq!(
+                    need[w],
+                    c.shard_len(w).div_ceil(page),
+                    "worker {w}: {} tokens in {} pages",
+                    c.shard_len(w),
+                    need[w]
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn page_pool_reserve_release() {
+        let mut pool = PagePool::new(2, 4);
+        let a = vec![2, 1];
+        let b = vec![2, 2];
+        assert!(pool.fits_capacity(&a));
+        assert!(pool.try_reserve(&a));
+        assert_eq!(pool.used_pages(0), 2);
+        assert_eq!(pool.free_pages(1), 3);
+        assert!(pool.try_reserve(&b));
+        // worker 0 now full: 2+2=4; another (1,0) fails on worker 0
+        assert!(!pool.try_reserve(&[1, 0]));
+        assert!((pool.utilization() - 7.0 / 8.0).abs() < 1e-12);
+        pool.release(&a);
+        assert!(pool.try_reserve(&[1, 0]));
+        // oversized request can never fit
+        assert!(!pool.fits_capacity(&[5, 0]));
+    }
+
+    #[test]
+    #[should_panic]
+    fn page_pool_over_release_panics() {
+        let mut pool = PagePool::new(1, 2);
+        pool.release(&[1]);
     }
 
     #[test]

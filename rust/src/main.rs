@@ -5,6 +5,8 @@
 //!   validate                  — run the exactness checks (tree≡ring≡oracle)
 //!   decode [opts]             — prefill + decode one sequence, print stats
 //!   serve  [opts]             — batch-serve a synthetic workload
+//!   serve-bench [opts]        — continuous-batching tree-decode throughput
+//!                               (no artifacts needed: oracle numerics)
 //!   sweep  [opts]             — ring-vs-tree latency sweep (simulated)
 //!
 //! Options are `key=value` pairs applied to the RunSpec (see config module),
@@ -34,6 +36,7 @@ fn main() {
         "validate" => cmd_validate(),
         "decode" => parse_spec(&args[1..]).and_then(|spec| cmd_decode(&spec)),
         "serve" => parse_spec(&args[1..]).and_then(|spec| cmd_serve(&spec)),
+        "serve-bench" => parse_spec(&args[1..]).and_then(|spec| cmd_serve_bench(&spec)),
         "sweep" => parse_spec(&args[1..]).and_then(|spec| cmd_sweep(&spec)),
         "help" | "--help" | "-h" => {
             print_help();
@@ -53,10 +56,11 @@ fn main() {
 fn print_help() {
     println!(
         "treeattn — Tree Attention reproduction\n\
-         usage: treeattn <info|validate|decode|serve|sweep> [--config f.json] [key=value ...]\n\
+         usage: treeattn <info|validate|decode|serve|serve-bench|sweep> [--config f.json] [key=value ...]\n\
          keys: strategy=tree|ring|single  allreduce=ring|tree|twolevel\n\
          \x20     model.preset=test-8m|tiny-124m  cluster.preset=h100_dgx|mi300x|rtx4090_pcie\n\
-         \x20     cluster.n_nodes=N cluster.gpus_per_node=G seq_len=N decode_tokens=N batch=N"
+         \x20     cluster.n_nodes=N cluster.gpus_per_node=G seq_len=N decode_tokens=N batch=N\n\
+         \x20     page_size=N pages_per_worker=N requests=N  (serving / admission control)"
     );
 }
 
@@ -201,7 +205,7 @@ fn cmd_decode(spec: &RunSpec) -> anyhow::Result<()> {
         engine,
         ExecutorConfig {
             n_workers,
-            page_size: 16,
+            page_size: spec.page_size,
             strategy: spec.strategy,
             allreduce: spec.allreduce,
             wire_bpe: spec.wire_bpe,
@@ -262,7 +266,7 @@ fn cmd_serve(spec: &RunSpec) -> anyhow::Result<()> {
         engine,
         ExecutorConfig {
             n_workers: topo.world_size(),
-            page_size: 16,
+            page_size: spec.page_size,
             strategy: spec.strategy,
             allreduce: spec.allreduce,
             wire_bpe: spec.wire_bpe,
@@ -271,7 +275,7 @@ fn cmd_serve(spec: &RunSpec) -> anyhow::Result<()> {
     )?;
     let mut cluster = VirtualCluster::new(topo);
     let reqs = synthetic_workload(
-        spec.batch * 2,
+        spec.requests,
         (spec.seq_len / 2).max(1),
         spec.seq_len,
         spec.decode_tokens,
@@ -301,6 +305,70 @@ fn cmd_serve(spec: &RunSpec) -> anyhow::Result<()> {
     println!(
         "\ncompleted {} | throughput {:.1} tok/s (simulated cluster) | {:.2} tok/s (host wall)",
         metrics.completed, metrics.throughput_sim, metrics.throughput_wall
+    );
+    Ok(())
+}
+
+fn cmd_serve_bench(spec: &RunSpec) -> anyhow::Result<()> {
+    use tree_attention::serve::{synthetic_decode_workload, BatcherConfig, TreeBatcher};
+    let topo = spec.cluster.topology()?;
+    let shape = AttnShape::new(1, spec.model.n_heads, spec.model.kv_heads, spec.model.d_head());
+    let scale = 1.0 / (spec.model.d_head() as f32).sqrt();
+    let min_ctx = (spec.seq_len / 2).max(1);
+    println!(
+        "serve-bench: continuous-batching tree decode on {} | model {} | {} requests, ctx {}–{}, {} tokens each",
+        topo.name,
+        spec.model.name,
+        spec.requests,
+        fmt_tokens(min_ctx),
+        fmt_tokens(spec.seq_len),
+        spec.decode_tokens,
+    );
+    let mut table = Table::new(
+        "Continuous batching sweep (oracle numerics, simulated cluster time)",
+        &["max batch", "tok/s (sim)", "p50 tok lat", "p99 tok lat", "mean TTFT", "rounds", "peak B", "comm"],
+    );
+    let mut widths: Vec<usize> = [1usize, 2, 4, 8]
+        .iter()
+        .copied()
+        .filter(|&b| b < spec.batch)
+        .collect();
+    widths.push(spec.batch);
+    for &max_batch in &widths {
+        let cfg = BatcherConfig {
+            max_batch,
+            page_size: spec.page_size,
+            pages_per_worker: spec.pages_per_worker,
+            algo: spec.allreduce,
+            wire_bpe: spec.wire_bpe,
+            seed: spec.seed,
+        };
+        let batcher = TreeBatcher::new(shape, scale, cfg);
+        let reqs = synthetic_decode_workload(
+            spec.requests,
+            min_ctx,
+            spec.seq_len,
+            spec.decode_tokens,
+            spec.seed,
+        );
+        let mut cluster = VirtualCluster::new(topo.clone());
+        let (_, m) = batcher.run(&mut cluster, &ComputeBackend::Oracle, reqs)?;
+        anyhow::ensure!(m.rejected == 0, "workload exceeds pages_per_worker={}", spec.pages_per_worker);
+        table.row(vec![
+            max_batch.to_string(),
+            format!("{:.1}", m.throughput_sim),
+            fmt_secs(m.token_latency.p50),
+            fmt_secs(m.token_latency.p99),
+            fmt_secs(m.ttft.mean),
+            m.rounds.to_string(),
+            m.peak_active.to_string(),
+            fmt_bytes(m.comm_bytes),
+        ]);
+    }
+    table.print();
+    println!(
+        "\nexpected shape: tok/s grows with batch width (one fused AllReduce per round\n\
+         amortizes the collective launch); p99 token latency grows mildly with B."
     );
     Ok(())
 }

@@ -13,6 +13,11 @@
 
 pub mod manifest;
 
+#[cfg(not(feature = "xla"))]
+mod xla_stub;
+#[cfg(not(feature = "xla"))]
+use xla_stub as xla;
+
 pub use manifest::{IoSpec, Manifest, ManifestEntry};
 
 use std::collections::HashMap;
@@ -243,6 +248,10 @@ impl Engine {
 
 enum Request {
     Call { entry: String, args: Vec<Arg>, reply: mpsc::Sender<anyhow::Result<Vec<OutTensor>>> },
+    CallMany {
+        calls: Vec<(String, Vec<Arg>)>,
+        reply: mpsc::Sender<anyhow::Result<Vec<Vec<OutTensor>>>>,
+    },
     RegisterWeight { name: String, data: Vec<f32>, shape: Vec<usize>, reply: mpsc::Sender<anyhow::Result<()>> },
     CompileAll { reply: mpsc::Sender<anyhow::Result<()>> },
     Stats { reply: mpsc::Sender<EngineStats> },
@@ -300,6 +309,15 @@ impl EngineHandle {
                         Request::Call { entry, args, reply } => {
                             let _ = reply.send(engine.call(&entry, &args));
                         }
+                        Request::CallMany { calls, reply } => {
+                            let run = |engine: &mut Engine| -> anyhow::Result<Vec<Vec<OutTensor>>> {
+                                calls
+                                    .iter()
+                                    .map(|(entry, args)| engine.call(entry, args))
+                                    .collect()
+                            };
+                            let _ = reply.send(run(&mut engine));
+                        }
                         Request::RegisterWeight { name, data, shape, reply } => {
                             let _ = reply.send(engine.register_weight(&name, &data, &shape));
                         }
@@ -337,6 +355,21 @@ impl EngineHandle {
         let (rtx, rrx) = mpsc::channel();
         self.tx
             .send(Request::Call { entry: entry.to_string(), args, reply: rtx })
+            .map_err(|_| anyhow::anyhow!("engine thread gone"))?;
+        rrx.recv().map_err(|_| anyhow::anyhow!("engine thread gone"))?
+    }
+
+    /// Submit a batch of entry-point calls in ONE channel round-trip. The
+    /// engine thread executes them in order; results come back together.
+    /// This is the submission path the continuous-batching scheduler uses:
+    /// one decode round for B sessions is one queue crossing, not B.
+    pub fn call_many(&self, calls: Vec<(String, Vec<Arg>)>) -> anyhow::Result<Vec<Vec<OutTensor>>> {
+        if calls.is_empty() {
+            return Ok(Vec::new());
+        }
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(Request::CallMany { calls, reply: rtx })
             .map_err(|_| anyhow::anyhow!("engine thread gone"))?;
         rrx.recv().map_err(|_| anyhow::anyhow!("engine thread gone"))?
     }

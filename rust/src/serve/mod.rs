@@ -8,6 +8,13 @@
 //! worker set), and per-request TTFT / TPOT / throughput metrics are
 //! recorded in both virtual (simulated cluster) and wall-clock time.
 
+pub mod batcher;
+
+pub use batcher::{
+    synthetic_decode_workload, BatchMetrics, BatchRequest, BatchResult, BatcherConfig,
+    FinishReason, TreeBatcher,
+};
+
 use crate::cluster::VirtualCluster;
 use crate::model::{ModelExecutor, SequenceState, StepStats};
 use crate::util::{Histogram, Summary};

@@ -1,0 +1,178 @@
+//! Property tests over the collective schedules and executors (the ISSUE-1
+//! "property tests for collectives" satellite): for every AllReduce
+//! algorithm and world size p ∈ {1..16} — including non-powers-of-two —
+//!
+//!   1. ring, k-ary tree, and two-level schedules all produce IDENTICAL
+//!      reduced buffers on every rank (to fp tolerance, since the combine
+//!      order differs), and
+//!   2. every schedule step's send set is conflict-free: no rank is the
+//!      source of two sends within one step (each device has one egress
+//!      port per tier — a schedule that double-books it is lying about its
+//!      round count).
+
+use tree_attention::attnmath::max_abs_diff;
+use tree_attention::collectives::{
+    allreduce, broadcast_schedule, ring_allreduce_schedule, ring_shift_schedule,
+    tree_allreduce_schedule, two_level_allreduce_schedule, AllReduceAlgo, Schedule, SumOp,
+};
+use tree_attention::gpumodel::GpuKind;
+use tree_attention::netsim::SimWorld;
+use tree_attention::topology::{LinkSpec, Topology};
+use tree_attention::util::prop::check;
+
+fn world(n_nodes: usize, gpus_per_node: usize) -> SimWorld {
+    SimWorld::new(Topology::custom(
+        "prop",
+        n_nodes,
+        gpus_per_node,
+        GpuKind::H100,
+        LinkSpec::nvlink4(),
+        LinkSpec::infiniband_ndr(),
+    ))
+}
+
+/// Factorizations of p into (nodes, gpus_per_node) used to exercise the
+/// topology-aware schedule on non-trivial node shapes.
+fn factorizations(p: usize) -> Vec<(usize, usize)> {
+    (1..=p).filter(|n| p % n == 0).map(|n| (n, p / n)).collect()
+}
+
+fn assert_conflict_free(s: &Schedule, what: &str) {
+    s.validate().unwrap_or_else(|e| panic!("{what}: invalid schedule: {e}"));
+    for (i, step) in s.steps.iter().enumerate() {
+        let mut srcs: Vec<usize> = step.iter().map(|op| op.src).collect();
+        srcs.sort_unstable();
+        for pair in srcs.windows(2) {
+            assert!(
+                pair[0] != pair[1],
+                "{what}: step {i} has rank {} sending twice",
+                pair[0]
+            );
+        }
+    }
+}
+
+#[test]
+fn all_algos_reduce_identically_for_p_1_to_16() {
+    for p in 1..=16usize {
+        // All algorithms on a flat world + two-level on every factorization.
+        let mut reference: Option<Vec<f32>> = None;
+        let mut algos: Vec<(AllReduceAlgo, usize, usize)> = vec![
+            (AllReduceAlgo::Ring, 1, p),
+            (AllReduceAlgo::Tree { fanout: 2 }, 1, p),
+            (AllReduceAlgo::Tree { fanout: 3 }, 1, p),
+            (AllReduceAlgo::Tree { fanout: 4 }, 1, p),
+        ];
+        for (nodes, gpn) in factorizations(p) {
+            algos.push((AllReduceAlgo::TwoLevel { inter_fanout: 2 }, nodes, gpn));
+        }
+        for (algo, nodes, gpn) in algos {
+            let mut rng = tree_attention::util::Rng::seed(1000 + p as u64);
+            let nblocks = 1 + p * 3; // deliberately not divisible by p
+            let mut bufs: Vec<Vec<f32>> =
+                (0..p).map(|_| rng.normal_vec(nblocks, 1.0)).collect();
+            let mut expect = vec![0.0f32; nblocks];
+            for b in &bufs {
+                for (e, x) in expect.iter_mut().zip(b) {
+                    *e += x;
+                }
+            }
+            let mut w = world(nodes, gpn);
+            allreduce(&mut w, algo, &mut bufs, &SumOp, 2);
+            for (r, b) in bufs.iter().enumerate() {
+                let d = max_abs_diff(b, &expect);
+                assert!(
+                    d < 1e-4,
+                    "p={p} {} ({nodes}x{gpn}) rank {r}: diff {d}",
+                    algo.name()
+                );
+            }
+            // Cross-algorithm agreement (all match rank 0 of the first).
+            match &reference {
+                None => reference = Some(bufs[0].clone()),
+                Some(reference) => {
+                    let d = max_abs_diff(&bufs[0], reference);
+                    assert!(d < 1e-4, "p={p} {}: diverges from reference by {d}", algo.name());
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn send_sets_conflict_free_for_p_1_to_16() {
+    for p in 1..=16usize {
+        for nblocks in [1usize, 7, 64] {
+            assert_conflict_free(&ring_allreduce_schedule(p, nblocks), "ring");
+            for fanout in [2usize, 3, 4, 8] {
+                assert_conflict_free(
+                    &tree_allreduce_schedule(p, nblocks, fanout),
+                    &format!("tree{fanout} p={p}"),
+                );
+            }
+            for root in 0..p {
+                assert_conflict_free(&broadcast_schedule(p, root, nblocks), "broadcast");
+            }
+            if p > 1 {
+                // (a 1-rank ring shift would be a self-send; callers never
+                // build one — Ring Attention needs at least two workers)
+                assert_conflict_free(&ring_shift_schedule(p, nblocks), "ring_shift");
+            }
+            for (nodes, gpn) in factorizations(p) {
+                let topo = Topology::custom(
+                    "prop",
+                    nodes,
+                    gpn,
+                    GpuKind::H100,
+                    LinkSpec::nvlink4(),
+                    LinkSpec::infiniband_ndr(),
+                );
+                for inter_fanout in [2usize, 4] {
+                    assert_conflict_free(
+                        &two_level_allreduce_schedule(&topo, nblocks, inter_fanout),
+                        &format!("twolevel{inter_fanout} {nodes}x{gpn}"),
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn random_worlds_reduce_identically_prop() {
+    check("all algos agree on random worlds", 60, |g| {
+        let nodes = g.usize_in(1..5);
+        let gpn = g.usize_in(1..7);
+        let p = nodes * gpn;
+        if p < 2 {
+            return;
+        }
+        let nblocks = g.usize_in(1..50);
+        let seed = g.rng().next_u64();
+        let mk_bufs = |seed: u64| -> Vec<Vec<f32>> {
+            let mut rng = tree_attention::util::Rng::seed(seed);
+            (0..p).map(|_| rng.normal_vec(nblocks, 1.0)).collect()
+        };
+        let mut outs: Vec<Vec<f32>> = Vec::new();
+        for algo in [
+            AllReduceAlgo::Ring,
+            AllReduceAlgo::Tree { fanout: g.usize_in(2..9) },
+            AllReduceAlgo::TwoLevel { inter_fanout: 2 },
+        ] {
+            let mut bufs = mk_bufs(seed);
+            let mut w = world(nodes, gpn);
+            let stats = allreduce(&mut w, algo, &mut bufs, &SumOp, 2);
+            // every rank converged to the same buffer
+            for r in 1..p {
+                assert!(max_abs_diff(&bufs[r], &bufs[0]) < 1e-4, "{} rank {r}", algo.name());
+            }
+            if p > 1 {
+                assert!(stats.steps > 0);
+                assert!(stats.sim_time > 0.0);
+            }
+            outs.push(bufs.swap_remove(0));
+        }
+        assert!(max_abs_diff(&outs[0], &outs[1]) < 1e-4, "ring vs tree");
+        assert!(max_abs_diff(&outs[0], &outs[2]) < 1e-4, "ring vs twolevel");
+    });
+}
