@@ -62,7 +62,7 @@ fn main() {
         format!("{:.0}k scheds/s", 1e-3 / r.per_iter()),
     ]);
     let r = bench_fn("twolevel_sched_gen", warm, samples, if quick { 20 } else { 100 }, || {
-        std::hint::black_box(two_level_allreduce_schedule(&topo, 16, 2));
+        std::hint::black_box(two_level_allreduce_schedule(&topo, 16, 2).unwrap());
     });
     table.row(vec![
         "two-level schedule (4 nodes)".into(),

@@ -1,0 +1,165 @@
+//! Planner ablation: for every (preset, cluster size, context, batch) point,
+//! run the simulated continuous-batched decode round under every fixed
+//! AllReduce algorithm AND under `AllReduceAlgo::Auto`, and check that:
+//!
+//!   1. auto's decode latency matches the best fixed algorithm within 1%
+//!      on EVERY point (it should be exactly equal: the planner prices the
+//!      same schedules the round executes), and
+//!   2. the sweep contains real crossovers — at least one point where the
+//!      ring beats every tree (bandwidth-bound payloads), and one where the
+//!      two-level hierarchy beats both ring and flat trees (latency-bound
+//!      payloads on a multi-node fabric) — i.e. no single fixed algorithm
+//!      could have been hard-coded instead of the planner.
+//!
+//! This is the runtime version of the paper's Fig. 3 crossover argument.
+
+use tree_attention::attnmath::AttnShape;
+use tree_attention::bench::papersim::sim_batched_tree_decode;
+use tree_attention::bench::Table;
+use tree_attention::collectives::AllReduceAlgo;
+use tree_attention::planner::candidate_algos;
+use tree_attention::ser::Json;
+use tree_attention::util::{fmt_bytes, fmt_secs, fmt_tokens};
+use tree_attention::Topology;
+
+const SHAPE: AttnShape = AttnShape { batch: 1, n_heads: 16, kv_heads: 16, d_head: 128 };
+const WIRE_BPE: u64 = 2;
+
+fn payload_bytes(batch: usize) -> u64 {
+    (batch * SHAPE.n_heads * (SHAPE.d_head + 2)) as u64 * WIRE_BPE
+}
+
+fn main() {
+    let quick = tree_attention::bench::quick_mode();
+
+    // (preset label, topology) sweep — the paper's three testbeds.
+    let topos: Vec<(&str, Topology)> = if quick {
+        vec![
+            ("h100_dgx", Topology::h100_dgx(4)),
+            ("mi300x", Topology::mi300x(2, 8)),
+            ("rtx4090_pcie", Topology::rtx4090_pcie(4)),
+        ]
+    } else {
+        vec![
+            ("h100_dgx", Topology::h100_dgx(1)),
+            ("h100_dgx", Topology::h100_dgx(2)),
+            ("h100_dgx", Topology::h100_dgx(4)),
+            ("h100_dgx", Topology::h100_dgx(16)),
+            ("mi300x", Topology::mi300x(1, 8)),
+            ("mi300x", Topology::mi300x(2, 8)),
+            ("rtx4090_pcie", Topology::rtx4090_pcie(2)),
+            ("rtx4090_pcie", Topology::rtx4090_pcie(4)),
+            ("rtx4090_pcie", Topology::rtx4090_pcie(8)),
+        ]
+    };
+    let contexts: Vec<usize> = if quick { vec![128_000] } else { vec![8_000, 128_000, 1_280_000] };
+    let batches: Vec<usize> = if quick { vec![1, 512] } else { vec![1, 8, 64, 512, 4096] };
+
+    let mut table = Table::new(
+        "Planner ablation — simulated decode-round latency per AllReduce algorithm",
+        &["preset", "GPUs", "ctx", "batch", "payload", "best fixed", "best (sim)", "auto (sim)", "Δ"],
+    );
+    let mut results = Vec::new();
+    let mut ring_beats_trees = 0usize;
+    let mut twolevel_beats_both = 0usize;
+
+    for (preset, topo) in &topos {
+        for &ctx in &contexts {
+            for &batch in &batches {
+                let fixed = candidate_algos(topo);
+                let timed: Vec<(AllReduceAlgo, f64)> = fixed
+                    .iter()
+                    .map(|&algo| {
+                        (algo, sim_batched_tree_decode(topo, batch, ctx, SHAPE, WIRE_BPE, algo).sim_time)
+                    })
+                    .collect();
+                let (best_algo, best_t) = timed
+                    .iter()
+                    .copied()
+                    .min_by(|a, b| a.1.total_cmp(&b.1))
+                    .expect("non-empty candidate set");
+                let auto_t =
+                    sim_batched_tree_decode(topo, batch, ctx, SHAPE, WIRE_BPE, AllReduceAlgo::Auto)
+                        .sim_time;
+
+                // Acceptance criterion 1: auto within 1% of the best fixed
+                // algorithm at every point of the sweep.
+                assert!(
+                    auto_t <= best_t * 1.01,
+                    "{preset} p={} ctx={ctx} batch={batch}: auto {auto_t} worse than best fixed \
+                     {} = {best_t}",
+                    topo.world_size(),
+                    best_algo.name()
+                );
+
+                // Crossover bookkeeping for acceptance criterion 2.
+                let ring_t = timed
+                    .iter()
+                    .find(|(a, _)| *a == AllReduceAlgo::Ring)
+                    .map(|(_, t)| *t)
+                    .expect("ring is always a candidate");
+                let best_tree_t = timed
+                    .iter()
+                    .filter(|(a, _)| matches!(a, AllReduceAlgo::Tree { .. }))
+                    .map(|(_, t)| *t)
+                    .fold(f64::INFINITY, f64::min);
+                let best_twolevel_t = timed
+                    .iter()
+                    .filter(|(a, _)| matches!(a, AllReduceAlgo::TwoLevel { .. }))
+                    .map(|(_, t)| *t)
+                    .fold(f64::INFINITY, f64::min);
+                if ring_t < best_tree_t && ring_t < best_twolevel_t {
+                    ring_beats_trees += 1;
+                }
+                if best_twolevel_t < ring_t && best_twolevel_t < best_tree_t {
+                    twolevel_beats_both += 1;
+                }
+
+                table.row(vec![
+                    preset.to_string(),
+                    topo.world_size().to_string(),
+                    fmt_tokens(ctx),
+                    batch.to_string(),
+                    fmt_bytes(payload_bytes(batch)),
+                    best_algo.name(),
+                    fmt_secs(best_t),
+                    fmt_secs(auto_t),
+                    format!("{:+.2}%", 100.0 * (auto_t - best_t) / best_t),
+                ]);
+                results.push(Json::obj(vec![
+                    ("preset", Json::str(preset)),
+                    ("gpus", Json::num(topo.world_size() as f64)),
+                    ("ctx", Json::num(ctx as f64)),
+                    ("batch", Json::num(batch as f64)),
+                    ("payload_bytes", Json::num(payload_bytes(batch) as f64)),
+                    ("best_fixed", Json::str(&best_algo.name())),
+                    ("best_fixed_s", Json::num(best_t)),
+                    ("auto_s", Json::num(auto_t)),
+                    ("ring_s", Json::num(ring_t)),
+                    ("best_tree_s", Json::num(best_tree_t)),
+                    ("best_twolevel_s", Json::num(best_twolevel_t)),
+                ]));
+            }
+        }
+    }
+    table.print();
+
+    // Acceptance criterion 2: the sweep exhibits both crossovers, so no
+    // single hard-coded algorithm could replace the planner.
+    assert!(
+        ring_beats_trees >= 1,
+        "sweep must contain a bandwidth-bound point where the ring wins"
+    );
+    assert!(
+        twolevel_beats_both >= 1,
+        "sweep must contain a latency-bound multi-node point where two-level wins"
+    );
+    println!(
+        "\ncrossovers in this sweep: ring wins at {ring_beats_trees} point(s) \
+         (bandwidth-bound payloads), two-level wins at {twolevel_beats_both} point(s) \
+         (latency-bound multi-node); auto matched the best fixed algorithm within 1% \
+         at every point."
+    );
+    let path = tree_attention::bench::write_results("planner_ablation", &Json::arr(results)).unwrap();
+    println!("results written to {}", path.display());
+}

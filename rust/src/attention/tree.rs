@@ -17,7 +17,7 @@
 use super::{ComputeBackend, DecodeOutcome, DecodeStats, ShardKv};
 use crate::attnmath::{batched_shape, AttnCombineOp, AttnPartial, AttnShape};
 use crate::cluster::VirtualCluster;
-use crate::collectives::{broadcast_schedule, execute_data, AllReduceAlgo};
+use crate::collectives::{broadcast_schedule, execute_data, AllReduceAlgo, ReduceOp};
 
 /// Run one tree-attention decode over sharded KV (one layer, one token).
 ///
@@ -71,8 +71,10 @@ pub fn tree_decode(
     }
 
     // -- step 3: fused AllReduce of (n, d, m) ------------------------------
+    // (`Auto` resolves against the planner for this exact payload shape)
     let op = AttnCombineOp { d_head: shape.d_head };
-    let sched = algo.schedule(&cluster.world, shape.batch * shape.n_heads);
+    let sched =
+        algo.schedule_for(&cluster.world, shape.batch * shape.n_heads, op.block_len(), wire_bpe)?;
     let stats = execute_data(&mut cluster.world, &sched, &mut wires, &op, wire_bpe);
     steps += stats.steps;
 
@@ -179,8 +181,11 @@ pub fn tree_decode_batch(
     }
 
     // -- step 3: ONE fused AllReduce over B·n_heads blocks -----------------
+    // (`Auto` re-plans when the batch width crosses a cost crossover: the
+    // payload is proportional to B, which is exactly what the planner keys
+    // its plan cache on)
     let op = AttnCombineOp { d_head: shape.d_head };
-    let sched = algo.schedule(&cluster.world, b * shape.n_heads);
+    let sched = algo.schedule_for(&cluster.world, b * shape.n_heads, op.block_len(), wire_bpe)?;
     let stats = execute_data(&mut cluster.world, &sched, &mut wires, &op, wire_bpe);
     steps += stats.steps;
 
@@ -245,7 +250,7 @@ pub fn tree_decode_unfused(
     let bh = shape.batch * shape.n_heads;
     // AllReduce 1: global max m (lse-style). Alg. 3 step 3.
     let mut maxes: Vec<Vec<f32>> = partials.iter().map(|p| p.max.clone()).collect();
-    let sched1 = algo.schedule(&cluster.world, bh);
+    let sched1 = algo.schedule_for(&cluster.world, bh, 1, wire_bpe)?;
     let s1 = execute_data(&mut cluster.world, &sched1, &mut maxes, &MaxOp, wire_bpe);
     // Rescale local (n, d) to the global max. Alg. 3 step 4.
     for (part, gmax) in partials.iter_mut().zip(&maxes) {
@@ -260,10 +265,10 @@ pub fn tree_decode_unfused(
     }
     // AllReduce 2: numerator. AllReduce 3: denominator. Alg. 3 step 5.
     let mut nums: Vec<Vec<f32>> = partials.iter().map(|p| p.num.clone()).collect();
-    let sched2 = algo.schedule(&cluster.world, bh * shape.d_head);
+    let sched2 = algo.schedule_for(&cluster.world, bh * shape.d_head, 1, wire_bpe)?;
     let s2 = execute_data(&mut cluster.world, &sched2, &mut nums, &SumOp, wire_bpe);
     let mut dens: Vec<Vec<f32>> = partials.iter().map(|p| p.den.clone()).collect();
-    let sched3 = algo.schedule(&cluster.world, bh);
+    let sched3 = algo.schedule_for(&cluster.world, bh, 1, wire_bpe)?;
     let s3 = execute_data(&mut cluster.world, &sched3, &mut dens, &SumOp, wire_bpe);
     steps += s1.steps + s2.steps + s3.steps;
 

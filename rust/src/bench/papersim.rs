@@ -63,7 +63,9 @@ pub fn sim_attention(
                 let launch = cluster.gpu.comm_launch_s * (p as f64 / 8.0).powf(1.5).max(1.0);
                 cluster.world.compute(w, launch);
             }
-            let sched = algo.schedule(&cluster.world, shape.batch * shape.n_heads);
+            let sched = algo
+                .schedule_for(&cluster.world, shape.batch * shape.n_heads, shape.d_head + 2, wire_bpe)
+                .expect("valid collective config");
             let s = execute_cost(&mut cluster.world, &sched, shape.d_head + 2, wire_bpe);
             comm_steps += s.steps;
         }
@@ -158,7 +160,9 @@ pub fn sim_batched_tree_decode(
         let launch = cluster.gpu.comm_launch_s * (p as f64 / 8.0).powf(1.5).max(1.0);
         cluster.world.compute(w, launch);
     }
-    let sched = algo.schedule(&cluster.world, b * shape.n_heads);
+    let sched = algo
+        .schedule_for(&cluster.world, b * shape.n_heads, shape.d_head + 2, wire_bpe)
+        .expect("valid collective config");
     let s = execute_cost(&mut cluster.world, &sched, shape.d_head + 2, wire_bpe);
     comm_steps += s.steps;
 

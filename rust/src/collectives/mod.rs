@@ -172,6 +172,12 @@ pub fn execute_data(
             .map(|s| bufs[s.src][s.blocks.start * bl..s.blocks.end * bl].to_vec())
             .collect();
         for (sendop, payload) in step.iter().zip(payloads) {
+            if payload.is_empty() {
+                // Empty-range send: no bytes move, so it must not pay the α
+                // latency term nor count as a message (generators no longer
+                // emit these; guard hand-built schedules too).
+                continue;
+            }
             let bytes = (payload.len() as u64) * wire_bytes_per_elem;
             world.send(sendop.src, sendop.dst, bytes);
             let dst_seg = &mut bufs[sendop.dst][sendop.blocks.start * bl..sendop.blocks.end * bl];
@@ -204,6 +210,9 @@ pub fn execute_cost(
     for step in &schedule.steps {
         for s in step {
             let bytes = (s.blocks.len() * block_elems) as u64 * wire_bytes_per_elem;
+            if bytes == 0 {
+                continue; // zero-byte send: no α charge, no message counted
+            }
             world.send(s.src, s.dst, bytes);
         }
         step_barrier(world, step);
@@ -229,7 +238,7 @@ pub fn execute_cost(
 fn step_barrier(_world: &mut SimWorld, _step: &[SendOp]) {}
 
 /// High-level algorithm selector used by config / CLI / benches.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum AllReduceAlgo {
     /// NCCL-style ring: reduce-scatter + allgather, 2(p-1) steps.
     Ring,
@@ -238,6 +247,11 @@ pub enum AllReduceAlgo {
     /// Topology-aware: intra-node reduce → inter-node tree allreduce among
     /// node leaders → intra-node broadcast (what NCCL does across DGX nodes).
     TwoLevel { inter_fanout: usize },
+    /// Topology-aware automatic selection: the [`crate::planner`] prices
+    /// every candidate schedule against the live topology's α–β model and
+    /// picks the cheapest for the actual payload — the paper's Fig. 3
+    /// crossover discovered at runtime instead of hand-picked per bench.
+    Auto,
 }
 
 impl AllReduceAlgo {
@@ -246,47 +260,103 @@ impl AllReduceAlgo {
             AllReduceAlgo::Ring => "ring".into(),
             AllReduceAlgo::Tree { fanout } => format!("tree{fanout}"),
             AllReduceAlgo::TwoLevel { inter_fanout } => format!("twolevel{inter_fanout}"),
+            AllReduceAlgo::Auto => "auto".into(),
         }
     }
 
+    /// Parse a selector name. `tree<k>` / `twolevel<k>` accept any fanout
+    /// k ≥ 2, so every algorithm the planner can choose (and `plan-bench`
+    /// can print) is expressible — e.g. `allreduce=tree3` pins the planner's
+    /// `tree3` decision. Bare `tree` / `twolevel` mean k = 2.
     pub fn parse(s: &str) -> anyhow::Result<AllReduceAlgo> {
+        let fanout_of = |suffix: &str| -> anyhow::Result<usize> {
+            let k: usize = suffix
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad fanout '{suffix}' in allreduce algo '{s}'"))?;
+            anyhow::ensure!(k >= 2, "allreduce algo '{s}': fanout must be >= 2");
+            Ok(k)
+        };
         match s {
+            "auto" => Ok(AllReduceAlgo::Auto),
             "ring" => Ok(AllReduceAlgo::Ring),
-            "tree" | "tree2" => Ok(AllReduceAlgo::Tree { fanout: 2 }),
-            "tree4" => Ok(AllReduceAlgo::Tree { fanout: 4 }),
-            "tree8" => Ok(AllReduceAlgo::Tree { fanout: 8 }),
-            "twolevel" | "twolevel2" => Ok(AllReduceAlgo::TwoLevel { inter_fanout: 2 }),
-            "twolevel4" => Ok(AllReduceAlgo::TwoLevel { inter_fanout: 4 }),
-            other => anyhow::bail!("unknown allreduce algo '{other}'"),
+            "tree" => Ok(AllReduceAlgo::Tree { fanout: 2 }),
+            "twolevel" => Ok(AllReduceAlgo::TwoLevel { inter_fanout: 2 }),
+            other => {
+                if let Some(k) = other.strip_prefix("twolevel") {
+                    Ok(AllReduceAlgo::TwoLevel { inter_fanout: fanout_of(k)? })
+                } else if let Some(k) = other.strip_prefix("tree") {
+                    Ok(AllReduceAlgo::Tree { fanout: fanout_of(k)? })
+                } else {
+                    anyhow::bail!("unknown allreduce algo '{other}' (auto | ring | tree[k] | twolevel[k])")
+                }
+            }
         }
     }
 
-    /// Build the schedule for this algorithm on the given world.
-    pub fn schedule(&self, world: &SimWorld, nblocks: usize) -> Schedule {
+    /// True for the planner-resolved selector.
+    pub fn is_auto(&self) -> bool {
+        matches!(self, AllReduceAlgo::Auto)
+    }
+
+    /// Build the schedule for a FIXED algorithm on the given world. `Auto`
+    /// is an error here: a plan priced without the real payload shape would
+    /// silently land on the wrong side of the ring/tree crossover — use
+    /// [`Self::schedule_for`], which hands the planner the actual
+    /// (block count, block size, wire width) tuple.
+    pub fn schedule(&self, world: &SimWorld, nblocks: usize) -> anyhow::Result<Schedule> {
         match *self {
-            AllReduceAlgo::Ring => ring_allreduce_schedule(world.world_size(), nblocks),
+            AllReduceAlgo::Ring => Ok(ring_allreduce_schedule(world.world_size(), nblocks)),
             AllReduceAlgo::Tree { fanout } => {
                 tree_allreduce_schedule(world.world_size(), nblocks, fanout)
             }
             AllReduceAlgo::TwoLevel { inter_fanout } => {
                 two_level_allreduce_schedule(world.topology(), nblocks, inter_fanout)
             }
+            AllReduceAlgo::Auto => anyhow::bail!(
+                "Auto has no payload-independent schedule; call schedule_for(world, nblocks, \
+                 block_elems, wire_bytes_per_elem) so the planner can price the actual payload"
+            ),
         }
+    }
+
+    /// Build the schedule for the *actual* payload: `nblocks` blocks of
+    /// `block_elems` elements at `wire_bytes_per_elem` bytes each. For the
+    /// fixed algorithms this is identical to [`Self::schedule`]; for `Auto`
+    /// the payload size is what the planner prices the candidates with, so
+    /// the crossover (ring for bandwidth-bound payloads, tree/two-level for
+    /// latency-bound ones) lands where the cost model says it should.
+    pub fn schedule_for(
+        &self,
+        world: &SimWorld,
+        nblocks: usize,
+        block_elems: usize,
+        wire_bytes_per_elem: u64,
+    ) -> anyhow::Result<Schedule> {
+        let resolved = crate::planner::resolve(
+            *self,
+            world.topology(),
+            nblocks,
+            block_elems,
+            wire_bytes_per_elem,
+        );
+        debug_assert!(!resolved.is_auto(), "planner must resolve Auto to a fixed algorithm");
+        resolved.schedule(world, nblocks)
     }
 }
 
-/// Convenience: allreduce real data with the chosen algorithm.
+/// Convenience: allreduce real data with the chosen algorithm (`Auto` is
+/// resolved by the planner for this buffer's payload size).
 pub fn allreduce(
     world: &mut SimWorld,
     algo: AllReduceAlgo,
     bufs: &mut [Vec<f32>],
     op: &dyn ReduceOp,
     wire_bytes_per_elem: u64,
-) -> ExecStats {
+) -> anyhow::Result<ExecStats> {
     let nblocks = bufs[0].len() / op.block_len();
-    assert_eq!(bufs[0].len() % op.block_len(), 0, "buffer not block-aligned");
-    let schedule = algo.schedule(world, nblocks);
-    execute_data(world, &schedule, bufs, op, wire_bytes_per_elem)
+    anyhow::ensure!(bufs[0].len() % op.block_len() == 0, "buffer not block-aligned");
+    let schedule = algo.schedule_for(world, nblocks, op.block_len(), wire_bytes_per_elem)?;
+    Ok(execute_data(world, &schedule, bufs, op, wire_bytes_per_elem))
 }
 
 #[cfg(test)]
@@ -336,11 +406,12 @@ mod tests {
             AllReduceAlgo::Tree { fanout: 2 },
             AllReduceAlgo::Tree { fanout: 4 },
             AllReduceAlgo::TwoLevel { inter_fanout: 2 },
+            AllReduceAlgo::Auto,
         ] {
             let mut w = world(2, 4);
             let mut bufs = random_bufs(&mut rng, 8, 64);
             let expect = expected_sum(&bufs);
-            let stats = allreduce(&mut w, algo, &mut bufs, &SumOp, 2);
+            let stats = allreduce(&mut w, algo, &mut bufs, &SumOp, 2).unwrap();
             assert_allreduced(&bufs, &expect, 1e-4);
             assert!(stats.sim_time > 0.0);
             assert!(stats.traffic.total_bytes() > 0);
@@ -358,7 +429,7 @@ mod tests {
                 *e = e.max(*x);
             }
         }
-        allreduce(&mut w, AllReduceAlgo::Tree { fanout: 2 }, &mut bufs, &MaxOp, 4);
+        allreduce(&mut w, AllReduceAlgo::Tree { fanout: 2 }, &mut bufs, &MaxOp, 4).unwrap();
         assert_allreduced(&bufs, &expect, 0.0);
     }
 
@@ -391,7 +462,7 @@ mod tests {
         for algo in [AllReduceAlgo::Ring, AllReduceAlgo::Tree { fanout: 2 }, AllReduceAlgo::TwoLevel { inter_fanout: 2 }] {
             let mut w = world(2, 4);
             let mut bb = bufs.clone();
-            allreduce(&mut w, algo, &mut bb, &op, 2);
+            allreduce(&mut w, algo, &mut bb, &op, 2).unwrap();
             let reference = ref_attention(shape, &q, &k, &v, p * t_each, 0.25);
             for r in 0..p {
                 let got = AttnPartial::from_wire(shape, &bb[r]).finalize();
@@ -425,7 +496,7 @@ mod tests {
             let mut wr = world(nodes, 8);
             let ring = execute_cost(&mut wr, &ring_allreduce_schedule(nodes * 8, nblocks), 1, 2);
             let mut wt = world(nodes, 8);
-            let sched = two_level_allreduce_schedule(wt.topology(), nblocks, 2);
+            let sched = two_level_allreduce_schedule(wt.topology(), nblocks, 2).unwrap();
             let two = execute_cost(&mut wt, &sched, 1, 2);
             assert!(
                 two.sim_time < ring.sim_time,
@@ -456,9 +527,120 @@ mod tests {
                 (0..p).map(|_| g.rng().normal_vec(nblocks, 1.0)).collect();
             let expect = expected_sum(&bufs);
             let mut w = world(nodes, gpn);
-            let stats = allreduce(&mut w, algo, &mut bufs, &SumOp, 2);
+            let stats = allreduce(&mut w, algo, &mut bufs, &SumOp, 2).unwrap();
             assert_allreduced(&bufs, &expect, 1e-4);
             assert!(stats.steps > 0);
         });
+    }
+
+    #[test]
+    fn empty_range_sends_cost_nothing_in_both_executors() {
+        // Regression (ISSUE 2): a zero-byte send used to pay the α latency
+        // term and count as a message in the simulator, inflating exactly
+        // the small-message cost estimates the planner's crossover search
+        // depends on. Hand-build a schedule with an empty-range op (the
+        // generators no longer emit them) and check both executors skip it.
+        let sched = Schedule {
+            steps: vec![vec![
+                SendOp { src: 0, dst: 1, blocks: 0..0, mode: RecvMode::Copy },
+                SendOp { src: 2, dst: 3, blocks: 0..4, mode: RecvMode::Reduce },
+            ]],
+            nblocks: 4,
+            p: 4,
+            algo: "hand",
+        };
+        let mut w1 = world(1, 4);
+        let s_cost = execute_cost(&mut w1, &sched, 1, 2);
+        assert_eq!(s_cost.traffic.total_msgs(), 1, "empty send must not be a message");
+        let mut w2 = world(1, 4);
+        let mut bufs: Vec<Vec<f32>> = (0..4).map(|r| vec![r as f32; 4]).collect();
+        let s_data = execute_data(&mut w2, &sched, &mut bufs, &SumOp, 2);
+        assert_eq!(s_data.traffic.total_msgs(), 1);
+        assert!((s_data.sim_time - s_cost.sim_time).abs() < 1e-15);
+        assert_eq!(bufs[3], vec![5.0; 4], "real send still lands");
+        assert_eq!(bufs[1], vec![1.0; 4], "empty send leaves the target untouched");
+    }
+
+    #[test]
+    fn parse_roundtrips_every_plannable_algorithm() {
+        // Every algorithm the planner can choose must be expressible on the
+        // CLI, so `plan-bench`'s "auto picks" column can always be pinned.
+        for algo in [
+            AllReduceAlgo::Auto,
+            AllReduceAlgo::Ring,
+            AllReduceAlgo::Tree { fanout: 2 },
+            AllReduceAlgo::Tree { fanout: 3 },
+            AllReduceAlgo::Tree { fanout: 4 },
+            AllReduceAlgo::Tree { fanout: 8 },
+            AllReduceAlgo::TwoLevel { inter_fanout: 2 },
+            AllReduceAlgo::TwoLevel { inter_fanout: 3 },
+            AllReduceAlgo::TwoLevel { inter_fanout: 4 },
+        ] {
+            assert_eq!(AllReduceAlgo::parse(&algo.name()).unwrap(), algo, "{}", algo.name());
+        }
+        // Bare names default to fanout 2.
+        assert_eq!(AllReduceAlgo::parse("tree").unwrap(), AllReduceAlgo::Tree { fanout: 2 });
+        assert_eq!(
+            AllReduceAlgo::parse("twolevel").unwrap(),
+            AllReduceAlgo::TwoLevel { inter_fanout: 2 }
+        );
+        // Degenerate fanouts and junk are rejected with clear errors.
+        for bad in ["tree0", "tree1", "twolevel1", "treex", "twolevel-3", "star"] {
+            assert!(AllReduceAlgo::parse(bad).is_err(), "{bad} must not parse");
+        }
+    }
+
+    #[test]
+    fn auto_schedule_without_payload_is_an_error() {
+        // Pricing Auto without the real payload shape would silently land on
+        // the wrong side of the ring/tree crossover; the payload-free
+        // schedule() entry point must refuse rather than guess.
+        let w = world(2, 4);
+        let e = AllReduceAlgo::Auto.schedule(&w, 8);
+        assert!(e.is_err());
+        assert!(e.unwrap_err().to_string().contains("schedule_for"));
+        // schedule_for with the payload works and yields a valid schedule.
+        AllReduceAlgo::Auto.schedule_for(&w, 8, 130, 2).unwrap().validate().unwrap();
+    }
+
+    #[test]
+    fn auto_resolves_and_matches_some_fixed_algorithm() {
+        // Auto must behave exactly like whichever fixed algorithm the
+        // planner picked: same result, and a simulated time equal to one of
+        // the candidates' (measured on fresh worlds).
+        let mut rng = Rng::seed(14);
+        let bufs0 = random_bufs(&mut rng, 8, 64);
+        let expect = expected_sum(&bufs0);
+        let mut wa = world(2, 4);
+        let mut auto_bufs = bufs0.clone();
+        let auto = allreduce(&mut wa, AllReduceAlgo::Auto, &mut auto_bufs, &SumOp, 2).unwrap();
+        assert_allreduced(&auto_bufs, &expect, 1e-4);
+        let fixed = [
+            AllReduceAlgo::Ring,
+            AllReduceAlgo::Tree { fanout: 2 },
+            AllReduceAlgo::Tree { fanout: 3 },
+            AllReduceAlgo::Tree { fanout: 4 },
+            AllReduceAlgo::TwoLevel { inter_fanout: 2 },
+            AllReduceAlgo::TwoLevel { inter_fanout: 3 },
+            AllReduceAlgo::TwoLevel { inter_fanout: 4 },
+        ];
+        let mut best = f64::INFINITY;
+        let mut matched = false;
+        for algo in fixed {
+            let mut w = world(2, 4);
+            let mut bb = bufs0.clone();
+            let s = allreduce(&mut w, algo, &mut bb, &SumOp, 2).unwrap();
+            best = best.min(s.sim_time);
+            if (s.sim_time - auto.sim_time).abs() < 1e-15 {
+                matched = true;
+            }
+        }
+        assert!(matched, "auto's time must equal some fixed candidate's");
+        assert!(
+            auto.sim_time <= best + 1e-15,
+            "auto {} must not be worse than the best fixed {}",
+            auto.sim_time,
+            best
+        );
     }
 }

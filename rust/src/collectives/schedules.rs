@@ -27,6 +27,17 @@ pub fn segment(nblocks: usize, p: usize, i: usize) -> std::ops::Range<usize> {
     start..end
 }
 
+/// Append a step only if it carries at least one send. Empty steps would
+/// inflate `n_steps()`/`comm_steps` accounting without moving a byte, and
+/// empty-range sends would each pay the α latency term in the network
+/// simulator and bump `TrafficCounters::*_msgs` — skewing exactly the
+/// small-message cost estimates the planner's crossover search relies on.
+fn push_step(steps: &mut Vec<Vec<SendOp>>, ops: Vec<SendOp>) {
+    if !ops.is_empty() {
+        steps.push(ops);
+    }
+}
+
 /// NCCL-style ring allreduce: reduce-scatter then allgather.
 pub fn ring_allreduce_schedule(p: usize, nblocks: usize) -> Schedule {
     assert!(p >= 1);
@@ -42,7 +53,7 @@ pub fn ring_allreduce_schedule(p: usize, nblocks: usize) -> Schedule {
                 }
                 ops.push(SendOp { src: r, dst: (r + 1) % p, blocks: seg, mode: RecvMode::Reduce });
             }
-            steps.push(ops);
+            push_step(&mut steps, ops);
         }
         // Allgather: step s, rank r sends segment (r + 1 - s) mod p to r+1.
         for s in 0..p - 1 {
@@ -54,7 +65,7 @@ pub fn ring_allreduce_schedule(p: usize, nblocks: usize) -> Schedule {
                 }
                 ops.push(SendOp { src: r, dst: (r + 1) % p, blocks: seg, mode: RecvMode::Copy });
             }
-            steps.push(ops);
+            push_step(&mut steps, ops);
         }
     }
     Schedule { steps, nblocks, p, algo: "ring" }
@@ -92,12 +103,29 @@ pub fn tree_max_depth(p: usize, k: usize) -> usize {
     (0..p).map(|i| tree_depth(i, k)).max().unwrap_or(0)
 }
 
+/// Validate a tree fanout at schedule construction time. `fanout == 0`
+/// would divide by zero inside `tree_parent`, and `fanout == 1` degenerates
+/// the "tree" into an O(p)-round chain — both are caller bugs better
+/// reported here, at the API boundary, than as a panic deep in a helper.
+fn validate_fanout(fanout: usize, what: &str) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        fanout >= 2,
+        "{what} requires fanout >= 2 (got {fanout}): fanout 0 has no tree structure \
+         and fanout 1 is a chain, not a tree"
+    );
+    Ok(())
+}
+
 /// Flat k-ary tree allreduce over ranks `0..p`: reduce up, broadcast down.
-pub fn tree_allreduce_schedule(p: usize, nblocks: usize, fanout: usize) -> Schedule {
+///
+/// Errors if `fanout < 2` (fanout 0 has no tree structure; fanout 1 is a
+/// chain, not a tree).
+pub fn tree_allreduce_schedule(p: usize, nblocks: usize, fanout: usize) -> anyhow::Result<Schedule> {
+    validate_fanout(fanout, "tree_allreduce_schedule")?;
     let ranks: Vec<Rank> = (0..p).collect();
     let mut steps = tree_reduce_steps(&ranks, nblocks, fanout);
     steps.extend(tree_broadcast_steps(&ranks, nblocks, fanout));
-    Schedule { steps, nblocks, p, algo: "tree" }
+    Ok(Schedule { steps, nblocks, p, algo: "tree" })
 }
 
 /// Reduce phase of a k-ary tree over an explicit rank set (`members[0]` is
@@ -105,6 +133,9 @@ pub fn tree_allreduce_schedule(p: usize, nblocks: usize, fanout: usize) -> Sched
 /// depth sends its full buffer to its parent (RecvMode::Reduce).
 fn tree_reduce_steps(members: &[Rank], nblocks: usize, k: usize) -> Vec<Vec<SendOp>> {
     let n = members.len();
+    if nblocks == 0 {
+        return Vec::new(); // nothing to move: no zero-byte sends
+    }
     let max_d = tree_max_depth(n, k);
     let mut steps = Vec::new();
     for depth in (1..=max_d).rev() {
@@ -136,6 +167,9 @@ fn tree_reduce_steps(members: &[Rank], nblocks: usize, k: usize) -> Vec<Vec<Send
 /// assert it for every generator).
 fn tree_broadcast_steps(members: &[Rank], nblocks: usize, k: usize) -> Vec<Vec<SendOp>> {
     let n = members.len();
+    if nblocks == 0 {
+        return Vec::new(); // nothing to move: no zero-byte sends
+    }
     let max_d = tree_max_depth(n, k);
     let mut steps = Vec::new();
     for depth in 1..=max_d {
@@ -169,7 +203,8 @@ pub fn two_level_allreduce_schedule(
     topo: &Topology,
     nblocks: usize,
     inter_fanout: usize,
-) -> Schedule {
+) -> anyhow::Result<Schedule> {
+    validate_fanout(inter_fanout, "two_level_allreduce_schedule")?;
     let p = topo.world_size();
     let mut steps: Vec<Vec<SendOp>> = Vec::new();
 
@@ -200,7 +235,7 @@ pub fn two_level_allreduce_schedule(
     }
     merge_parallel(&mut steps, node_bcast);
 
-    Schedule { steps, nblocks, p, algo: "twolevel" }
+    Ok(Schedule { steps, nblocks, p, algo: "twolevel" })
 }
 
 /// Append per-group step lists, merging same-index steps across groups
@@ -225,6 +260,9 @@ pub fn broadcast_schedule(p: usize, root: Rank, nblocks: usize) -> Schedule {
     // Re-index so root is 0, then double the informed set each step.
     let reindex = |v: usize| (v + root) % p;
     let mut steps = Vec::new();
+    if nblocks == 0 {
+        return Schedule { steps, nblocks, p, algo: "broadcast" };
+    }
     let mut informed = 1usize;
     while informed < p {
         let mut ops = Vec::new();
@@ -245,11 +283,15 @@ pub fn broadcast_schedule(p: usize, root: Rank, nblocks: usize) -> Schedule {
 /// One ring-shift round: every rank forwards its full buffer to the next
 /// rank (Ring Attention's KV rotation). Repeated p−1 times by the caller.
 pub fn ring_shift_schedule(p: usize, nblocks: usize) -> Schedule {
-    let mut ops = Vec::with_capacity(p);
-    for r in 0..p {
-        ops.push(SendOp { src: r, dst: (r + 1) % p, blocks: 0..nblocks, mode: RecvMode::Copy });
+    let mut steps = Vec::new();
+    if nblocks > 0 {
+        let mut ops = Vec::with_capacity(p);
+        for r in 0..p {
+            ops.push(SendOp { src: r, dst: (r + 1) % p, blocks: 0..nblocks, mode: RecvMode::Copy });
+        }
+        steps.push(ops);
     }
-    Schedule { steps: vec![ops], nblocks, p, algo: "ring_shift" }
+    Schedule { steps, nblocks, p, algo: "ring_shift" }
 }
 
 #[cfg(test)]
@@ -298,15 +340,15 @@ mod tests {
         // still O(log_k p), unlike the ring's O(p).
         for (p, k) in [(16usize, 2usize), (16, 4), (9, 2), (27, 3)] {
             let d = tree_max_depth(p, k);
-            let s = tree_allreduce_schedule(p, 8, k);
+            let s = tree_allreduce_schedule(p, 8, k).unwrap();
             assert!(s.n_steps() >= 2 * d, "p={p} k={k}: at least reduce+bcast depth");
             assert!(s.n_steps() <= (1 + k) * d, "p={p} k={k}: staggered bound");
             s.validate().unwrap();
         }
         assert_eq!(tree_max_depth(16, 2), 4);
         // Wider fanout still means no more rounds than binary at p=16.
-        let s2 = tree_allreduce_schedule(16, 8, 2);
-        let s4 = tree_allreduce_schedule(16, 8, 4);
+        let s2 = tree_allreduce_schedule(16, 8, 2).unwrap();
+        let s4 = tree_allreduce_schedule(16, 8, 4).unwrap();
         assert!(s4.n_steps() <= s2.n_steps());
     }
 
@@ -315,7 +357,7 @@ mod tests {
         // The conflict-freedom invariant at the generator level: no rank is
         // the source of two sends within one step, for any fanout.
         for (p, k) in [(8usize, 2usize), (16, 3), (31, 4), (16, 8)] {
-            let s = tree_allreduce_schedule(p, 4, k);
+            let s = tree_allreduce_schedule(p, 4, k).unwrap();
             for (i, step) in s.steps.iter().enumerate() {
                 let mut srcs: Vec<usize> = step.iter().map(|op| op.src).collect();
                 srcs.sort_unstable();
@@ -329,7 +371,7 @@ mod tests {
     #[test]
     fn two_level_uses_inter_links_only_between_leaders() {
         let topo = crate::topology::Topology::h100_dgx(4);
-        let s = two_level_allreduce_schedule(&topo, 8, 2);
+        let s = two_level_allreduce_schedule(&topo, 8, 2).unwrap();
         s.validate().unwrap();
         for step in &s.steps {
             for op in step {
@@ -386,13 +428,82 @@ mod tests {
             let p = g.usize_in(2..40);
             let nblocks = g.usize_in(1..100);
             ring_allreduce_schedule(p, nblocks).validate().unwrap();
-            tree_allreduce_schedule(p, nblocks, *g.choose(&[2, 3, 4, 8])).validate().unwrap();
+            tree_allreduce_schedule(p, nblocks, *g.choose(&[2, 3, 4, 8]))
+                .unwrap()
+                .validate()
+                .unwrap();
             broadcast_schedule(p, g.usize_in(0..p), nblocks).validate().unwrap();
             ring_shift_schedule(p, nblocks).validate().unwrap();
             let nodes = g.usize_in(1..5);
             let topo = crate::topology::Topology::h100_dgx(nodes);
-            two_level_allreduce_schedule(&topo, nblocks, 2).validate().unwrap();
+            two_level_allreduce_schedule(&topo, nblocks, 2).unwrap().validate().unwrap();
         });
+    }
+
+    #[test]
+    fn degenerate_fanout_is_an_error_not_a_panic() {
+        // Regression (ISSUE 2): fanout 0 used to divide by zero inside
+        // `tree_parent`, and fanout 1 silently produced an O(p)-round chain.
+        // Both must now surface as a clear construction-time error.
+        for fanout in [0usize, 1] {
+            let e = tree_allreduce_schedule(16, 8, fanout);
+            assert!(e.is_err(), "tree fanout={fanout} must be rejected");
+            assert!(e.unwrap_err().to_string().contains("fanout >= 2"));
+            let topo = crate::topology::Topology::h100_dgx(2);
+            assert!(
+                two_level_allreduce_schedule(&topo, 8, fanout).is_err(),
+                "two-level inter_fanout={fanout} must be rejected"
+            );
+        }
+        // Valid fanouts still construct.
+        for fanout in [2usize, 3, 4, 8] {
+            tree_allreduce_schedule(16, 8, fanout).unwrap().validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn no_empty_sends_or_steps_for_degenerate_block_counts() {
+        // Regression (ISSUE 2): schedules must never emit SendOps with empty
+        // block ranges nor all-empty steps — each would otherwise pay the α
+        // latency term and inflate message counters in the cost model.
+        let no_empty = |s: &Schedule, what: &str| {
+            for (i, step) in s.steps.iter().enumerate() {
+                assert!(!step.is_empty(), "{what}: step {i} is empty");
+                for op in step {
+                    assert!(
+                        !op.blocks.is_empty(),
+                        "{what}: step {i} has an empty-range send {:?}",
+                        op.blocks
+                    );
+                }
+            }
+        };
+        // nblocks == 0: nothing to reduce — no steps at all, and the
+        // schedules still pass validate() (pre-fix the tree generators
+        // emitted 0..0 sends here, which validate() rejects).
+        for p in [1usize, 2, 5, 8] {
+            let r = ring_allreduce_schedule(p, 0);
+            assert_eq!(r.n_steps(), 0, "ring p={p}");
+            r.validate().unwrap();
+            let t = tree_allreduce_schedule(p, 0, 2).unwrap();
+            assert_eq!(t.n_steps(), 0, "tree p={p}");
+            t.validate().unwrap();
+            assert_eq!(ring_shift_schedule(p, 0).n_steps(), 0);
+            assert_eq!(broadcast_schedule(p, 0, 0).n_steps(), 0);
+        }
+        let topo = crate::topology::Topology::h100_dgx(2);
+        let s = two_level_allreduce_schedule(&topo, 0, 2).unwrap();
+        assert_eq!(s.n_steps(), 0, "twolevel nblocks=0");
+        // nblocks < p: ring segments may be empty; the emitted schedule must
+        // hold only non-empty sends and non-empty steps.
+        for (p, nblocks) in [(8usize, 3usize), (16, 5), (7, 2)] {
+            let s = ring_allreduce_schedule(p, nblocks);
+            no_empty(&s, &format!("ring p={p} nblocks={nblocks}"));
+            s.validate().unwrap();
+            // Dropping empty sends loses no volume: every segment still
+            // travels p-1 times per phase, so total = 2·(p-1)·nblocks.
+            assert_eq!(s.total_blocks_sent(), 2 * (p - 1) * nblocks);
+        }
     }
 
     #[test]

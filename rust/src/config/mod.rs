@@ -271,7 +271,11 @@ impl Default for RunSpec {
             batch: 1,
             seed: 0xC0FFEE,
             wire_bpe: 2,
-            allreduce: crate::collectives::AllReduceAlgo::TwoLevel { inter_fanout: 2 },
+            // Topology-aware by default: `auto` asks the collective planner
+            // to price ring / k-ary tree / two-level against the cluster's
+            // α–β model for the actual payload (serve-bench, decode, and
+            // serve all inherit this; override with `allreduce=ring` etc.).
+            allreduce: crate::collectives::AllReduceAlgo::Auto,
             artifacts_dir: "artifacts".into(),
             page_size: 16,
             pages_per_worker: 4096,
@@ -405,6 +409,10 @@ mod tests {
 
         spec.apply_override("strategy=tree").unwrap();
         assert_eq!(spec.strategy, Strategy::Tree);
+        spec.apply_override("allreduce=ring").unwrap();
+        assert_eq!(spec.allreduce, crate::collectives::AllReduceAlgo::Ring);
+        spec.apply_override("allreduce=auto").unwrap();
+        assert_eq!(spec.allreduce, crate::collectives::AllReduceAlgo::Auto);
         spec.apply_override("cluster.n_nodes=4").unwrap();
         assert_eq!(spec.cluster.n_nodes, 4);
         assert!(spec.apply_override("bogus=1").is_err());
@@ -428,6 +436,13 @@ mod tests {
         assert_eq!((spec.page_size, spec.pages_per_worker, spec.requests), (32, 128, 9));
         assert!(spec.apply_override("page_size=0").is_err());
         assert!(spec.apply_override("requests=0").is_err());
+    }
+
+    #[test]
+    fn allreduce_defaults_to_auto() {
+        // serve-bench / decode / serve all build from RunSpec::default(), so
+        // this is the "Auto is the serving default" acceptance criterion.
+        assert_eq!(RunSpec::default().allreduce, crate::collectives::AllReduceAlgo::Auto);
     }
 
     #[test]

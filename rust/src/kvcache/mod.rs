@@ -274,12 +274,38 @@ impl PagePool {
     }
 
     /// Release a prior reservation.
-    pub fn release(&mut self, need: &[usize]) {
-        assert_eq!(need.len(), self.n_workers);
-        for (u, n) in self.used.iter_mut().zip(need) {
-            assert!(*u >= *n, "releasing more pages than reserved");
-            *u -= n;
+    ///
+    /// Over-release (returning more pages than are currently reserved on
+    /// some worker) is a scheduler bug — typically a double-retire — but it
+    /// must not panic the serving loop: the counts are clamped to zero, a
+    /// warning is logged, and an `Err` describing the discrepancy is
+    /// returned so callers can surface it (the batcher pairs this with a
+    /// `debug_assert!` so tests still fail loudly).
+    pub fn release(&mut self, need: &[usize]) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            need.len() == self.n_workers,
+            "release vector has {} entries for {} workers",
+            need.len(),
+            self.n_workers
+        );
+        let mut over: Option<(usize, usize, usize)> = None;
+        for (w, (u, n)) in self.used.iter_mut().zip(need).enumerate() {
+            if *u < *n {
+                over.get_or_insert((w, *u, *n));
+                *u = 0; // clamp: the pool can never go negative
+            } else {
+                *u -= n;
+            }
         }
+        if let Some((w, had, asked)) = over {
+            crate::tlog!(
+                Warn,
+                "page pool over-release on worker {w}: {asked} pages returned, {had} reserved \
+                 (double retire?); counts clamped"
+            );
+            anyhow::bail!("over-release on worker {w}: returned {asked}, reserved {had}");
+        }
+        Ok(())
     }
 
     pub fn used_pages(&self, w: usize) -> usize {
@@ -485,17 +511,30 @@ mod tests {
         // worker 0 now full: 2+2=4; another (1,0) fails on worker 0
         assert!(!pool.try_reserve(&[1, 0]));
         assert!((pool.utilization() - 7.0 / 8.0).abs() < 1e-12);
-        pool.release(&a);
+        pool.release(&a).unwrap();
         assert!(pool.try_reserve(&[1, 0]));
         // oversized request can never fit
         assert!(!pool.fits_capacity(&[5, 0]));
     }
 
     #[test]
-    #[should_panic]
-    fn page_pool_over_release_panics() {
-        let mut pool = PagePool::new(1, 2);
-        pool.release(&[1]);
+    fn page_pool_over_release_errors_and_clamps() {
+        // Regression (ISSUE 2): over-release used to panic ("releasing more
+        // pages than reserved"), so a double-retire in the batcher would
+        // kill the serving loop. It now degrades gracefully: Err + clamp.
+        let mut pool = PagePool::new(2, 4);
+        assert!(pool.try_reserve(&[2, 1]));
+        let e = pool.release(&[3, 1]);
+        assert!(e.is_err(), "over-release must report an error");
+        assert!(e.unwrap_err().to_string().contains("over-release"));
+        // Clamped, never negative; the legal part of the release applied.
+        assert_eq!(pool.used_pages(0), 0);
+        assert_eq!(pool.used_pages(1), 0);
+        // The pool stays fully usable afterwards.
+        assert!(pool.try_reserve(&[4, 4]));
+        assert!((pool.utilization() - 1.0).abs() < 1e-12);
+        // Releasing with a wrong-width vector is also an error, not a panic.
+        assert!(pool.release(&[1]).is_err());
     }
 
     #[test]

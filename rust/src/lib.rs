@@ -27,6 +27,7 @@ pub mod gpumodel;
 pub mod kvcache;
 pub mod model;
 pub mod netsim;
+pub mod planner;
 pub mod runtime;
 pub mod ser;
 pub mod serve;

@@ -41,7 +41,8 @@ impl Default for ExecutorConfig {
             n_workers: 4,
             page_size: 16,
             strategy: Strategy::Tree,
-            allreduce: AllReduceAlgo::TwoLevel { inter_fanout: 2 },
+            // Planner-resolved per payload (see `crate::planner`).
+            allreduce: AllReduceAlgo::Auto,
             wire_bpe: 2,
         }
     }

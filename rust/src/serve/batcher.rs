@@ -121,7 +121,10 @@ impl Default for BatcherConfig {
             max_batch: 8,
             page_size: 16,
             pages_per_worker: 4096,
-            algo: AllReduceAlgo::TwoLevel { inter_fanout: 2 },
+            // Topology-aware by default: the planner prices ring vs k-ary
+            // tree vs two-level for the round's actual fused payload, so
+            // the batcher re-plans when batch width crosses a crossover.
+            algo: AllReduceAlgo::Auto,
             wire_bpe: 2,
             seed: 0xBA7C4,
         }
@@ -249,7 +252,13 @@ impl TreeBatcher {
             while i < active.len() {
                 if active[i].tokens.len() >= active[i].req.max_new_tokens {
                     let a = active.remove(i);
-                    pool.release(&a.reserved);
+                    if let Err(e) = pool.release(&a.reserved) {
+                        // A double-retire must not take down the serving
+                        // loop (the pool already clamped its counters); it
+                        // IS a scheduler bug, so fail loudly in tests.
+                        crate::tlog!(Error, "request {}: {e:#}", a.req.id);
+                        debug_assert!(false, "request {}: {e:#}", a.req.id);
+                    }
                     let now = cluster.world.max_clock();
                     // TTFT/total are measured from SUBMISSION (run start —
                     // all requests arrive together), so queueing delay from
@@ -423,6 +432,10 @@ impl TreeBatcher {
     /// single-request [`tree_decode`] with the identical synthetic streams
     /// and cache layout. With full-buffer collectives (`Tree`/`TwoLevel`)
     /// the batched scheduler must reproduce these outputs bit-for-bit.
+    /// (Under `AllReduceAlgo::Auto` the planner may resolve the batched and
+    /// solo payloads to different algorithms — exactness then holds to fp
+    /// tolerance, like `Ring`; pin a fixed full-buffer algorithm when
+    /// bit-identity matters.)
     pub fn replay_single(
         &self,
         cluster: &mut VirtualCluster,
@@ -606,6 +619,30 @@ mod tests {
             let mut c2 = VirtualCluster::new(flat(4));
             let solo = b.replay_single(&mut c2, &ComputeBackend::Oracle, r).unwrap();
             assert_eq!(batched.outputs, solo, "request {} outputs must be bit-identical", r.id);
+        }
+    }
+
+    #[test]
+    fn batcher_serves_under_auto_planner() {
+        // The default config now plans the collective per round; a full
+        // serve run must complete and stay exact to the solo replay within
+        // fp tolerance (Auto may pick a segmented schedule for the batch).
+        let shape = AttnShape::new(1, 4, 2, 8);
+        let b = TreeBatcher::new(shape, 0.3, BatcherConfig { max_batch: 4, seed: 42, ..Default::default() });
+        assert_eq!(b.cfg.algo, AllReduceAlgo::Auto, "serving defaults to the planner");
+        let mut cluster = VirtualCluster::new(flat(4));
+        let reqs = vec![req(0, 13, 4), req(1, 29, 4), req(2, 7, 4)];
+        let (results, metrics) = b.run(&mut cluster, &ComputeBackend::Oracle, reqs.clone()).unwrap();
+        assert_eq!(metrics.completed, 3);
+        for r in &reqs {
+            let batched = results.iter().find(|x| x.id == r.id).unwrap();
+            let mut c2 = VirtualCluster::new(flat(4));
+            let solo = b.replay_single(&mut c2, &ComputeBackend::Oracle, r).unwrap();
+            assert_eq!(batched.outputs.len(), solo.len());
+            for (t, (bo, so)) in batched.outputs.iter().zip(&solo).enumerate() {
+                let d = crate::attnmath::max_abs_diff(bo, so);
+                assert!(d < 1e-4, "request {} token {t}: diff {d}", r.id);
+            }
         }
     }
 

@@ -3,9 +3,18 @@
 //! (unavailable offline) with an explicit, inspectable implementation.
 
 /// Summary statistics over a sample of f64 observations.
+///
+/// NaN policy: NaN samples are *excluded* from every statistic and counted
+/// in [`Summary::nan`]. A NaN observation is a producer bug (e.g. a 0/0 in
+/// a rate computation), but serving metrics must never take down the
+/// batcher over one — pre-fix, a single NaN panicked inside the percentile
+/// sort's `partial_cmp().unwrap()`.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Summary {
+    /// Number of finite-or-infinite (non-NaN) samples summarized.
     pub n: usize,
+    /// Number of NaN samples that were dropped.
+    pub nan: usize,
     pub mean: f64,
     /// Sample standard deviation (n-1 denominator); 0 for n < 2.
     pub std: f64,
@@ -19,23 +28,27 @@ pub struct Summary {
 }
 
 impl Summary {
-    /// Compute a summary; returns a zeroed summary for an empty sample.
+    /// Compute a summary; returns a zeroed summary for an empty (or all-NaN)
+    /// sample. NaN samples are dropped and counted (see the NaN policy on
+    /// the type).
     pub fn of(xs: &[f64]) -> Summary {
-        if xs.is_empty() {
-            return Summary { n: 0, mean: 0.0, std: 0.0, stderr: 0.0, min: 0.0, max: 0.0, p50: 0.0, p90: 0.0, p99: 0.0 };
+        let mut sorted: Vec<f64> = xs.iter().copied().filter(|x| !x.is_nan()).collect();
+        let nan = xs.len() - sorted.len();
+        if sorted.is_empty() {
+            return Summary { n: 0, nan, mean: 0.0, std: 0.0, stderr: 0.0, min: 0.0, max: 0.0, p50: 0.0, p90: 0.0, p99: 0.0 };
         }
-        let n = xs.len();
-        let mean = xs.iter().sum::<f64>() / n as f64;
+        let n = sorted.len();
+        let mean = sorted.iter().sum::<f64>() / n as f64;
         let var = if n > 1 {
-            xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64
+            sorted.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64
         } else {
             0.0
         };
         let std = var.sqrt();
-        let mut sorted = xs.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_by(|a, b| a.total_cmp(b));
         Summary {
             n,
+            nan,
             mean,
             std,
             stderr: std / (n as f64).sqrt(),
@@ -176,6 +189,31 @@ mod tests {
         assert_eq!(s.mean, 7.0);
         assert_eq!(s.std, 0.0);
         assert_eq!(s.p99, 7.0);
+    }
+
+    #[test]
+    fn summary_filters_nan_without_panicking() {
+        // Regression (ISSUE 2): pre-fix this panicked in the percentile
+        // sort's `partial_cmp().unwrap()`; serving metrics must survive a
+        // stray NaN sample.
+        let s = Summary::of(&[1.0, f64::NAN, 3.0, f64::NAN, 5.0]);
+        assert_eq!(s.n, 3);
+        assert_eq!(s.nan, 2);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert!((s.p50 - 3.0).abs() < 1e-12);
+
+        // All-NaN degrades to the zeroed summary, with the drop count kept.
+        let all = Summary::of(&[f64::NAN, f64::NAN]);
+        assert_eq!(all.n, 0);
+        assert_eq!(all.nan, 2);
+        assert_eq!(all.mean, 0.0);
+
+        // NaN-free samples are unaffected by the filter.
+        let clean = Summary::of(&[2.0, 4.0]);
+        assert_eq!(clean.nan, 0);
+        assert_eq!(clean.n, 2);
     }
 
     #[test]

@@ -78,7 +78,7 @@ fn all_algos_reduce_identically_for_p_1_to_16() {
                 }
             }
             let mut w = world(nodes, gpn);
-            allreduce(&mut w, algo, &mut bufs, &SumOp, 2);
+            allreduce(&mut w, algo, &mut bufs, &SumOp, 2).unwrap();
             for (r, b) in bufs.iter().enumerate() {
                 let d = max_abs_diff(b, &expect);
                 assert!(
@@ -106,7 +106,7 @@ fn send_sets_conflict_free_for_p_1_to_16() {
             assert_conflict_free(&ring_allreduce_schedule(p, nblocks), "ring");
             for fanout in [2usize, 3, 4, 8] {
                 assert_conflict_free(
-                    &tree_allreduce_schedule(p, nblocks, fanout),
+                    &tree_allreduce_schedule(p, nblocks, fanout).unwrap(),
                     &format!("tree{fanout} p={p}"),
                 );
             }
@@ -129,7 +129,7 @@ fn send_sets_conflict_free_for_p_1_to_16() {
                 );
                 for inter_fanout in [2usize, 4] {
                     assert_conflict_free(
-                        &two_level_allreduce_schedule(&topo, nblocks, inter_fanout),
+                        &two_level_allreduce_schedule(&topo, nblocks, inter_fanout).unwrap(),
                         &format!("twolevel{inter_fanout} {nodes}x{gpn}"),
                     );
                 }
@@ -158,10 +158,11 @@ fn random_worlds_reduce_identically_prop() {
             AllReduceAlgo::Ring,
             AllReduceAlgo::Tree { fanout: g.usize_in(2..9) },
             AllReduceAlgo::TwoLevel { inter_fanout: 2 },
+            AllReduceAlgo::Auto,
         ] {
             let mut bufs = mk_bufs(seed);
             let mut w = world(nodes, gpn);
-            let stats = allreduce(&mut w, algo, &mut bufs, &SumOp, 2);
+            let stats = allreduce(&mut w, algo, &mut bufs, &SumOp, 2).unwrap();
             // every rank converged to the same buffer
             for r in 1..p {
                 assert!(max_abs_diff(&bufs[r], &bufs[0]) < 1e-4, "{} rank {r}", algo.name());
@@ -174,5 +175,6 @@ fn random_worlds_reduce_identically_prop() {
         }
         assert!(max_abs_diff(&outs[0], &outs[1]) < 1e-4, "ring vs tree");
         assert!(max_abs_diff(&outs[0], &outs[2]) < 1e-4, "ring vs twolevel");
+        assert!(max_abs_diff(&outs[0], &outs[3]) < 1e-4, "ring vs auto (planner-resolved)");
     });
 }

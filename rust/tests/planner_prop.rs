@@ -1,0 +1,119 @@
+//! End-to-end properties of the topology-aware collective planner
+//! (`AllReduceAlgo::Auto`), exercised through the *public* decode path:
+//!
+//!   1. `tree_decode` under `Auto` is exact (matches the oracle) on every
+//!      hardware preset and world size 1..=16, including non-powers-of-two;
+//!   2. `Auto` is indistinguishable from running the planner's resolved
+//!      fixed algorithm directly — same outputs bit-for-bit, same simulated
+//!      latency (the cost-model minimality of that choice is property-
+//!      tested in `planner::tests::auto_never_worse_than_best_fixed_prop`;
+//!      here we pin the end-to-end plumbing);
+//!   3. plans respond to payload size: on a multi-node DGX the planner must
+//!      not pick the ring for a decode-sized payload, and must pick the
+//!      ring once the payload is tens of megabytes (the Fig. 3 crossover).
+
+use tree_attention::attention::{tree_decode, ComputeBackend, ShardKv};
+use tree_attention::attnmath::{max_abs_diff, ref_attention, AttnShape};
+use tree_attention::cluster::VirtualCluster;
+use tree_attention::collectives::AllReduceAlgo;
+use tree_attention::gpumodel::GpuKind;
+use tree_attention::planner::{
+    candidate_algos, plan_for, preset_link_personalities, resolve, PlanRequest,
+};
+use tree_attention::topology::Topology;
+use tree_attention::util::prop::check;
+use tree_attention::util::Rng;
+
+fn decode_with(
+    topo: &Topology,
+    algo: AllReduceAlgo,
+    shape: AttnShape,
+    q: &[f32],
+    ks: &[Vec<f32>],
+    vs: &[Vec<f32>],
+    lens: &[usize],
+) -> (Vec<f32>, f64) {
+    let shards: Vec<ShardKv> = (0..lens.len())
+        .map(|i| ShardKv { k: &ks[i], v: &vs[i], len: lens[i] })
+        .collect();
+    let mut cluster = VirtualCluster::new(topo.clone());
+    let out = tree_decode(&mut cluster, &ComputeBackend::Oracle, shape, 0.25, q, &shards, algo, 2)
+        .unwrap();
+    (out.out, out.stats.sim_time)
+}
+
+#[test]
+fn auto_decode_exact_and_equals_resolved_algorithm_prop() {
+    check("auto decode ≡ resolved fixed algorithm across presets", 30, |g| {
+        let (name, intra, inter) = *g.choose(&preset_link_personalities());
+        let p = g.usize_in(1..17);
+        let divisors: Vec<usize> = (1..=p).filter(|d| p % d == 0).collect();
+        let nodes = *g.choose(&divisors);
+        let topo = Topology::custom(
+            &format!("{name}-{nodes}x{}", p / nodes),
+            nodes,
+            p / nodes,
+            GpuKind::H100,
+            intra,
+            inter,
+        );
+        let shape = AttnShape::new(1, 4, 2, 16);
+        let lens: Vec<usize> = (0..p).map(|_| g.usize_in(0..40)).collect();
+        if lens.iter().sum::<usize>() == 0 {
+            return;
+        }
+        let mut rng = Rng::seed(g.rng().next_u64());
+        let row = shape.kv_heads * shape.d_head;
+        let q = rng.normal_vec(shape.q_elems(), 1.0);
+        let ks: Vec<Vec<f32>> = lens.iter().map(|&l| rng.normal_vec(l * row, 1.0)).collect();
+        let vs: Vec<Vec<f32>> = lens.iter().map(|&l| rng.normal_vec(l * row, 1.0)).collect();
+
+        // Exactness: Auto matches the single-device oracle.
+        let (auto_out, auto_t) = decode_with(&topo, AllReduceAlgo::Auto, shape, &q, &ks, &vs, &lens);
+        let k_all: Vec<f32> = ks.concat();
+        let v_all: Vec<f32> = vs.concat();
+        let reference = ref_attention(shape, &q, &k_all, &v_all, lens.iter().sum(), 0.25);
+        let d = max_abs_diff(&auto_out, &reference);
+        assert!(d < 1e-4, "{name} {nodes}x{}: auto diverges by {d}", p / nodes);
+
+        // Auto must behave EXACTLY like the algorithm the planner resolved
+        // it to: identical outputs bit-for-bit and identical simulated time.
+        // (The fused wire has shape.batch * n_heads blocks of d_head + 2
+        // elements — the same tuple tree_decode hands the planner.)
+        let resolved = resolve(
+            AllReduceAlgo::Auto,
+            &topo,
+            shape.batch * shape.n_heads,
+            shape.d_head + 2,
+            2,
+        );
+        assert!(!resolved.is_auto());
+        assert!(
+            candidate_algos(&topo).contains(&resolved) || p <= 1,
+            "{name}: resolved {} must come from the candidate set",
+            resolved.name()
+        );
+        let (fixed_out, fixed_t) = decode_with(&topo, resolved, shape, &q, &ks, &vs, &lens);
+        assert_eq!(auto_out, fixed_out, "{name}: auto must equal {} bit-for-bit", resolved.name());
+        assert!(
+            (auto_t - fixed_t).abs() <= 1e-15,
+            "{name}: auto time {auto_t} vs {} time {fixed_t}",
+            resolved.name()
+        );
+    });
+}
+
+#[test]
+fn planner_crossover_on_multi_node_dgx() {
+    let topo = Topology::h100_dgx(2);
+    // Decode-sized payload (one fused (n,d,m) wire for 16 heads, d_head
+    // 128): latency-bound, the ring's O(p) rounds must lose.
+    let small = plan_for(&topo, PlanRequest { nblocks: 16, block_elems: 130, wire_bpe: 2 });
+    assert_ne!(small.chosen, AllReduceAlgo::Ring, "small payload picked {}", small.chosen.name());
+    // ~17 MB payload: bandwidth-bound, the ring's 2(p-1)/p volume wins.
+    let big = plan_for(&topo, PlanRequest { nblocks: 16 * 4096, block_elems: 130, wire_bpe: 2 });
+    assert_eq!(big.chosen, AllReduceAlgo::Ring, "big payload picked {}", big.chosen.name());
+    // Every candidate was actually priced at both points.
+    assert_eq!(small.candidates.len(), candidate_algos(&topo).len());
+    assert_eq!(big.candidates.len(), candidate_algos(&topo).len());
+}
