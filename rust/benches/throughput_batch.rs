@@ -24,6 +24,7 @@ use tree_attention::cluster::VirtualCluster;
 use tree_attention::collectives::AllReduceAlgo;
 use tree_attention::ser::Json;
 use tree_attention::serve::{synthetic_decode_workload, BatcherConfig, TreeBatcher};
+use tree_attention::Strategy;
 use tree_attention::util::{fmt_secs, fmt_tokens};
 use tree_attention::Topology;
 
@@ -105,6 +106,7 @@ fn main() {
                 max_batch,
                 page_size: 16,
                 pages_per_worker: 4096,
+                strategy: Strategy::Tree,
                 algo: TWOLEVEL,
                 wire_bpe: 2,
                 seed: 7,
@@ -140,6 +142,7 @@ fn main() {
             max_batch: 4,
             page_size: 8,
             pages_per_worker: 1024,
+            strategy: Strategy::Tree,
             algo: AllReduceAlgo::Tree { fanout: 2 },
             wire_bpe: 2,
             seed: 11,

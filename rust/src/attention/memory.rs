@@ -33,6 +33,11 @@ impl MemoryModel {
             Strategy::Tree => 2 * b * t * d + 2 * b * d + 2 * b * nh,
             // everything gathered on one device
             Strategy::Single => 2 * b * (t * self.p_guess()) * d + 2 * b * d,
+            // Auto is a planner decision, not a memory footprint — callers
+            // must resolve it first (planner::resolve_strategy).
+            Strategy::Auto => {
+                panic!("resolve Strategy::Auto before querying the memory model")
+            }
         }
     }
 

@@ -7,12 +7,14 @@
 pub mod memory;
 pub mod ring;
 pub mod single;
+pub mod strategy;
 pub mod tree;
 
 pub use memory::{peak_memory_model, MemoryModel};
-pub use ring::ring_decode;
-pub use single::single_decode;
-pub use tree::{tree_decode, tree_decode_batch, tree_decode_unfused, BatchDecodeOutcome, BatchEntry};
+pub use ring::{ring_decode, ring_decode_batch};
+pub use single::{single_decode, single_decode_batch};
+pub use strategy::{strategy_impl, DecodeStrategy, RingStrategy, SingleStrategy, TreeStrategy};
+pub use tree::{tree_decode, tree_decode_batch, tree_decode_unfused};
 
 use crate::attnmath::{partial_from_chunk, AttnPartial, AttnShape};
 use crate::netsim::TrafficCounters;
@@ -158,6 +160,27 @@ pub struct DecodeStats {
 pub struct DecodeOutcome {
     /// `[n_heads * d_head]` f32.
     pub out: Vec<f32>,
+    /// Final softmax denominators, `[batch * n_heads]` — exposed so tests
+    /// can check strategy equivalence on the *un-normalized* state, not just
+    /// the quotient (two wrong (n, d) pairs can produce the right n/d).
+    pub den: Vec<f32>,
+    pub stats: DecodeStats,
+}
+
+/// One session's inputs to a batched decode round: its query and its view
+/// of the per-worker KV shards (one [`ShardKv`] per rank). Shared by every
+/// strategy's `decode_batch`.
+pub struct BatchEntry<'a> {
+    /// `[n_heads * d_head]` f32.
+    pub q: &'a [f32],
+    /// `shards[r]` — worker r's shard of THIS session's KV.
+    pub shards: Vec<ShardKv<'a>>,
+}
+
+/// Result of one batched decode round.
+pub struct BatchDecodeOutcome {
+    /// Per-session attention output, `[n_heads * d_head]` each.
+    pub outs: Vec<Vec<f32>>,
     pub stats: DecodeStats,
 }
 
@@ -169,6 +192,19 @@ mod tests {
     use crate::config::Strategy;
     use crate::topology::Topology;
     use crate::util::Rng;
+
+    /// A flat single-node H100 cluster — the standard strategy-test
+    /// topology (shared by the per-strategy test modules).
+    pub(crate) fn flat(p: usize) -> Topology {
+        Topology::custom(
+            "flat",
+            1,
+            p,
+            crate::gpumodel::GpuKind::H100,
+            crate::topology::LinkSpec::nvlink4(),
+            crate::topology::LinkSpec::infiniband_ndr(),
+        )
+    }
 
     pub(crate) fn random_shards(
         rng: &mut Rng,
@@ -196,6 +232,44 @@ mod tests {
         crate::attnmath::ref_attention(shape, q, &k_all, &v_all, t, scale)
     }
 
+    /// Build a batch of sessions with heterogeneous per-worker shard
+    /// lengths — shared by the tree/ring batched-decode tests.
+    pub(crate) fn random_batch(
+        rng: &mut Rng,
+        shape: AttnShape,
+        session_lens: &[Vec<usize>],
+    ) -> (Vec<Vec<f32>>, Vec<Vec<Vec<f32>>>, Vec<Vec<Vec<f32>>>) {
+        let row = shape.kv_heads * shape.d_head;
+        let mut qs = Vec::new();
+        let mut ks = Vec::new();
+        let mut vs = Vec::new();
+        for lens in session_lens {
+            qs.push(rng.normal_vec(shape.q_elems(), 1.0));
+            ks.push(lens.iter().map(|&l| rng.normal_vec(l * row, 1.0)).collect::<Vec<_>>());
+            vs.push(lens.iter().map(|&l| rng.normal_vec(l * row, 1.0)).collect::<Vec<_>>());
+        }
+        (qs, ks, vs)
+    }
+
+    /// Per-session [`BatchEntry`] views over `random_batch` output.
+    pub(crate) fn entries_of<'a>(
+        session_lens: &[Vec<usize>],
+        qs: &'a [Vec<f32>],
+        ks: &'a [Vec<Vec<f32>>],
+        vs: &'a [Vec<Vec<f32>>],
+    ) -> Vec<BatchEntry<'a>> {
+        session_lens
+            .iter()
+            .enumerate()
+            .map(|(s, lens)| BatchEntry {
+                q: &qs[s],
+                shards: (0..lens.len())
+                    .map(|w| ShardKv { k: &ks[s][w], v: &vs[s][w], len: lens[w] })
+                    .collect(),
+            })
+            .collect()
+    }
+
     fn run_strategy(
         strat: Strategy,
         topo: Topology,
@@ -209,7 +283,7 @@ mod tests {
         let shards: Vec<ShardKv> = (0..lens.len())
             .map(|i| ShardKv { k: &ks[i], v: &vs[i], len: lens[i] })
             .collect();
-        let mut cluster = VirtualCluster::new(topo);
+        let mut cluster = VirtualCluster::new(topo.clone());
         let backend = ComputeBackend::Oracle;
         let outcome = match strat {
             Strategy::Tree => tree_decode(
@@ -223,6 +297,16 @@ mod tests {
             Strategy::Single => {
                 single_decode(&mut cluster, &backend, shape, scale, &q, &shards, 2).unwrap()
             }
+            Strategy::Auto => {
+                let ctx: usize = lens.iter().sum();
+                let resolved = crate::planner::resolve_strategy(
+                    Strategy::Auto,
+                    &topo,
+                    crate::planner::StrategyRequest::for_shape(shape, 1, ctx.max(1), 2),
+                );
+                assert!(!resolved.is_auto(), "planner must resolve Auto");
+                return run_strategy(resolved, topo, lens, seed);
+            }
         };
         let reference = reference_of(shape, scale, &q, &ks, &vs, lens);
         (outcome.out, reference, outcome.stats)
@@ -234,7 +318,7 @@ mod tests {
         // identical activations.
         let topo = Topology::h100_dgx(1);
         let lens = [100usize, 37, 64, 0, 12, 80, 55, 9];
-        for strat in [Strategy::Tree, Strategy::Ring, Strategy::Single] {
+        for strat in [Strategy::Tree, Strategy::Ring, Strategy::Single, Strategy::Auto] {
             let (out, reference, _) = run_strategy(strat, topo.clone(), &lens, 99);
             let d = crate::attnmath::max_abs_diff(&out, &reference);
             assert!(d < 1e-4, "{}: diff {d}", strat.name());
@@ -311,14 +395,7 @@ mod tests {
                 return;
             }
             let seed = g.rng().next_u64();
-            let topo = Topology::custom(
-                "flat",
-                1,
-                p,
-                crate::gpumodel::GpuKind::H100,
-                crate::topology::LinkSpec::nvlink4(),
-                crate::topology::LinkSpec::infiniband_ndr(),
-            );
+            let topo = flat(p);
             let (t, r1, _) = run_strategy(Strategy::Tree, topo.clone(), &lens, seed);
             let (r, _, _) = run_strategy(Strategy::Ring, topo.clone(), &lens, seed);
             let (s, _, _) = run_strategy(Strategy::Single, topo, &lens, seed);

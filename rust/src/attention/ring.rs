@@ -13,9 +13,17 @@
 //! wire. In decode there is (almost) nothing to hide the transfer behind:
 //! the per-chunk GEMV takes O(10⁻⁵) s while the transfer takes O(10⁻³) s
 //! (paper §6.3), which `overlap = true` demonstrates quantitatively.
+//!
+//! Zero-length shards are first-class: a worker holding an empty chunk
+//! skips the flash launch and the combine (bit-neutral — the combine
+//! identity), and an empty chunk in flight sends no bytes, pays no α, and
+//! counts no message — but the *rotation* still happens, so uneven and
+//! sparse shardings stay exact. [`ring_decode_batch`] fuses B sessions into
+//! one per-hop exchange (one message per worker per step regardless of B)
+//! and is bit-identical to decoding each session alone.
 
-use super::{ComputeBackend, DecodeOutcome, DecodeStats, ShardKv};
-use crate::attnmath::{AttnPartial, AttnShape};
+use super::{BatchDecodeOutcome, BatchEntry, ComputeBackend, DecodeOutcome, DecodeStats, ShardKv};
+use crate::attnmath::{batched_shape, AttnPartial, AttnShape};
 use crate::cluster::VirtualCluster;
 use crate::collectives::broadcast_schedule;
 
@@ -81,15 +89,17 @@ pub fn ring_decode(
         let mut arrivals = vec![f64::NEG_INFINITY; p];
         // Overlap: post the forward-send before computing.
         if overlap && !last {
-            for w in 0..p {
-                let bytes = 2 * (held[w].2 * row) as u64 * wire_bpe;
-                let arr = cluster.world.net.transfer(w, (w + 1) % p, bytes, cluster.world.clocks[w]);
-                arrivals[(w + 1) % p] = arr;
-            }
+            post_rotation(cluster, &held, row, wire_bpe, &mut arrivals);
         }
         // Local compute: fold the currently-held chunk into the accumulator.
+        // Empty chunks skip the launch AND the combine — combining with the
+        // identity partial is bit-neutral, so skipping preserves exactness
+        // while charging no spurious kernel launch.
         for w in 0..p {
             let (k, v, len) = &held[w];
+            if *len == 0 {
+                continue;
+            }
             let t_comp =
                 cluster.gpu.decode_attention_time(shape.batch, *len, shape.kv_heads, shape.d_head);
             cluster.world.compute(w, t_comp);
@@ -99,11 +109,7 @@ pub fn ring_decode(
         // Rotate chunks for the next step.
         if !last {
             if !overlap {
-                for w in 0..p {
-                    let bytes = 2 * (held[w].2 * row) as u64 * wire_bpe;
-                    let arr = cluster.world.net.transfer(w, (w + 1) % p, bytes, cluster.world.clocks[w]);
-                    arrivals[(w + 1) % p] = arr;
-                }
+                post_rotation(cluster, &held, row, wire_bpe, &mut arrivals);
             }
             for w in 0..p {
                 if cluster.world.clocks[w] < arrivals[w] {
@@ -116,6 +122,7 @@ pub fn ring_decode(
     }
 
     let result = accs[0].finalize();
+    let den = accs[0].den.clone();
     let t1 = cluster.world.barrier();
 
     for w in 0..p {
@@ -131,6 +138,163 @@ pub fn ring_decode(
 
     Ok(DecodeOutcome {
         out: result,
+        den,
+        stats: DecodeStats {
+            sim_time: t1 - t0,
+            comm_steps: steps,
+            traffic: cluster.world.net.counters().since(&before_traffic),
+            peak_transient_bytes: cluster.mem.max_peak(),
+        },
+    })
+}
+
+/// Post one rotation hop: every worker forwards its held chunk to its ring
+/// neighbour. Empty chunks move no bytes — no α charge, no message counted —
+/// but the logical rotation still advances (the caller rotates `held`).
+fn post_rotation(
+    cluster: &mut VirtualCluster,
+    held: &[(Vec<f32>, Vec<f32>, usize)],
+    row: usize,
+    wire_bpe: u64,
+    arrivals: &mut [f64],
+) {
+    let p = held.len();
+    for w in 0..p {
+        let bytes = 2 * (held[w].2 * row) as u64 * wire_bpe;
+        if bytes == 0 {
+            continue;
+        }
+        let arr = cluster.world.net.transfer(w, (w + 1) % p, bytes, cluster.world.clocks[w]);
+        arrivals[(w + 1) % p] = arr;
+    }
+}
+
+/// Batched ring-attention decode: ONE rotation round for B concurrent
+/// sessions with heterogeneous sequence lengths.
+///
+/// Per hop, each worker forwards ALL B of its resident session chunks as a
+/// single fused message (one α, one message — the ring counterpart of the
+/// fused `(n, d, m)` AllReduce in [`super::tree_decode_batch`]) and runs one
+/// fused flash launch over every non-empty chunk it holds. The per-session
+/// accumulators fold chunks in exactly the order the single-session
+/// [`ring_decode`] does, so the batched outputs are BIT-IDENTICAL to
+/// decoding each session alone — ring is comparable to batched tree decode
+/// under serving load, not just single-shot.
+pub fn ring_decode_batch(
+    cluster: &mut VirtualCluster,
+    backend: &ComputeBackend,
+    shape: AttnShape,
+    scale: f32,
+    entries: &[BatchEntry<'_>],
+    wire_bpe: u64,
+    overlap: bool,
+) -> anyhow::Result<BatchDecodeOutcome> {
+    let p = cluster.world_size();
+    let b = entries.len();
+    anyhow::ensure!(shape.batch == 1, "per-session shape must have batch 1");
+    anyhow::ensure!(b >= 1, "empty batch");
+    for (s, e) in entries.iter().enumerate() {
+        anyhow::ensure!(e.shards.len() == p, "session {s}: need one shard per worker ({p})");
+        anyhow::ensure!(e.q.len() == shape.q_elems(), "session {s}: q length");
+    }
+    let bshape = batched_shape(shape, b);
+
+    let before_traffic = cluster.world.net.counters();
+    let t0 = cluster.world.barrier();
+
+    // -- broadcast the stacked queries (one binomial tree) -----------------
+    let q_bytes = (bshape.q_elems() as u64) * wire_bpe;
+    let bsched = broadcast_schedule(p, 0, 1);
+    let mut steps = bsched.n_steps();
+    for step in &bsched.steps {
+        for op in step {
+            cluster.world.send(op.src, op.dst, q_bytes);
+        }
+    }
+
+    let row = shape.kv_heads * shape.d_head;
+    // Rotation moves ownership, not host bytes: at step s, worker w holds
+    // the chunks originally owned by rank (w − s) mod p. The simulator
+    // charges the wire for every hop; the host never copies the KV (the
+    // chunks are read-only), so serving rounds stay allocation-light even
+    // at large B × ctx.
+    let fused_bytes_of = |o: usize| -> u64 {
+        entries.iter().map(|e| 2 * (e.shards[o].len * row) as u64 * wire_bpe).sum()
+    };
+    let max_chunk_bytes = (0..p).map(&fused_bytes_of).max().unwrap_or(0);
+    let out_bytes = (bshape.q_elems() as u64) * wire_bpe;
+    for w in 0..p {
+        cluster.mem.alloc(w, max_chunk_bytes + q_bytes + out_bytes);
+    }
+
+    let qs: Vec<&[f32]> = entries.iter().map(|e| e.q).collect();
+    let mut accs: Vec<Vec<AttnPartial>> = vec![vec![AttnPartial::identity(shape); b]; p];
+
+    for step in 0..p {
+        let last = step == p - 1;
+        // Original owner of the chunks worker w holds at this step.
+        let owner = |w: usize| (w + p - step % p) % p;
+        let mut arrivals = vec![f64::NEG_INFINITY; p];
+        if overlap && !last {
+            for w in 0..p {
+                let bytes = fused_bytes_of(owner(w));
+                if bytes > 0 {
+                    let arr =
+                        cluster.world.net.transfer(w, (w + 1) % p, bytes, cluster.world.clocks[w]);
+                    arrivals[(w + 1) % p] = arr;
+                }
+            }
+        }
+        for w in 0..p {
+            let o = owner(w);
+            let total_len: usize = entries.iter().map(|e| e.shards[o].len).sum();
+            if total_len > 0 {
+                // One fused flash launch over all resident session chunks.
+                let t_comp =
+                    cluster.gpu.decode_attention_time(1, total_len, shape.kv_heads, shape.d_head);
+                cluster.world.compute(w, t_comp);
+            }
+            let kvs: Vec<ShardKv<'_>> = entries.iter().map(|e| e.shards[o]).collect();
+            let parts = backend.partial_batch(shape, scale, &qs, &kvs)?;
+            for (s, part) in parts.iter().enumerate() {
+                // Same skip rule as the single-session path: empty chunks
+                // never touch the accumulator (bit-neutral either way).
+                if entries[s].shards[o].len > 0 {
+                    accs[w][s].combine(part);
+                }
+            }
+        }
+        if !last {
+            if !overlap {
+                for w in 0..p {
+                    let bytes = fused_bytes_of(owner(w));
+                    if bytes > 0 {
+                        let arr = cluster
+                            .world
+                            .net
+                            .transfer(w, (w + 1) % p, bytes, cluster.world.clocks[w]);
+                        arrivals[(w + 1) % p] = arr;
+                    }
+                }
+            }
+            for w in 0..p {
+                if cluster.world.clocks[w] < arrivals[w] {
+                    cluster.world.clocks[w] = arrivals[w];
+                }
+            }
+            steps += 1;
+        }
+    }
+
+    let outs: Vec<Vec<f32>> = accs[0].iter().map(|a| a.finalize()).collect();
+    let t1 = cluster.world.barrier();
+
+    for w in 0..p {
+        cluster.mem.free(w, max_chunk_bytes + q_bytes + out_bytes);
+    }
+
+    Ok(BatchDecodeOutcome {
+        outs,
         stats: DecodeStats {
             sim_time: t1 - t0,
             comm_steps: steps,
@@ -142,20 +306,9 @@ pub fn ring_decode(
 
 #[cfg(test)]
 mod tests {
+    use super::super::tests::flat;
     use super::*;
-    use crate::topology::Topology;
     use crate::util::Rng;
-
-    fn flat(p: usize) -> Topology {
-        Topology::custom(
-            "flat",
-            1,
-            p,
-            crate::gpumodel::GpuKind::H100,
-            crate::topology::LinkSpec::nvlink4(),
-            crate::topology::LinkSpec::infiniband_ndr(),
-        )
-    }
 
     #[test]
     fn ring_steps_linear_in_p() {
@@ -211,5 +364,89 @@ mod tests {
         let mut c = VirtualCluster::new(flat(4));
         let o = ring_decode(&mut c, &ComputeBackend::Oracle, shape, 0.25, &q, &shards, 2, false).unwrap();
         assert!(crate::attnmath::max_abs_diff(&o.out, &reference) < 1e-4);
+    }
+
+    #[test]
+    fn empty_chunks_cost_no_messages_or_alpha() {
+        // Regression (ISSUE 3): an empty chunk in rotation used to post a
+        // zero-byte transfer — paying the link's α latency and counting a
+        // message — and charged a flash launch for nothing. With p = 4 and
+        // two empty shards, the rotation must move each NON-EMPTY chunk
+        // p − 1 times and nothing else.
+        let shape = AttnShape::new(1, 4, 2, 16);
+        let p = 4;
+        let lens = [5usize, 0, 7, 0];
+        let mut rng = Rng::seed(34);
+        let (q, ks, vs) = super::super::tests::random_shards(&mut rng, shape, &lens);
+        let shards: Vec<ShardKv> =
+            (0..p).map(|i| ShardKv { k: &ks[i], v: &vs[i], len: lens[i] }).collect();
+        let mut c = VirtualCluster::new(flat(p));
+        let o = ring_decode(&mut c, &ComputeBackend::Oracle, shape, 0.25, &q, &shards, 2, false).unwrap();
+        // Broadcast sends p - 1 q-copies; rotation sends 2 non-empty chunks
+        // × (p - 1) hops. Pre-fix this counted 4 × (p - 1) rotation messages.
+        let expected_msgs = (p as u64 - 1) + 2 * (p as u64 - 1);
+        assert_eq!(o.stats.traffic.total_msgs(), expected_msgs, "empty chunks must not be messages");
+        // Exactness is untouched by the skip.
+        let reference = super::super::tests::reference_of(shape, 0.25, &q, &ks, &vs, &lens);
+        assert!(crate::attnmath::max_abs_diff(&o.out, &reference) < 1e-4);
+    }
+
+    use super::super::tests::{entries_of, random_batch};
+
+    #[test]
+    fn batched_ring_bit_identical_to_single_loop() {
+        // The acceptance criterion: one fused per-hop exchange for B
+        // sessions produces per-session outputs BIT-IDENTICAL to running
+        // ring_decode on each session alone.
+        let shape = AttnShape::new(1, 8, 2, 32);
+        let scale = 1.0 / (32f32).sqrt();
+        let p = 8;
+        let session_lens: Vec<Vec<usize>> = vec![
+            vec![40, 25, 0, 61, 8, 90, 33, 77],
+            vec![3, 3, 3, 3, 3, 3, 3, 3],
+            vec![0, 0, 0, 128, 0, 0, 0, 0],
+        ];
+        let mut rng = Rng::seed(81);
+        let (qs, ks, vs) = random_batch(&mut rng, shape, &session_lens);
+        let entries = entries_of(&session_lens, &qs, &ks, &vs);
+        let mut cb = VirtualCluster::new(flat(p));
+        let batched =
+            ring_decode_batch(&mut cb, &ComputeBackend::Oracle, shape, scale, &entries, 2, false)
+                .unwrap();
+        assert_eq!(batched.outs.len(), session_lens.len());
+        for (s, lens) in session_lens.iter().enumerate() {
+            let shards: Vec<ShardKv> = (0..p)
+                .map(|w| ShardKv { k: &ks[s][w], v: &vs[s][w], len: lens[w] })
+                .collect();
+            let mut c1 = VirtualCluster::new(flat(p));
+            let single =
+                ring_decode(&mut c1, &ComputeBackend::Oracle, shape, scale, &qs[s], &shards, 2, false)
+                    .unwrap();
+            assert_eq!(batched.outs[s], single.out, "session {s} must be bit-identical");
+        }
+    }
+
+    #[test]
+    fn batched_ring_one_message_per_worker_per_hop() {
+        // The fused-exchange claim: rotation message count is independent of
+        // the batch width — only bytes grow with B.
+        let shape = AttnShape::new(1, 4, 2, 16);
+        let p = 4;
+        let lens = vec![8usize; p];
+        let mk = |b: usize| {
+            let session_lens: Vec<Vec<usize>> = vec![lens.clone(); b];
+            let mut rng = Rng::seed(82);
+            let (qs, ks, vs) = random_batch(&mut rng, shape, &session_lens);
+            let entries = entries_of(&session_lens, &qs, &ks, &vs);
+            let mut c = VirtualCluster::new(flat(p));
+            ring_decode_batch(&mut c, &ComputeBackend::Oracle, shape, 0.3, &entries, 2, false)
+                .unwrap()
+                .stats
+        };
+        let one = mk(1);
+        let eight = mk(8);
+        assert_eq!(one.comm_steps, eight.comm_steps, "same rounds");
+        assert_eq!(one.traffic.total_msgs(), eight.traffic.total_msgs(), "same message count");
+        assert!(eight.traffic.total_bytes() > one.traffic.total_bytes(), "bytes grow with B");
     }
 }

@@ -1,9 +1,11 @@
 //! Single-device decode baseline: gather every shard to rank 0, compute
 //! full attention there. Correctness anchor + the "what if we didn't shard"
 //! comparison point (usually memory-infeasible at paper scale, which is the
-//! whole reason sequence parallelism exists).
+//! whole reason sequence parallelism exists — the strategy planner prices
+//! it honestly and rules it out whenever the gathered KV would not fit on
+//! the leader GPU).
 
-use super::{ComputeBackend, DecodeOutcome, DecodeStats, ShardKv};
+use super::{BatchDecodeOutcome, BatchEntry, ComputeBackend, DecodeOutcome, DecodeStats, ShardKv};
 use crate::attnmath::AttnShape;
 use crate::cluster::VirtualCluster;
 
@@ -42,14 +44,97 @@ pub fn single_decode(
 
     let t_comp = cluster.gpu.decode_attention_time(shape.batch, total, shape.kv_heads, shape.d_head);
     cluster.world.compute(0, t_comp);
-    let out = backend
-        .partial(shape, scale, q, ShardKv { k: &k_all, v: &v_all, len: total })?
-        .finalize();
+    let part = backend.partial(shape, scale, q, ShardKv { k: &k_all, v: &v_all, len: total })?;
+    let out = part.finalize();
     let t1 = cluster.world.barrier();
     cluster.mem.free(0, 2 * (total * row) as u64 * wire_bpe);
 
     Ok(DecodeOutcome {
         out,
+        den: part.den.clone(),
+        stats: DecodeStats {
+            sim_time: t1 - t0,
+            comm_steps: steps,
+            traffic: cluster.world.net.counters().since(&before_traffic),
+            peak_transient_bytes: cluster.mem.max_peak(),
+        },
+    })
+}
+
+/// Batched single-device decode: gather B sessions' shards to rank 0 with
+/// ONE fused message per worker, then one fused flash launch over every
+/// session on the leader. Bit-identical to looping [`single_decode`] per
+/// session (the concatenation order of each session's shards is the same).
+pub fn single_decode_batch(
+    cluster: &mut VirtualCluster,
+    backend: &ComputeBackend,
+    shape: AttnShape,
+    scale: f32,
+    entries: &[BatchEntry<'_>],
+    wire_bpe: u64,
+) -> anyhow::Result<BatchDecodeOutcome> {
+    let p = cluster.world_size();
+    let b = entries.len();
+    anyhow::ensure!(shape.batch == 1, "per-session shape must have batch 1");
+    anyhow::ensure!(b >= 1, "empty batch");
+    for (s, e) in entries.iter().enumerate() {
+        anyhow::ensure!(e.shards.len() == p, "session {s}: need one shard per worker ({p})");
+        anyhow::ensure!(e.q.len() == shape.q_elems(), "session {s}: q length");
+    }
+
+    let before_traffic = cluster.world.net.counters();
+    let t0 = cluster.world.barrier();
+
+    let row = shape.kv_heads * shape.d_head;
+    // Fused gather: worker w sends all B of its session chunks in one
+    // message. Workers holding nothing send nothing.
+    let mut steps = 0;
+    for w in 1..p {
+        let bytes: u64 =
+            entries.iter().map(|e| 2 * (e.shards[w].len * row) as u64 * wire_bpe).sum();
+        if bytes > 0 {
+            cluster.world.send(w, 0, bytes);
+            steps = 1;
+        }
+    }
+
+    // Concatenate each session's shards in worker order (identical to the
+    // per-session single_decode) and compute everything on the leader in
+    // one fused launch.
+    let mut k_alls: Vec<Vec<f32>> = Vec::with_capacity(b);
+    let mut v_alls: Vec<Vec<f32>> = Vec::with_capacity(b);
+    let mut lens: Vec<usize> = Vec::with_capacity(b);
+    let mut grand_total = 0usize;
+    for e in entries {
+        let mut k_all = Vec::new();
+        let mut v_all = Vec::new();
+        let mut total = 0usize;
+        for s in &e.shards {
+            k_all.extend_from_slice(s.k);
+            v_all.extend_from_slice(s.v);
+            total += s.len;
+        }
+        grand_total += total;
+        k_alls.push(k_all);
+        v_alls.push(v_all);
+        lens.push(total);
+    }
+    cluster.mem.alloc(0, 2 * (grand_total * row) as u64 * wire_bpe);
+
+    let t_comp =
+        cluster.gpu.decode_attention_time(1, grand_total, shape.kv_heads, shape.d_head);
+    cluster.world.compute(0, t_comp);
+    let qs: Vec<&[f32]> = entries.iter().map(|e| e.q).collect();
+    let kvs: Vec<ShardKv<'_>> = (0..b)
+        .map(|s| ShardKv { k: &k_alls[s], v: &v_alls[s], len: lens[s] })
+        .collect();
+    let parts = backend.partial_batch(shape, scale, &qs, &kvs)?;
+    let outs: Vec<Vec<f32>> = parts.iter().map(|part| part.finalize()).collect();
+    let t1 = cluster.world.barrier();
+    cluster.mem.free(0, 2 * (grand_total * row) as u64 * wire_bpe);
+
+    Ok(BatchDecodeOutcome {
+        outs,
         stats: DecodeStats {
             sim_time: t1 - t0,
             comm_steps: steps,
@@ -61,8 +146,8 @@ pub fn single_decode(
 
 #[cfg(test)]
 mod tests {
+    use super::super::tests::flat;
     use super::*;
-    use crate::topology::Topology;
     use crate::util::Rng;
 
     #[test]
@@ -74,19 +159,40 @@ mod tests {
         let shards: Vec<ShardKv> =
             (0..4).map(|i| ShardKv { k: &ks[i], v: &vs[i], len: lens[i] }).collect();
         let reference = super::super::tests::reference_of(shape, 0.5, &q, &ks, &vs, &lens);
-        let topo = Topology::custom(
-            "flat",
-            1,
-            4,
-            crate::gpumodel::GpuKind::H100,
-            crate::topology::LinkSpec::nvlink4(),
-            crate::topology::LinkSpec::infiniband_ndr(),
-        );
-        let mut c = VirtualCluster::new(topo);
+        let mut c = VirtualCluster::new(flat(4));
         let o = single_decode(&mut c, &ComputeBackend::Oracle, shape, 0.5, &q, &shards, 2).unwrap();
         assert!(crate::attnmath::max_abs_diff(&o.out, &reference) < 1e-5);
         // gather moved (20+30+40) tokens * row * 2 tensors * 2 bytes
         let row = shape.kv_heads * shape.d_head;
         assert_eq!(o.stats.traffic.total_bytes(), (90 * row * 2 * 2) as u64);
+    }
+
+    #[test]
+    fn batched_single_bit_identical_to_single_loop() {
+        let shape = AttnShape::new(1, 8, 2, 16);
+        let p = 4;
+        let session_lens: Vec<Vec<usize>> = vec![
+            vec![7, 0, 12, 3],
+            vec![1, 1, 1, 1],
+            vec![0, 40, 0, 0],
+        ];
+        let mut rng = Rng::seed(42);
+        let (qs, ks, vs) = super::super::tests::random_batch(&mut rng, shape, &session_lens);
+        let entries = super::super::tests::entries_of(&session_lens, &qs, &ks, &vs);
+        let mut cb = VirtualCluster::new(flat(p));
+        let batched =
+            single_decode_batch(&mut cb, &ComputeBackend::Oracle, shape, 0.3, &entries, 2).unwrap();
+        for (s, lens) in session_lens.iter().enumerate() {
+            let shards: Vec<ShardKv> = (0..p)
+                .map(|w| ShardKv { k: &ks[s][w], v: &vs[s][w], len: lens[w] })
+                .collect();
+            let mut c1 = VirtualCluster::new(flat(p));
+            let solo = single_decode(&mut c1, &ComputeBackend::Oracle, shape, 0.3, &qs[s], &shards, 2)
+                .unwrap();
+            assert_eq!(batched.outs[s], solo.out, "session {s} must be bit-identical");
+        }
+        // One fused gather message per non-leader worker that holds data:
+        // workers 1, 2, 3 all hold at least one session's rows.
+        assert_eq!(batched.stats.traffic.total_msgs(), 3);
     }
 }

@@ -1,0 +1,300 @@
+//! The `DecodeStrategy` trait — one interface over the paper's contribution
+//! (Tree Attention), its baseline (Ring Attention), and the single-device
+//! reference, so every layer above (model executor, serving batcher, CLI,
+//! benches) dispatches a *planned* strategy instead of hard-coding one.
+//!
+//! Each strategy provides:
+//!   * `decode`       — one session, one token (the `attention::*_decode`
+//!     free functions behind a uniform signature);
+//!   * `decode_batch` — B concurrent sessions in one fused round (one
+//!     collective launch / one per-hop exchange / one fused gather);
+//!   * `cost_model`   — the price of one batched decode round on a given
+//!     topology, cost-only (flash partial compute via the GPU roofline +
+//!     the strategy's communication schedule on the live α–β network).
+//!     This is what [`crate::planner`] argmins over for `Strategy::Auto`,
+//!     and exactly what `benches/strategy_ablation.rs` measures — so Auto
+//!     is equal to the best fixed strategy by construction.
+//!
+//! `Strategy::Auto` has no implementation here on purpose: the planner must
+//! resolve it against a concrete (topology, shape, batch, ctx) point first
+//! (see [`crate::planner::resolve_strategy`]), mirroring how
+//! `AllReduceAlgo::Auto` refuses a payload-free `schedule()`.
+
+use super::{
+    ring_decode, ring_decode_batch, single_decode, single_decode_batch, tree_decode,
+    tree_decode_batch, BatchDecodeOutcome, BatchEntry, ComputeBackend, DecodeOutcome, ShardKv,
+};
+use crate::attnmath::AttnShape;
+use crate::bench::papersim::{
+    sim_batched_ring_decode, sim_batched_single_decode, sim_batched_tree_decode,
+};
+use crate::cluster::VirtualCluster;
+use crate::collectives::AllReduceAlgo;
+use crate::config::Strategy;
+use crate::topology::Topology;
+
+/// A distributed decode strategy: single-session decode, fused batched
+/// decode, and a cost model for the planner. See the module docs.
+pub trait DecodeStrategy {
+    /// Stable display name (matches [`Strategy::name`]).
+    fn name(&self) -> &'static str;
+
+    /// Decode one token for one session over sharded KV.
+    fn decode(
+        &self,
+        cluster: &mut VirtualCluster,
+        backend: &ComputeBackend,
+        shape: AttnShape,
+        scale: f32,
+        q: &[f32],
+        shards: &[ShardKv<'_>],
+    ) -> anyhow::Result<DecodeOutcome>;
+
+    /// Decode one token for B sessions in one fused round.
+    fn decode_batch(
+        &self,
+        cluster: &mut VirtualCluster,
+        backend: &ComputeBackend,
+        shape: AttnShape,
+        scale: f32,
+        entries: &[BatchEntry<'_>],
+    ) -> anyhow::Result<BatchDecodeOutcome>;
+
+    /// Predicted seconds for ONE batched decode round: `batch` sessions,
+    /// each with `ctx` context tokens sharded over `topo`. Cost-only — no
+    /// tensor data moves; the planner calls this once per cache miss.
+    fn cost_model(&self, topo: &Topology, batch: usize, ctx: usize, shape: AttnShape) -> f64;
+}
+
+/// Tree Attention (paper Alg. 3): local flash partials + one fused
+/// `(n, d, m)` AllReduce, with a pluggable (or planner-chosen) collective.
+pub struct TreeStrategy {
+    pub algo: AllReduceAlgo,
+    pub wire_bpe: u64,
+}
+
+impl DecodeStrategy for TreeStrategy {
+    fn name(&self) -> &'static str {
+        Strategy::Tree.name()
+    }
+
+    fn decode(
+        &self,
+        cluster: &mut VirtualCluster,
+        backend: &ComputeBackend,
+        shape: AttnShape,
+        scale: f32,
+        q: &[f32],
+        shards: &[ShardKv<'_>],
+    ) -> anyhow::Result<DecodeOutcome> {
+        tree_decode(cluster, backend, shape, scale, q, shards, self.algo, self.wire_bpe)
+    }
+
+    fn decode_batch(
+        &self,
+        cluster: &mut VirtualCluster,
+        backend: &ComputeBackend,
+        shape: AttnShape,
+        scale: f32,
+        entries: &[BatchEntry<'_>],
+    ) -> anyhow::Result<BatchDecodeOutcome> {
+        tree_decode_batch(cluster, backend, shape, scale, entries, self.algo, self.wire_bpe)
+    }
+
+    fn cost_model(&self, topo: &Topology, batch: usize, ctx: usize, shape: AttnShape) -> f64 {
+        sim_batched_tree_decode(topo, batch, ctx, shape, self.wire_bpe, self.algo).sim_time
+    }
+}
+
+/// Ring Attention (Liu et al. 2023): rotate KV chunks around the ring; the
+/// batched variant fuses B sessions into one per-hop exchange.
+pub struct RingStrategy {
+    pub wire_bpe: u64,
+    /// Post each hop's send before computing (training-regime overlap);
+    /// decode serving uses `false` (§6.3: nothing to hide the transfer
+    /// behind).
+    pub overlap: bool,
+}
+
+impl DecodeStrategy for RingStrategy {
+    fn name(&self) -> &'static str {
+        Strategy::Ring.name()
+    }
+
+    fn decode(
+        &self,
+        cluster: &mut VirtualCluster,
+        backend: &ComputeBackend,
+        shape: AttnShape,
+        scale: f32,
+        q: &[f32],
+        shards: &[ShardKv<'_>],
+    ) -> anyhow::Result<DecodeOutcome> {
+        ring_decode(cluster, backend, shape, scale, q, shards, self.wire_bpe, self.overlap)
+    }
+
+    fn decode_batch(
+        &self,
+        cluster: &mut VirtualCluster,
+        backend: &ComputeBackend,
+        shape: AttnShape,
+        scale: f32,
+        entries: &[BatchEntry<'_>],
+    ) -> anyhow::Result<BatchDecodeOutcome> {
+        ring_decode_batch(cluster, backend, shape, scale, entries, self.wire_bpe, self.overlap)
+    }
+
+    fn cost_model(&self, topo: &Topology, batch: usize, ctx: usize, shape: AttnShape) -> f64 {
+        sim_batched_ring_decode(topo, batch, ctx, shape, self.wire_bpe, self.overlap).sim_time
+    }
+}
+
+/// Single-device baseline: gather everything to the leader and compute
+/// there. The planner additionally gates this on the gathered KV fitting in
+/// leader memory ([`crate::planner::single_gather_fits`]).
+pub struct SingleStrategy {
+    pub wire_bpe: u64,
+}
+
+impl DecodeStrategy for SingleStrategy {
+    fn name(&self) -> &'static str {
+        Strategy::Single.name()
+    }
+
+    fn decode(
+        &self,
+        cluster: &mut VirtualCluster,
+        backend: &ComputeBackend,
+        shape: AttnShape,
+        scale: f32,
+        q: &[f32],
+        shards: &[ShardKv<'_>],
+    ) -> anyhow::Result<DecodeOutcome> {
+        single_decode(cluster, backend, shape, scale, q, shards, self.wire_bpe)
+    }
+
+    fn decode_batch(
+        &self,
+        cluster: &mut VirtualCluster,
+        backend: &ComputeBackend,
+        shape: AttnShape,
+        scale: f32,
+        entries: &[BatchEntry<'_>],
+    ) -> anyhow::Result<BatchDecodeOutcome> {
+        single_decode_batch(cluster, backend, shape, scale, entries, self.wire_bpe)
+    }
+
+    fn cost_model(&self, topo: &Topology, batch: usize, ctx: usize, shape: AttnShape) -> f64 {
+        sim_batched_single_decode(topo, batch, ctx, shape, self.wire_bpe).sim_time
+    }
+}
+
+/// Build the [`DecodeStrategy`] implementation for a FIXED strategy
+/// selector. `Strategy::Auto` is an error here — resolve it first with
+/// [`crate::planner::resolve_strategy`] so the decision is priced against
+/// the actual (topology, shape, batch, ctx) point.
+pub fn strategy_impl(
+    strategy: Strategy,
+    algo: AllReduceAlgo,
+    wire_bpe: u64,
+) -> anyhow::Result<Box<dyn DecodeStrategy>> {
+    match strategy {
+        Strategy::Tree => Ok(Box::new(TreeStrategy { algo, wire_bpe })),
+        Strategy::Ring => Ok(Box::new(RingStrategy { wire_bpe, overlap: false })),
+        Strategy::Single => Ok(Box::new(SingleStrategy { wire_bpe })),
+        Strategy::Auto => anyhow::bail!(
+            "Strategy::Auto has no direct implementation; resolve it with \
+             planner::resolve_strategy(strategy, topology, request) so the planner can price \
+             the actual (shape, batch, ctx) point"
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::flat;
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn trait_dispatch_matches_free_functions() {
+        // The refactor contract: going through the trait object is the SAME
+        // code path as calling the free functions — bit-identical outputs.
+        let shape = AttnShape::new(1, 8, 4, 16);
+        let scale = 0.25;
+        let p = 4;
+        let lens = [30usize, 0, 17, 5];
+        let mut rng = Rng::seed(55);
+        let (q, ks, vs) = super::super::tests::random_shards(&mut rng, shape, &lens);
+        let shards: Vec<ShardKv> =
+            (0..p).map(|i| ShardKv { k: &ks[i], v: &vs[i], len: lens[i] }).collect();
+        let algo = AllReduceAlgo::Tree { fanout: 2 };
+
+        for strategy in [Strategy::Tree, Strategy::Ring, Strategy::Single] {
+            let imp = strategy_impl(strategy, algo, 2).unwrap();
+            assert_eq!(imp.name(), strategy.name());
+            let mut c1 = VirtualCluster::new(flat(p));
+            let via_trait =
+                imp.decode(&mut c1, &ComputeBackend::Oracle, shape, scale, &q, &shards).unwrap();
+            let mut c2 = VirtualCluster::new(flat(p));
+            let direct = match strategy {
+                Strategy::Tree => {
+                    tree_decode(&mut c2, &ComputeBackend::Oracle, shape, scale, &q, &shards, algo, 2)
+                        .unwrap()
+                }
+                Strategy::Ring => {
+                    ring_decode(&mut c2, &ComputeBackend::Oracle, shape, scale, &q, &shards, 2, false)
+                        .unwrap()
+                }
+                Strategy::Single => {
+                    single_decode(&mut c2, &ComputeBackend::Oracle, shape, scale, &q, &shards, 2)
+                        .unwrap()
+                }
+                Strategy::Auto => unreachable!(),
+            };
+            assert_eq!(via_trait.out, direct.out, "{}", strategy.name());
+            assert_eq!(via_trait.den, direct.den, "{} denominators", strategy.name());
+        }
+    }
+
+    #[test]
+    fn auto_has_no_direct_impl() {
+        let e = strategy_impl(Strategy::Auto, AllReduceAlgo::Auto, 2);
+        assert!(e.is_err());
+        assert!(e.unwrap_err().to_string().contains("resolve_strategy"));
+    }
+
+    #[test]
+    fn cost_model_tree_wins_at_scale() {
+        // Multi-node, long context: tree's O(log p) tiny-wire round must be
+        // far cheaper than rotating the whole KV (the paper's headline) and
+        // cheaper than gathering it to one device.
+        let shape = AttnShape::new(1, 32, 8, 128);
+        let topo = Topology::h100_dgx(4);
+        let tree = strategy_impl(Strategy::Tree, AllReduceAlgo::Auto, 2).unwrap();
+        let ring = strategy_impl(Strategy::Ring, AllReduceAlgo::Auto, 2).unwrap();
+        let single = strategy_impl(Strategy::Single, AllReduceAlgo::Auto, 2).unwrap();
+        let (b, ctx) = (8, 128_000);
+        let t = tree.cost_model(&topo, b, ctx, shape);
+        let r = ring.cost_model(&topo, b, ctx, shape);
+        let s = single.cost_model(&topo, b, ctx, shape);
+        assert!(t < r, "tree {t} must beat ring {r} at scale");
+        assert!(t < s, "tree {t} must beat single {s} at scale");
+    }
+
+    #[test]
+    fn cost_model_ring_wins_tiny_context_two_workers() {
+        // The other side of the crossover: p = 2 on a slow, high-α link with
+        // a tiny context. The ring does ONE rotation hop; the cheapest
+        // allreduce needs TWO rounds — so ring undercuts tree. This is the
+        // regime benches/strategy_ablation.rs must find.
+        let shape = AttnShape::new(1, 32, 8, 128);
+        let topo = Topology::rtx4090_pcie(2);
+        let tree = strategy_impl(Strategy::Tree, AllReduceAlgo::Auto, 2).unwrap();
+        let ring = strategy_impl(Strategy::Ring, AllReduceAlgo::Auto, 2).unwrap();
+        let (b, ctx) = (1, 8);
+        let t = tree.cost_model(&topo, b, ctx, shape);
+        let r = ring.cost_model(&topo, b, ctx, shape);
+        assert!(r < t, "ring {r} must beat tree {t} at tiny context on 2 PCIe workers");
+    }
+}

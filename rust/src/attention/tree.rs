@@ -14,7 +14,7 @@
 //! topology-aware) — §5.3's point is precisely that this collective can be
 //! made topology-aware, unlike Ring Attention's fixed P2P pattern.
 
-use super::{ComputeBackend, DecodeOutcome, DecodeStats, ShardKv};
+use super::{BatchDecodeOutcome, BatchEntry, ComputeBackend, DecodeOutcome, DecodeStats, ShardKv};
 use crate::attnmath::{batched_shape, AttnCombineOp, AttnPartial, AttnShape};
 use crate::cluster::VirtualCluster;
 use crate::collectives::{broadcast_schedule, execute_data, AllReduceAlgo, ReduceOp};
@@ -79,7 +79,8 @@ pub fn tree_decode(
     steps += stats.steps;
 
     // -- step 4: finalize on the leader ------------------------------------
-    let result = AttnPartial::from_wire(shape, &wires[0]).finalize();
+    let part = AttnPartial::from_wire(shape, &wires[0]);
+    let result = part.finalize();
     let t1 = cluster.world.barrier();
 
     for w in 0..p {
@@ -88,6 +89,7 @@ pub fn tree_decode(
 
     Ok(DecodeOutcome {
         out: result,
+        den: part.den,
         stats: DecodeStats {
             sim_time: t1 - t0,
             comm_steps: steps,
@@ -95,22 +97,6 @@ pub fn tree_decode(
             peak_transient_bytes: cluster.mem.max_peak(),
         },
     })
-}
-
-/// One session's inputs to a batched decode round: its query and its view
-/// of the per-worker KV shards (one [`ShardKv`] per rank).
-pub struct BatchEntry<'a> {
-    /// `[n_heads * d_head]` f32.
-    pub q: &'a [f32],
-    /// `shards[r]` — worker r's shard of THIS session's KV.
-    pub shards: Vec<ShardKv<'a>>,
-}
-
-/// Result of one batched decode round.
-pub struct BatchDecodeOutcome {
-    /// Per-session attention output, `[n_heads * d_head]` each.
-    pub outs: Vec<Vec<f32>>,
-    pub stats: DecodeStats,
 }
 
 /// Batched tree-attention decode: ONE round for B concurrent sessions with
@@ -281,6 +267,7 @@ pub fn tree_decode_unfused(
 
     Ok(DecodeOutcome {
         out,
+        den: dens.swap_remove(0),
         stats: DecodeStats {
             sim_time: t1 - t0,
             comm_steps: steps,
@@ -319,41 +306,7 @@ mod tests {
         assert!(fused.stats.sim_time < unfused.stats.sim_time);
     }
 
-    /// Build a batch of sessions with heterogeneous per-worker shard lengths.
-    fn random_batch(
-        rng: &mut Rng,
-        shape: AttnShape,
-        session_lens: &[Vec<usize>],
-    ) -> (Vec<Vec<f32>>, Vec<Vec<Vec<f32>>>, Vec<Vec<Vec<f32>>>) {
-        let row = shape.kv_heads * shape.d_head;
-        let mut qs = Vec::new();
-        let mut ks = Vec::new();
-        let mut vs = Vec::new();
-        for lens in session_lens {
-            qs.push(rng.normal_vec(shape.q_elems(), 1.0));
-            ks.push(lens.iter().map(|&l| rng.normal_vec(l * row, 1.0)).collect::<Vec<_>>());
-            vs.push(lens.iter().map(|&l| rng.normal_vec(l * row, 1.0)).collect::<Vec<_>>());
-        }
-        (qs, ks, vs)
-    }
-
-    fn entries_of<'a>(
-        session_lens: &[Vec<usize>],
-        qs: &'a [Vec<f32>],
-        ks: &'a [Vec<Vec<f32>>],
-        vs: &'a [Vec<Vec<f32>>],
-    ) -> Vec<BatchEntry<'a>> {
-        session_lens
-            .iter()
-            .enumerate()
-            .map(|(s, lens)| BatchEntry {
-                q: &qs[s],
-                shards: (0..lens.len())
-                    .map(|w| ShardKv { k: &ks[s][w], v: &vs[s][w], len: lens[w] })
-                    .collect(),
-            })
-            .collect()
-    }
+    use super::super::tests::{entries_of, random_batch};
 
     #[test]
     fn batched_decode_bit_identical_to_single_loop() {

@@ -32,6 +32,14 @@ pub fn sim_attention(
     algo: AllReduceAlgo,
     overlap: bool,
 ) -> SimAttn {
+    // `Auto` is a planner decision, not a schedule: resolve it against this
+    // exact (topology, shape, batch, ctx, collective) point first.
+    let strategy = crate::planner::resolve_strategy(
+        strategy,
+        topo,
+        crate::planner::StrategyRequest::for_shape(shape, shape.batch.max(1), seq_len, wire_bpe)
+            .with_allreduce(algo),
+    );
     let mut cluster = VirtualCluster::new(topo.clone());
     let p = topo.world_size();
     let t_local = seq_len.div_ceil(p);
@@ -39,13 +47,16 @@ pub fn sim_attention(
     let t0 = cluster.world.barrier();
     let mut comm_steps = 0;
 
-    // broadcast q
+    // Broadcast q (tree and ring need it on every worker; single computes
+    // on the leader, where the query already lives).
     let q_bytes = shape.q_elems() as u64 * wire_bpe;
     let bsched = crate::collectives::broadcast_schedule(p, 0, 1);
-    comm_steps += bsched.n_steps();
-    for step in &bsched.steps {
-        for op in step {
-            cluster.world.send(op.src, op.dst, q_bytes);
+    if !matches!(strategy, Strategy::Single) {
+        comm_steps += bsched.n_steps();
+        for step in &bsched.steps {
+            for op in step {
+                cluster.world.send(op.src, op.dst, q_bytes);
+            }
         }
     }
 
@@ -108,9 +119,23 @@ pub fn sim_attention(
             let _ = ring_shift_schedule(p, 1); // schedule form kept for reference
         }
         Strategy::Single => {
+            // Gather the sharded KV to the leader (one fused group launch
+            // per sender), then one flash launch over the whole context —
+            // the same model `sim_batched_single_decode` prices, so the
+            // strategy planner's choice is consistent with this arm.
+            let row = shape.kv_heads * shape.d_head;
+            let chunk_bytes = (2 * shape.batch * t_local * row) as u64 * wire_bpe;
+            if p > 1 {
+                comm_steps += 1;
+                for w in 1..p {
+                    cluster.world.compute(w, cluster.gpu.comm_launch_s);
+                    cluster.world.send(w, 0, chunk_bytes);
+                }
+            }
             let t = cluster.gpu.decode_attention_time(shape.batch, seq_len, shape.kv_heads, shape.d_head);
             cluster.world.compute(0, t);
         }
+        Strategy::Auto => unreachable!("resolved above"),
     }
     let t1 = cluster.world.barrier();
     SimAttn { sim_time: t1 - t0, traffic: cluster.world.net.counters().since(&before), comm_steps }
@@ -170,6 +195,146 @@ pub fn sim_batched_tree_decode(
     SimAttn { sim_time: t1 - t0, traffic: cluster.world.net.counters().since(&before), comm_steps }
 }
 
+/// Simulated latency of ONE continuous-batched RING-decode round: `b`
+/// concurrent sessions, each with `seq_len` context sharded over the
+/// cluster; per hop, each worker forwards all B of its session chunks as a
+/// single fused message and folds them with one fused flash launch (mirrors
+/// `attention::ring_decode_batch` cost-only). This is what makes ring
+/// comparable to tree under serving load in the strategy planner, not just
+/// single-shot.
+pub fn sim_batched_ring_decode(
+    topo: &Topology,
+    b: usize,
+    seq_len: usize,
+    shape: AttnShape,
+    wire_bpe: u64,
+    overlap: bool,
+) -> SimAttn {
+    assert!(b >= 1 && shape.batch == 1, "per-session shape, b >= 1");
+    let mut cluster = VirtualCluster::new(topo.clone());
+    let p = topo.world_size();
+    let t_local = seq_len.div_ceil(p);
+    let before = cluster.world.net.counters();
+    let t0 = cluster.world.barrier();
+    let mut comm_steps = 0;
+
+    // Broadcast the stacked queries.
+    let q_bytes = (b * shape.q_elems()) as u64 * wire_bpe;
+    let bsched = crate::collectives::broadcast_schedule(p, 0, 1);
+    comm_steps += bsched.n_steps();
+    for step in &bsched.steps {
+        for op in step {
+            cluster.world.send(op.src, op.dst, q_bytes);
+        }
+    }
+
+    let row = shape.kv_heads * shape.d_head;
+    // One fused message per worker per hop: all B session chunks together.
+    let chunk_bytes = (2 * b * t_local * row) as u64 * wire_bpe;
+    for step in 0..p {
+        let last = step == p - 1;
+        let mut arrivals = vec![f64::NEG_INFINITY; p];
+        if overlap && !last {
+            for w in 0..p {
+                let a = cluster.world.net.transfer(w, (w + 1) % p, chunk_bytes, cluster.world.clocks[w]);
+                arrivals[(w + 1) % p] = a;
+            }
+        }
+        for w in 0..p {
+            // One fused flash launch over all resident session chunks.
+            let t = cluster.gpu.decode_attention_time(1, b * t_local, shape.kv_heads, shape.d_head);
+            cluster.world.compute(w, t);
+            if !last {
+                // every rotation step is its own P2P group launch
+                cluster.world.compute(w, cluster.gpu.comm_launch_s);
+            }
+        }
+        if !last {
+            if !overlap {
+                for w in 0..p {
+                    let a = cluster.world.net.transfer(w, (w + 1) % p, chunk_bytes, cluster.world.clocks[w]);
+                    arrivals[(w + 1) % p] = a;
+                }
+            }
+            for w in 0..p {
+                if cluster.world.clocks[w] < arrivals[w] {
+                    cluster.world.clocks[w] = arrivals[w];
+                }
+            }
+            comm_steps += 1;
+        }
+    }
+    let t1 = cluster.world.barrier();
+    SimAttn { sim_time: t1 - t0, traffic: cluster.world.net.counters().since(&before), comm_steps }
+}
+
+/// Simulated latency of ONE continuous-batched SINGLE-device round: every
+/// worker sends its B fused session chunks to the leader (one gather group
+/// launch), which computes all sessions in one fused flash launch. No query
+/// broadcast — the queries already live on the leader. Mirrors
+/// `attention::single_decode_batch` cost-only. Memory feasibility is NOT
+/// checked here; the planner gates on `planner::single_gather_fits`.
+pub fn sim_batched_single_decode(
+    topo: &Topology,
+    b: usize,
+    seq_len: usize,
+    shape: AttnShape,
+    wire_bpe: u64,
+) -> SimAttn {
+    assert!(b >= 1 && shape.batch == 1, "per-session shape, b >= 1");
+    let mut cluster = VirtualCluster::new(topo.clone());
+    let p = topo.world_size();
+    let t_local = seq_len.div_ceil(p);
+    let before = cluster.world.net.counters();
+    let t0 = cluster.world.barrier();
+    let mut comm_steps = 0;
+
+    let row = shape.kv_heads * shape.d_head;
+    let chunk_bytes = (2 * b * t_local * row) as u64 * wire_bpe;
+    if p > 1 {
+        comm_steps = 1;
+        for w in 1..p {
+            // one gather group launch per sender, then the fused message
+            cluster.world.compute(w, cluster.gpu.comm_launch_s);
+            cluster.world.send(w, 0, chunk_bytes);
+        }
+    }
+    let t = cluster.gpu.decode_attention_time(1, b * seq_len.max(1), shape.kv_heads, shape.d_head);
+    cluster.world.compute(0, t);
+
+    let t1 = cluster.world.barrier();
+    SimAttn { sim_time: t1 - t0, traffic: cluster.world.net.counters().since(&before), comm_steps }
+}
+
+/// Price ONE batched decode round under any strategy selector — the single
+/// entry point shared by the strategy planner (candidate pricing), the
+/// `strategy-bench` CLI, and `benches/strategy_ablation.rs`, so the
+/// planner's prediction and the bench's measurement are the same number by
+/// construction. `Auto` resolves through the planner and then runs the
+/// chosen strategy's simulation.
+pub fn sim_strategy_round(
+    topo: &Topology,
+    strategy: Strategy,
+    b: usize,
+    seq_len: usize,
+    shape: AttnShape,
+    wire_bpe: u64,
+    algo: AllReduceAlgo,
+) -> SimAttn {
+    let strategy = crate::planner::resolve_strategy(
+        strategy,
+        topo,
+        crate::planner::StrategyRequest::for_shape(shape, b, seq_len, wire_bpe)
+            .with_allreduce(algo),
+    );
+    match strategy {
+        Strategy::Tree => sim_batched_tree_decode(topo, b, seq_len, shape, wire_bpe, algo),
+        Strategy::Ring => sim_batched_ring_decode(topo, b, seq_len, shape, wire_bpe, false),
+        Strategy::Single => sim_batched_single_decode(topo, b, seq_len, shape, wire_bpe),
+        Strategy::Auto => unreachable!("resolved above"),
+    }
+}
+
 /// Simulated full-model decode time for `n_tokens` tokens (Table 1/2
 /// protocol): per token, every layer runs one distributed attention plus
 /// the leader-side linear work; plus the LM head.
@@ -216,6 +381,16 @@ pub fn sim_table_cell(
     seq_len: usize,
     n_tokens: usize,
 ) -> f64 {
+    let shape = AttnShape::new(1, model.n_heads, model.kv_heads, model.d_head());
+    // This protocol pins tree's collective to TwoLevel{2} (the paper's
+    // setting), so price the candidates with that same pin — ring/single
+    // ignore the selector, so one request covers every outcome.
+    let strategy = crate::planner::resolve_strategy(
+        strategy,
+        topo,
+        crate::planner::StrategyRequest::for_shape(shape, 1, seq_len, 2)
+            .with_allreduce(AllReduceAlgo::TwoLevel { inter_fanout: 2 }),
+    );
     let algo = match strategy {
         Strategy::Tree => AllReduceAlgo::TwoLevel { inter_fanout: 2 },
         _ => AllReduceAlgo::Ring,
@@ -283,6 +458,59 @@ mod tests {
         assert_eq!(one.traffic.total_msgs(), eight.traffic.total_msgs());
         assert_eq!(one.comm_steps, eight.comm_steps);
         assert!(eight.traffic.total_bytes() > one.traffic.total_bytes());
+    }
+
+    #[test]
+    fn auto_strategy_round_matches_cheapest_feasible_candidate() {
+        // The strategy planner's contract at two very different operating
+        // points: a bandwidth-rich multi-node cluster at long context, and
+        // the tiny-context two-worker PCIe corner where ring wins.
+        let shape = AttnShape::new(1, 32, 8, 128);
+        for (topo, b, ctx) in [
+            (Topology::h100_dgx(2), 8usize, 128_000usize),
+            (Topology::rtx4090_pcie(2), 1, 8),
+        ] {
+            let auto =
+                sim_strategy_round(&topo, Strategy::Auto, b, ctx, shape, 2, AllReduceAlgo::Auto)
+                    .sim_time;
+            let req = crate::planner::StrategyRequest::for_shape(shape, b, ctx, 2);
+            let mut best = f64::INFINITY;
+            for s in [Strategy::Tree, Strategy::Ring, Strategy::Single] {
+                if s == Strategy::Single && !crate::planner::single_gather_fits(&topo, &req) {
+                    continue;
+                }
+                let t = sim_strategy_round(&topo, s, b, ctx, shape, 2, AllReduceAlgo::Auto).sim_time;
+                best = best.min(t);
+            }
+            assert!(
+                auto <= best * (1.0 + 1e-9),
+                "{}: auto {auto} worse than best fixed {best}",
+                topo.name
+            );
+        }
+    }
+
+    #[test]
+    fn batched_ring_round_single_message_per_hop() {
+        // Fused per-hop exchange: rotation messages are independent of B.
+        let shape = AttnShape::mha(1, 16, 128);
+        let topo = Topology::h100_dgx(1);
+        let one = sim_batched_ring_decode(&topo, 1, 64_000, shape, 2, false);
+        let eight = sim_batched_ring_decode(&topo, 8, 64_000, shape, 2, false);
+        assert_eq!(one.traffic.total_msgs(), eight.traffic.total_msgs());
+        assert_eq!(one.comm_steps, eight.comm_steps);
+        assert!(eight.traffic.total_bytes() > one.traffic.total_bytes());
+    }
+
+    #[test]
+    fn batched_single_round_gathers_once() {
+        let shape = AttnShape::mha(1, 16, 128);
+        let topo = Topology::h100_dgx(1);
+        let r = sim_batched_single_decode(&topo, 4, 64_000, shape, 2);
+        // p - 1 fused gather messages, one logical round.
+        assert_eq!(r.traffic.total_msgs(), 7);
+        assert_eq!(r.comm_steps, 1);
+        assert!(r.sim_time > 0.0);
     }
 
     #[test]

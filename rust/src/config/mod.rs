@@ -9,7 +9,7 @@ use crate::topology::Topology;
 use std::path::Path;
 
 /// Which distributed decode strategy to run.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Strategy {
     /// Tree Attention (paper Alg. 3): local flash partials + AllReduce.
     Tree,
@@ -17,15 +17,22 @@ pub enum Strategy {
     Ring,
     /// Everything on one device (correctness baseline).
     Single,
+    /// Topology-aware automatic selection: the [`crate::planner`] prices a
+    /// full decode round under every strategy (flash partial compute via the
+    /// GPU cost model + each strategy's communication schedule on the live
+    /// topology) and picks the cheapest — the paper's central tree-vs-ring
+    /// crossover, decided at runtime per (topology, shape, batch, context).
+    Auto,
 }
 
 impl Strategy {
     pub fn parse(s: &str) -> anyhow::Result<Strategy> {
         match s {
+            "auto" => Ok(Strategy::Auto),
             "tree" => Ok(Strategy::Tree),
             "ring" => Ok(Strategy::Ring),
             "single" => Ok(Strategy::Single),
-            other => anyhow::bail!("unknown strategy '{other}' (tree | ring | single)"),
+            other => anyhow::bail!("unknown strategy '{other}' (auto | tree | ring | single)"),
         }
     }
     pub fn name(&self) -> &'static str {
@@ -33,7 +40,13 @@ impl Strategy {
             Strategy::Tree => "tree",
             Strategy::Ring => "ring",
             Strategy::Single => "single",
+            Strategy::Auto => "auto",
         }
+    }
+
+    /// True for the planner-resolved selector.
+    pub fn is_auto(&self) -> bool {
+        matches!(self, Strategy::Auto)
     }
 }
 
@@ -265,7 +278,11 @@ impl Default for RunSpec {
         RunSpec {
             cluster: ClusterSpec::default(),
             model: ModelSpec::tiny_124m(),
-            strategy: Strategy::Tree,
+            // Strategy-level planning by default: `auto` asks the planner to
+            // price a full decode round under tree / ring / single against
+            // the cluster's cost model and picks the cheapest per (topology,
+            // shape, batch, context). Override with `strategy=tree` etc.
+            strategy: Strategy::Auto,
             seq_len: 4096,
             decode_tokens: 10,
             batch: 1,
@@ -459,7 +476,21 @@ mod tests {
     fn strategy_parse() {
         assert_eq!(Strategy::parse("tree").unwrap(), Strategy::Tree);
         assert_eq!(Strategy::parse("ring").unwrap(), Strategy::Ring);
+        assert_eq!(Strategy::parse("auto").unwrap(), Strategy::Auto);
+        assert!(Strategy::parse("auto").unwrap().is_auto());
         assert!(Strategy::parse("star").is_err());
+        // Round-trip through name() for every variant.
+        for s in [Strategy::Tree, Strategy::Ring, Strategy::Single, Strategy::Auto] {
+            assert_eq!(Strategy::parse(s.name()).unwrap(), s);
+        }
+    }
+
+    #[test]
+    fn strategy_defaults_to_auto() {
+        // decode / serve / serve-bench all build from RunSpec::default(), so
+        // this is the "Strategy::Auto is the serving default" criterion.
+        assert_eq!(RunSpec::default().strategy, Strategy::Auto);
+        assert!(RunSpec::default().strategy.is_auto());
     }
 
     #[test]

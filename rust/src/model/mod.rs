@@ -17,7 +17,7 @@ pub mod weights;
 
 pub use weights::WeightStore;
 
-use crate::attention::{ring_decode, single_decode, tree_decode, ComputeBackend, DecodeStats, ShardKv};
+use crate::attention::{strategy_impl, ComputeBackend, DecodeStats, ShardKv};
 use crate::attnmath::AttnShape;
 use crate::cluster::VirtualCluster;
 use crate::collectives::AllReduceAlgo;
@@ -40,7 +40,10 @@ impl Default for ExecutorConfig {
         ExecutorConfig {
             n_workers: 4,
             page_size: 16,
-            strategy: Strategy::Tree,
+            // Planner-resolved per (topology, shape, batch, ctx): each decode
+            // step dispatches whichever strategy prices cheapest for the
+            // sequence's current context length (see `crate::planner`).
+            strategy: Strategy::Auto,
             // Planner-resolved per payload (see `crate::planner`).
             allreduce: AllReduceAlgo::Auto,
             wire_bpe: 2,
@@ -262,6 +265,46 @@ impl ModelExecutor {
         let backend = ComputeBackend::Pjrt(self.engine.clone());
         let mut stats = StepStats::default();
 
+        // Resolve the strategy ONCE per token against the sequence's current
+        // context length (every layer sees the same shard lengths), then
+        // dispatch each layer's distributed attention through the trait.
+        // `bucketed()` quantizes ctx to the next power of two so the plan
+        // cache hits on every token instead of re-planning per position.
+        let req = crate::planner::StrategyRequest::for_shape(shape, 1, pos + 1, self.cfg.wire_bpe)
+            .with_allreduce(self.cfg.allreduce)
+            .bucketed();
+        let resolved = crate::planner::resolve_strategy(self.cfg.strategy, cluster.topology(), req);
+        // The PJRT backend only has flash kernels compiled up to a fixed
+        // chunk size, and single-device feeds it the WHOLE context in one
+        // call. The planner cannot know artifact coverage (it is an engine
+        // property), so when its choice is infeasible here, fall back to the
+        // cheapest remaining candidate from the same plan instead of
+        // aborting mid-generation — but only for a planner decision; an
+        // explicitly pinned Single still errors.
+        let resolved = if self.cfg.strategy.is_auto()
+            && resolved == Strategy::Single
+            && self.engine.pick_attn_chunk(pos + 1).is_err()
+        {
+            let plan = crate::planner::strategy_plan_for(cluster.topology(), req);
+            let next_best = plan
+                .candidates
+                .iter()
+                .filter(|c| c.feasible && c.strategy != Strategy::Single)
+                .min_by(|a, b| a.predicted_s.total_cmp(&b.predicted_s))
+                .map(|c| c.strategy)
+                .unwrap_or(Strategy::Tree);
+            crate::tlog!(
+                Debug,
+                "auto resolved to single but no attn artifact fits {} tokens; using {}",
+                pos + 1,
+                next_best.name()
+            );
+            next_best
+        } else {
+            resolved
+        };
+        let strat = strategy_impl(resolved, self.cfg.allreduce, self.cfg.wire_bpe)?;
+
         let mut h = self.weights.embed_row(token as usize)?.to_vec();
         for layer in 0..self.spec.n_layers {
             // -- leader: qkv + rope (dense, on the leader GPU) --------------
@@ -297,11 +340,7 @@ impl ModelExecutor {
                     ShardKv { k: &s.k[layer], v: &s.v[layer], len: s.len + extra }
                 })
                 .collect();
-            let outcome = match self.cfg.strategy {
-                Strategy::Tree => tree_decode(cluster, &backend, shape, scale, &q, &shards, self.cfg.allreduce, self.cfg.wire_bpe)?,
-                Strategy::Ring => ring_decode(cluster, &backend, shape, scale, &q, &shards, self.cfg.wire_bpe, false)?,
-                Strategy::Single => single_decode(cluster, &backend, shape, scale, &q, &shards, self.cfg.wire_bpe)?,
-            };
+            let outcome = strat.decode(cluster, &backend, shape, scale, &q, &shards)?;
             accumulate(&mut stats, &outcome.stats);
 
             // -- leader: output projection + MLP ----------------------------
@@ -397,9 +436,9 @@ mod tests {
     #[test]
     fn tree_ring_single_generate_identical_tokens() {
         // The end-to-end exactness claim: strategy choice must not change
-        // the decoded token stream.
+        // the decoded token stream — including the planner-resolved `Auto`.
         let mut streams = Vec::new();
-        for strategy in [Strategy::Tree, Strategy::Ring, Strategy::Single] {
+        for strategy in [Strategy::Tree, Strategy::Ring, Strategy::Single, Strategy::Auto] {
             let Some((exec, mut cluster)) = executor(strategy, 2) else {
                 eprintln!("skipping: artifacts not built");
                 return;
@@ -417,5 +456,6 @@ mod tests {
         }
         assert_eq!(streams[0], streams[1], "tree vs ring");
         assert_eq!(streams[0], streams[2], "tree vs single");
+        assert_eq!(streams[0], streams[3], "tree vs auto");
     }
 }

@@ -19,8 +19,23 @@
 //! `planner_ablation` bench): under the cost model, `Auto` is never worse
 //! than the best fixed candidate for the same payload, across all three
 //! hardware presets and world sizes 1..16 including non-powers-of-two.
+//!
+//! The same machinery also plans one level up: [`resolve_strategy`] prices a
+//! FULL decode round under every [`Strategy`] (tree / ring / single — flash
+//! partial compute via the GPU roofline plus each strategy's communication
+//! schedule on the live topology, through the
+//! [`DecodeStrategy::cost_model`](crate::attention::strategy::DecodeStrategy)
+//! trait) and resolves `Strategy::Auto` to the cheapest feasible one,
+//! memoized per `(topology, shape, batch, ctx)`. Single-device is priced
+//! honestly but gated on the gathered KV actually fitting in leader memory
+//! ([`single_gather_fits`]) — the memory wall that motivates sequence
+//! parallelism in the first place. This turns the paper's central
+//! tree-vs-ring comparison into a live scheduling decision.
 
+use crate::attention::strategy::strategy_impl;
+use crate::attnmath::AttnShape;
 use crate::collectives::{execute_cost, AllReduceAlgo};
+use crate::config::Strategy;
 use crate::netsim::SimWorld;
 use crate::topology::Topology;
 use std::collections::HashMap;
@@ -66,15 +81,17 @@ impl PlanRequest {
 }
 
 /// Cache key: topology fingerprint + payload tuple. The fingerprint covers
-/// everything the cost model reads (shape and both link tiers' α/β), so two
-/// topologies that price identically share plans and two that differ never
-/// collide.
+/// everything either planner's cost model reads — shape, both link tiers'
+/// α/β, and the GPU kind (the strategy planner prices flash compute on the
+/// GPU roofline and gates single-device on its memory) — so two topologies
+/// that price identically share plans and two that differ never collide.
 type PlanKey = (String, PlanRequest);
 
 fn topo_fingerprint(topo: &Topology) -> String {
     format!(
-        "{}|{}x{}|i{:x}:{:x}|x{:x}:{:x}",
+        "{}|{}|{}x{}|i{:x}:{:x}|x{:x}:{:x}",
         topo.name,
+        topo.gpu.name(),
         topo.n_nodes,
         topo.gpus_per_node,
         topo.intra.bandwidth_bps.to_bits(),
@@ -203,6 +220,257 @@ fn compute_plan(topo: &Topology, req: PlanRequest) -> Plan {
 fn global_planner() -> &'static Mutex<CollectivePlanner> {
     static PLANNER: OnceLock<Mutex<CollectivePlanner>> = OnceLock::new();
     PLANNER.get_or_init(|| Mutex::new(CollectivePlanner::new()))
+}
+
+// ---------------------------------------------------------------------------
+// Strategy-level planning: tree vs ring vs single for a full decode round.
+// ---------------------------------------------------------------------------
+
+/// One decode-round description for strategy planning: `batch` concurrent
+/// sessions, each with `ctx` context tokens, under the given attention
+/// shape and wire precision. This tuple (plus the topology fingerprint) is
+/// the memoization key — serving traffic re-plans only when batch width or
+/// context length actually moves to a new point.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct StrategyRequest {
+    pub batch: usize,
+    pub ctx: usize,
+    pub n_heads: usize,
+    pub kv_heads: usize,
+    pub d_head: usize,
+    pub wire_bpe: u64,
+    /// The AllReduce selector tree rounds would actually execute with.
+    /// Defaults to `Auto` (collective-planner-chosen); callers that pin a
+    /// collective must pass it through ([`Self::with_allreduce`]) so the
+    /// tree candidate is priced with the schedule it would really run —
+    /// otherwise Auto could pick tree on the strength of a collective the
+    /// execution path is not allowed to use.
+    pub algo: AllReduceAlgo,
+}
+
+impl StrategyRequest {
+    /// Build a request from a per-session attention shape (`shape.batch` is
+    /// ignored — session count travels in `batch`).
+    pub fn for_shape(shape: AttnShape, batch: usize, ctx: usize, wire_bpe: u64) -> StrategyRequest {
+        StrategyRequest {
+            batch: batch.max(1),
+            ctx: ctx.max(1),
+            n_heads: shape.n_heads,
+            kv_heads: shape.kv_heads,
+            d_head: shape.d_head,
+            wire_bpe,
+            algo: AllReduceAlgo::Auto,
+        }
+    }
+
+    /// Price tree rounds with this AllReduce selector (the one execution
+    /// will actually use). Part of the cache key.
+    pub fn with_allreduce(mut self, algo: AllReduceAlgo) -> StrategyRequest {
+        self.algo = algo;
+        self
+    }
+
+    /// Round `ctx` up to the next power of two (min 16) — the serving-path
+    /// quantization. A sequence's context grows every token, so planning at
+    /// exact ctx would miss the cache every round and grow it without
+    /// bound; cost crossovers are orders of magnitude coarser than one
+    /// token, so pow2 granularity changes no observable decision while
+    /// making steady-state serving all cache hits. Benches that check the
+    /// auto-vs-fixed contract at exact points deliberately do NOT bucket.
+    pub fn bucketed(mut self) -> StrategyRequest {
+        self.ctx = self.ctx.next_power_of_two().max(16);
+        self
+    }
+
+    /// The per-session attention shape this request describes.
+    pub fn shape(&self) -> AttnShape {
+        AttnShape::new(1, self.n_heads, self.kv_heads, self.d_head)
+    }
+
+    /// Bytes of K+V the single-device strategy would gather onto the leader.
+    pub fn gathered_kv_bytes(&self) -> u64 {
+        2 * (self.batch * self.ctx * self.kv_heads * self.d_head) as u64 * self.wire_bpe
+    }
+}
+
+/// What one candidate strategy would cost for a decode round.
+#[derive(Clone, Copy, Debug)]
+pub struct StrategyCost {
+    pub strategy: Strategy,
+    /// Simulated seconds for one batched decode round on an idle cluster
+    /// (`f64::INFINITY` when infeasible).
+    pub predicted_s: f64,
+    /// False when the strategy cannot run at this point at all (single-
+    /// device with a gathered KV that exceeds leader memory).
+    pub feasible: bool,
+}
+
+/// The planner's strategy decision for one (topology, request) point.
+#[derive(Clone, Debug)]
+pub struct StrategyPlan {
+    /// The winning strategy (never `Auto`).
+    pub chosen: Strategy,
+    /// Its predicted round time in simulated seconds.
+    pub predicted_s: f64,
+    /// All priced candidates, in enumeration order (tree, ring, single).
+    pub candidates: Vec<StrategyCost>,
+}
+
+/// True when the single-device strategy could hold the gathered KV for this
+/// request on the leader GPU (80% of device memory budgeted for KV; the
+/// rest covers weights, activations, and transients). Ring and tree stream
+/// chunks and are always feasible.
+pub fn single_gather_fits(topo: &Topology, req: &StrategyRequest) -> bool {
+    (req.gathered_kv_bytes() as f64) <= topo.gpu.memory_bytes() as f64 * 0.8
+}
+
+/// The memoizing strategy planner — same shape as [`CollectivePlanner`]:
+/// global instance for production paths, own instances for tests that want
+/// isolated cache statistics.
+#[derive(Default)]
+pub struct StrategyPlanner {
+    cache: HashMap<(String, StrategyRequest), StrategyPlan>,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl StrategyPlanner {
+    pub fn new() -> StrategyPlanner {
+        StrategyPlanner::default()
+    }
+
+    pub fn cache_len(&self) -> usize {
+        self.cache.len()
+    }
+
+    /// Price every strategy for `(topo, req)` and return the full plan,
+    /// memoized.
+    pub fn plan(&mut self, topo: &Topology, req: StrategyRequest) -> StrategyPlan {
+        self.plan_entry(topo, req).clone()
+    }
+
+    /// Like [`Self::plan`] but returns only the winning strategy — the
+    /// per-round hot path.
+    pub fn chosen(&mut self, topo: &Topology, req: StrategyRequest) -> Strategy {
+        self.plan_entry(topo, req).chosen
+    }
+
+    fn plan_entry(&mut self, topo: &Topology, req: StrategyRequest) -> &StrategyPlan {
+        use std::collections::hash_map::Entry;
+        let key = (topo_fingerprint(topo), req);
+        match self.cache.entry(key) {
+            Entry::Occupied(e) => {
+                self.hits += 1;
+                e.into_mut()
+            }
+            Entry::Vacant(e) => {
+                self.misses += 1;
+                e.insert(compute_strategy_plan(topo, req))
+            }
+        }
+    }
+}
+
+/// Price the three strategies through their [`DecodeStrategy::cost_model`]
+/// implementations and pick the cheapest feasible one. Ties keep the
+/// earliest candidate (tree first), making the choice deterministic.
+fn compute_strategy_plan(topo: &Topology, req: StrategyRequest) -> StrategyPlan {
+    let shape = req.shape();
+    // One device: no communication, every strategy degenerates to a local
+    // flash decode — single IS the local computation, pick it outright (but
+    // still price it, so callers see the round's real compute cost).
+    if topo.world_size() <= 1 {
+        let imp = strategy_impl(Strategy::Single, req.algo, req.wire_bpe)
+            .expect("fixed strategies always construct");
+        let predicted_s = imp.cost_model(topo, req.batch, req.ctx, shape);
+        return StrategyPlan {
+            chosen: Strategy::Single,
+            predicted_s,
+            candidates: vec![StrategyCost {
+                strategy: Strategy::Single,
+                predicted_s,
+                feasible: true,
+            }],
+        };
+    }
+    let mut candidates = Vec::new();
+    for strategy in [Strategy::Tree, Strategy::Ring, Strategy::Single] {
+        let feasible = strategy != Strategy::Single || single_gather_fits(topo, &req);
+        let predicted_s = if feasible {
+            // The tree candidate runs with the request's collective selector
+            // — `Auto` by default, so the two planning levels compose; a
+            // pinned collective is priced as pinned, matching execution.
+            let imp = strategy_impl(strategy, req.algo, req.wire_bpe)
+                .expect("fixed strategies always construct");
+            imp.cost_model(topo, req.batch, req.ctx, shape)
+        } else {
+            f64::INFINITY
+        };
+        candidates.push(StrategyCost { strategy, predicted_s, feasible });
+    }
+    let mut best = candidates[0];
+    for c in &candidates[1..] {
+        if c.predicted_s.total_cmp(&best.predicted_s).is_lt() {
+            best = *c;
+        }
+    }
+    StrategyPlan { chosen: best.strategy, predicted_s: best.predicted_s, candidates }
+}
+
+fn global_strategy_planner() -> &'static Mutex<StrategyPlanner> {
+    static PLANNER: OnceLock<Mutex<StrategyPlanner>> = OnceLock::new();
+    PLANNER.get_or_init(|| Mutex::new(StrategyPlanner::new()))
+}
+
+/// Resolve a strategy selector against the global plan cache: fixed
+/// strategies pass through untouched, `Auto` becomes the planner's choice
+/// for this (topology, shape, batch, ctx) point.
+pub fn resolve_strategy(strategy: Strategy, topo: &Topology, req: StrategyRequest) -> Strategy {
+    match strategy {
+        Strategy::Auto => global_strategy_planner().lock().unwrap().chosen(topo, req),
+        fixed => fixed,
+    }
+}
+
+/// Full strategy plan (chosen strategy + every candidate's predicted cost)
+/// from the global cache — what the `strategy-bench` CLI and serving
+/// introspection read.
+pub fn strategy_plan_for(topo: &Topology, req: StrategyRequest) -> StrategyPlan {
+    global_strategy_planner().lock().unwrap().plan(topo, req)
+}
+
+/// Snapshot of both global plan caches' hit/miss counters — surfaced in the
+/// `serve-bench` / `plan-bench` / `strategy-bench` JSON output so crossover
+/// and re-planning behaviour is observable under load.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PlannerCounters {
+    pub collective_hits: u64,
+    pub collective_misses: u64,
+    pub collective_plans: usize,
+    pub strategy_hits: u64,
+    pub strategy_misses: u64,
+    pub strategy_plans: usize,
+}
+
+pub fn planner_counters() -> PlannerCounters {
+    // Lock one cache at a time (and in the same order as the planning path
+    // never takes) to keep this deadlock-free.
+    let (collective_hits, collective_misses, collective_plans) = {
+        let p = global_planner().lock().unwrap();
+        (p.hits, p.misses, p.cache_len())
+    };
+    let (strategy_hits, strategy_misses, strategy_plans) = {
+        let p = global_strategy_planner().lock().unwrap();
+        (p.hits, p.misses, p.cache_len())
+    };
+    PlannerCounters {
+        collective_hits,
+        collective_misses,
+        collective_plans,
+        strategy_hits,
+        strategy_misses,
+        strategy_plans,
+    }
 }
 
 /// Resolve an algorithm selector against the global plan cache: fixed
@@ -374,5 +642,205 @@ mod tests {
         assert_eq!(a.chosen, b.chosen);
         assert_eq!(a.predicted_s, b.predicted_s);
         assert_eq!(a.candidates.len(), b.candidates.len());
+    }
+
+    // ---- strategy-level planning ---------------------------------------
+
+    fn gqa_request(batch: usize, ctx: usize) -> StrategyRequest {
+        StrategyRequest {
+            batch,
+            ctx,
+            n_heads: 32,
+            kv_heads: 8,
+            d_head: 128,
+            wire_bpe: 2,
+            algo: AllReduceAlgo::Auto,
+        }
+    }
+
+    #[test]
+    fn strategy_plan_cache_hits_on_repeat_lookups() {
+        let mut planner = StrategyPlanner::new();
+        let topo = Topology::h100_dgx(2);
+        let req = gqa_request(8, 4096);
+        let a = planner.plan(&topo, req);
+        assert_eq!((planner.misses, planner.hits), (1, 0));
+        let b = planner.plan(&topo, req);
+        assert_eq!((planner.misses, planner.hits), (1, 1));
+        assert_eq!(planner.cache_len(), 1);
+        assert_eq!(a.chosen, b.chosen);
+        // A different (batch, ctx) point is a different plan entry.
+        planner.plan(&topo, gqa_request(64, 4096));
+        planner.plan(&topo, gqa_request(8, 131072));
+        assert_eq!(planner.cache_len(), 3);
+    }
+
+    #[test]
+    fn strategy_auto_never_worse_than_best_feasible_prop() {
+        // The strategy planner's contract across the three hardware
+        // presets, p ∈ 1..=16 including non-powers-of-two, and a sweep of
+        // batch widths and context lengths: the chosen strategy's cost
+        // equals the minimum over every feasible candidate.
+        check("strategy auto <= best fixed", 40, |g| {
+            let (name, intra, inter) = *g.choose(&preset_link_personalities());
+            let p = g.usize_in(1..17);
+            let divisors: Vec<usize> = (1..=p).filter(|d| p % d == 0).collect();
+            let nodes = *g.choose(&divisors);
+            let topo = topo_of(name, nodes, p / nodes, intra, inter);
+            let batch = *g.choose(&[1usize, 3, 8, 64]);
+            let ctx = 4usize << g.usize_in(0..16); // 4 tokens .. ~128k
+            let req = gqa_request(batch, ctx);
+            let plan = strategy_plan_for(&topo, req);
+            assert!(!plan.chosen.is_auto());
+            if p <= 1 {
+                assert_eq!(plan.chosen, Strategy::Single, "solo device computes locally");
+                return;
+            }
+            assert_eq!(plan.candidates.len(), 3);
+            let shape = req.shape();
+            for c in &plan.candidates {
+                if !c.feasible {
+                    assert_eq!(c.strategy, Strategy::Single, "only single can be infeasible");
+                    assert!(c.predicted_s.is_infinite());
+                    continue;
+                }
+                // Re-measure independently: the plan must be reproducible…
+                let imp = strategy_impl(c.strategy, req.algo, req.wire_bpe).unwrap();
+                let measured = imp.cost_model(&topo, req.batch, req.ctx, shape);
+                assert!(
+                    (measured - c.predicted_s).abs() <= 1e-12 * c.predicted_s.max(1.0),
+                    "{}: plan {} vs measured {}",
+                    c.strategy.name(),
+                    c.predicted_s,
+                    measured
+                );
+                // …and never cheaper than the chosen strategy.
+                assert!(
+                    plan.predicted_s <= measured * (1.0 + 1e-12),
+                    "{name} {nodes}x{} batch={batch} ctx={ctx}: auto chose {} at {}, but {} \
+                     costs {measured}",
+                    p / nodes,
+                    plan.chosen.name(),
+                    plan.predicted_s,
+                    c.strategy.name()
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn bucketed_requests_share_plan_entries() {
+        // The serving hot path plans with pow2-quantized contexts: a
+        // sequence growing token by token must hit the cache, not insert a
+        // new entry per position.
+        let mut planner = StrategyPlanner::new();
+        let topo = Topology::h100_dgx(2);
+        for ctx in 1025..1100 {
+            planner.plan(&topo, gqa_request(4, ctx).bucketed());
+        }
+        assert_eq!(planner.cache_len(), 1, "one pow2 bucket, one entry");
+        assert_eq!(planner.misses, 1);
+        assert_eq!(planner.hits, 74);
+        // Bucketing rounds up and clamps to at least 16 tokens.
+        assert_eq!(gqa_request(1, 1).bucketed().ctx, 16);
+        assert_eq!(gqa_request(1, 17).bucketed().ctx, 32);
+        assert_eq!(gqa_request(1, 4096).bucketed().ctx, 4096);
+    }
+
+    #[test]
+    fn solo_device_plan_is_priced() {
+        // p = 1 picks single outright but still reports the round's real
+        // compute cost (not a hard-coded zero) and a priced candidate.
+        let topo = Topology::custom(
+            "solo",
+            1,
+            1,
+            GpuKind::H100,
+            LinkSpec::nvlink4(),
+            LinkSpec::infiniband_ndr(),
+        );
+        let plan = strategy_plan_for(&topo, gqa_request(4, 8192));
+        assert_eq!(plan.chosen, Strategy::Single);
+        assert!(plan.predicted_s > 0.0, "flash decode on the solo device costs time");
+        assert_eq!(plan.candidates.len(), 1);
+        assert!(plan.candidates[0].feasible);
+        assert_eq!(plan.candidates[0].predicted_s, plan.predicted_s);
+    }
+
+    #[test]
+    fn single_gated_by_leader_memory() {
+        // 512 sessions × 1M tokens of GQA KV ≈ 2 TB — nowhere near one H100.
+        let topo = Topology::h100_dgx(2);
+        let big = gqa_request(512, 1 << 20);
+        assert!(!single_gather_fits(&topo, &big));
+        let plan = strategy_plan_for(&topo, big);
+        let single = plan.candidates.iter().find(|c| c.strategy == Strategy::Single).unwrap();
+        assert!(!single.feasible);
+        assert!(single.predicted_s.is_infinite());
+        assert_ne!(plan.chosen, Strategy::Single);
+        // A small request fits comfortably.
+        assert!(single_gather_fits(&topo, &gqa_request(1, 4096)));
+    }
+
+    #[test]
+    fn pinned_collective_changes_the_tree_price_not_the_contract() {
+        // Pricing tree with the collective the execution path will actually
+        // use: a pinned ring allreduce and the planner-chosen one are
+        // distinct cache entries, and the pinned price is never cheaper.
+        let topo = Topology::h100_dgx(2);
+        let auto_req = gqa_request(8, 4096);
+        let pinned_req = gqa_request(8, 4096).with_allreduce(AllReduceAlgo::Ring);
+        assert_ne!(auto_req, pinned_req, "algo is part of the cache key");
+        let cost_tree = |req: StrategyRequest| {
+            strategy_plan_for(&topo, req)
+                .candidates
+                .iter()
+                .find(|c| c.strategy == Strategy::Tree)
+                .unwrap()
+                .predicted_s
+        };
+        assert!(cost_tree(auto_req) <= cost_tree(pinned_req) * (1.0 + 1e-12));
+    }
+
+    #[test]
+    fn resolve_strategy_passes_fixed_through() {
+        let topo = Topology::h100_dgx(1);
+        let req = gqa_request(1, 1024);
+        for s in [Strategy::Tree, Strategy::Ring, Strategy::Single] {
+            assert_eq!(resolve_strategy(s, &topo, req), s);
+        }
+        assert!(!resolve_strategy(Strategy::Auto, &topo, req).is_auto());
+    }
+
+    #[test]
+    fn strategy_crossover_ring_and_tree_both_win_somewhere() {
+        // The paper's central comparison as a planner outcome: there is a
+        // point where ring undercuts tree (tiny context, two PCIe workers,
+        // one rotation hop vs two allreduce rounds) and a point where tree
+        // crushes ring (multi-node, long context).
+        let ring_point = strategy_plan_for(&Topology::rtx4090_pcie(2), gqa_request(1, 8));
+        let cost = |plan: &StrategyPlan, s: Strategy| {
+            plan.candidates.iter().find(|c| c.strategy == s).unwrap().predicted_s
+        };
+        assert!(
+            cost(&ring_point, Strategy::Ring) < cost(&ring_point, Strategy::Tree),
+            "ring must beat tree at the tiny-context PCIe point"
+        );
+        let tree_point = strategy_plan_for(&Topology::h100_dgx(4), gqa_request(8, 128_000));
+        assert_eq!(tree_point.chosen, Strategy::Tree);
+        assert!(cost(&tree_point, Strategy::Tree) < cost(&tree_point, Strategy::Ring));
+    }
+
+    #[test]
+    fn planner_counters_cover_both_caches() {
+        let topo = Topology::h100_dgx(2);
+        // Touch both planners through the public entry points.
+        let _ = plan_for(&topo, PlanRequest { nblocks: 16, block_elems: 130, wire_bpe: 2 });
+        let _ = strategy_plan_for(&topo, gqa_request(2, 2048));
+        let c = planner_counters();
+        assert!(c.collective_hits + c.collective_misses >= 1);
+        assert!(c.strategy_hits + c.strategy_misses >= 1);
+        assert!(c.collective_plans >= 1);
+        assert!(c.strategy_plans >= 1);
     }
 }

@@ -1,6 +1,6 @@
-//! Continuous-batching decode scheduler over batched tree attention — the
-//! serving layer that turns the paper's cheap topology-aware decode step
-//! into cluster throughput under concurrent traffic.
+//! Continuous-batching decode scheduler over *planned* batched attention —
+//! the serving layer that turns the paper's cheap topology-aware decode
+//! step into cluster throughput under concurrent traffic.
 //!
 //! The model is iteration-level (continuous) batching as in Orca/vLLM:
 //!
@@ -10,31 +10,38 @@
 //!   footprint (prompt + max new tokens), and requests that could never fit
 //!   are rejected outright instead of wedging the queue;
 //! * each **decode round** coalesces ALL active sessions into one batched
-//!   [`tree_decode_batch`] call: per worker one fused flash launch over its
-//!   resident session shards, then ONE fused `(n, d, m)` AllReduce whose
-//!   payload is `B · n_heads` blocks — a single collective per round
-//!   regardless of batch width, which is precisely what amortizes the
-//!   launch-dominated decode cost the paper measures;
+//!   [`DecodeStrategy::decode_batch`](crate::attention::DecodeStrategy)
+//!   call: the round's strategy is the planner's choice for the live
+//!   (topology, shape, batch width, context) point when the config says
+//!   [`Strategy::Auto`] (the serving default), or a pinned strategy
+//!   otherwise. Tree rounds run ONE fused `(n, d, m)` AllReduce of
+//!   `B · n_heads` blocks; ring rounds run one fused per-hop exchange;
+//!   single rounds one fused gather — in every case a single communication
+//!   launch per round regardless of batch width, which is precisely what
+//!   amortizes the launch-dominated decode cost the paper measures;
 //! * finished sequences retire at round granularity, release their pages,
 //!   and freed slots are refilled from the queue before the next round
 //!   (continuous batching, not static batching);
-//! * per-request TTFT / TPOT and per-token round latency (p50/p99) are
-//!   recorded in virtual cluster time.
+//! * per-request TTFT / TPOT, per-token round latency (p50/p99), and the
+//!   chosen strategy per round are recorded in virtual cluster time.
 //!
 //! This layer serves *attention-level* sessions: KV rows and queries are
 //! synthetic deterministic streams (seeded per request), so the scheduler,
 //! cache, and collective machinery run the real math end-to-end without
 //! needing compiled model artifacts — and the batched output can be checked
-//! bit-for-bit against decoding each session alone ([`TreeBatcher::replay_single`]).
-//! The full-model path composes the same way through `ModelExecutor`.
+//! bit-for-bit against decoding each session alone
+//! ([`DecodeBatcher::replay_single`]). The full-model path composes the
+//! same way through `ModelExecutor`.
 
-use crate::attention::{tree_decode, tree_decode_batch, BatchEntry, ComputeBackend, ShardKv};
+use crate::attention::{strategy_impl, BatchEntry, ComputeBackend, ShardKv};
 use crate::attnmath::AttnShape;
 use crate::cluster::VirtualCluster;
 use crate::collectives::AllReduceAlgo;
+use crate::config::Strategy;
 use crate::kvcache::{CacheSpec, PagePool, ShardedKvCache};
+use crate::planner::StrategyRequest;
 use crate::util::{Rng, Summary};
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 
 /// A decode request against the batcher: `context_len` prompt tokens
 /// (synthetic KV, prefilled at admission) then `max_new_tokens` decode steps.
@@ -96,6 +103,10 @@ pub struct BatchMetrics {
     pub comm_bytes: u64,
     /// Total collective rounds on the critical path.
     pub comm_steps: usize,
+    /// Decode rounds executed per (resolved) strategy name — under
+    /// `Strategy::Auto` this is where the planner's crossover behaviour
+    /// becomes observable in serving metrics.
+    pub strategy_rounds: BTreeMap<&'static str, usize>,
 }
 
 /// Scheduler configuration.
@@ -107,7 +118,11 @@ pub struct BatcherConfig {
     pub page_size: usize,
     /// Paged-KV capacity per worker.
     pub pages_per_worker: usize,
-    /// AllReduce algorithm for the fused combine.
+    /// Decode strategy per round. `Auto` (the default) asks the planner to
+    /// price a full round under tree / ring / single for the live batch
+    /// width and context length; a fixed strategy pins every round.
+    pub strategy: Strategy,
+    /// AllReduce algorithm for tree rounds' fused combine.
     pub algo: AllReduceAlgo,
     /// On-the-wire bytes per element (2 = bf16).
     pub wire_bpe: u64,
@@ -121,6 +136,10 @@ impl Default for BatcherConfig {
             max_batch: 8,
             page_size: 16,
             pages_per_worker: 4096,
+            // Strategy-level planning by default: each round dispatches
+            // whichever of tree / ring / single the planner prices cheapest
+            // for the live (topology, shape, batch, ctx) point.
+            strategy: Strategy::Auto,
             // Topology-aware by default: the planner prices ring vs k-ary
             // tree vs two-level for the round's actual fused payload, so
             // the batcher re-plans when batch width crosses a crossover.
@@ -142,19 +161,39 @@ struct ActiveSession {
     first_token_sim: Option<f64>,
 }
 
-/// The continuous-batching tree-decode server.
-pub struct TreeBatcher {
+/// The continuous-batching, strategy-planned decode server.
+pub struct DecodeBatcher {
     /// Per-session attention shape (`batch` must be 1).
     pub shape: AttnShape,
     pub scale: f32,
     pub cfg: BatcherConfig,
 }
 
-impl TreeBatcher {
-    pub fn new(shape: AttnShape, scale: f32, cfg: BatcherConfig) -> TreeBatcher {
+/// Historical name from when the batcher was tree-only; the scheduler now
+/// dispatches any planned [`Strategy`], tree included.
+pub type TreeBatcher = DecodeBatcher;
+
+impl DecodeBatcher {
+    pub fn new(shape: AttnShape, scale: f32, cfg: BatcherConfig) -> DecodeBatcher {
         assert_eq!(shape.batch, 1, "per-session shape must have batch 1");
         assert!(cfg.max_batch >= 1 && cfg.page_size >= 1 && cfg.pages_per_worker >= 1);
-        TreeBatcher { shape, scale, cfg }
+        DecodeBatcher { shape, scale, cfg }
+    }
+
+    /// Resolve the round's strategy for `b` sessions with `total_ctx` KV
+    /// tokens between them (the planner keys on the mean per-session
+    /// context, quantized to a power of two so steady-state rounds hit the
+    /// plan cache instead of re-planning as contexts grow token by token).
+    /// Fixed strategies pass through untouched.
+    fn resolve_round(&self, cluster: &VirtualCluster, b: usize, total_ctx: usize) -> Strategy {
+        let ctx = total_ctx.div_ceil(b.max(1)).max(1);
+        crate::planner::resolve_strategy(
+            self.cfg.strategy,
+            cluster.topology(),
+            StrategyRequest::for_shape(self.shape, b, ctx, self.cfg.wire_bpe)
+                .with_allreduce(self.cfg.algo)
+                .bucketed(),
+        )
     }
 
     fn kv_row(&self) -> usize {
@@ -243,6 +282,7 @@ impl TreeBatcher {
         let mut token_lats: Vec<f64> = Vec::new();
         let mut comm_bytes = 0u64;
         let mut comm_steps = 0usize;
+        let mut strategy_rounds: BTreeMap<&'static str, usize> = BTreeMap::new();
 
         loop {
             // -- retire sessions that need no (more) decode ----------------
@@ -374,16 +414,17 @@ impl TreeBatcher {
                 .zip(&qs)
                 .map(|(&i, q)| BatchEntry { q, shards: Self::shard_views(&active[i].cache, p) })
                 .collect();
+            // Plan the round: the live batch width and context lengths are
+            // exactly what the strategy planner keys its cache on.
+            let total_ctx: usize = entries
+                .iter()
+                .map(|e| e.shards.iter().map(|s| s.len).sum::<usize>())
+                .sum();
+            let resolved = self.resolve_round(cluster, entries.len(), total_ctx);
+            let strat = strategy_impl(resolved, self.cfg.algo, self.cfg.wire_bpe)?;
+            *strategy_rounds.entry(resolved.name()).or_insert(0) += 1;
             let before = cluster.world.max_clock();
-            let round = tree_decode_batch(
-                cluster,
-                backend,
-                self.shape,
-                self.scale,
-                &entries,
-                self.cfg.algo,
-                self.cfg.wire_bpe,
-            )?;
+            let round = strat.decode_batch(cluster, backend, self.shape, self.scale, &entries)?;
             let after = cluster.world.max_clock();
             let round_lat = after - before;
             rounds += 1;
@@ -424,18 +465,20 @@ impl TreeBatcher {
             ttft: Summary::of(&ttfts),
             comm_bytes,
             comm_steps,
+            strategy_rounds,
         };
         Ok((done, metrics))
     }
 
     /// Oracle for exactness tests: decode `req` ALONE by looping the
-    /// single-request [`tree_decode`] with the identical synthetic streams
-    /// and cache layout. With full-buffer collectives (`Tree`/`TwoLevel`)
-    /// the batched scheduler must reproduce these outputs bit-for-bit.
-    /// (Under `AllReduceAlgo::Auto` the planner may resolve the batched and
-    /// solo payloads to different algorithms — exactness then holds to fp
-    /// tolerance, like `Ring`; pin a fixed full-buffer algorithm when
-    /// bit-identity matters.)
+    /// single-request strategy with the identical synthetic streams and
+    /// cache layout. With a pinned strategy and a full-buffer collective
+    /// (`Tree`/`TwoLevel`) the batched scheduler must reproduce these
+    /// outputs bit-for-bit (every strategy's `decode_batch` is bit-identical
+    /// to its per-session decode). Under `Strategy::Auto` /
+    /// `AllReduceAlgo::Auto` the planner may resolve the batched and solo
+    /// points differently — exactness then holds to fp tolerance; pin the
+    /// strategy and a full-buffer algorithm when bit-identity matters.
     pub fn replay_single(
         &self,
         cluster: &mut VirtualCluster,
@@ -451,16 +494,10 @@ impl TreeBatcher {
             let (q, k_row, v_row) = self.draw_step(&mut rng);
             cache.append_token_layer(0, &k_row, &v_row);
             let shards = Self::shard_views(&cache, p);
-            let outcome = tree_decode(
-                cluster,
-                backend,
-                self.shape,
-                self.scale,
-                &q,
-                &shards,
-                self.cfg.algo,
-                self.cfg.wire_bpe,
-            )?;
+            let ctx: usize = shards.iter().map(|s| s.len).sum();
+            let resolved = self.resolve_round(cluster, 1, ctx);
+            let strat = strategy_impl(resolved, self.cfg.algo, self.cfg.wire_bpe)?;
+            let outcome = strat.decode(cluster, backend, self.shape, self.scale, &q, &shards)?;
             outs.push(outcome.out);
             cache.commit_token();
         }
@@ -510,14 +547,15 @@ mod tests {
         )
     }
 
-    fn batcher(max_batch: usize, page_size: usize, pages_per_worker: usize) -> TreeBatcher {
-        TreeBatcher::new(
+    fn batcher(max_batch: usize, page_size: usize, pages_per_worker: usize) -> DecodeBatcher {
+        DecodeBatcher::new(
             AttnShape::new(1, 4, 2, 8),
             0.3,
             BatcherConfig {
                 max_batch,
                 page_size,
                 pages_per_worker,
+                strategy: Strategy::Tree,
                 algo: AllReduceAlgo::Tree { fanout: 2 },
                 wire_bpe: 2,
                 seed: 42,
@@ -624,16 +662,22 @@ mod tests {
 
     #[test]
     fn batcher_serves_under_auto_planner() {
-        // The default config now plans the collective per round; a full
-        // serve run must complete and stay exact to the solo replay within
-        // fp tolerance (Auto may pick a segmented schedule for the batch).
+        // The default config plans the STRATEGY and the collective per
+        // round; a full serve run must complete and stay exact to the solo
+        // replay within fp tolerance (Auto may resolve the batched and solo
+        // points to different strategies/schedules).
         let shape = AttnShape::new(1, 4, 2, 8);
-        let b = TreeBatcher::new(shape, 0.3, BatcherConfig { max_batch: 4, seed: 42, ..Default::default() });
-        assert_eq!(b.cfg.algo, AllReduceAlgo::Auto, "serving defaults to the planner");
+        let b = DecodeBatcher::new(shape, 0.3, BatcherConfig { max_batch: 4, seed: 42, ..Default::default() });
+        assert_eq!(b.cfg.algo, AllReduceAlgo::Auto, "serving defaults to the collective planner");
+        assert!(b.cfg.strategy.is_auto(), "serving defaults to the strategy planner");
         let mut cluster = VirtualCluster::new(flat(4));
         let reqs = vec![req(0, 13, 4), req(1, 29, 4), req(2, 7, 4)];
         let (results, metrics) = b.run(&mut cluster, &ComputeBackend::Oracle, reqs.clone()).unwrap();
         assert_eq!(metrics.completed, 3);
+        // Every round was attributed to some concrete (never auto) strategy.
+        let attributed: usize = metrics.strategy_rounds.values().sum();
+        assert_eq!(attributed, metrics.rounds, "every round records its resolved strategy");
+        assert!(!metrics.strategy_rounds.contains_key("auto"));
         for r in &reqs {
             let batched = results.iter().find(|x| x.id == r.id).unwrap();
             let mut c2 = VirtualCluster::new(flat(4));
@@ -643,6 +687,61 @@ mod tests {
                 let d = crate::attnmath::max_abs_diff(bo, so);
                 assert!(d < 1e-4, "request {} token {t}: diff {d}", r.id);
             }
+        }
+    }
+
+    #[test]
+    fn ring_batcher_bit_identical_to_solo_ring_replay() {
+        // Strategy-generic serving: pin ring and the whole continuous-
+        // batching run (fused per-hop exchanges for B sessions) must be
+        // bit-identical to replaying each request alone through ring_decode.
+        let shape = AttnShape::new(1, 4, 2, 8);
+        let b = DecodeBatcher::new(
+            shape,
+            0.3,
+            BatcherConfig {
+                max_batch: 4,
+                strategy: Strategy::Ring,
+                seed: 42,
+                ..Default::default()
+            },
+        );
+        let mut cluster = VirtualCluster::new(flat(4));
+        let reqs = vec![req(0, 13, 4), req(1, 29, 4), req(2, 7, 4)];
+        let (results, metrics) = b.run(&mut cluster, &ComputeBackend::Oracle, reqs.clone()).unwrap();
+        assert_eq!(metrics.completed, 3);
+        assert_eq!(metrics.strategy_rounds.get("ring"), Some(&metrics.rounds));
+        for r in &reqs {
+            let batched = results.iter().find(|x| x.id == r.id).unwrap();
+            let mut c2 = VirtualCluster::new(flat(4));
+            let solo = b.replay_single(&mut c2, &ComputeBackend::Oracle, r).unwrap();
+            assert_eq!(batched.outputs, solo, "request {} must be bit-identical", r.id);
+        }
+    }
+
+    #[test]
+    fn single_batcher_bit_identical_to_solo_single_replay() {
+        let shape = AttnShape::new(1, 4, 2, 8);
+        let b = DecodeBatcher::new(
+            shape,
+            0.3,
+            BatcherConfig {
+                max_batch: 4,
+                strategy: Strategy::Single,
+                seed: 43,
+                ..Default::default()
+            },
+        );
+        let mut cluster = VirtualCluster::new(flat(2));
+        let reqs = vec![req(0, 9, 3), req(1, 21, 3)];
+        let (results, metrics) = b.run(&mut cluster, &ComputeBackend::Oracle, reqs.clone()).unwrap();
+        assert_eq!(metrics.completed, 2);
+        assert_eq!(metrics.strategy_rounds.get("single"), Some(&metrics.rounds));
+        for r in &reqs {
+            let batched = results.iter().find(|x| x.id == r.id).unwrap();
+            let mut c2 = VirtualCluster::new(flat(2));
+            let solo = b.replay_single(&mut c2, &ComputeBackend::Oracle, r).unwrap();
+            assert_eq!(batched.outputs, solo, "request {} must be bit-identical", r.id);
         }
     }
 

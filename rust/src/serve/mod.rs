@@ -12,7 +12,7 @@ pub mod batcher;
 
 pub use batcher::{
     synthetic_decode_workload, BatchMetrics, BatchRequest, BatchResult, BatcherConfig,
-    FinishReason, TreeBatcher,
+    DecodeBatcher, FinishReason, TreeBatcher,
 };
 
 use crate::cluster::VirtualCluster;

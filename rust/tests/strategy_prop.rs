@@ -1,0 +1,202 @@
+//! Property tests over the decode strategies (the ISSUE-3 "strategy
+//! property test" satellite): for world sizes p ∈ 1..16 — including
+//! non-powers-of-two — with uneven shardings (zero-length shards included)
+//! and batch widths B ∈ {1, 3, 8}:
+//!
+//!   1. tree ≡ ring ≡ single on every session: attention outputs AND the
+//!      un-normalized softmax denominators agree (to fp tolerance — the
+//!      three strategies combine partials in different orders, so the last
+//!      ulp may differ; checking the denominators too rules out two wrong
+//!      (n, d) pairs cancelling in the quotient);
+//!   2. every strategy's fused `decode_batch` is BIT-IDENTICAL to looping
+//!      its per-session decode — the serving path changes scheduling, not
+//!      math (tree is pinned to a full-buffer collective, where that
+//!      guarantee holds by construction);
+//!   3. `Strategy::Auto` resolves to a concrete strategy whose output is
+//!      exact against the same reference.
+
+use tree_attention::attention::{
+    ring_decode, ring_decode_batch, single_decode, single_decode_batch, strategy_impl,
+    tree_decode, tree_decode_batch, BatchEntry, ComputeBackend, ShardKv,
+};
+use tree_attention::attnmath::{max_abs_diff, ref_attention, AttnShape};
+use tree_attention::cluster::VirtualCluster;
+use tree_attention::collectives::AllReduceAlgo;
+use tree_attention::gpumodel::GpuKind;
+use tree_attention::planner::StrategyRequest;
+use tree_attention::topology::{LinkSpec, Topology};
+use tree_attention::util::prop::check;
+use tree_attention::util::Rng;
+use tree_attention::Strategy;
+
+fn flat(p: usize) -> Topology {
+    Topology::custom(
+        "prop",
+        1,
+        p,
+        GpuKind::H100,
+        LinkSpec::nvlink4(),
+        LinkSpec::infiniband_ndr(),
+    )
+}
+
+struct Session {
+    q: Vec<f32>,
+    ks: Vec<Vec<f32>>,
+    vs: Vec<Vec<f32>>,
+    lens: Vec<usize>,
+}
+
+impl Session {
+    fn random(rng: &mut Rng, shape: AttnShape, lens: Vec<usize>) -> Session {
+        let row = shape.kv_heads * shape.d_head;
+        Session {
+            q: rng.normal_vec(shape.q_elems(), 1.0),
+            ks: lens.iter().map(|&l| rng.normal_vec(l * row, 1.0)).collect(),
+            vs: lens.iter().map(|&l| rng.normal_vec(l * row, 1.0)).collect(),
+            lens,
+        }
+    }
+
+    fn shards(&self) -> Vec<ShardKv<'_>> {
+        (0..self.lens.len())
+            .map(|w| ShardKv { k: &self.ks[w], v: &self.vs[w], len: self.lens[w] })
+            .collect()
+    }
+
+    fn reference(&self, shape: AttnShape, scale: f32) -> Vec<f32> {
+        let k_all: Vec<f32> = self.ks.concat();
+        let v_all: Vec<f32> = self.vs.concat();
+        let t: usize = self.lens.iter().sum();
+        ref_attention(shape, &self.q, &k_all, &v_all, t, scale)
+    }
+}
+
+#[test]
+fn tree_ring_single_agree_on_outputs_and_denominators() {
+    check("tree == ring == single (out + den)", 30, |g| {
+        let shape = AttnShape::new(1, 8, 2, 16);
+        let scale = 0.25;
+        let p = g.usize_in(1..17); // non-powers-of-two included
+        let mut lens: Vec<usize> = (0..p).map(|_| g.usize_in(0..40)).collect();
+        if lens.iter().sum::<usize>() == 0 {
+            lens[g.usize_in(0..p)] = 1 + g.usize_in(0..8);
+        }
+        let seed = g.rng().next_u64();
+        let mut rng = Rng::seed(seed);
+        let sess = Session::random(&mut rng, shape, lens);
+        let shards = sess.shards();
+        let topo = flat(p);
+
+        let mut ct = VirtualCluster::new(topo.clone());
+        let tree = tree_decode(
+            &mut ct, &ComputeBackend::Oracle, shape, scale, &sess.q, &shards,
+            AllReduceAlgo::Tree { fanout: 2 }, 2,
+        )
+        .unwrap();
+        let mut cr = VirtualCluster::new(topo.clone());
+        let ring =
+            ring_decode(&mut cr, &ComputeBackend::Oracle, shape, scale, &sess.q, &shards, 2, false)
+                .unwrap();
+        let mut cs = VirtualCluster::new(topo.clone());
+        let single =
+            single_decode(&mut cs, &ComputeBackend::Oracle, shape, scale, &sess.q, &shards, 2)
+                .unwrap();
+
+        let reference = sess.reference(shape, scale);
+        assert!(max_abs_diff(&tree.out, &reference) < 1e-4, "tree vs oracle");
+        assert!(max_abs_diff(&ring.out, &reference) < 1e-4, "ring vs oracle");
+        assert!(max_abs_diff(&single.out, &reference) < 1e-4, "single vs oracle");
+        // Denominators agree too: all three fold the same per-chunk partials
+        // (in different orders), ending at the same global max, so the
+        // un-normalized state must match — not just the quotient.
+        assert_eq!(tree.den.len(), shape.n_heads);
+        let dtol = 1e-4 * tree.den.iter().fold(1.0f32, |a, &x| a.max(x.abs()));
+        assert!(
+            max_abs_diff(&tree.den, &ring.den) < dtol,
+            "tree vs ring denominators (tol {dtol})"
+        );
+        assert!(
+            max_abs_diff(&tree.den, &single.den) < dtol,
+            "tree vs single denominators (tol {dtol})"
+        );
+
+        // Auto resolves to one of the above and stays exact.
+        let resolved = tree_attention::planner::resolve_strategy(
+            Strategy::Auto,
+            &topo,
+            StrategyRequest::for_shape(shape, 1, sess.lens.iter().sum::<usize>().max(1), 2),
+        );
+        assert!(!resolved.is_auto());
+        let imp = strategy_impl(resolved, AllReduceAlgo::Tree { fanout: 2 }, 2).unwrap();
+        let mut ca = VirtualCluster::new(topo);
+        let auto =
+            imp.decode(&mut ca, &ComputeBackend::Oracle, shape, scale, &sess.q, &shards).unwrap();
+        assert!(max_abs_diff(&auto.out, &reference) < 1e-4, "auto vs oracle");
+    });
+}
+
+#[test]
+fn every_strategy_batched_bit_identical_to_per_session_decode() {
+    check("decode_batch == per-session decode, bit for bit", 20, |g| {
+        let shape = AttnShape::new(1, 4, 2, 16);
+        let scale = 0.3;
+        let p = g.usize_in(1..17);
+        let b = *g.choose(&[1usize, 3, 8]);
+        let seed = g.rng().next_u64();
+        let mut rng = Rng::seed(seed);
+        let sessions: Vec<Session> = (0..b)
+            .map(|_| {
+                let mut lens: Vec<usize> = (0..p).map(|_| rng.below(30)).collect();
+                if lens.iter().sum::<usize>() == 0 {
+                    lens[rng.below(p)] = 1 + rng.below(8);
+                }
+                Session::random(&mut rng, shape, lens)
+            })
+            .collect();
+        let entries: Vec<BatchEntry> = sessions
+            .iter()
+            .map(|s| BatchEntry { q: &s.q, shards: s.shards() })
+            .collect();
+        let topo = flat(p);
+        let algo = AllReduceAlgo::Tree { fanout: 2 }; // full-buffer: bit-exact
+
+        // tree
+        let mut c = VirtualCluster::new(topo.clone());
+        let tree_b =
+            tree_decode_batch(&mut c, &ComputeBackend::Oracle, shape, scale, &entries, algo, 2)
+                .unwrap();
+        // ring
+        let mut c = VirtualCluster::new(topo.clone());
+        let ring_b =
+            ring_decode_batch(&mut c, &ComputeBackend::Oracle, shape, scale, &entries, 2, false)
+                .unwrap();
+        // single
+        let mut c = VirtualCluster::new(topo.clone());
+        let single_b =
+            single_decode_batch(&mut c, &ComputeBackend::Oracle, shape, scale, &entries, 2)
+                .unwrap();
+
+        for (s, sess) in sessions.iter().enumerate() {
+            let shards = sess.shards();
+            let mut c1 = VirtualCluster::new(topo.clone());
+            let tree_s = tree_decode(
+                &mut c1, &ComputeBackend::Oracle, shape, scale, &sess.q, &shards, algo, 2,
+            )
+            .unwrap();
+            assert_eq!(tree_b.outs[s], tree_s.out, "tree session {s}");
+            let mut c2 = VirtualCluster::new(topo.clone());
+            let ring_s = ring_decode(
+                &mut c2, &ComputeBackend::Oracle, shape, scale, &sess.q, &shards, 2, false,
+            )
+            .unwrap();
+            assert_eq!(ring_b.outs[s], ring_s.out, "ring session {s}");
+            let mut c3 = VirtualCluster::new(topo.clone());
+            let single_s = single_decode(
+                &mut c3, &ComputeBackend::Oracle, shape, scale, &sess.q, &shards, 2,
+            )
+            .unwrap();
+            assert_eq!(single_b.outs[s], single_s.out, "single session {s}");
+        }
+    });
+}
