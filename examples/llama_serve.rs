@@ -66,7 +66,7 @@ fn main() -> anyhow::Result<()> {
         )?;
         let mut cluster = VirtualCluster::new(topo.clone());
         let reqs = synthetic_workload(n_req, prompt_lo, prompt_hi, new_toks, vocab, 42);
-        let mut server = Server::new(&exec, &mut cluster, ServeConfig { max_batch });
+        let mut server = Server::new(&exec, &mut cluster, ServeConfig { max_batch, ..Default::default() });
         let (results, metrics) = server.run(reqs)?;
 
         let mut table = Table::new(

@@ -85,9 +85,11 @@ fn main() {
     );
     let topo = Topology::h100_dgx(1);
     let seqs: Vec<usize> = if quick { vec![640_000] } else { vec![160_000, 640_000, 2_560_000] };
+    let mut last_overlap_saving = 0.0f64;
     for &seq in &seqs {
         let no = sim_attention(&topo, Strategy::Ring, seq, shape, 2, AllReduceAlgo::Ring, false);
         let yes = sim_attention(&topo, Strategy::Ring, seq, shape, 2, AllReduceAlgo::Ring, true);
+        last_overlap_saving = 1.0 - yes.sim_time / no.sim_time;
         table.row(vec![
             fmt_tokens(seq),
             fmt_secs(no.sim_time),
@@ -118,4 +120,14 @@ fn main() {
         r.stats.comm_steps,
         tree_attention::util::fmt_bytes(r.stats.traffic.total_bytes())
     );
+    let s = tree_attention::bench::write_bench_summary(
+        "ablations",
+        &[
+            ("overlap_saving_frac_largest", last_overlap_saving),
+            ("ring_sanity_comm_steps", r.stats.comm_steps as f64),
+            ("ring_sanity_comm_bytes", r.stats.traffic.total_bytes() as f64),
+        ],
+    )
+    .unwrap();
+    println!("summary written to {}", s.display());
 }

@@ -106,4 +106,14 @@ fn main() {
     );
     let path = tree_attention::bench::write_results("comm_volume", &Json::arr(results)).unwrap();
     println!("results written to {}", path.display());
+    let s = tree_attention::bench::write_bench_summary(
+        "comm_volume",
+        &[
+            ("ring_over_tree_bytes_640k", ring.traffic.total_bytes() as f64 / tree.traffic.total_bytes() as f64),
+            ("ring_over_tree_time_640k", ring.sim_time / tree.sim_time),
+            ("overlap_saving_frac_640k", 1.0 - ring_ov.sim_time / ring.sim_time),
+        ],
+    )
+    .unwrap();
+    println!("summary written to {}", s.display());
 }

@@ -22,6 +22,8 @@ fn main() {
     } else {
         vec![10, 12, 14, 16, 18, 20, 22, 24, 26, 28, 30]
     };
+    let mut last_intra = 0.0f64;
+    let mut last_inter = 0.0f64;
     for &exp in &exps {
         let bytes = 1u64 << exp;
         // measured through the simulator (fresh sim per size: uncontended)
@@ -30,6 +32,8 @@ fn main() {
         let t_inter = sim.transfer(2, 10, bytes, 0.0);
         let bw_intra = bytes as f64 / t_intra / 1e9;
         let bw_inter = bytes as f64 / t_inter / 1e9;
+        last_intra = bw_intra;
+        last_inter = bw_inter;
         table.row(vec![
             fmt_bytes(bytes),
             format!("{bw_intra:.1}"),
@@ -49,4 +53,14 @@ fn main() {
     );
     let path = tree_attention::bench::write_results("fig2_bandwidth", &Json::arr(series)).unwrap();
     println!("results written to {}", path.display());
+    let s = tree_attention::bench::write_bench_summary(
+        "fig2_bandwidth",
+        &[
+            ("intra_gbps_largest", last_intra),
+            ("inter_gbps_largest", last_inter),
+            ("tier_ratio_largest", last_intra / last_inter),
+        ],
+    )
+    .unwrap();
+    println!("summary written to {}", s.display());
 }

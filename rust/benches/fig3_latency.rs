@@ -111,4 +111,10 @@ fn main() {
     );
     let path = tree_attention::bench::write_results("fig3_latency", &Json::arr(results)).unwrap();
     println!("results written to {}", path.display());
+    let s = tree_attention::bench::write_bench_summary(
+        "fig3_latency",
+        &[("speedup_128gpu_5m", speedup)],
+    )
+    .unwrap();
+    println!("summary written to {}", s.display());
 }

@@ -67,6 +67,7 @@ fn main() {
     let shape = AttnShape::mha(1, 16, 128);
     let row = shape.kv_heads * shape.d_head;
     let measured_seqs: Vec<usize> = if quick { vec![2048] } else { vec![2048, 4096, 8192] };
+    let mut last_ratio = 0.0f64;
     for &seq in &measured_seqs {
         let t_local = seq / p;
         let mut rng = Rng::seed(4);
@@ -85,6 +86,7 @@ fn main() {
         tree_decode(&mut c, &ComputeBackend::Oracle, shape, 0.08, &q, &shards, AllReduceAlgo::Ring, 2).unwrap();
         let tree_meas = c.mem.max_peak() + kv_resident;
 
+        last_ratio = ring_meas as f64 / tree_meas as f64;
         table.row(vec![
             fmt_tokens(seq),
             fmt_bytes(ring_meas),
@@ -101,4 +103,10 @@ fn main() {
     println!("\npaper shape check: ring ≈ 2× tree, gap scales with t·d.");
     let path = tree_attention::bench::write_results("fig4_memory", &Json::arr(results)).unwrap();
     println!("results written to {}", path.display());
+    let s = tree_attention::bench::write_bench_summary(
+        "fig4_memory",
+        &[("ring_over_tree_peak_largest", last_ratio)],
+    )
+    .unwrap();
+    println!("summary written to {}", s.display());
 }

@@ -19,6 +19,9 @@ fn main() {
     let quick = tree_attention::bench::quick_mode();
     let (warm, samples) = if quick { (1, 3) } else { (3, 10) };
     let mut table = Table::new("L3 hot-path micro-benchmarks", &["bench", "per iter", "throughput"]);
+    // Wall-clock summary only: every key is wall_-prefixed so bench-compare
+    // never gates on host-dependent timings.
+    let mut summary: Vec<(&str, f64)> = Vec::new();
 
     // -- attn combine op ----------------------------------------------------
     let op = AttnCombineOp { d_head: 128 };
@@ -30,6 +33,7 @@ fn main() {
         op.combine(&mut acc, &other);
     });
     let bytes_per_iter = (blocks * 130 * 4) as f64;
+    summary.push(("wall_attn_combine_s", r.per_iter()));
     table.row(vec![
         "attn_combine (1024 blocks, dh=128)".into(),
         fmt_secs(r.per_iter()),
@@ -46,6 +50,7 @@ fn main() {
         sim.transfer(src, dst, 4096, i as f64 * 1e-9);
         i += 1;
     });
+    summary.push(("wall_netsim_transfer_s", r.per_iter()));
     table.row(vec![
         "netsim transfer post".into(),
         fmt_secs(r.per_iter()),
@@ -81,6 +86,7 @@ fn main() {
         std::hint::black_box(partial_from_chunk(shape, &q, &k, &v, t, 0.09));
     });
     let kv_bytes = (2 * t * row_elems * 4) as f64;
+    summary.push(("wall_oracle_partial_s", r.per_iter()));
     table.row(vec![
         "oracle partial (t=2048, 16h x 128)".into(),
         fmt_secs(r.per_iter()),
@@ -126,4 +132,6 @@ fn main() {
     }
 
     table.print();
+    let s = tree_attention::bench::write_bench_summary("micro", &summary).unwrap();
+    println!("summary written to {}", s.display());
 }

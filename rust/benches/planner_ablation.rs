@@ -62,6 +62,7 @@ fn main() {
     let mut results = Vec::new();
     let mut ring_beats_trees = 0usize;
     let mut twolevel_beats_both = 0usize;
+    let mut auto_over_best_max = 0.0f64;
 
     for (preset, topo) in &topos {
         for &ctx in &contexts {
@@ -91,6 +92,7 @@ fn main() {
                     topo.world_size(),
                     best_algo.name()
                 );
+                auto_over_best_max = auto_over_best_max.max(auto_t / best_t);
 
                 // Crossover bookkeeping for acceptance criterion 2.
                 let ring_t = timed
@@ -162,4 +164,14 @@ fn main() {
     );
     let path = tree_attention::bench::write_results("planner_ablation", &Json::arr(results)).unwrap();
     println!("results written to {}", path.display());
+    let s = tree_attention::bench::write_bench_summary(
+        "planner_ablation",
+        &[
+            ("auto_over_best_max", auto_over_best_max),
+            ("ring_wins", ring_beats_trees as f64),
+            ("twolevel_wins", twolevel_beats_both as f64),
+        ],
+    )
+    .unwrap();
+    println!("summary written to {}", s.display());
 }

@@ -1,0 +1,262 @@
+//! Prefix-sharing radix KV cache — exactness and serving wins.
+//!
+//! Three parts:
+//!   1. **Bit-identity sweep** (blocking): for every worker count
+//!      p ∈ 1..=16 — powers of two AND NOT — serving a shared-prefix
+//!      workload with `prefix_share` on produces bit-identical outputs to
+//!      serving it with sharing off (pinned tree strategy, full-buffer
+//!      collective). Sharing changes accounting, never math.
+//!   2. **Denominator check** (blocking): a sequence whose cache was built
+//!      by aliasing radix pages + copy-on-write fork decodes to the same
+//!      bits — attention output AND softmax denominator `(n, d, m)` state —
+//!      as one built from scratch, for the same p sweep.
+//!   3. **Serving wins** (blocking): on a system-prompt workload with
+//!      ≥50% shared tokens, sharing cuts mean TTFT by ≥2x and reserves
+//!      measurably fewer peak pages. All virtual-clock — deterministic
+//!      across hosts, so CI gates on it.
+//!
+//! `--quick` shrinks the perf sweep to one worker count; the exactness
+//! sweeps always run in full (they are the acceptance criterion).
+
+use tree_attention::attention::{tree_decode, ComputeBackend, ShardKv};
+use tree_attention::attnmath::AttnShape;
+use tree_attention::bench::Table;
+use tree_attention::cluster::VirtualCluster;
+use tree_attention::collectives::AllReduceAlgo;
+use tree_attention::kvcache::{CacheSpec, PagePool, RadixCache, ShardedKvCache};
+use tree_attention::ser::Json;
+use tree_attention::serve::{
+    synthetic_shared_prefix_workload, BatcherConfig, DecodeBatcher,
+};
+use tree_attention::util::{fmt_secs, Rng};
+use tree_attention::{Strategy, Topology};
+
+const SHAPE: AttnShape = AttnShape { batch: 1, n_heads: 4, kv_heads: 2, d_head: 8 };
+const SCALE: f32 = 0.3;
+
+fn flat(p: usize) -> Topology {
+    Topology::custom(
+        &format!("h100-flat-{p}"),
+        1,
+        p,
+        tree_attention::gpumodel::GpuKind::H100,
+        tree_attention::topology::LinkSpec::nvlink4(),
+        tree_attention::topology::LinkSpec::infiniband_ndr(),
+    )
+}
+
+fn batcher(share: bool, page_size: usize, pages_per_worker: usize, max_batch: usize) -> DecodeBatcher {
+    DecodeBatcher::new(
+        SHAPE,
+        SCALE,
+        BatcherConfig {
+            max_batch,
+            page_size,
+            pages_per_worker,
+            // Pinned strategy + full-buffer collective: the bit-identity
+            // regime (Auto may legally re-plan and change rounding).
+            strategy: Strategy::Tree,
+            algo: AllReduceAlgo::Tree { fanout: 2 },
+            wire_bpe: 2,
+            seed: 42,
+            prefix_share: share,
+        },
+    )
+}
+
+fn main() {
+    let quick = tree_attention::bench::quick_mode();
+    let mut results = Vec::new();
+
+    // ---- part 1: bit-identity, p ∈ 1..=16 incl. non-powers-of-two --------
+    let reqs = synthetic_shared_prefix_workload(6, 24, 30, 44, 3, 7);
+    for p in 1..=16usize {
+        let shared = batcher(true, 4, 512, 4);
+        let plain = batcher(false, 4, 512, 4);
+        let mut c1 = VirtualCluster::new(flat(p));
+        let mut c2 = VirtualCluster::new(flat(p));
+        let (rs, ms) = shared.run(&mut c1, &ComputeBackend::Oracle, reqs.clone()).unwrap();
+        let (rp, _) = plain.run(&mut c2, &ComputeBackend::Oracle, reqs.clone()).unwrap();
+        assert!(ms.prefix.hit_tokens > 0, "p={p}: the workload must actually share");
+        for r in &reqs {
+            let a = rs.iter().find(|x| x.id == r.id).unwrap();
+            let b = rp.iter().find(|x| x.id == r.id).unwrap();
+            assert_eq!(a.outputs, b.outputs, "p={p} request {}: outputs diverged", r.id);
+            assert_eq!(a.tokens, b.tokens, "p={p} request {}: tokens diverged", r.id);
+        }
+    }
+    println!("exactness ✓ shared-prefix serving bit-identical to unshared for p in 1..=16");
+
+    // ---- part 2: outputs AND denominators through an aliased cache -------
+    for p in 1..=16usize {
+        assert_aliased_cache_decode_identical(p);
+    }
+    println!("exactness ✓ aliased+COW cache decode: outputs AND denominators bit-identical");
+
+    // ---- part 3: TTFT and page wins on a system-prompt workload ----------
+    // 87.5% of every prompt is a shared system prefix; context is sized so
+    // prefill is flops-dominated (launch overhead amortized) — the regime
+    // the ≥2x TTFT acceptance criterion targets.
+    let (ctx, shared_len, n_req, new_toks) = (32_768usize, 28_672usize, 16usize, 2usize);
+    let ps = 16usize;
+    let pages = 2 * (n_req * (ctx + new_toks)).div_ceil(ps); // roomy on every worker count
+    let worker_counts: Vec<usize> = if quick { vec![2] } else { vec![2, 5] };
+    let mut table = Table::new(
+        "Prefix sharing — serving wins (87.5% shared system prompt)",
+        &["p", "mean TTFT off", "mean TTFT on", "speedup", "peak pages off", "peak pages on", "hit rate"],
+    );
+    let mut min_speedup = f64::INFINITY;
+    let mut min_page_saving = f64::INFINITY;
+    for &p in &worker_counts {
+        let work = synthetic_shared_prefix_workload(n_req, shared_len, ctx, ctx, new_toks, 11);
+        let on = batcher(true, ps, pages, n_req);
+        let off = batcher(false, ps, pages, n_req);
+        let mut c1 = VirtualCluster::new(flat(p));
+        let mut c2 = VirtualCluster::new(flat(p));
+        let (_, m_on) = on.run(&mut c1, &ComputeBackend::Oracle, work.clone()).unwrap();
+        let (_, m_off) = off.run(&mut c2, &ComputeBackend::Oracle, work).unwrap();
+        assert_eq!(m_on.completed, n_req);
+        assert_eq!(m_off.completed, n_req);
+        let speedup = m_off.ttft.mean / m_on.ttft.mean;
+        let page_saving = 1.0 - m_on.peak_used_pages as f64 / m_off.peak_used_pages as f64;
+        min_speedup = min_speedup.min(speedup);
+        min_page_saving = min_page_saving.min(page_saving);
+        assert!(
+            m_on.prefix_hit_rate() > 0.5,
+            "p={p}: ≥50% of prompt tokens must be radix-served (got {})",
+            m_on.prefix_hit_rate()
+        );
+        assert!(
+            speedup >= 2.0,
+            "p={p}: sharing must cut mean TTFT ≥2x (off {} on {} = {speedup:.2}x)",
+            m_off.ttft.mean,
+            m_on.ttft.mean
+        );
+        assert!(
+            m_on.peak_used_pages < m_off.peak_used_pages,
+            "p={p}: sharing must reserve fewer peak pages ({} vs {})",
+            m_on.peak_used_pages,
+            m_off.peak_used_pages
+        );
+        table.row(vec![
+            p.to_string(),
+            fmt_secs(m_off.ttft.mean),
+            fmt_secs(m_on.ttft.mean),
+            format!("{speedup:.2}x"),
+            m_off.peak_used_pages.to_string(),
+            m_on.peak_used_pages.to_string(),
+            format!("{:.0}%", m_on.prefix_hit_rate() * 100.0),
+        ]);
+        results.push(Json::obj(vec![
+            ("p", Json::num(p as f64)),
+            ("ttft_mean_off_s", Json::num(m_off.ttft.mean)),
+            ("ttft_mean_on_s", Json::num(m_on.ttft.mean)),
+            ("ttft_speedup", Json::num(speedup)),
+            ("peak_pages_off", Json::num(m_off.peak_used_pages as f64)),
+            ("peak_pages_on", Json::num(m_on.peak_used_pages as f64)),
+            ("hit_rate", Json::num(m_on.prefix_hit_rate())),
+            ("deduped_pages", Json::num(m_on.deduped_pages as f64)),
+        ]));
+    }
+    table.print();
+    println!(
+        "\nacceptance ✓ ≥2x lower mean TTFT and fewer reserved pages at every worker\n\
+         count; all outputs bit-identical to the no-sharing runs."
+    );
+
+    let path = tree_attention::bench::write_results("prefix_share", &Json::arr(results)).unwrap();
+    println!("results written to {}", path.display());
+    let s = tree_attention::bench::write_bench_summary(
+        "prefix_share",
+        &[("ttft_speedup_min", min_speedup), ("page_saving_min", min_page_saving)],
+    )
+    .unwrap();
+    println!("summary written to {}", s.display());
+}
+
+/// Build one sequence's cache two ways — (a) aliasing a radix-committed
+/// prefix with a copy-on-write mid-page fork, (b) from scratch — and check
+/// the decode is bit-identical in BOTH the attention output and the softmax
+/// denominators (two wrong `(n, d)` pairs can hide in a right quotient).
+fn assert_aliased_cache_decode_identical(p: usize) {
+    let page = 4usize;
+    let row = SHAPE.kv_heads * SHAPE.d_head;
+    let spec = CacheSpec {
+        n_layers: 1,
+        kv_heads: SHAPE.kv_heads,
+        d_head: SHAPE.d_head,
+        n_workers: p,
+        page_size: page,
+        elem_bytes: 2,
+    };
+    let mut rng = Rng::seed(0xA11A5 ^ p as u64);
+    // Committed prefix: 32 tokens (8 whole pages) from an earlier sequence.
+    let donor: Vec<i32> = (0..32).collect();
+    let donor_k = vec![rng.normal_vec(32 * row, 1.0)];
+    let donor_v = vec![rng.normal_vec(32 * row, 1.0)];
+    let mut radix = RadixCache::new(spec);
+    let mut pool = PagePool::new(p, 1024);
+    let h = radix.acquire(&donor);
+    assert!(pool.try_reserve(&PagePool::pages_for_span(p, page, 32)));
+    radix.insert(&h, &donor, &donor_k, &donor_v);
+
+    // New sequence: matches 22 donor tokens (diverges MID-page-5), then 18
+    // of its own — aliasing ⌊22/4⌋ = 5 pages, COW-copying the 2 shared rows
+    // of the fork page.
+    let mut prompt: Vec<i32> = (0..22).collect();
+    prompt.extend(100..118);
+    let matched = radix.match_prefix(&prompt);
+    assert_eq!(matched, 22, "p={p}: token-granular match across the fork page");
+    let (mut k_pfx, mut v_pfx) = radix.prefix_rows(&prompt, matched);
+    let tail_k = rng.normal_vec(18 * row, 1.0);
+    let tail_v = rng.normal_vec(18 * row, 1.0);
+    k_pfx[0].extend_from_slice(&tail_k);
+    v_pfx[0].extend_from_slice(&tail_v);
+
+    let mut aliased = ShardedKvCache::new(spec);
+    aliased.install_shared_prefix(40, (matched / page) * page, &k_pfx, &v_pfx);
+    let mut scratch = ShardedKvCache::new(spec);
+    scratch.install_shared_prefix(40, 0, &k_pfx, &v_pfx);
+
+    let q = rng.normal_vec(SHAPE.q_elems(), 1.0);
+    let views = |c: &ShardedKvCache| -> Vec<ShardKv<'_>> {
+        (0..p)
+            .map(|w| {
+                let s = c.shard(w);
+                ShardKv { k: &s.k[0], v: &s.v[0], len: s.len }
+            })
+            .collect()
+    };
+    let mut c1 = VirtualCluster::new(flat(p));
+    let mut c2 = VirtualCluster::new(flat(p));
+    let a = tree_decode(
+        &mut c1,
+        &ComputeBackend::Oracle,
+        SHAPE,
+        SCALE,
+        &q,
+        &views(&aliased),
+        AllReduceAlgo::Tree { fanout: 2 },
+        2,
+    )
+    .unwrap();
+    let b = tree_decode(
+        &mut c2,
+        &ComputeBackend::Oracle,
+        SHAPE,
+        SCALE,
+        &q,
+        &views(&scratch),
+        AllReduceAlgo::Tree { fanout: 2 },
+        2,
+    )
+    .unwrap();
+    assert_eq!(a.out, b.out, "p={p}: outputs must be bit-identical");
+    assert_eq!(a.den, b.den, "p={p}: softmax denominators must be bit-identical");
+    // And the accounting differs exactly as designed: the aliased cache
+    // owns only its COW + tail pages.
+    assert!(aliased.worker_bytes(0) <= scratch.worker_bytes(0));
+    let owned_aliased: u64 = (0..p).map(|w| aliased.worker_bytes(w)).sum();
+    let owned_scratch: u64 = (0..p).map(|w| scratch.worker_bytes(w)).sum();
+    assert_eq!(owned_scratch - owned_aliased, 20 * spec.bytes_per_token());
+}

@@ -74,6 +74,7 @@ fn main() {
     let mut results = Vec::new();
     let mut ring_wins = 0usize;
     let mut tree_wins = 0usize;
+    let mut auto_over_best_max = 0.0f64;
 
     for (preset, topo) in &topos {
         for &ctx in &contexts {
@@ -106,6 +107,7 @@ fn main() {
                      {best_name} = {best_t}",
                     topo.world_size()
                 );
+                auto_over_best_max = auto_over_best_max.max(auto_t / best_t);
 
                 // Crossover bookkeeping for acceptance criterion 2: the
                 // paper's central comparison is tree vs ring.
@@ -165,6 +167,16 @@ fn main() {
     );
     let path = tree_attention::bench::write_results("strategy_ablation", &Json::arr(results)).unwrap();
     println!("results written to {}", path.display());
+    let s = tree_attention::bench::write_bench_summary(
+        "strategy_ablation",
+        &[
+            ("auto_over_best_max", auto_over_best_max),
+            ("ring_wins", ring_wins as f64),
+            ("tree_wins", tree_wins as f64),
+        ],
+    )
+    .unwrap();
+    println!("summary written to {}", s.display());
 }
 
 fn assert_batched_ring_bit_identical() {

@@ -25,6 +25,7 @@ fn main() {
     let n_tokens = 10;
 
     let mut results = Vec::new();
+    let mut min_speedup = f64::INFINITY;
     for (name, topo) in &testbeds {
         let mut table = Table::new(
             &format!("Table 1 — Llama-3.1-8B decode (10 tok) + prefill, {name}"),
@@ -33,6 +34,7 @@ fn main() {
         for &seq in &seqs {
             let tree = sim_table_cell(topo, &model, Strategy::Tree, seq, n_tokens);
             let ring = sim_table_cell(topo, &model, Strategy::Ring, seq, n_tokens);
+            min_speedup = min_speedup.min(ring / tree);
             table.row(vec![
                 fmt_tokens(seq),
                 fmt_s2(tree),
@@ -57,4 +59,10 @@ fn main() {
     );
     let path = tree_attention::bench::write_results("table1_llama", &Json::arr(results)).unwrap();
     println!("results written to {}", path.display());
+    let s = tree_attention::bench::write_bench_summary(
+        "table1_llama",
+        &[("min_tree_speedup", min_speedup)],
+    )
+    .unwrap();
+    println!("summary written to {}", s.display());
 }

@@ -25,9 +25,11 @@ fn main() {
         &["seq len", "Tree Attn (s)", "Ring Attn (s)", "Speedup"],
     );
     let mut results = Vec::new();
+    let mut min_speedup = f64::INFINITY;
     for &seq in &seqs {
         let tree = sim_table_cell(&topo, &model, Strategy::Tree, seq, n_tokens);
         let ring = sim_table_cell(&topo, &model, Strategy::Ring, seq, n_tokens);
+        min_speedup = min_speedup.min(ring / tree);
         table.row(vec![fmt_tokens(seq), fmt_s2(tree), fmt_s2(ring), fmt_speedup(ring, tree)]);
         results.push(Json::obj(vec![
             ("seq", Json::num(seq as f64)),
@@ -42,4 +44,10 @@ fn main() {
     );
     let path = tree_attention::bench::write_results("table2_4090", &Json::arr(results)).unwrap();
     println!("results written to {}", path.display());
+    let s = tree_attention::bench::write_bench_summary(
+        "table2_4090",
+        &[("min_tree_speedup", min_speedup)],
+    )
+    .unwrap();
+    println!("summary written to {}", s.display());
 }

@@ -80,6 +80,7 @@ fn main() {
     // ---- acceptance check: strict increase batch 1 → 8 @ 128k, H100 DGX --
     let topo = Topology::h100_dgx(1);
     let mut prev = 0.0;
+    let mut tps_b1 = 0.0;
     for b in [1usize, 2, 4, 8] {
         let r = sim_batched_tree_decode(&topo, b, 128_000, SHAPE, 2, TWOLEVEL);
         let tps = b as f64 / r.sim_time;
@@ -87,9 +88,17 @@ fn main() {
             tps > prev,
             "throughput must strictly increase: batch {b} gives {tps:.0} tok/s (prev {prev:.0})"
         );
+        if b == 1 {
+            tps_b1 = tps;
+        }
         prev = tps;
     }
     println!("\nacceptance ✓ tokens/s strictly increases from batch 1 to 8 at 128k ctx (H100 DGX)");
+    let summary = [
+        ("tok_per_s_b1_128k", tps_b1),
+        ("tok_per_s_b8_128k", prev),
+        ("tps_gain_b8_over_b1", prev / tps_b1),
+    ];
 
     // ---- part 2: real scheduler, real numerics (reduced scale) -----------
     let (n_req, ctx_lo, ctx_hi, n_tok) = if quick { (6, 64, 128, 3) } else { (16, 256, 1024, 6) };
@@ -110,6 +119,7 @@ fn main() {
                 algo: TWOLEVEL,
                 wire_bpe: 2,
                 seed: 7,
+                prefix_share: false,
             },
         );
         let reqs = synthetic_decode_workload(n_req, ctx_lo, ctx_hi, n_tok, 7);
@@ -146,6 +156,7 @@ fn main() {
             algo: AllReduceAlgo::Tree { fanout: 2 },
             wire_bpe: 2,
             seed: 11,
+            prefix_share: false,
         },
     );
     let reqs = synthetic_decode_workload(4, 32, 96, 3, 11);
@@ -161,4 +172,6 @@ fn main() {
 
     let path = tree_attention::bench::write_results("throughput_batch", &Json::arr(results)).unwrap();
     println!("results written to {}", path.display());
+    let s = tree_attention::bench::write_bench_summary("throughput_batch", &summary).unwrap();
+    println!("summary written to {}", s.display());
 }

@@ -119,6 +119,28 @@ pub fn write_results(name: &str, value: &Json) -> anyhow::Result<std::path::Path
     Ok(path)
 }
 
+/// Write `bench_results/BENCH_<name>.json` — the small, DETERMINISTIC
+/// summary CI uploads as an artifact and `treeattn bench-compare` gates
+/// against the committed baselines in `bench_baselines/`.
+///
+/// Only put virtual-clock / counting metrics here (they are bit-stable
+/// across hosts); keys prefixed `wall_` are recorded for context but never
+/// compared.
+pub fn write_bench_summary(
+    name: &str,
+    metrics: &[(&str, f64)],
+) -> anyhow::Result<std::path::PathBuf> {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("bench_results");
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join(format!("BENCH_{name}.json"));
+    let obj = Json::obj(vec![
+        ("bench", Json::str(name)),
+        ("metrics", Json::obj(metrics.iter().map(|(k, v)| (*k, Json::num(*v))).collect())),
+    ]);
+    std::fs::write(&path, obj.to_string_pretty())?;
+    Ok(path)
+}
+
 /// Format a speedup the way the paper's tables do ("×4").
 pub fn fmt_speedup(baseline: f64, ours: f64) -> String {
     if ours <= 0.0 {

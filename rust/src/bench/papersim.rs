@@ -362,14 +362,36 @@ pub fn sim_model_decode(
 /// Simulated prefill time for a prompt of `seq_len` tokens, parallelized
 /// over the cluster (identical for tree and ring decode strategies).
 pub fn sim_model_prefill(topo: &Topology, model: &ModelSpec, seq_len: usize) -> f64 {
+    sim_model_prefill_shared(topo, model, seq_len, 0)
+}
+
+/// Simulated prefill time when the first `matched` prompt tokens are served
+/// from the prefix cache: only the `seq_len - matched` suffix tokens run,
+/// each still attending causally over the WHOLE context (their KV reads hit
+/// the shared pages). This is the TTFT model behind `serve-bench
+/// --prefix-share` and the pricing `benches/prefix_share.rs` sweeps: the
+/// attention term shrinks ~linearly in the share ratio, the linear term
+/// exactly linearly.
+pub fn sim_model_prefill_shared(
+    topo: &Topology,
+    model: &ModelSpec,
+    seq_len: usize,
+    matched: usize,
+) -> f64 {
+    assert!(matched <= seq_len, "matched prefix beyond the prompt");
+    let n_new = seq_len - matched;
+    if n_new == 0 {
+        return 0.0;
+    }
     let mut cluster = VirtualCluster::new(topo.clone());
     cluster.gpu.mfu = 0.85; // long-prompt GEMMs run near peak
     let p = topo.world_size();
-    // attention flops (causal) + linear flops over the whole prompt
-    let attn = cluster.gpu.prefill_attention_time(1, seq_len, seq_len, model.n_heads, model.d_head())
+    // causal attention of the suffix against the full context + linear
+    // flops over the suffix only
+    let attn = cluster.gpu.prefill_attention_time(1, n_new, seq_len, model.n_heads, model.d_head())
         * model.n_layers as f64;
     let params_linear = model.param_count() - (model.vocab as u64 * model.d_model as u64);
-    let linear = cluster.gpu.gemm_time(2.0 * seq_len as f64 * params_linear as f64);
+    let linear = cluster.gpu.gemm_time(2.0 * n_new as f64 * params_linear as f64);
     (attn + linear) / p as f64
 }
 
@@ -511,6 +533,28 @@ mod tests {
         assert_eq!(r.traffic.total_msgs(), 7);
         assert_eq!(r.comm_steps, 1);
         assert!(r.sim_time > 0.0);
+    }
+
+    #[test]
+    fn shared_prefill_monotone_and_anchored() {
+        let topo = Topology::h100_dgx(1);
+        let m = ModelSpec::llama31_8b();
+        let seq = 128_000;
+        // matched = 0 is exactly the unshared prefill.
+        assert_eq!(sim_model_prefill_shared(&topo, &m, seq, 0), sim_model_prefill(&topo, &m, seq));
+        // More matched prefix → strictly less prefill, down to zero.
+        let mut prev = f64::INFINITY;
+        for matched in [0usize, 32_000, 64_000, 96_000, seq] {
+            let t = sim_model_prefill_shared(&topo, &m, seq, matched);
+            assert!(t < prev, "matched {matched}: {t} not < {prev}");
+            prev = t;
+        }
+        assert_eq!(sim_model_prefill_shared(&topo, &m, seq, seq), 0.0);
+        // A 75%-shared system prompt cuts prefill by well over 2x — the
+        // serve-bench acceptance shape.
+        let full = sim_model_prefill(&topo, &m, seq);
+        let shared = sim_model_prefill_shared(&topo, &m, seq, 96_000);
+        assert!(full / shared > 2.0, "speedup {}", full / shared);
     }
 
     #[test]

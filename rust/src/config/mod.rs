@@ -271,6 +271,13 @@ pub struct RunSpec {
     pub pages_per_worker: usize,
     /// Number of requests in serve / serve-bench workloads.
     pub requests: usize,
+    /// Radix prefix cache at admission: alias matched prompt pages and
+    /// prefill only the unmatched suffix (`--prefix-share` CLI sugar).
+    pub prefix_share: bool,
+    /// Shared system-prompt tokens in serve-bench synthetic workloads
+    /// (0 = every prompt unique). Independent of `prefix_share` so the
+    /// sharing-off baseline can run the same traffic.
+    pub shared_prefix: usize,
 }
 
 impl Default for RunSpec {
@@ -297,6 +304,8 @@ impl Default for RunSpec {
             page_size: 16,
             pages_per_worker: 4096,
             requests: 16,
+            prefix_share: false,
+            shared_prefix: 0,
         }
     }
 }
@@ -325,6 +334,8 @@ impl RunSpec {
         spec.page_size = j.opt_usize("page_size", spec.page_size);
         spec.pages_per_worker = j.opt_usize("pages_per_worker", spec.pages_per_worker);
         spec.requests = j.opt_usize("requests", spec.requests);
+        spec.prefix_share = j.opt_bool("prefix_share", spec.prefix_share);
+        spec.shared_prefix = j.opt_usize("shared_prefix", spec.shared_prefix);
         spec.validate()?;
         Ok(spec)
     }
@@ -350,6 +361,8 @@ impl RunSpec {
             "page_size" => self.page_size = value.parse()?,
             "pages_per_worker" => self.pages_per_worker = value.parse()?,
             "requests" => self.requests = value.parse()?,
+            "prefix_share" => self.prefix_share = value.parse()?,
+            "shared_prefix" => self.shared_prefix = value.parse()?,
             "cluster.preset" => self.cluster.preset = value.to_string(),
             "cluster.n_nodes" => self.cluster.n_nodes = value.parse()?,
             "cluster.gpus_per_node" => self.cluster.gpus_per_node = value.parse()?,
@@ -453,6 +466,23 @@ mod tests {
         assert_eq!((spec.page_size, spec.pages_per_worker, spec.requests), (32, 128, 9));
         assert!(spec.apply_override("page_size=0").is_err());
         assert!(spec.apply_override("requests=0").is_err());
+    }
+
+    #[test]
+    fn prefix_share_knobs_roundtrip() {
+        // Off by default (sharing must be an explicit opt-in).
+        let spec = RunSpec::default();
+        assert!(!spec.prefix_share);
+        assert_eq!(spec.shared_prefix, 0);
+        let j = crate::ser::parse(r#"{"prefix_share": true, "shared_prefix": 2048}"#).unwrap();
+        let mut spec = RunSpec::from_json(&j).unwrap();
+        assert!(spec.prefix_share);
+        assert_eq!(spec.shared_prefix, 2048);
+        spec.apply_override("prefix_share=false").unwrap();
+        spec.apply_override("shared_prefix=512").unwrap();
+        assert!(!spec.prefix_share);
+        assert_eq!(spec.shared_prefix, 512);
+        assert!(spec.apply_override("prefix_share=maybe").is_err());
     }
 
     #[test]

@@ -12,6 +12,10 @@
 //! the `attn_partial_t{T}` executable. Byte accounting tracks current and
 //! peak usage per worker for the Fig. 4 memory experiments.
 
+pub mod radix;
+
+pub use radix::{PrefixHandle, RadixCache, RadixStats};
+
 use crate::attnmath::AttnShape;
 
 /// Static layout parameters of a cache.
@@ -64,13 +68,23 @@ struct PendingToken {
 }
 
 /// The sharded cache for ONE sequence.
+///
+/// A sequence may *alias* a committed prefix whose device pages are owned by
+/// a shared store (the [`radix::RadixCache`]): the first `aliased_len`
+/// tokens — always whole pages — are readable through the normal shard views
+/// but are NOT charged to this sequence's device-byte accounting, because
+/// every sequence sharing that prefix reads the same physical pages. Tokens
+/// past `aliased_len` (including a copy-on-write partial page at the fork
+/// point) are owned by this sequence and accounted as before.
 #[derive(Clone, Debug)]
 pub struct ShardedKvCache {
     pub spec: CacheSpec,
     shards: Vec<WorkerShard>,
     /// Total tokens stored (across workers).
     total_len: usize,
-    /// Peak device bytes per worker (simulated bf16 accounting).
+    /// Leading tokens (whole pages) whose device pages are shared, not owned.
+    aliased_len: usize,
+    /// Peak device bytes per worker (simulated bf16 accounting, owned only).
     peak_bytes: Vec<u64>,
     pending: Option<PendingToken>,
 }
@@ -82,9 +96,56 @@ impl ShardedKvCache {
             shards: (0..spec.n_workers).map(|_| WorkerShard::new(spec.n_layers)).collect(),
             peak_bytes: vec![0; spec.n_workers],
             total_len: 0,
+            aliased_len: 0,
             pending: None,
             spec,
         }
+    }
+
+    /// Install a shared prefix of `n_tokens` tokens, the first
+    /// `aliased_tokens` of which (a whole number of pages) alias device
+    /// pages owned by the shared prefix store; the remainder — the
+    /// copy-on-write tail of a mid-page fork — is owned by this sequence.
+    /// `k_layers[l]` / `v_layers[l]` are `[n_tokens * kv_row]` rows.
+    /// Must be the first data committed into the cache.
+    pub fn install_shared_prefix(
+        &mut self,
+        n_tokens: usize,
+        aliased_tokens: usize,
+        k_layers: &[Vec<f32>],
+        v_layers: &[Vec<f32>],
+    ) {
+        assert_eq!(self.total_len, 0, "prefix must be installed into an empty cache");
+        assert!(aliased_tokens <= n_tokens, "alias beyond installed prefix");
+        assert_eq!(
+            aliased_tokens % self.spec.page_size,
+            0,
+            "aliased prefix must be whole pages (COW tail is owned)"
+        );
+        assert_eq!(k_layers.len(), self.spec.n_layers);
+        assert_eq!(v_layers.len(), self.spec.n_layers);
+        self.aliased_len = aliased_tokens;
+        if n_tokens == 0 {
+            return;
+        }
+        for l in 0..self.spec.n_layers {
+            self.append_chunk_layer(l, 0, n_tokens, &k_layers[l], &v_layers[l]);
+        }
+        self.commit_chunk(0, n_tokens);
+    }
+
+    /// Leading tokens whose device pages are shared (whole pages).
+    pub fn aliased_len(&self) -> usize {
+        self.aliased_len
+    }
+
+    /// Tokens of the aliased prefix that live on worker `w`.
+    fn aliased_tokens_on(&self, w: usize) -> usize {
+        // The aliased prefix is whole pages; page g lives on g % n_workers.
+        let pages = self.aliased_len / self.spec.page_size;
+        let on_w = pages / self.spec.n_workers
+            + usize::from(pages % self.spec.n_workers > w);
+        on_w * self.spec.page_size
     }
 
     /// Worker that owns global token index `t` (round-robin by page).
@@ -188,9 +249,11 @@ impl ShardedKvCache {
         }
     }
 
-    /// Current simulated device bytes held by worker `w` (bf16 K+V).
+    /// Current simulated device bytes OWNED by worker `w` (bf16 K+V).
+    /// Aliased prefix tokens are excluded: their pages are charged once to
+    /// the shared store, not per-sequence.
     pub fn worker_bytes(&self, w: usize) -> u64 {
-        self.shards[w].len as u64 * self.spec.bytes_per_token()
+        (self.shards[w].len - self.aliased_tokens_on(w)) as u64 * self.spec.bytes_per_token()
     }
 
     pub fn peak_worker_bytes(&self, w: usize) -> u64 {
@@ -254,6 +317,21 @@ impl PagePool {
         need
     }
 
+    /// Per-worker page counts for the GLOBAL page-index range `[lo, hi)` of
+    /// a sequence (page `g` lives on worker `g % n_workers`). The building
+    /// block of prefix sharing: a radix-matched prefix covers pages
+    /// `[0, shared)` and the requester only charges `[shared, total)`.
+    pub fn pages_for_range(n_workers: usize, lo: usize, hi: usize) -> Vec<usize> {
+        assert!(n_workers >= 1 && lo <= hi);
+        (0..n_workers)
+            .map(|w| {
+                // count of g in [lo, hi) with g % n_workers == w
+                let count_below = |x: usize| x / n_workers + usize::from(x % n_workers > w);
+                count_below(hi) - count_below(lo)
+            })
+            .collect()
+    }
+
     /// True if `need` could EVER be satisfied on an empty pool (requests
     /// exceeding this are rejected outright rather than queued forever).
     pub fn fits_capacity(&self, need: &[usize]) -> bool {
@@ -280,7 +358,10 @@ impl PagePool {
     /// must not panic the serving loop: the counts are clamped to zero, a
     /// warning is logged, and an `Err` describing the discrepancy is
     /// returned so callers can surface it (the batcher pairs this with a
-    /// `debug_assert!` so tests still fail loudly).
+    /// `debug_assert!` so tests still fail loudly). EVERY offending worker
+    /// is listed in the error, not just the first — a double-retire usually
+    /// over-releases the whole span, and debugging from a one-worker report
+    /// hid the true shape of the discrepancy (ISSUE 4 regression).
     pub fn release(&mut self, need: &[usize]) -> anyhow::Result<()> {
         anyhow::ensure!(
             need.len() == self.n_workers,
@@ -288,22 +369,27 @@ impl PagePool {
             need.len(),
             self.n_workers
         );
-        let mut over: Option<(usize, usize, usize)> = None;
+        let mut over: Vec<(usize, usize, usize)> = Vec::new();
         for (w, (u, n)) in self.used.iter_mut().zip(need).enumerate() {
             if *u < *n {
-                over.get_or_insert((w, *u, *n));
+                over.push((w, *u, *n));
                 *u = 0; // clamp: the pool can never go negative
             } else {
                 *u -= n;
             }
         }
-        if let Some((w, had, asked)) = over {
+        if !over.is_empty() {
+            let detail = over
+                .iter()
+                .map(|(w, had, asked)| format!("worker {w}: returned {asked}, reserved {had}"))
+                .collect::<Vec<_>>()
+                .join("; ");
             crate::tlog!(
                 Warn,
-                "page pool over-release on worker {w}: {asked} pages returned, {had} reserved \
-                 (double retire?); counts clamped"
+                "page pool over-release on {} worker(s) [{detail}] (double retire?); counts clamped",
+                over.len()
             );
-            anyhow::bail!("over-release on worker {w}: returned {asked}, reserved {had}");
+            anyhow::bail!("over-release on {} worker(s): {detail}", over.len());
         }
         Ok(())
     }
@@ -535,6 +621,111 @@ mod tests {
         assert!((pool.utilization() - 1.0).abs() < 1e-12);
         // Releasing with a wrong-width vector is also an error, not a panic.
         assert!(pool.release(&[1]).is_err());
+    }
+
+    #[test]
+    fn page_pool_over_release_reports_every_offender() {
+        // Regression (ISSUE 4): only the FIRST over-released worker used to
+        // be named in the error; a whole-span double-retire on a 4-worker
+        // pool must list all four discrepancies.
+        let mut pool = PagePool::new(4, 8);
+        assert!(pool.try_reserve(&[1, 2, 0, 3]));
+        let e = pool.release(&[2, 3, 1, 4]).unwrap_err().to_string();
+        assert!(e.contains("over-release on 4 worker(s)"), "{e}");
+        for w in 0..4 {
+            assert!(e.contains(&format!("worker {w}:")), "worker {w} missing from: {e}");
+        }
+        // Counts clamped on every worker, pool stays usable.
+        for w in 0..4 {
+            assert_eq!(pool.used_pages(w), 0);
+        }
+        // A mixed release reports only the offenders, and the legal part
+        // of the release still applies.
+        assert!(pool.try_reserve(&[2, 2, 2, 2]));
+        let e = pool.release(&[1, 3, 1, 3]).unwrap_err().to_string();
+        assert!(e.contains("over-release on 2 worker(s)"), "{e}");
+        assert!(e.contains("worker 1:") && e.contains("worker 3:"), "{e}");
+        assert!(!e.contains("worker 0:") && !e.contains("worker 2:"), "{e}");
+        assert_eq!(pool.used_pages(0), 1);
+        assert_eq!(pool.used_pages(2), 1);
+    }
+
+    #[test]
+    fn pages_for_range_counts_round_robin_pages() {
+        // pages 0..5 on 2 workers: w0 gets {0,2,4}, w1 gets {1,3}
+        assert_eq!(PagePool::pages_for_range(2, 0, 5), vec![3, 2]);
+        // range [2, 5): {2,4} on w0, {3} on w1
+        assert_eq!(PagePool::pages_for_range(2, 2, 5), vec![2, 1]);
+        // empty range
+        assert_eq!(PagePool::pages_for_range(3, 4, 4), vec![0, 0, 0]);
+        // a range split at any point sums to the whole span
+        for split in 0..=7 {
+            let lo = PagePool::pages_for_range(3, 0, split);
+            let hi = PagePool::pages_for_range(3, split, 7);
+            let all = PagePool::pages_for_range(3, 0, 7);
+            for w in 0..3 {
+                assert_eq!(lo[w] + hi[w], all[w], "split {split} worker {w}");
+            }
+        }
+        // consistency with pages_for_span: [0, n_pages) == span of n_pages*ps tokens
+        for (workers, pages) in [(1usize, 5usize), (3, 7), (4, 12)] {
+            assert_eq!(
+                PagePool::pages_for_range(workers, 0, pages),
+                PagePool::pages_for_span(workers, 4, pages * 4)
+            );
+        }
+    }
+
+    #[test]
+    fn shared_prefix_alias_excluded_from_owned_bytes() {
+        let s = spec(2, 4); // 2 workers, 4-token pages
+        let row = s.kv_row();
+        let n = 10; // 2 full pages + a half page
+        let k: Vec<f32> = (0..n).flat_map(|t| row_of(t, row)).collect();
+        let v: Vec<f32> = (0..n).flat_map(|t| row_of(t + 5, row)).collect();
+        let layers_k = vec![k.clone(); s.n_layers];
+        let layers_v = vec![v.clone(); s.n_layers];
+
+        let mut shared = ShardedKvCache::new(s);
+        shared.install_shared_prefix(n, 8, &layers_k, &layers_v);
+        let mut owned = ShardedKvCache::new(s);
+        owned.install_shared_prefix(n, 0, &layers_k, &layers_v);
+
+        // Data is identical — aliasing changes accounting, not content.
+        assert_eq!(shared.total_len(), owned.total_len());
+        for w in 0..2 {
+            assert_eq!(shared.shard(w).k[0], owned.shard(w).k[0], "worker {w}");
+            assert_eq!(shared.shard(w).v[1], owned.shard(w).v[1], "worker {w}");
+        }
+        assert_eq!(shared.aliased_len(), 8);
+        // pages: p0 (w0, tokens 0-3), p1 (w1, 4-7) aliased; p2 (w0, 8-9) owned.
+        assert_eq!(shared.worker_bytes(0), 2 * s.bytes_per_token());
+        assert_eq!(shared.worker_bytes(1), 0);
+        assert_eq!(owned.worker_bytes(0), 6 * s.bytes_per_token());
+        assert_eq!(owned.worker_bytes(1), 4 * s.bytes_per_token());
+        // Peak accounting follows owned bytes, not total bytes.
+        assert_eq!(shared.peak_worker_bytes(1), 0);
+
+        // Decode appends beyond the prefix are owned as usual.
+        let zero = vec![vec![0.0f32; row]; s.n_layers];
+        for _ in 0..2 {
+            shared.append_token(&zero, &zero.clone());
+        }
+        assert_eq!(shared.total_len(), 12);
+        assert_eq!(shared.worker_bytes(0), 4 * s.bytes_per_token());
+    }
+
+    #[test]
+    #[should_panic]
+    fn mid_page_alias_rejected() {
+        // The aliased region must be whole pages: a mid-page fork point is
+        // copy-on-write, so the partial page belongs to the sequence.
+        let s = spec(2, 4);
+        let row = s.kv_row();
+        let k: Vec<f32> = (0..6).flat_map(|t| row_of(t, row)).collect();
+        let layers = vec![k; s.n_layers];
+        let mut c = ShardedKvCache::new(s);
+        c.install_shared_prefix(6, 6, &layers.clone(), &layers);
     }
 
     #[test]

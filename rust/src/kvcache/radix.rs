@@ -1,0 +1,732 @@
+//! Prefix-sharing radix cache over the paged KV pool — the DeFT/SGLang-style
+//! tree-structured KV reuse layer that turns repeated prefixes (system
+//! prompts, multi-turn history, parallel sampling) into page aliases instead
+//! of re-prefilled copies.
+//!
+//! Matching is **token-granular** (a classic compressed radix tree with node
+//! splitting), sharing is **page-granular**: a request that matches `L`
+//! prompt tokens aliases the `⌊L / page_size⌋` complete pages of that prefix
+//! and pays for everything else itself. A divergence in the middle of a page
+//! is a **copy-on-write fork**: the shared part of the partial page is copied
+//! out of the tree (its prefill compute is still skipped), but the page is
+//! charged to the forking sequence, because its tail will hold divergent
+//! tokens.
+//!
+//! Page accounting runs against the same [`PagePool`](super::PagePool) the
+//! serving batcher admits against, with a strict ownership split:
+//!
+//! * every page is owned EITHER by the radix cache (committed, shareable
+//!   prefix pages — one charge no matter how many sequences alias them) OR
+//!   by exactly one live sequence (its unique suffix, COW page, and decode
+//!   span);
+//! * admission reserves only a request's *unique* pages; at insert time the
+//!   full prompt pages transfer from the request's reservation to the cache
+//!   ledger (no pool traffic — the pages are already reserved);
+//! * retirement releases the sequence's remaining owned pages and unpins its
+//!   path; unpinned prefixes stay cached until pool pressure evicts them,
+//!   leaf-first in LRU order.
+//!
+//! Pinning is recorded per sequence on the *deepest* matched node (ancestors
+//! are implicitly protected because eviction only takes childless nodes), so
+//! node splits re-point pins in O(live sequences) and refcounts stay exact —
+//! the invariant `rust/tests/radix_prop.rs` drives.
+//!
+//! The per-shard decode math is unchanged by sharing — attention is
+//! permutation-invariant over KV positions and the round-robin page layout
+//! is a function of absolute position only — so a shared prefix yields
+//! bit-identical outputs AND softmax denominators (`benches/prefix_share.rs`
+//! enforces this for p ∈ 1..16).
+
+use super::{CacheSpec, PagePool};
+use std::collections::BTreeMap;
+
+/// Index into the node slab.
+pub type NodeId = usize;
+
+struct RadixNode {
+    parent: Option<NodeId>,
+    /// Edge label: the tokens this node adds to its parent's path.
+    tokens: Vec<i32>,
+    /// Global (absolute) position of `tokens[0]` in any sequence through
+    /// this node — page layout is a function of absolute position.
+    start: usize,
+    /// Per-layer K/V rows for `tokens`: `[n_layers][tokens.len() * kv_row]`.
+    k: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+    children: BTreeMap<i32, NodeId>,
+    /// Live pins whose deepest matched node is this one.
+    refcount: usize,
+    /// Logical clock of the last walk through this node (LRU eviction key).
+    last_use: u64,
+    /// Slot is on the free list.
+    free: bool,
+}
+
+impl RadixNode {
+    fn end(&self) -> usize {
+        self.start + self.tokens.len()
+    }
+
+    /// Global page indices charged to this node: the pages whose LAST token
+    /// lies in `[start, end)`. Additive under splits at any offset.
+    fn page_range(&self, page_size: usize) -> (usize, usize) {
+        (self.start / page_size, self.end() / page_size)
+    }
+}
+
+/// A live pin on the tree: one per admitted sequence while it runs.
+struct Pin {
+    node: NodeId,
+    /// Matched tokens at acquire time (global position of the divergence).
+    matched: usize,
+}
+
+/// Handle returned by [`RadixCache::acquire`]; release it at retirement.
+#[derive(Clone, Copy, Debug)]
+pub struct PrefixHandle {
+    pin: usize,
+    /// Prompt tokens matched at acquire time.
+    pub matched: usize,
+}
+
+/// Cumulative counters (monotone over the cache's lifetime).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RadixStats {
+    /// `acquire` calls.
+    pub lookups: usize,
+    /// Prompt tokens presented across all lookups.
+    pub lookup_tokens: usize,
+    /// Prompt tokens matched across all lookups.
+    pub hit_tokens: usize,
+    /// Pages transferred into cache ownership at insert.
+    pub inserted_pages: usize,
+    /// Pages released back to the pool by eviction.
+    pub evicted_pages: usize,
+}
+
+impl RadixStats {
+    /// Fraction of presented prompt tokens served from the tree.
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookup_tokens == 0 {
+            0.0
+        } else {
+            self.hit_tokens as f64 / self.lookup_tokens as f64
+        }
+    }
+}
+
+/// The prefix-sharing radix cache. See the module docs for the ownership
+/// protocol; one instance serves one worker set / one [`PagePool`].
+pub struct RadixCache {
+    spec: CacheSpec,
+    nodes: Vec<RadixNode>,
+    free_nodes: Vec<NodeId>,
+    pins: Vec<Option<Pin>>,
+    free_pins: Vec<usize>,
+    /// Per-worker pages owned by the cache (a ledger over the shared pool).
+    owned: Vec<usize>,
+    clock: u64,
+    pub stats: RadixStats,
+}
+
+const ROOT: NodeId = 0;
+
+impl RadixCache {
+    pub fn new(spec: CacheSpec) -> RadixCache {
+        assert!(spec.n_workers >= 1 && spec.page_size >= 1 && spec.n_layers >= 1);
+        let root = RadixNode {
+            parent: None,
+            tokens: Vec::new(),
+            start: 0,
+            k: vec![Vec::new(); spec.n_layers],
+            v: vec![Vec::new(); spec.n_layers],
+            children: BTreeMap::new(),
+            refcount: 0,
+            last_use: 0,
+            free: false,
+        };
+        RadixCache {
+            nodes: vec![root],
+            free_nodes: Vec::new(),
+            pins: Vec::new(),
+            free_pins: Vec::new(),
+            owned: vec![0; spec.n_workers],
+            clock: 0,
+            stats: RadixStats::default(),
+            spec,
+        }
+    }
+
+    pub fn page_size(&self) -> usize {
+        self.spec.page_size
+    }
+
+    /// Per-worker pages currently owned by the cache.
+    pub fn owned_pages(&self) -> &[usize] {
+        &self.owned
+    }
+
+    pub fn total_owned_pages(&self) -> usize {
+        self.owned.iter().sum()
+    }
+
+    /// Live (non-free) nodes, excluding the root.
+    pub fn node_count(&self) -> usize {
+        self.nodes.iter().skip(1).filter(|n| !n.free).count()
+    }
+
+    /// Live pins (sequences currently aliasing the tree).
+    pub fn pin_count(&self) -> usize {
+        self.pins.iter().filter(|p| p.is_some()).count()
+    }
+
+    // ---- matching -------------------------------------------------------
+
+    /// Longest stored prefix of `tokens`, read-only: returns the deepest
+    /// node touched and the number of tokens matched.
+    fn walk(&self, tokens: &[i32]) -> (NodeId, usize) {
+        let mut cur = ROOT;
+        let mut pos = 0usize;
+        loop {
+            if pos == tokens.len() {
+                return (cur, pos);
+            }
+            let Some(&child) = self.nodes[cur].children.get(&tokens[pos]) else {
+                return (cur, pos);
+            };
+            let edge = &self.nodes[child].tokens;
+            let limit = edge.len().min(tokens.len() - pos);
+            let mut common = 0usize;
+            while common < limit && edge[common] == tokens[pos + common] {
+                common += 1;
+            }
+            pos += common;
+            if common < edge.len() {
+                // Diverged (or ran out of prompt) inside this edge.
+                return (child, pos);
+            }
+            cur = child;
+        }
+    }
+
+    /// Matched-token count for `tokens` without pinning (metrics / tests).
+    pub fn match_prefix(&self, tokens: &[i32]) -> usize {
+        self.walk(tokens).1
+    }
+
+    /// Match AND pin: the path stays safe from eviction until
+    /// [`release`](Self::release). Touches `last_use` along the path.
+    pub fn acquire(&mut self, tokens: &[i32]) -> PrefixHandle {
+        let (node, matched) = self.walk(tokens);
+        self.clock += 1;
+        let now = self.clock;
+        let mut cur = Some(node);
+        while let Some(id) = cur {
+            self.nodes[id].last_use = now;
+            cur = self.nodes[id].parent;
+        }
+        self.nodes[node].refcount += 1;
+        let pin = Pin { node, matched };
+        let pin_id = match self.free_pins.pop() {
+            Some(slot) => {
+                self.pins[slot] = Some(pin);
+                slot
+            }
+            None => {
+                self.pins.push(Some(pin));
+                self.pins.len() - 1
+            }
+        };
+        PrefixHandle { pin: pin_id, matched }
+    }
+
+    /// Record one SERVED lookup in the hit-rate counters. Deliberately
+    /// separate from [`acquire`](Self::acquire): admission may acquire and
+    /// release the same queue head many times while it waits for pool
+    /// space, and those retries must not inflate the reported hit rate —
+    /// callers record exactly once per admitted request.
+    pub fn record_lookup(&mut self, lookup_tokens: usize, hit_tokens: usize) {
+        self.stats.lookups += 1;
+        self.stats.lookup_tokens += lookup_tokens;
+        self.stats.hit_tokens += hit_tokens;
+    }
+
+    /// Unpin a sequence's path (at retirement). The prefix stays cached —
+    /// only pool pressure evicts it.
+    pub fn release(&mut self, handle: PrefixHandle) {
+        let pin = self.pins[handle.pin].take().expect("double release of prefix handle");
+        self.free_pins.push(handle.pin);
+        let n = &mut self.nodes[pin.node];
+        assert!(n.refcount > 0, "pin on node without refcount");
+        n.refcount -= 1;
+    }
+
+    /// Per-layer K/V rows of the first `matched` tokens of `tokens`
+    /// (which must be a stored prefix, e.g. the `matched` of a fresh
+    /// [`acquire`](Self::acquire)): `([n_layers][matched*row], same for v)`.
+    /// This is the data a forking sequence copies — aliased pages and the
+    /// COW partial page alike read the same bits the tree committed.
+    pub fn prefix_rows(&self, tokens: &[i32], matched: usize) -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
+        let row = self.spec.kv_row();
+        let mut k = vec![Vec::with_capacity(matched * row); self.spec.n_layers];
+        let mut v = vec![Vec::with_capacity(matched * row); self.spec.n_layers];
+        let mut cur = ROOT;
+        let mut pos = 0usize;
+        while pos < matched {
+            let child = *self.nodes[cur].children.get(&tokens[pos]).expect("prefix not stored");
+            let node = &self.nodes[child];
+            let take = node.tokens.len().min(matched - pos);
+            debug_assert_eq!(node.start, pos, "node start drifted from path position");
+            for l in 0..self.spec.n_layers {
+                k[l].extend_from_slice(&node.k[l][..take * row]);
+                v[l].extend_from_slice(&node.v[l][..take * row]);
+            }
+            pos += take;
+            cur = child;
+        }
+        (k, v)
+    }
+
+    // ---- insertion ------------------------------------------------------
+
+    /// Commit the full pages of `prompt` into the tree, transferring page
+    /// ownership from the inserting sequence to the cache.
+    ///
+    /// `k_layers[l]` / `v_layers[l]` hold the WHOLE prompt's rows
+    /// (`[prompt.len() * kv_row]`); only the not-yet-stored tail is copied.
+    /// Returns the per-worker pages transferred — the caller must subtract
+    /// them from the sequence's pool reservation (the pool itself is
+    /// untouched: those pages are already reserved, they just change owner).
+    /// The sequence's pin moves to the deepest node of its path so the
+    /// newly shared pages cannot be evicted while it runs.
+    pub fn insert(
+        &mut self,
+        handle: &PrefixHandle,
+        prompt: &[i32],
+        k_layers: &[Vec<f32>],
+        v_layers: &[Vec<f32>],
+    ) -> Vec<usize> {
+        let ps = self.spec.page_size;
+        let row = self.spec.kv_row();
+        assert_eq!(k_layers.len(), self.spec.n_layers);
+        assert_eq!(v_layers.len(), self.spec.n_layers);
+        let aligned = (prompt.len() / ps) * ps;
+        let (node, matched) = self.walk(prompt);
+        if aligned <= matched {
+            // Every full page of this prompt is already in the tree. The
+            // existing pin (deepest matched node) already protects the path.
+            return vec![0; self.spec.n_workers];
+        }
+        // Diverged mid-edge? Split so the new branch forks at `matched`;
+        // the node keeps its id as the upper half, which the leaf joins.
+        if matched < self.nodes[node].end() {
+            assert!(node != ROOT, "root has no edge to split");
+            self.split(node, matched);
+        }
+        let attach = node;
+        // New leaf holding [matched, aligned).
+        let n_new = aligned - matched;
+        let mut k = vec![Vec::with_capacity(n_new * row); self.spec.n_layers];
+        let mut v = vec![Vec::with_capacity(n_new * row); self.spec.n_layers];
+        for l in 0..self.spec.n_layers {
+            assert_eq!(k_layers[l].len(), prompt.len() * row, "layer {l} k rows");
+            assert_eq!(v_layers[l].len(), prompt.len() * row, "layer {l} v rows");
+            k[l].extend_from_slice(&k_layers[l][matched * row..aligned * row]);
+            v[l].extend_from_slice(&v_layers[l][matched * row..aligned * row]);
+        }
+        let leaf = self.alloc_node(RadixNode {
+            parent: Some(attach),
+            tokens: prompt[matched..aligned].to_vec(),
+            start: matched,
+            k,
+            v,
+            children: BTreeMap::new(),
+            refcount: 0,
+            last_use: self.clock,
+            free: false,
+        });
+        self.nodes[attach].children.insert(prompt[matched], leaf);
+        // Move the inserting sequence's pin to the new leaf: it aliases the
+        // pages it just shared, so they must outlive it.
+        self.repin(handle.pin, leaf, aligned);
+        // Ownership transfer: global pages [matched/ps, aligned/ps).
+        let transferred = PagePool::pages_for_range(self.spec.n_workers, matched / ps, aligned / ps);
+        for (o, t) in self.owned.iter_mut().zip(&transferred) {
+            *o += t;
+        }
+        self.stats.inserted_pages += transferred.iter().sum::<usize>();
+        transferred
+    }
+
+    fn repin(&mut self, pin_id: usize, node: NodeId, matched: usize) {
+        let pin = self.pins[pin_id].as_mut().expect("repin of released handle");
+        let old = pin.node;
+        pin.node = node;
+        pin.matched = matched;
+        self.nodes[old].refcount -= 1;
+        self.nodes[node].refcount += 1;
+    }
+
+    /// Split `node` at global position `at` (inside its edge): the node
+    /// KEEPS its id and becomes the upper half `[start, at)`; a new child
+    /// takes `[at, end)` along with the original children. Pins whose match
+    /// extends past `at` are re-pointed to the lower half so their aliased
+    /// pages stay protected.
+    fn split(&mut self, node: NodeId, at: usize) -> NodeId {
+        let (start, end) = (self.nodes[node].start, self.nodes[node].end());
+        assert!(start < at && at < end, "split point must be strictly inside the edge");
+        let cut = at - start;
+        let row = self.spec.kv_row();
+        let n = &mut self.nodes[node];
+        let lower_tokens = n.tokens.split_off(cut);
+        let mut lower_k = Vec::with_capacity(n.k.len());
+        let mut lower_v = Vec::with_capacity(n.v.len());
+        for l in 0..n.k.len() {
+            lower_k.push(n.k[l].split_off(cut * row));
+            lower_v.push(n.v[l].split_off(cut * row));
+        }
+        let lower_children = std::mem::take(&mut n.children);
+        let (last_use, first_lower) = (n.last_use, lower_tokens[0]);
+        let lower = self.alloc_node(RadixNode {
+            parent: Some(node),
+            tokens: lower_tokens,
+            start: at,
+            k: lower_k,
+            v: lower_v,
+            children: lower_children,
+            refcount: 0,
+            last_use,
+            free: false,
+        });
+        let grandchildren: Vec<NodeId> = self.nodes[lower].children.values().copied().collect();
+        for g in grandchildren {
+            self.nodes[g].parent = Some(lower);
+        }
+        self.nodes[node].children.insert(first_lower, lower);
+        // Pins that matched past the cut alias pages now charged to the
+        // lower half — move them (refcounts stay exact; see module docs).
+        for pin_id in 0..self.pins.len() {
+            let needs_move = matches!(&self.pins[pin_id], Some(p) if p.node == node && p.matched > at);
+            if needs_move {
+                let matched = self.pins[pin_id].as_ref().unwrap().matched;
+                self.repin(pin_id, lower, matched);
+            }
+        }
+        lower
+    }
+
+    fn alloc_node(&mut self, node: RadixNode) -> NodeId {
+        match self.free_nodes.pop() {
+            Some(id) => {
+                self.nodes[id] = node;
+                id
+            }
+            None => {
+                self.nodes.push(node);
+                self.nodes.len() - 1
+            }
+        }
+    }
+
+    // ---- eviction -------------------------------------------------------
+
+    /// True if `need` fits the pool's current free space.
+    fn has_room(pool: &PagePool, need: &[usize]) -> bool {
+        (0..pool.n_workers).all(|w| pool.free_pages(w) >= need[w])
+    }
+
+    /// Evict unpinned leaves (LRU first, cascading upward) until `need`
+    /// fits the pool or no candidates remain. Returns whether it fits.
+    pub fn evict_for(&mut self, pool: &mut PagePool, need: &[usize]) -> anyhow::Result<bool> {
+        while !Self::has_room(pool, need) {
+            if !self.evict_one(pool)? {
+                return Ok(false);
+            }
+        }
+        Ok(true)
+    }
+
+    /// Evict every evictable node (drain/tests). Pinned paths survive.
+    pub fn evict_all(&mut self, pool: &mut PagePool) -> anyhow::Result<()> {
+        while self.evict_one(pool)? {}
+        Ok(())
+    }
+
+    /// Evict the least-recently-used unpinned leaf, releasing its pages.
+    fn evict_one(&mut self, pool: &mut PagePool) -> anyhow::Result<bool> {
+        let victim = self
+            .nodes
+            .iter()
+            .enumerate()
+            .skip(1) // never the root
+            .filter(|(_, n)| !n.free && n.refcount == 0 && n.children.is_empty())
+            .min_by_key(|(_, n)| n.last_use)
+            .map(|(id, _)| id);
+        let Some(id) = victim else {
+            return Ok(false);
+        };
+        let (lo, hi) = self.nodes[id].page_range(self.spec.page_size);
+        let pages = PagePool::pages_for_range(self.spec.n_workers, lo, hi);
+        for (o, p) in self.owned.iter_mut().zip(&pages) {
+            debug_assert!(*o >= *p, "cache ledger under its own node charge");
+            *o -= p;
+        }
+        pool.release(&pages)?;
+        self.stats.evicted_pages += pages.iter().sum::<usize>();
+        let parent = self.nodes[id].parent.expect("non-root node has a parent");
+        let first = self.nodes[id].tokens[0];
+        let removed = self.nodes[parent].children.remove(&first);
+        debug_assert_eq!(removed, Some(id));
+        let n = &mut self.nodes[id];
+        n.free = true;
+        n.tokens = Vec::new();
+        n.k = Vec::new();
+        n.v = Vec::new();
+        self.free_nodes.push(id);
+        Ok(true)
+    }
+
+    // ---- integrity ------------------------------------------------------
+
+    /// Recompute every derived quantity from first principles and assert it
+    /// matches the ledgers — the workhorse of `rust/tests/radix_prop.rs`.
+    pub fn verify_integrity(&self) {
+        let ps = self.spec.page_size;
+        let mut recount = vec![0usize; self.spec.n_workers];
+        let mut rc = vec![0usize; self.nodes.len()];
+        for p in self.pins.iter().flatten() {
+            assert!(!self.nodes[p.node].free, "pin on a freed node");
+            rc[p.node] += 1;
+        }
+        for (id, n) in self.nodes.iter().enumerate() {
+            if n.free {
+                continue;
+            }
+            assert_eq!(n.refcount, rc[id], "node {id}: refcount vs live pins");
+            let (lo, hi) = n.page_range(ps);
+            for (r, c) in recount.iter_mut().zip(PagePool::pages_for_range(self.spec.n_workers, lo, hi)) {
+                *r += c;
+            }
+            if id != ROOT {
+                let parent = n.parent.expect("non-root parent");
+                assert!(!n.tokens.is_empty(), "non-root node {id} with empty edge");
+                assert_eq!(
+                    self.nodes[parent].children.get(&n.tokens[0]),
+                    Some(&id),
+                    "node {id} not linked from its parent"
+                );
+                assert_eq!(self.nodes[parent].end(), n.start, "node {id} start vs parent end");
+            }
+            let row = self.spec.kv_row();
+            for l in 0..self.spec.n_layers {
+                assert_eq!(n.k[l].len(), n.tokens.len() * row, "node {id} layer {l} k rows");
+                assert_eq!(n.v[l].len(), n.tokens.len() * row, "node {id} layer {l} v rows");
+            }
+        }
+        assert_eq!(recount, self.owned, "cache ledger vs per-node page recount");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(workers: usize, page: usize) -> CacheSpec {
+        CacheSpec {
+            n_layers: 1,
+            kv_heads: 1,
+            d_head: 2,
+            n_workers: workers,
+            page_size: page,
+            elem_bytes: 2,
+        }
+    }
+
+    /// Deterministic per-(position, token) rows, mirroring the batcher's
+    /// content-addressed prefill stream at toy size.
+    fn rows_for(prompt: &[i32], row: usize) -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
+        let k = prompt
+            .iter()
+            .enumerate()
+            .flat_map(|(pos, &t)| (0..row).map(move |j| (pos * 1000 + t as usize * 10 + j) as f32))
+            .collect::<Vec<f32>>();
+        let v = k.iter().map(|x| -x).collect();
+        (vec![k], vec![v])
+    }
+
+    fn admit(
+        cache: &mut RadixCache,
+        pool: &mut PagePool,
+        prompt: &[i32],
+        extra_tokens: usize,
+    ) -> (PrefixHandle, Vec<usize>) {
+        // The batcher's admission protocol, distilled: reserve unique pages,
+        // pin, insert, transfer.
+        let p = pool.n_workers;
+        let ps = cache.page_size();
+        let handle = cache.acquire(prompt);
+        let shared = handle.matched / ps;
+        let full = PagePool::pages_for_span(p, ps, prompt.len() + extra_tokens);
+        let mut unique = full;
+        for (u, s) in unique.iter_mut().zip(PagePool::pages_for_range(p, 0, shared)) {
+            *u -= s;
+        }
+        assert!(pool.try_reserve(&unique), "test pools are sized to fit");
+        let (k, v) = rows_for(prompt, 2);
+        let moved = cache.insert(&handle, prompt, &k, &v);
+        for (u, m) in unique.iter_mut().zip(&moved) {
+            assert!(*u >= *m, "transfer exceeds reservation");
+            *u -= m;
+        }
+        (handle, unique)
+    }
+
+    fn retire(cache: &mut RadixCache, pool: &mut PagePool, handle: PrefixHandle, owned: &[usize]) {
+        pool.release(owned).unwrap();
+        cache.release(handle);
+        cache.verify_integrity();
+    }
+
+    #[test]
+    fn full_prefix_hit_after_insert() {
+        let mut cache = RadixCache::new(spec(2, 4));
+        let mut pool = PagePool::new(2, 64);
+        let prompt: Vec<i32> = (0..16).collect();
+        assert_eq!(cache.match_prefix(&prompt), 0);
+        let (h0, owned0) = admit(&mut cache, &mut pool, &prompt, 0);
+        assert_eq!(h0.matched, 0);
+        // 4 pages transferred to the cache; the request keeps none.
+        assert_eq!(cache.total_owned_pages(), 4);
+        assert_eq!(owned0, vec![0, 0]);
+        cache.verify_integrity();
+
+        // Identical prompt: full hit, zero unique pages.
+        let (h1, owned1) = admit(&mut cache, &mut pool, &prompt, 0);
+        assert_eq!(h1.matched, 16);
+        assert_eq!(owned1, vec![0, 0]);
+        assert_eq!(cache.total_owned_pages(), 4, "no double charge");
+        assert_eq!(pool.used_pages(0) + pool.used_pages(1), 4);
+
+        // The stored rows are the bits the inserter committed.
+        let (k, v) = cache.prefix_rows(&prompt, 16);
+        let (want_k, want_v) = rows_for(&prompt, 2);
+        assert_eq!(k, want_k);
+        assert_eq!(v, want_v);
+
+        retire(&mut cache, &mut pool, h0, &owned0);
+        retire(&mut cache, &mut pool, h1, &owned1);
+        // Unpinned but cached: pages stay reserved until eviction.
+        assert_eq!(cache.total_owned_pages(), 4);
+        cache.evict_all(&mut pool).unwrap();
+        assert_eq!(cache.total_owned_pages(), 0);
+        assert_eq!(pool.utilization(), 0.0);
+        assert_eq!(cache.node_count(), 0);
+    }
+
+    #[test]
+    fn mid_page_divergence_is_copy_on_write() {
+        let mut cache = RadixCache::new(spec(1, 4));
+        let mut pool = PagePool::new(1, 64);
+        let a: Vec<i32> = (0..12).collect(); // pages [0,3)
+        let (ha, owna) = admit(&mut cache, &mut pool, &a, 0);
+        // b shares tokens 0..6, diverges mid-page-1.
+        let mut b: Vec<i32> = (0..12).collect();
+        for t in b.iter_mut().skip(6) {
+            *t += 100;
+        }
+        let (hb, ownb) = admit(&mut cache, &mut pool, &b, 0);
+        assert_eq!(hb.matched, 6, "token-granular match");
+        // b aliases page 0 only (⌊6/4⌋ = 1 full shared page); it reserved
+        // pages 1 and 2 itself — page 1 is the COW fork page (its last token
+        // is divergent, so it belongs to b's branch) — and both transferred
+        // to the cache at insert (aligned 12, matched 6 → pages [1, 3)).
+        assert_eq!(ownb, vec![0], "whole prompt became cache-owned");
+        assert_eq!(cache.total_owned_pages(), 3 + 2, "a's 3 pages + b's 2 branch pages");
+        cache.verify_integrity();
+        // COW source data: the shared 6 tokens read back bit-identical.
+        let (kb, _) = cache.prefix_rows(&b, 6);
+        let (ka, _) = rows_for(&a[..6].to_vec(), 2);
+        assert_eq!(kb, ka);
+        retire(&mut cache, &mut pool, ha, &owna);
+        retire(&mut cache, &mut pool, hb, &ownb);
+        cache.evict_all(&mut pool).unwrap();
+        assert_eq!(pool.utilization(), 0.0);
+    }
+
+    #[test]
+    fn split_moves_deep_pins_to_lower_half() {
+        let mut cache = RadixCache::new(spec(1, 2));
+        let mut pool = PagePool::new(1, 64);
+        let long: Vec<i32> = (0..8).collect();
+        let (h_long, own_long) = admit(&mut cache, &mut pool, &long, 0);
+        // A second sequence matches all 8 and pins the leaf.
+        let (h_deep, own_deep) = admit(&mut cache, &mut pool, &long, 0);
+        assert_eq!(h_deep.matched, 8);
+        // A third diverges at token 3 → splits the node at 3; the deep pins
+        // must follow the lower half or eviction could free pages they alias.
+        let mut fork: Vec<i32> = (0..8).collect();
+        for t in fork.iter_mut().skip(3) {
+            *t += 50;
+        }
+        let (h_fork, own_fork) = admit(&mut cache, &mut pool, &fork, 0);
+        assert_eq!(h_fork.matched, 3);
+        cache.verify_integrity();
+        // Retire the forker and evict: the deep pin still protects ALL of
+        // the original path (upper via children rule, lower via moved pin).
+        retire(&mut cache, &mut pool, h_fork, &own_fork);
+        cache.evict_all(&mut pool).unwrap();
+        let (k, _) = cache.prefix_rows(&long, 8);
+        assert_eq!(k[0].len(), 8 * 2, "original path intact under deep pin");
+        retire(&mut cache, &mut pool, h_long, &own_long);
+        retire(&mut cache, &mut pool, h_deep, &own_deep);
+        cache.evict_all(&mut pool).unwrap();
+        assert_eq!(pool.utilization(), 0.0);
+    }
+
+    #[test]
+    fn eviction_is_lru_leaf_first() {
+        let mut cache = RadixCache::new(spec(1, 2));
+        let mut pool = PagePool::new(1, 6);
+        let a: Vec<i32> = vec![1, 2, 3, 4];
+        let b: Vec<i32> = vec![9, 8, 7, 6];
+        let (ha, owna) = admit(&mut cache, &mut pool, &a, 0);
+        let (hb, ownb) = admit(&mut cache, &mut pool, &b, 0);
+        retire(&mut cache, &mut pool, ha, &owna);
+        retire(&mut cache, &mut pool, hb, &ownb);
+        // Touch a: b becomes the LRU branch.
+        assert_eq!(cache.match_prefix(&a), 4);
+        let h_touch = cache.acquire(&a);
+        cache.release(h_touch);
+        // Pool: 4 pages cached, 2 free; a 3-page request must evict ONE
+        // branch — the LRU one (b).
+        assert!(cache.evict_for(&mut pool, &[3]).unwrap());
+        assert_eq!(cache.match_prefix(&a), 4, "recently used branch survives");
+        assert_eq!(cache.match_prefix(&b), 0, "LRU branch evicted");
+        // Pinned branches are never evicted even under pressure.
+        let h_pin = cache.acquire(&a);
+        assert!(!cache.evict_for(&mut pool, &[7]).unwrap(), "cannot make room past a pin");
+        cache.release(h_pin);
+        assert!(cache.evict_for(&mut pool, &[6]).unwrap());
+        assert_eq!(cache.total_owned_pages(), 0);
+    }
+
+    #[test]
+    fn prefix_of_stored_path_inserts_nothing() {
+        let mut cache = RadixCache::new(spec(2, 2));
+        let mut pool = PagePool::new(2, 64);
+        let long: Vec<i32> = (0..10).collect();
+        let (hl, ownl) = admit(&mut cache, &mut pool, &long, 0);
+        let before = cache.total_owned_pages();
+        // A strict prefix ending mid-node and mid-page: full hit, no insert.
+        let short: Vec<i32> = (0..5).collect();
+        let (hs, owns) = admit(&mut cache, &mut pool, &short, 0);
+        assert_eq!(hs.matched, 5);
+        assert_eq!(cache.total_owned_pages(), before);
+        // ⌊5/2⌋ = 2 pages aliased; page 2 (tokens 4..5, COW) is unique.
+        assert_eq!(owns.iter().sum::<usize>(), 1);
+        retire(&mut cache, &mut pool, hl, &ownl);
+        retire(&mut cache, &mut pool, hs, &owns);
+        cache.evict_all(&mut pool).unwrap();
+        assert_eq!(pool.utilization(), 0.0);
+    }
+}

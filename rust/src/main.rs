@@ -6,19 +6,25 @@
 //!   decode [opts]             — prefill + decode one sequence, print stats
 //!   serve  [opts]             — batch-serve a synthetic workload
 //!   serve-bench [opts]        — continuous-batching decode throughput
-//!                               (no artifacts needed: oracle numerics)
+//!                               (no artifacts needed: oracle numerics);
+//!                               --prefix-share turns on the radix KV cache
+//!                               and reports the vs-no-sharing comparison
 //!   plan-bench [opts]         — topology-aware planner crossover table
 //!                               (which AllReduce wins where, and why)
 //!   strategy-bench [opts]     — strategy planner crossover table
 //!                               (tree vs ring vs single, and what auto picks)
 //!   sweep  [opts]             — ring-vs-tree latency sweep (simulated)
+//!   bench-compare B R [--only N] — gate bench_results/ summaries in R
+//!                               against baselines in B (>10% = regression)
 //!
 //! Options are `key=value` pairs applied to the RunSpec (see config module),
-//! plus `--config <file.json>` and `--strategy auto|tree|ring|single` (sugar
-//! for `strategy=`). Examples:
+//! plus `--config <file.json>`, `--strategy auto|tree|ring|single` (sugar
+//! for `strategy=`), and `--prefix-share` (sugar for `prefix_share=true`).
+//! Examples:
 //!   treeattn decode model.preset=test-8m --strategy tree seq_len=512
 //!   treeattn sweep cluster.n_nodes=16
 //!   treeattn serve decode_tokens=8 batch=4
+//!   treeattn serve-bench --prefix-share shared_prefix=3072 seq_len=4096
 //!   treeattn strategy-bench cluster.preset=rtx4090_pcie cluster.gpus_per_node=2
 
 use tree_attention::attention::{tree_decode, ComputeBackend, ShardKv};
@@ -44,6 +50,7 @@ fn main() {
         "decode" => parse_spec(&args[1..]).and_then(|spec| cmd_decode(&spec)),
         "serve" => parse_spec(&args[1..]).and_then(|spec| cmd_serve(&spec)),
         "serve-bench" => parse_spec(&args[1..]).and_then(|spec| cmd_serve_bench(&spec)),
+        "bench-compare" => cmd_bench_compare(&args[1..]),
         "plan-bench" => parse_spec(&args[1..]).and_then(|spec| cmd_plan_bench(&spec)),
         "strategy-bench" => parse_spec(&args[1..]).and_then(|spec| cmd_strategy_bench(&spec)),
         "sweep" => parse_spec(&args[1..]).and_then(|spec| cmd_sweep(&spec)),
@@ -65,12 +72,13 @@ fn main() {
 fn print_help() {
     println!(
         "treeattn — Tree Attention reproduction\n\
-         usage: treeattn <info|validate|decode|serve|serve-bench|plan-bench|strategy-bench|sweep> [--config f.json] [key=value ...]\n\
+         usage: treeattn <info|validate|decode|serve|serve-bench|bench-compare|plan-bench|strategy-bench|sweep> [--config f.json] [key=value ...]\n\
          keys: strategy=auto|tree|ring|single  (auto = strategy planner; --strategy X is sugar)\n\
          \x20     allreduce=auto|ring|tree|twolevel  (auto = topology-aware collective planner)\n\
          \x20     model.preset=test-8m|tiny-124m  cluster.preset=h100_dgx|mi300x|rtx4090_pcie\n\
          \x20     cluster.n_nodes=N cluster.gpus_per_node=G seq_len=N decode_tokens=N batch=N\n\
-         \x20     page_size=N pages_per_worker=N requests=N  (serving / admission control)"
+         \x20     page_size=N pages_per_worker=N requests=N  (serving / admission control)\n\
+         \x20     prefix_share=true|false shared_prefix=N  (radix KV cache; --prefix-share is sugar)"
     );
 }
 
@@ -98,6 +106,9 @@ fn parse_spec(args: &[String]) -> anyhow::Result<RunSpec> {
             anyhow::ensure!(i + 1 < args.len(), "--strategy needs auto|tree|ring|single");
             spec.apply_override(&format!("strategy={}", args[i + 1]))?;
             i += 2;
+        } else if args[i] == "--prefix-share" {
+            spec.apply_override("prefix_share=true")?;
+            i += 1;
         } else {
             spec.apply_override(&args[i])?;
             i += 1;
@@ -315,7 +326,15 @@ fn cmd_serve(spec: &RunSpec) -> anyhow::Result<()> {
         spec.strategy.name(),
         cluster.topology().name
     );
-    let mut server = Server::new(&exec, &mut cluster, ServeConfig { max_batch: spec.batch });
+    let mut server = Server::new(
+        &exec,
+        &mut cluster,
+        ServeConfig {
+            max_batch: spec.batch,
+            prefix_share: spec.prefix_share,
+            pages_per_worker: spec.pages_per_worker,
+        },
+    );
     let (results, metrics) = server.run(reqs)?;
     let mut table = Table::new("Serving results", &["req", "out toks", "TTFT(sim)", "TPOT(sim)", "total(sim)"]);
     for r in &results {
@@ -336,24 +355,60 @@ fn cmd_serve(spec: &RunSpec) -> anyhow::Result<()> {
 }
 
 fn cmd_serve_bench(spec: &RunSpec) -> anyhow::Result<()> {
-    use tree_attention::serve::{synthetic_decode_workload, BatcherConfig, DecodeBatcher};
+    use tree_attention::serve::{
+        synthetic_decode_workload, synthetic_shared_prefix_workload, BatcherConfig, DecodeBatcher,
+    };
     let topo = spec.cluster.topology()?;
     let shape = AttnShape::new(1, spec.model.n_heads, spec.model.kv_heads, spec.model.d_head());
     let scale = 1.0 / (spec.model.d_head() as f32).sqrt();
     let min_ctx = (spec.seq_len / 2).max(1);
     println!(
-        "serve-bench: continuous-batching decode (strategy={}) on {} | model {} | {} requests, ctx {}–{}, {} tokens each",
+        "serve-bench: continuous-batching decode (strategy={}, prefix_share={}) on {} | model {} | {} requests, ctx {}–{}, shared prefix {}, {} tokens each",
         spec.strategy.name(),
+        spec.prefix_share,
         topo.name,
         spec.model.name,
         spec.requests,
         fmt_tokens(min_ctx),
         fmt_tokens(spec.seq_len),
+        fmt_tokens(spec.shared_prefix),
         spec.decode_tokens,
     );
+    let workload = || {
+        if spec.shared_prefix > 0 {
+            synthetic_shared_prefix_workload(
+                spec.requests,
+                spec.shared_prefix,
+                min_ctx,
+                spec.seq_len,
+                spec.decode_tokens,
+                spec.seed,
+            )
+        } else {
+            synthetic_decode_workload(
+                spec.requests,
+                min_ctx,
+                spec.seq_len,
+                spec.decode_tokens,
+                spec.seed,
+            )
+        }
+    };
     let mut table = Table::new(
         "Continuous batching sweep (oracle numerics, simulated cluster time)",
-        &["max batch", "tok/s (sim)", "p50 tok lat", "p99 tok lat", "mean TTFT", "rounds", "peak B", "comm", "strategies"],
+        &[
+            "max batch",
+            "tok/s (sim)",
+            "p50 tok lat",
+            "p99 tok lat",
+            "mean TTFT",
+            "hit rate",
+            "peak pages",
+            "rounds",
+            "peak B",
+            "comm",
+            "strategies",
+        ],
     );
     let mut widths: Vec<usize> = [1usize, 2, 4, 8]
         .iter()
@@ -371,18 +426,22 @@ fn cmd_serve_bench(spec: &RunSpec) -> anyhow::Result<()> {
             algo: spec.allreduce,
             wire_bpe: spec.wire_bpe,
             seed: spec.seed,
+            prefix_share: spec.prefix_share,
         };
         let batcher = DecodeBatcher::new(shape, scale, cfg);
-        let reqs = synthetic_decode_workload(
-            spec.requests,
-            min_ctx,
-            spec.seq_len,
-            spec.decode_tokens,
-            spec.seed,
-        );
         let mut cluster = VirtualCluster::new(topo.clone());
-        let (_, m) = batcher.run(&mut cluster, &ComputeBackend::Oracle, reqs)?;
+        let (_, m) = batcher.run(&mut cluster, &ComputeBackend::Oracle, workload())?;
         anyhow::ensure!(m.rejected == 0, "workload exceeds pages_per_worker={}", spec.pages_per_worker);
+        // With sharing on, also serve the identical workload with sharing
+        // off: the TTFT / reserved-page comparison IS the feature's report.
+        let baseline = if spec.prefix_share {
+            let base = DecodeBatcher::new(shape, scale, BatcherConfig { prefix_share: false, ..cfg });
+            let mut c2 = VirtualCluster::new(topo.clone());
+            let (_, mb) = base.run(&mut c2, &ComputeBackend::Oracle, workload())?;
+            Some(mb)
+        } else {
+            None
+        };
         let strategies: String = m
             .strategy_rounds
             .iter()
@@ -395,33 +454,62 @@ fn cmd_serve_bench(spec: &RunSpec) -> anyhow::Result<()> {
             fmt_secs(m.token_latency.p50),
             fmt_secs(m.token_latency.p99),
             fmt_secs(m.ttft.mean),
+            format!("{:.0}%", m.prefix_hit_rate() * 100.0),
+            m.peak_used_pages.to_string(),
             m.rounds.to_string(),
             m.peak_active.to_string(),
             fmt_bytes(m.comm_bytes),
             strategies,
         ]);
+        if let Some(mb) = &baseline {
+            println!(
+                "  [batch {max_batch}] prefix sharing vs off: mean TTFT {} -> {} ({:.2}x), \
+                 peak pages {} -> {} ({} deduped), prefill {} -> {}",
+                fmt_secs(mb.ttft.mean),
+                fmt_secs(m.ttft.mean),
+                mb.ttft.mean / m.ttft.mean.max(1e-12),
+                mb.peak_used_pages,
+                m.peak_used_pages,
+                m.deduped_pages,
+                fmt_secs(mb.ttft_prefill.mean),
+                fmt_secs(m.ttft_prefill.mean),
+            );
+        }
         let strat_pairs: Vec<(&str, Json)> = m
             .strategy_rounds
             .iter()
             .map(|(name, rounds)| (*name, Json::num(*rounds as f64)))
             .collect();
-        rows.push(Json::obj(vec![
+        let mut row = vec![
             ("max_batch", Json::num(max_batch as f64)),
             ("tok_per_s", Json::num(m.throughput_sim)),
             ("p50_s", Json::num(m.token_latency.p50)),
             ("p99_s", Json::num(m.token_latency.p99)),
             ("ttft_mean_s", Json::num(m.ttft.mean)),
+            ("ttft_queue_mean_s", Json::num(m.ttft_queue.mean)),
+            ("ttft_prefill_mean_s", Json::num(m.ttft_prefill.mean)),
+            ("prefix_hit_rate", Json::num(m.prefix_hit_rate())),
+            ("deduped_pages", Json::num(m.deduped_pages as f64)),
+            ("peak_used_pages", Json::num(m.peak_used_pages as f64)),
             ("rounds", Json::num(m.rounds as f64)),
             ("peak_active", Json::num(m.peak_active as f64)),
             ("comm_bytes", Json::num(m.comm_bytes as f64)),
             ("strategy_rounds", Json::obj(strat_pairs)),
-        ]));
+        ];
+        if let Some(mb) = &baseline {
+            row.push(("ttft_mean_s_noshare", Json::num(mb.ttft.mean)));
+            row.push(("peak_used_pages_noshare", Json::num(mb.peak_used_pages as f64)));
+            row.push(("ttft_speedup", Json::num(mb.ttft.mean / m.ttft.mean.max(1e-12))));
+        }
+        rows.push(Json::obj(row));
     }
     table.print();
     println!(
         "\nexpected shape: tok/s grows with batch width (one fused communication launch\n\
          per round amortizes the decode cost); p99 token latency grows mildly with B.\n\
-         The `strategies` column shows which planned strategy served each round."
+         The `strategies` column shows which planned strategy served each round.\n\
+         With --prefix-share, `hit rate` is the fraction of prompt tokens served\n\
+         from the radix cache and `peak pages` counts deduplicated reservations."
     );
     // Machine-readable summary: per-width rows + planner cache behaviour
     // (hit/miss counters over BOTH planning levels), so crossover behaviour
@@ -430,10 +518,143 @@ fn cmd_serve_bench(spec: &RunSpec) -> anyhow::Result<()> {
         ("bench", Json::str("serve-bench")),
         ("strategy", Json::str(spec.strategy.name())),
         ("allreduce", Json::str(&spec.allreduce.name())),
+        ("prefix_share", Json::Bool(spec.prefix_share)),
+        ("shared_prefix", Json::num(spec.shared_prefix as f64)),
         ("rows", Json::arr(rows)),
         ("planner", planner_counters_json()),
     ]);
     println!("\n{}", json.to_string_compact());
+    Ok(())
+}
+
+/// `bench-compare`: gate the deterministic `BENCH_<name>.json` summaries a
+/// bench run produced (in `<results_dir>`) against the committed baselines
+/// (in `<baseline_dir>`). A numeric baseline fails on >10% deviation in
+/// EITHER direction (summaries are virtual-clock metrics, bit-stable across
+/// hosts — drift means behaviour changed); `{"min": x}` / `{"max": x}`
+/// baselines are hard bounds. Keys prefixed `wall_` are never compared.
+fn cmd_bench_compare(args: &[String]) -> anyhow::Result<()> {
+    let mut dirs: Vec<String> = Vec::new();
+    let mut only: Option<String> = None;
+    let mut i = 0;
+    while i < args.len() {
+        if args[i] == "--only" {
+            anyhow::ensure!(i + 1 < args.len(), "--only needs a bench name");
+            only = Some(args[i + 1].clone());
+            i += 2;
+        } else {
+            dirs.push(args[i].clone());
+            i += 1;
+        }
+    }
+    anyhow::ensure!(
+        dirs.len() == 2,
+        "usage: treeattn bench-compare <baseline_dir> <results_dir> [--only <bench>]"
+    );
+    let baseline_dir = std::path::Path::new(&dirs[0]);
+    let results_dir = std::path::Path::new(&dirs[1]);
+    anyhow::ensure!(baseline_dir.is_dir(), "baseline dir {} missing", baseline_dir.display());
+
+    let mut checked = 0usize;
+    let mut compared = 0usize;
+    let mut failures: Vec<String> = Vec::new();
+    let mut names: Vec<String> = Vec::new();
+    for entry in std::fs::read_dir(baseline_dir)? {
+        let name = entry?.file_name().to_string_lossy().into_owned();
+        if name.starts_with("BENCH_") && name.ends_with(".json") {
+            names.push(name);
+        }
+    }
+    names.sort();
+    for fname in &names {
+        let bench = &fname["BENCH_".len()..fname.len() - ".json".len()];
+        if only.as_deref().is_some_and(|o| o != bench) {
+            continue;
+        }
+        let base = tree_attention::ser::parse_file(&baseline_dir.join(fname))?;
+        let res_path = results_dir.join(fname);
+        if !res_path.exists() {
+            failures.push(format!("{bench}: no summary at {} (bench not run?)", res_path.display()));
+            continue;
+        }
+        let res = tree_attention::ser::parse_file(&res_path)?;
+        let base_metrics = base
+            .get("metrics")
+            .and_then(|m| m.as_obj())
+            .ok_or_else(|| anyhow::anyhow!("{bench}: baseline has no metrics object"))?;
+        let res_metrics = res
+            .get("metrics")
+            .and_then(|m| m.as_obj())
+            .ok_or_else(|| anyhow::anyhow!("{bench}: results have no metrics object"))?;
+        checked += 1;
+        for (key, want) in base_metrics {
+            if key.starts_with("wall_") {
+                continue;
+            }
+            let Some(got) = res_metrics.get(key).and_then(|v| v.as_f64()) else {
+                failures.push(format!("{bench}.{key}: metric missing from results"));
+                continue;
+            };
+            compared += 1;
+            match want {
+                Json::Num(v) => {
+                    let tol = 0.10 * v.abs().max(1e-12);
+                    if (got - v).abs() > tol {
+                        failures.push(format!(
+                            "{bench}.{key}: {got} deviates >10% from baseline {v}"
+                        ));
+                    } else {
+                        println!("ok {bench}.{key}: {got} (baseline {v}, ±10%)");
+                    }
+                }
+                other => {
+                    let min = other.get("min").and_then(|v| v.as_f64());
+                    let max = other.get("max").and_then(|v| v.as_f64());
+                    if min.is_none() && max.is_none() {
+                        failures.push(format!("{bench}.{key}: unsupported baseline form"));
+                        continue;
+                    }
+                    if let Some(lo) = min {
+                        if got < lo {
+                            failures.push(format!("{bench}.{key}: {got} below floor {lo}"));
+                            continue;
+                        }
+                    }
+                    if let Some(hi) = max {
+                        if got > hi {
+                            failures.push(format!("{bench}.{key}: {got} above ceiling {hi}"));
+                            continue;
+                        }
+                    }
+                    println!(
+                        "ok {bench}.{key}: {got} (bounds {:?}..{:?})",
+                        min.unwrap_or(f64::NEG_INFINITY),
+                        max.unwrap_or(f64::INFINITY)
+                    );
+                }
+            }
+        }
+    }
+    if checked == 0 && failures.is_empty() {
+        // Genuinely nothing to gate (no baseline seeded for this bench) —
+        // distinct from "baseline exists but results are missing", which is
+        // a failure recorded above.
+        match &only {
+            Some(o) => println!(
+                "no baseline for '{o}' under {} — seed one to start gating it",
+                baseline_dir.display()
+            ),
+            None => println!("no BENCH_*.json baselines under {}", baseline_dir.display()),
+        }
+        return Ok(());
+    }
+    println!("bench-compare: {checked} bench(es), {compared} metric(s), {} failure(s)", failures.len());
+    if !failures.is_empty() {
+        for f in &failures {
+            eprintln!("FAIL {f}");
+        }
+        anyhow::bail!("{} bench metric(s) regressed vs baselines", failures.len());
+    }
     Ok(())
 }
 

@@ -220,6 +220,60 @@ impl ModelExecutor {
         Ok(sim_time)
     }
 
+    /// Seed a FRESH sequence with an already-computed prompt prefix (from
+    /// the serving layer's radix cache): the tokens and their per-layer K/V
+    /// rows land in both the leader's padded prefill caches (so a
+    /// subsequent [`prefill`](Self::prefill) of the *unmatched suffix*
+    /// attends over them) and the sharded cache — with NO engine calls and
+    /// NO simulated prefill time, which is the entire point of prefix
+    /// sharing. The first `aliased_tokens` (whole pages) are accounted as
+    /// shared pages, not this sequence's.
+    ///
+    /// The radix cache stores KV, not hidden states, so the caller must
+    /// leave at least the last prompt token to `prefill` (it produces the
+    /// hidden state the first decode step consumes).
+    pub fn install_prefix(
+        &self,
+        seq: &mut SequenceState,
+        tokens: &[i32],
+        k_layers: &[Vec<f32>],
+        v_layers: &[Vec<f32>],
+        aliased_tokens: usize,
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(seq.tokens.is_empty(), "prefix must precede any prefill");
+        anyhow::ensure!(!seq.prefill_k.is_empty(), "prefill caches already dropped");
+        anyhow::ensure!(tokens.len() < self.spec.max_seq, "prefix must leave room to decode");
+        anyhow::ensure!(k_layers.len() == self.spec.n_layers, "one k buffer per layer");
+        anyhow::ensure!(v_layers.len() == self.spec.n_layers, "one v buffer per layer");
+        let row = self.kv_row();
+        let n = tokens.len();
+        for layer in 0..self.spec.n_layers {
+            anyhow::ensure!(k_layers[layer].len() == n * row, "layer {layer} k rows");
+            anyhow::ensure!(v_layers[layer].len() == n * row, "layer {layer} v rows");
+            seq.prefill_k[layer][..n * row].copy_from_slice(&k_layers[layer]);
+            seq.prefill_v[layer][..n * row].copy_from_slice(&v_layers[layer]);
+        }
+        seq.cache.install_shared_prefix(n, aliased_tokens, k_layers, v_layers);
+        seq.tokens.extend_from_slice(tokens);
+        Ok(())
+    }
+
+    /// Clone the first `n_tokens` tokens' per-layer K/V rows out of the
+    /// leader's prefill caches — the data the serving layer commits to the
+    /// radix tree. Must run before [`finish_prefill`](Self::finish_prefill).
+    pub fn harvest_prompt_kv(
+        &self,
+        seq: &SequenceState,
+        n_tokens: usize,
+    ) -> anyhow::Result<(Vec<Vec<f32>>, Vec<Vec<f32>>)> {
+        anyhow::ensure!(!seq.prefill_k.is_empty(), "prefill caches already dropped");
+        anyhow::ensure!(n_tokens <= seq.tokens.len(), "harvest beyond processed prompt");
+        let row = self.kv_row();
+        let k = seq.prefill_k.iter().map(|buf| buf[..n_tokens * row].to_vec()).collect();
+        let v = seq.prefill_v.iter().map(|buf| buf[..n_tokens * row].to_vec()).collect();
+        Ok((k, v))
+    }
+
     /// Release the leader-side prefill caches (no more prefill possible).
     pub fn finish_prefill(&self, seq: &mut SequenceState) {
         seq.prefill_k = Vec::new();
@@ -457,5 +511,44 @@ mod tests {
         assert_eq!(streams[0], streams[1], "tree vs ring");
         assert_eq!(streams[0], streams[2], "tree vs single");
         assert_eq!(streams[0], streams[3], "tree vs auto");
+    }
+
+    #[test]
+    fn installed_prefix_matches_full_prefill() {
+        // The serving-layer contract: seeding a sequence from harvested
+        // prefix KV and prefilling only the suffix must generate the same
+        // tokens as prefilling the whole prompt — at a fraction of the
+        // simulated prefill time.
+        let Some((exec, mut cluster)) = executor(Strategy::Tree, 2) else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let prompt: Vec<i32> = (0..96).map(|i| (i * 11) % 1024).collect();
+        let mut full = exec.start_sequence();
+        let full_sim = exec.prefill(&mut full, &prompt, &mut cluster).unwrap();
+        let (k, v) = exec.harvest_prompt_kv(&full, 64).unwrap();
+        let mut full_toks = Vec::new();
+        for _ in 0..4 {
+            full_toks.push(exec.decode_step(&mut full, &mut cluster).unwrap().0);
+        }
+
+        let Some((exec2, mut c2)) = executor(Strategy::Tree, 2) else {
+            return;
+        };
+        let mut pre = exec2.start_sequence();
+        // 64 tokens = 4 whole pages at the default page_size of 16.
+        exec2.install_prefix(&mut pre, &prompt[..64], &k, &v, 64).unwrap();
+        assert_eq!(pre.cache.total_len(), 64);
+        assert_eq!(pre.cache.aliased_len(), 64);
+        let suffix_sim = exec2.prefill(&mut pre, &prompt[64..], &mut c2).unwrap();
+        assert!(
+            suffix_sim < full_sim,
+            "suffix-only prefill {suffix_sim} must beat full prefill {full_sim}"
+        );
+        let mut pre_toks = Vec::new();
+        for _ in 0..4 {
+            pre_toks.push(exec2.decode_step(&mut pre, &mut c2).unwrap().0);
+        }
+        assert_eq!(full_toks, pre_toks, "prefix reuse must not change the decoded stream");
     }
 }

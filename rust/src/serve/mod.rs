@@ -7,15 +7,23 @@
 //! across active sequences (each sequence's KV is sharded over the same
 //! worker set), and per-request TTFT / TPOT / throughput metrics are
 //! recorded in both virtual (simulated cluster) and wall-clock time.
+//!
+//! With [`ServeConfig::prefix_share`] on, admission consults a
+//! [`RadixCache`]: the matched prompt prefix is installed into the new
+//! sequence without touching the engine (KV pages aliased, prefill skipped),
+//! only the unmatched suffix runs through `ModelExecutor::prefill`, and the
+//! prompt's full pages are committed back to the tree for later requests.
 
 pub mod batcher;
 
 pub use batcher::{
-    synthetic_decode_workload, BatchMetrics, BatchRequest, BatchResult, BatcherConfig,
-    DecodeBatcher, FinishReason, TreeBatcher,
+    synthetic_decode_workload, synthetic_multiturn_workload, synthetic_shared_prefix_workload,
+    BatchMetrics, BatchRequest, BatchResult, BatcherConfig, DecodeBatcher, FinishReason,
+    TreeBatcher,
 };
 
 use crate::cluster::VirtualCluster;
+use crate::kvcache::{CacheSpec, PagePool, PrefixHandle, RadixCache, RadixStats};
 use crate::model::{ModelExecutor, SequenceState, StepStats};
 use crate::util::{Histogram, Summary};
 use std::collections::VecDeque;
@@ -55,6 +63,11 @@ pub struct ServerMetrics {
     /// Output tokens per wall second on this host (CPU reality check).
     pub throughput_wall: f64,
     pub ttft_hist: Histogram,
+    /// Radix-cache counters (zeros when sharing is off); `prefix.hit_rate()`
+    /// is the fraction of prompt tokens that skipped prefill.
+    pub prefix: RadixStats,
+    /// Pages aliased instead of re-reserved, summed over admissions.
+    pub deduped_pages: usize,
 }
 
 /// Scheduler configuration.
@@ -62,11 +75,16 @@ pub struct ServerMetrics {
 pub struct ServeConfig {
     /// Max sequences decoded concurrently (continuous batching width).
     pub max_batch: usize,
+    /// Match prompts against a radix prefix cache at admission and prefill
+    /// only the unmatched suffix. Off by default.
+    pub prefix_share: bool,
+    /// Paged-KV capacity per worker backing the prefix cache's accounting.
+    pub pages_per_worker: usize,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        ServeConfig { max_batch: 4 }
+        ServeConfig { max_batch: 4, prefix_share: false, pages_per_worker: 4096 }
     }
 }
 
@@ -74,6 +92,8 @@ struct Active {
     req: Request,
     seq: SequenceState,
     generated: Vec<i32>,
+    /// Pin + still-owned pool pages (sharing only); released at retirement.
+    prefix: Option<(PrefixHandle, Vec<usize>)>,
     admit_sim: f64,
     first_token_sim: Option<f64>,
     sim_spent: f64,
@@ -93,6 +113,17 @@ impl<'a> Server<'a> {
         Server { exec, cluster, cfg }
     }
 
+    fn radix_spec(&self) -> CacheSpec {
+        CacheSpec {
+            n_layers: self.exec.spec.n_layers,
+            kv_heads: self.exec.spec.kv_heads,
+            d_head: self.exec.spec.d_head(),
+            n_workers: self.exec.cfg.n_workers,
+            page_size: self.exec.cfg.page_size,
+            elem_bytes: self.exec.cfg.wire_bpe,
+        }
+    }
+
     /// Serve a batch of requests to completion (offline/batch serving mode).
     pub fn run(&mut self, requests: Vec<Request>) -> anyhow::Result<(Vec<RequestResult>, ServerMetrics)> {
         let mut queue: VecDeque<Request> = requests.into();
@@ -100,6 +131,11 @@ impl<'a> Server<'a> {
         let mut done: Vec<RequestResult> = Vec::new();
         let run_wall = std::time::Instant::now();
         let run_sim_start = self.cluster.world.max_clock();
+        let n_workers = self.exec.cfg.n_workers;
+        let ps = self.exec.cfg.page_size;
+        let mut pool = PagePool::new(n_workers, self.cfg.pages_per_worker);
+        let mut radix = self.cfg.prefix_share.then(|| RadixCache::new(self.radix_spec()));
+        let mut deduped_pages = 0usize;
 
         while !queue.is_empty() || !active.is_empty() {
             // Admission: fill free slots; run prefill at admission time.
@@ -108,13 +144,73 @@ impl<'a> Server<'a> {
                 let admit_sim = self.cluster.world.max_clock();
                 let wall = std::time::Instant::now();
                 let mut seq = self.exec.start_sequence();
-                let prefill_sim = self.exec.prefill(&mut seq, &req.prompt, self.cluster)?;
+                // Prefix sharing: serve the matched prompt prefix from the
+                // radix cache (no engine calls, no prefill time); fall back
+                // to a full prefill when the pool cannot host the request's
+                // unique pages even after evicting unpinned prefixes.
+                let mut matched = 0usize;
+                let mut prefix: Option<(PrefixHandle, Vec<usize>)> = None;
+                if let Some(r) = radix.as_mut() {
+                    let h = r.acquire(&req.prompt);
+                    // The tree stores KV, not hidden states: leave at least
+                    // the last prompt token for prefill to process. The
+                    // clamp governs only what is installed/prefilled — page
+                    // aliasing uses the UNCLAMPED match, or a fully-cached
+                    // page-aligned prompt would re-reserve its last page.
+                    let m = h.matched.min(req.prompt.len().saturating_sub(1));
+                    let shared = PagePool::pages_for_range(n_workers, 0, h.matched / ps);
+                    let mut need = PagePool::pages_for_span(
+                        n_workers,
+                        ps,
+                        req.prompt.len() + req.max_new_tokens,
+                    );
+                    for (n, s) in need.iter_mut().zip(&shared) {
+                        *n -= s;
+                    }
+                    let fits = pool.try_reserve(&need)
+                        || (r.evict_for(&mut pool, &need)? && pool.try_reserve(&need));
+                    if fits {
+                        if m > 0 {
+                            let (k, v) = r.prefix_rows(&req.prompt, m);
+                            self.exec.install_prefix(
+                                &mut seq,
+                                &req.prompt[..m],
+                                &k,
+                                &v,
+                                (m / ps) * ps,
+                            )?;
+                        }
+                        matched = m;
+                        deduped_pages += shared.iter().sum::<usize>();
+                        r.record_lookup(req.prompt.len(), m);
+                        prefix = Some((h, need));
+                    } else {
+                        r.release(h);
+                    }
+                }
+                let prefill_sim = self.exec.prefill(&mut seq, &req.prompt[matched..], self.cluster)?;
+                // Commit the prompt's full pages to the tree while the
+                // leader's prefill caches are still alive.
+                if let (Some(r), Some((h, need))) = (radix.as_mut(), prefix.as_mut()) {
+                    let (k, v) = self.exec.harvest_prompt_kv(&seq, req.prompt.len())?;
+                    let moved = r.insert(h, &req.prompt, &k, &v);
+                    for (n, m) in need.iter_mut().zip(&moved) {
+                        debug_assert!(*n >= *m, "transfer exceeds reservation");
+                        *n -= m;
+                    }
+                }
                 self.exec.finish_prefill(&mut seq);
-                crate::tlog!(Debug, "admitted request {} (prefill {:.3} sim-ms)", req.id, prefill_sim * 1e3);
+                crate::tlog!(
+                    Debug,
+                    "admitted request {} (prefix hit {matched}, prefill {:.3} sim-ms)",
+                    req.id,
+                    prefill_sim * 1e3
+                );
                 active.push(Active {
                     req,
                     seq,
                     generated: Vec::new(),
+                    prefix,
                     admit_sim,
                     first_token_sim: None,
                     sim_spent: prefill_sim,
@@ -142,6 +238,12 @@ impl<'a> Server<'a> {
             // Retire finished sequences (reverse order keeps indices valid).
             for &i in finished_idx.iter().rev() {
                 let a = active.swap_remove(i);
+                if let Some((h, need)) = a.prefix {
+                    pool.release(&need)?;
+                    if let Some(r) = radix.as_mut() {
+                        r.release(h);
+                    }
+                }
                 let n_out = a.generated.len();
                 let ttft = a.first_token_sim.unwrap_or(a.sim_spent);
                 let tpot = if n_out > 1 { (a.sim_spent - ttft) / (n_out - 1) as f64 } else { 0.0 };
@@ -175,6 +277,8 @@ impl<'a> Server<'a> {
             throughput_sim: if sim_elapsed > 0.0 { total_tokens_out as f64 / sim_elapsed } else { 0.0 },
             throughput_wall: if wall_elapsed > 0.0 { total_tokens_out as f64 / wall_elapsed } else { 0.0 },
             ttft_hist,
+            prefix: radix.as_ref().map(|r| r.stats).unwrap_or_default(),
+            deduped_pages,
         };
         Ok((done, metrics))
     }
@@ -242,7 +346,8 @@ mod tests {
         );
         let mut cluster = VirtualCluster::new(topo);
         let reqs = synthetic_workload(3, 16, 48, 3, 1024, 7);
-        let mut server = Server::new(&exec, &mut cluster, ServeConfig { max_batch: 2 });
+        let mut server =
+            Server::new(&exec, &mut cluster, ServeConfig { max_batch: 2, ..Default::default() });
         let (results, metrics) = server.run(reqs).unwrap();
         assert_eq!(results.len(), 3);
         assert_eq!(metrics.completed, 3);
@@ -254,5 +359,60 @@ mod tests {
         }
         assert!(metrics.throughput_sim > 0.0);
         assert!(metrics.throughput_wall > 0.0);
+        assert_eq!(metrics.prefix.lookups, 0, "sharing is off by default");
+    }
+
+    #[test]
+    fn server_prefix_sharing_preserves_tokens() {
+        let Some(dir) = find_artifacts("artifacts", "test-8m") else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let engine = EngineHandle::spawn(&dir).unwrap();
+        let cfg = ExecutorConfig { n_workers: 2, strategy: Strategy::Tree, ..Default::default() };
+        let exec = ModelExecutor::new(engine, cfg, 99).unwrap();
+        let topo = Topology::custom(
+            "t",
+            1,
+            2,
+            crate::gpumodel::GpuKind::H100,
+            crate::topology::LinkSpec::nvlink4(),
+            crate::topology::LinkSpec::infiniband_ndr(),
+        );
+        // Two requests with a common 48-token system prompt.
+        let system: Vec<i32> = (0..48).map(|i| (i * 3) % 1024).collect();
+        let mk = |id: u64, tail_seed: i32| {
+            let mut prompt = system.clone();
+            prompt.extend((0..16).map(|i| (i * 7 + tail_seed) % 1024));
+            Request { id, prompt, max_new_tokens: 3 }
+        };
+        let reqs = vec![mk(0, 5), mk(1, 11)];
+
+        let mut base_cluster = VirtualCluster::new(topo.clone());
+        let mut base = Server::new(
+            &exec,
+            &mut base_cluster,
+            ServeConfig { max_batch: 2, ..Default::default() },
+        );
+        let (base_res, base_m) = base.run(reqs.clone()).unwrap();
+
+        let mut share_cluster = VirtualCluster::new(topo);
+        let mut share = Server::new(
+            &exec,
+            &mut share_cluster,
+            ServeConfig { max_batch: 2, prefix_share: true, ..Default::default() },
+        );
+        let (share_res, share_m) = share.run(reqs).unwrap();
+
+        for (a, b) in base_res.iter().zip(&share_res) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.tokens, b.tokens, "request {}: sharing changed the stream", a.id);
+        }
+        assert!(share_m.prefix.hit_tokens >= 48, "second request must hit the system prompt");
+        assert!(share_m.deduped_pages > 0);
+        assert!(
+            share_m.ttft_sim.mean < base_m.ttft_sim.mean,
+            "skipped prefill must lower mean TTFT"
+        );
     }
 }

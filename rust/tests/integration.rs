@@ -85,7 +85,7 @@ fn serving_pipeline_tree_vs_ring() {
         .unwrap();
         let mut cluster = VirtualCluster::new(flat(2));
         let reqs = synthetic_workload(2, 32, 64, 3, vocab, 5);
-        let mut server = Server::new(&exec, &mut cluster, ServeConfig { max_batch: 2 });
+        let mut server = Server::new(&exec, &mut cluster, ServeConfig { max_batch: 2, ..Default::default() });
         let (results, metrics) = server.run(reqs).unwrap();
         streams.push(results.iter().map(|r| r.tokens.clone()).collect::<Vec<_>>());
         tpots.push(metrics.tpot_sim.mean);

@@ -1,0 +1,203 @@
+//! Property tests for the prefix-sharing page accounting: random
+//! admit / fork / extend / retire sequences driven through `RadixCache` +
+//! `PagePool` against a shadow model, asserting after EVERY step that
+//!
+//!   * node refcounts equal the number of live pins (sequences aliasing
+//!     that node) — `RadixCache::verify_integrity` recounts from scratch;
+//!   * `used_pages` on every worker equals the union of live spans: the
+//!     cache's deduplicated prefix pages (counted once, however many
+//!     sequences alias them) plus each live sequence's unique pages;
+//!   * the tree's stored KV rows are exactly the content-addressed rows a
+//!     fresh computation would produce (aliasing is bit-transparent);
+//!   * after retiring every sequence and draining the cache, zero pages
+//!     remain reserved — nothing leaks, even through mid-page forks, node
+//!     splits, and LRU evictions.
+
+use tree_attention::kvcache::{CacheSpec, PagePool, PrefixHandle, RadixCache};
+use tree_attention::util::prop::check;
+use tree_attention::util::Rng;
+
+/// Content-addressed KV rows for a prompt: a pure function of (position,
+/// token), mirroring the serving layer's prefill stream at toy size.
+fn rows_for(prompt: &[i32], row: usize) -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
+    let mut k = Vec::with_capacity(prompt.len() * row);
+    let mut v = Vec::with_capacity(prompt.len() * row);
+    for (pos, &tok) in prompt.iter().enumerate() {
+        let mut rng = Rng::seed(((pos as u64) << 32) | (tok as u32 as u64));
+        k.extend(rng.normal_vec(row, 1.0));
+        v.extend(rng.normal_vec(row, 1.0));
+    }
+    (vec![k], vec![v])
+}
+
+struct LiveSeq {
+    prompt: Vec<i32>,
+    handle: PrefixHandle,
+    /// Pages this sequence still owns in the pool (post-transfer).
+    owned: Vec<usize>,
+}
+
+#[test]
+fn radix_page_accounting_prop() {
+    check("radix+pool: refcounts, page union, zero leaks", 60, |g| {
+        let p = g.usize_in(1..9);
+        let page = g.pow2(0, 3);
+        let spec = CacheSpec {
+            n_layers: 1,
+            kv_heads: 1,
+            d_head: 2,
+            n_workers: p,
+            page_size: page,
+            elem_bytes: 2,
+        };
+        let row = spec.kv_row();
+        // Pools from tight (forces eviction paths) to roomy.
+        let pages_per_worker = g.usize_in(8..96);
+        let mut pool = PagePool::new(p, pages_per_worker);
+        let mut radix = RadixCache::new(spec);
+        let mut live: Vec<LiveSeq> = Vec::new();
+
+        let steps = g.usize_in(10..50);
+        for _ in 0..steps {
+            let roll = g.rng().below(100);
+            if roll < 55 || live.is_empty() {
+                // -- admit: fresh prompt, or a fork/extension of a live one
+                // (truncate to a random point, then append new tokens — the
+                // multi-turn / mid-page-divergence shapes).
+                let prompt: Vec<i32> = if !live.is_empty() && g.bool(0.5) {
+                    let base = &live[g.rng().below(live.len())].prompt;
+                    let keep = if base.is_empty() { 0 } else { g.usize_in(0..base.len() + 1) };
+                    let mut t = base[..keep].to_vec();
+                    let extra = g.usize_in(0..20);
+                    t.extend((0..extra).map(|_| g.rng().below(3) as i32));
+                    t
+                } else {
+                    let len = g.usize_in(0..40);
+                    (0..len).map(|_| g.rng().below(3) as i32).collect()
+                };
+                let decode_span = g.usize_in(0..12);
+                let total = prompt.len() + decode_span;
+                let full = PagePool::pages_for_span(p, page, total);
+                if !pool.fits_capacity(&full) {
+                    continue;
+                }
+                let handle = radix.acquire(&prompt);
+                // Aliasing is bit-transparent: the tree's rows for the
+                // matched prefix equal a fresh content-addressed compute.
+                let (k, v) = rows_for(&prompt, row);
+                if handle.matched > 0 {
+                    let (tk, tv) = radix.prefix_rows(&prompt, handle.matched);
+                    assert_eq!(tk[0], k[0][..handle.matched * row], "stored k rows drifted");
+                    assert_eq!(tv[0], v[0][..handle.matched * row], "stored v rows drifted");
+                }
+                let shared = PagePool::pages_for_range(p, 0, handle.matched / page);
+                let mut need = full;
+                for (n, s) in need.iter_mut().zip(&shared) {
+                    *n -= s;
+                }
+                let admitted = pool.try_reserve(&need)
+                    || (radix.evict_for(&mut pool, &need).unwrap() && pool.try_reserve(&need));
+                if !admitted {
+                    radix.release(handle);
+                    continue;
+                }
+                let moved = radix.insert(&handle, &prompt, &k, &v);
+                for (n, m) in need.iter_mut().zip(&moved) {
+                    assert!(*n >= *m, "transfer exceeds the reservation");
+                    *n -= m;
+                }
+                radix.record_lookup(prompt.len(), handle.matched);
+                live.push(LiveSeq { prompt, handle, owned: need });
+            } else if roll < 80 {
+                // -- retire a random live sequence.
+                let s = live.swap_remove(g.rng().below(live.len()));
+                pool.release(&s.owned).unwrap();
+                radix.release(s.handle);
+            } else if roll < 90 {
+                // -- pool-pressure eviction with a synthetic demand.
+                let need: Vec<usize> = (0..p).map(|_| g.usize_in(0..6)).collect();
+                let _ = radix.evict_for(&mut pool, &need).unwrap();
+            } else if let Some(s) = live.last() {
+                // -- read-only lookups touch LRU state only.
+                let m = radix.match_prefix(&s.prompt);
+                assert!(m >= (s.prompt.len() / page) * page, "own full pages must stay matched");
+            }
+
+            // ---- invariants, every step --------------------------------
+            radix.verify_integrity();
+            assert_eq!(radix.pin_count(), live.len(), "one pin per live sequence");
+            for w in 0..p {
+                let expect: usize =
+                    radix.owned_pages()[w] + live.iter().map(|s| s.owned[w]).sum::<usize>();
+                assert_eq!(
+                    pool.used_pages(w),
+                    expect,
+                    "worker {w}: pool usage must equal union of live spans"
+                );
+            }
+        }
+
+        // ---- drain: retire everything, evict everything → zero ---------
+        for s in live.drain(..) {
+            pool.release(&s.owned).unwrap();
+            radix.release(s.handle);
+        }
+        radix.evict_all(&mut pool).unwrap();
+        radix.verify_integrity();
+        assert_eq!(radix.total_owned_pages(), 0, "cache ledger must drain");
+        assert_eq!(radix.node_count(), 0, "all nodes evictable once unpinned");
+        for w in 0..p {
+            assert_eq!(pool.used_pages(w), 0, "worker {w}: pages leaked");
+        }
+    });
+}
+
+#[test]
+fn radix_full_hits_never_double_charge() {
+    // Degenerate but important shape: N identical prompts admitted
+    // concurrently must charge the pool ONCE for the prompt, plus each
+    // sequence's decode span.
+    let p = 3;
+    let page = 4;
+    let spec = CacheSpec {
+        n_layers: 1,
+        kv_heads: 1,
+        d_head: 2,
+        n_workers: p,
+        page_size: page,
+        elem_bytes: 2,
+    };
+    let row = spec.kv_row();
+    let mut pool = PagePool::new(p, 256);
+    let mut radix = RadixCache::new(spec);
+    let prompt: Vec<i32> = (0..24).collect(); // 6 pages, page-aligned
+    let (k, v) = rows_for(&prompt, row);
+    let mut seqs = Vec::new();
+    for _ in 0..5 {
+        let handle = radix.acquire(&prompt);
+        let shared = PagePool::pages_for_range(p, 0, handle.matched / page);
+        let mut need = PagePool::pages_for_span(p, page, prompt.len() + 4); // +1 decode page
+        for (n, s) in need.iter_mut().zip(&shared) {
+            *n -= s;
+        }
+        assert!(pool.try_reserve(&need));
+        let moved = radix.insert(&handle, &prompt, &k, &v);
+        for (n, m) in need.iter_mut().zip(&moved) {
+            *n -= m;
+        }
+        radix.record_lookup(prompt.len(), handle.matched);
+        seqs.push(LiveSeq { prompt: prompt.clone(), handle, owned: need });
+        radix.verify_integrity();
+    }
+    // 6 prompt pages once + 5 × 1 decode page.
+    let total_used: usize = (0..p).map(|w| pool.used_pages(w)).sum();
+    assert_eq!(total_used, 6 + 5);
+    assert_eq!(radix.total_owned_pages(), 6);
+    assert!(radix.stats.hit_rate() > 0.7, "4 of 5 lookups are full hits");
+    for s in seqs {
+        pool.release(&s.owned).unwrap();
+        radix.release(s.handle);
+    }
+    radix.evict_all(&mut pool).unwrap();
+    assert_eq!((0..p).map(|w| pool.used_pages(w)).sum::<usize>(), 0);
+}
