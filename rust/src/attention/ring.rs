@@ -55,7 +55,7 @@ pub fn ring_decode(
     let mut steps = bsched.n_steps();
     for step in &bsched.steps {
         for op in step {
-            cluster.world.send(op.src, op.dst, q_bytes);
+            cluster.world.send_with_retry(op.src, op.dst, q_bytes)?;
         }
     }
 
@@ -89,7 +89,12 @@ pub fn ring_decode(
         let mut arrivals = vec![f64::NEG_INFINITY; p];
         // Overlap: post the forward-send before computing.
         if overlap && !last {
-            post_rotation(cluster, &held, row, wire_bpe, &mut arrivals);
+            if let Err(e) = post_rotation(cluster, &held, row, wire_bpe, &mut arrivals) {
+                for w in 0..p {
+                    cluster.mem.free(w, max_chunk_bytes + q_bytes + out_bytes);
+                }
+                return Err(e.into());
+            }
         }
         // Local compute: fold the currently-held chunk into the accumulator.
         // Empty chunks skip the launch AND the combine — combining with the
@@ -109,7 +114,12 @@ pub fn ring_decode(
         // Rotate chunks for the next step.
         if !last {
             if !overlap {
-                post_rotation(cluster, &held, row, wire_bpe, &mut arrivals);
+                if let Err(e) = post_rotation(cluster, &held, row, wire_bpe, &mut arrivals) {
+                    for w in 0..p {
+                        cluster.mem.free(w, max_chunk_bytes + q_bytes + out_bytes);
+                    }
+                    return Err(e.into());
+                }
             }
             for w in 0..p {
                 if cluster.world.clocks[w] < arrivals[w] {
@@ -151,22 +161,25 @@ pub fn ring_decode(
 /// Post one rotation hop: every worker forwards its held chunk to its ring
 /// neighbour. Empty chunks move no bytes — no α charge, no message counted —
 /// but the logical rotation still advances (the caller rotates `held`).
+/// Sends go through the network's bounded retry; a confirmed worker loss
+/// aborts the hop with a typed [`CommError`](crate::netsim::CommError).
 fn post_rotation(
     cluster: &mut VirtualCluster,
     held: &[(Vec<f32>, Vec<f32>, usize)],
     row: usize,
     wire_bpe: u64,
     arrivals: &mut [f64],
-) {
+) -> Result<(), crate::netsim::CommError> {
     let p = held.len();
     for w in 0..p {
         let bytes = 2 * (held[w].2 * row) as u64 * wire_bpe;
         if bytes == 0 {
             continue;
         }
-        let arr = cluster.world.net.transfer(w, (w + 1) % p, bytes, cluster.world.clocks[w]);
+        let arr = cluster.world.transfer_with_retry(w, (w + 1) % p, bytes)?;
         arrivals[(w + 1) % p] = arr;
     }
+    Ok(())
 }
 
 /// Batched ring-attention decode: ONE rotation round for B concurrent
@@ -208,7 +221,7 @@ pub fn ring_decode_batch(
     let mut steps = bsched.n_steps();
     for step in &bsched.steps {
         for op in step {
-            cluster.world.send(op.src, op.dst, q_bytes);
+            cluster.world.send_with_retry(op.src, op.dst, q_bytes)?;
         }
     }
 
@@ -239,9 +252,15 @@ pub fn ring_decode_batch(
             for w in 0..p {
                 let bytes = fused_bytes_of(owner(w));
                 if bytes > 0 {
-                    let arr =
-                        cluster.world.net.transfer(w, (w + 1) % p, bytes, cluster.world.clocks[w]);
-                    arrivals[(w + 1) % p] = arr;
+                    match cluster.world.transfer_with_retry(w, (w + 1) % p, bytes) {
+                        Ok(arr) => arrivals[(w + 1) % p] = arr,
+                        Err(e) => {
+                            for w in 0..p {
+                                cluster.mem.free(w, max_chunk_bytes + q_bytes + out_bytes);
+                            }
+                            return Err(e.into());
+                        }
+                    }
                 }
             }
         }
@@ -269,11 +288,15 @@ pub fn ring_decode_batch(
                 for w in 0..p {
                     let bytes = fused_bytes_of(owner(w));
                     if bytes > 0 {
-                        let arr = cluster
-                            .world
-                            .net
-                            .transfer(w, (w + 1) % p, bytes, cluster.world.clocks[w]);
-                        arrivals[(w + 1) % p] = arr;
+                        match cluster.world.transfer_with_retry(w, (w + 1) % p, bytes) {
+                            Ok(arr) => arrivals[(w + 1) % p] = arr,
+                            Err(e) => {
+                                for w in 0..p {
+                                    cluster.mem.free(w, max_chunk_bytes + q_bytes + out_bytes);
+                                }
+                                return Err(e.into());
+                            }
+                        }
                     }
                 }
             }

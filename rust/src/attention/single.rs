@@ -33,7 +33,7 @@ pub fn single_decode(
     let mut steps = 0;
     for (w, s) in shards.iter().enumerate() {
         if w != 0 && s.len > 0 {
-            cluster.world.send(w, 0, 2 * (s.len * row) as u64 * wire_bpe);
+            cluster.world.send_with_retry(w, 0, 2 * (s.len * row) as u64 * wire_bpe)?;
             steps = 1;
         }
         k_all.extend_from_slice(s.k);
@@ -93,7 +93,7 @@ pub fn single_decode_batch(
         let bytes: u64 =
             entries.iter().map(|e| 2 * (e.shards[w].len * row) as u64 * wire_bpe).sum();
         if bytes > 0 {
-            cluster.world.send(w, 0, bytes);
+            cluster.world.send_with_retry(w, 0, bytes)?;
             steps = 1;
         }
     }

@@ -17,7 +17,7 @@
 use super::{BatchDecodeOutcome, BatchEntry, ComputeBackend, DecodeOutcome, DecodeStats, ShardKv};
 use crate::attnmath::{batched_shape, AttnCombineOp, AttnPartial, AttnShape};
 use crate::cluster::VirtualCluster;
-use crate::collectives::{broadcast_schedule, execute_data, AllReduceAlgo, ReduceOp};
+use crate::collectives::{broadcast_schedule, try_execute_data, AllReduceAlgo, ReduceOp};
 
 /// Run one tree-attention decode over sharded KV (one layer, one token).
 ///
@@ -47,7 +47,7 @@ pub fn tree_decode(
     let mut steps = bsched.n_steps();
     for step in &bsched.steps {
         for op in step {
-            cluster.world.send(op.src, op.dst, q_bytes);
+            cluster.world.send_with_retry(op.src, op.dst, q_bytes)?;
         }
     }
     // transient memory: every worker now holds q + its partial wire + output
@@ -75,7 +75,15 @@ pub fn tree_decode(
     let op = AttnCombineOp { d_head: shape.d_head };
     let sched =
         algo.schedule_for(&cluster.world, shape.batch * shape.n_heads, op.block_len(), wire_bpe)?;
-    let stats = execute_data(&mut cluster.world, &sched, &mut wires, &op, wire_bpe);
+    let stats = match try_execute_data(&mut cluster.world, &sched, &mut wires, &op, wire_bpe) {
+        Ok(s) => s,
+        Err(e) => {
+            for w in 0..p {
+                cluster.mem.free(w, q_bytes + 2 * wire_elems * wire_bpe);
+            }
+            return Err(e.into());
+        }
+    };
     steps += stats.steps;
 
     // -- step 4: finalize on the leader ------------------------------------
@@ -144,7 +152,7 @@ pub fn tree_decode_batch(
     let mut steps = bsched.n_steps();
     for step in &bsched.steps {
         for op in step {
-            cluster.world.send(op.src, op.dst, q_bytes);
+            cluster.world.send_with_retry(op.src, op.dst, q_bytes)?;
         }
     }
     let wire_elems = AttnPartial::wire_len(bshape) as u64;
@@ -172,7 +180,15 @@ pub fn tree_decode_batch(
     // its plan cache on)
     let op = AttnCombineOp { d_head: shape.d_head };
     let sched = algo.schedule_for(&cluster.world, b * shape.n_heads, op.block_len(), wire_bpe)?;
-    let stats = execute_data(&mut cluster.world, &sched, &mut wires, &op, wire_bpe);
+    let stats = match try_execute_data(&mut cluster.world, &sched, &mut wires, &op, wire_bpe) {
+        Ok(s) => s,
+        Err(e) => {
+            for w in 0..p {
+                cluster.mem.free(w, q_bytes + 2 * wire_elems * wire_bpe);
+            }
+            return Err(e.into());
+        }
+    };
     steps += stats.steps;
 
     // -- step 4: finalize per session on the leader ------------------------
@@ -221,7 +237,7 @@ pub fn tree_decode_unfused(
     let mut steps = bsched.n_steps();
     for step in &bsched.steps {
         for op in step {
-            cluster.world.send(op.src, op.dst, q_bytes);
+            cluster.world.send_with_retry(op.src, op.dst, q_bytes)?;
         }
     }
 
@@ -237,7 +253,7 @@ pub fn tree_decode_unfused(
     // AllReduce 1: global max m (lse-style). Alg. 3 step 3.
     let mut maxes: Vec<Vec<f32>> = partials.iter().map(|p| p.max.clone()).collect();
     let sched1 = algo.schedule_for(&cluster.world, bh, 1, wire_bpe)?;
-    let s1 = execute_data(&mut cluster.world, &sched1, &mut maxes, &MaxOp, wire_bpe);
+    let s1 = try_execute_data(&mut cluster.world, &sched1, &mut maxes, &MaxOp, wire_bpe)?;
     // Rescale local (n, d) to the global max. Alg. 3 step 4.
     for (part, gmax) in partials.iter_mut().zip(&maxes) {
         for i in 0..bh {
@@ -252,10 +268,10 @@ pub fn tree_decode_unfused(
     // AllReduce 2: numerator. AllReduce 3: denominator. Alg. 3 step 5.
     let mut nums: Vec<Vec<f32>> = partials.iter().map(|p| p.num.clone()).collect();
     let sched2 = algo.schedule_for(&cluster.world, bh * shape.d_head, 1, wire_bpe)?;
-    let s2 = execute_data(&mut cluster.world, &sched2, &mut nums, &SumOp, wire_bpe);
+    let s2 = try_execute_data(&mut cluster.world, &sched2, &mut nums, &SumOp, wire_bpe)?;
     let mut dens: Vec<Vec<f32>> = partials.iter().map(|p| p.den.clone()).collect();
     let sched3 = algo.schedule_for(&cluster.world, bh, 1, wire_bpe)?;
-    let s3 = execute_data(&mut cluster.world, &sched3, &mut dens, &SumOp, wire_bpe);
+    let s3 = try_execute_data(&mut cluster.world, &sched3, &mut dens, &SumOp, wire_bpe)?;
     steps += s1.steps + s2.steps + s3.steps;
 
     let out: Vec<f32> = nums[0]

@@ -18,7 +18,7 @@ pub mod schedules;
 
 pub use schedules::*;
 
-use crate::netsim::{SimWorld, TrafficCounters};
+use crate::netsim::{CommError, SimWorld, TrafficCounters};
 use crate::topology::Rank;
 use std::ops::Range;
 
@@ -195,6 +195,59 @@ pub fn execute_data(
         sim_time: t1 - t0,
         traffic: world.net.counters().since(&before),
     }
+}
+
+/// Fault-aware [`execute_data`]: every send goes through the network's
+/// bounded retry/backoff policy, and on a confirmed worker loss the whole
+/// collective aborts with [`CommError::Degraded`] — with `bufs` restored to
+/// their entry state, so a half-applied reduction can never leak partial
+/// sums upward. With no fault plan installed this is bit-for-bit (data and
+/// virtual time) identical to [`execute_data`].
+pub fn try_execute_data(
+    world: &mut SimWorld,
+    schedule: &Schedule,
+    bufs: &mut [Vec<f32>],
+    op: &dyn ReduceOp,
+    wire_bytes_per_elem: u64,
+) -> Result<ExecStats, CommError> {
+    let bl = op.block_len();
+    let elems = schedule.nblocks * bl;
+    assert_eq!(bufs.len(), schedule.p, "one buffer per rank");
+    for (r, b) in bufs.iter().enumerate() {
+        assert_eq!(b.len(), elems, "rank {r} buffer length");
+    }
+    // Snapshot for all-or-nothing semantics on failure.
+    let entry_state: Vec<Vec<f32>> = bufs.to_vec();
+    let before = world.net.counters();
+    let t0 = world.barrier();
+    for step in &schedule.steps {
+        let payloads: Vec<Vec<f32>> = step
+            .iter()
+            .map(|s| bufs[s.src][s.blocks.start * bl..s.blocks.end * bl].to_vec())
+            .collect();
+        for (sendop, payload) in step.iter().zip(payloads) {
+            if payload.is_empty() {
+                continue;
+            }
+            let bytes = (payload.len() as u64) * wire_bytes_per_elem;
+            if let Err(e) = world.send_with_retry(sendop.src, sendop.dst, bytes) {
+                bufs.clone_from_slice(&entry_state);
+                return Err(e);
+            }
+            let dst_seg = &mut bufs[sendop.dst][sendop.blocks.start * bl..sendop.blocks.end * bl];
+            match sendop.mode {
+                RecvMode::Reduce => op.combine(dst_seg, &payload),
+                RecvMode::Copy => dst_seg.copy_from_slice(&payload),
+            }
+        }
+        step_barrier(world, step);
+    }
+    let t1 = world.barrier();
+    Ok(ExecStats {
+        steps: schedule.n_steps(),
+        sim_time: t1 - t0,
+        traffic: world.net.counters().since(&before),
+    })
 }
 
 /// Execute a schedule for timing/volume only (no data). `block_elems` is the
@@ -559,6 +612,72 @@ mod tests {
         assert!((s_data.sim_time - s_cost.sim_time).abs() < 1e-15);
         assert_eq!(bufs[3], vec![5.0; 4], "real send still lands");
         assert_eq!(bufs[1], vec![1.0; 4], "empty send leaves the target untouched");
+    }
+
+    #[test]
+    fn try_execute_data_matches_execute_data_without_faults() {
+        // The fault-aware executor must be bit-for-bit (data AND virtual
+        // time) identical to the legacy one when no fault plan is active.
+        let mut rng = Rng::seed(15);
+        let nblocks = 48;
+        for algo in [AllReduceAlgo::Ring, AllReduceAlgo::Tree { fanout: 2 }, AllReduceAlgo::TwoLevel { inter_fanout: 2 }] {
+            let bufs0 = random_bufs(&mut rng, 8, nblocks);
+            let mut w1 = world(2, 4);
+            let sched = algo.schedule_for(&w1, nblocks, 1, 2).unwrap();
+            let mut a = bufs0.clone();
+            let s1 = execute_data(&mut w1, &sched, &mut a, &SumOp, 2);
+            let mut w2 = world(2, 4);
+            let mut b = bufs0.clone();
+            let s2 = try_execute_data(&mut w2, &sched, &mut b, &SumOp, 2).unwrap();
+            assert_eq!(a, b, "{}", algo.name());
+            assert!((s1.sim_time - s2.sim_time).abs() < 1e-18, "{}", algo.name());
+            assert_eq!(s1.traffic, s2.traffic);
+        }
+    }
+
+    #[test]
+    fn try_execute_data_degrades_and_restores_buffers() {
+        use crate::netsim::FaultPlan;
+        let mut rng = Rng::seed(16);
+        let nblocks = 32;
+        for algo in [AllReduceAlgo::Ring, AllReduceAlgo::Tree { fanout: 2 }, AllReduceAlgo::TwoLevel { inter_fanout: 2 }] {
+            for victim in [0usize, 3, 7] {
+                let bufs0 = random_bufs(&mut rng, 8, nblocks);
+                let mut w = world(2, 4);
+                w.net.set_fault_plan(FaultPlan::kill(victim, 0));
+                w.net.set_round(0);
+                let sched = algo.schedule_for(&w, nblocks, 1, 2).unwrap();
+                let mut bufs = bufs0.clone();
+                let err = try_execute_data(&mut w, &sched, &mut bufs, &SumOp, 2).unwrap_err();
+                assert_eq!(
+                    err,
+                    CommError::Degraded { lost: vec![victim] },
+                    "{} victim {victim}",
+                    algo.name()
+                );
+                // All-or-nothing: no partial reduction leaked into any rank.
+                assert_eq!(bufs, bufs0, "{} victim {victim}: buffers corrupted", algo.name());
+                assert!(w.net.fault_counters().retries > 0, "bounded retries were attempted");
+            }
+        }
+    }
+
+    #[test]
+    fn try_execute_data_rides_out_transient_drops() {
+        use crate::netsim::{FaultKind, FaultPlan};
+        let mut rng = Rng::seed(17);
+        let nblocks = 16;
+        let bufs0 = random_bufs(&mut rng, 4, nblocks);
+        let expect = expected_sum(&bufs0);
+        let mut w = world(1, 4);
+        w.net.set_fault_plan(FaultPlan::none().with(0, FaultKind::DropMessages { rank: 2, count: 3 }));
+        w.net.set_round(0);
+        let sched = AllReduceAlgo::Tree { fanout: 2 }.schedule_for(&w, nblocks, 1, 2).unwrap();
+        let mut bufs = bufs0.clone();
+        try_execute_data(&mut w, &sched, &mut bufs, &SumOp, 2)
+            .expect("transient drops must be absorbed by retry");
+        assert_allreduced(&bufs, &expect, 1e-4);
+        assert_eq!(w.net.fault_counters().drops, 3);
     }
 
     #[test]

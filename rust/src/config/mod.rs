@@ -278,6 +278,19 @@ pub struct RunSpec {
     /// (0 = every prompt unique). Independent of `prefix_share` so the
     /// sharing-off baseline can run the same traffic.
     pub shared_prefix: usize,
+    /// Inject a deterministic worker-kill fault into serve runs (`chaos-bench`
+    /// sets this; `serve` honours it too). Off by default.
+    pub fault_enable: bool,
+    /// Rank to kill when `fault_enable` (ignored otherwise).
+    pub fault_rank: usize,
+    /// Decode round at which the kill lands (0 = first round).
+    pub fault_round: usize,
+    /// Seed for `FaultPlan::seeded_kill` scenarios (chaos-bench matrix).
+    pub fault_seed: u64,
+    /// Send retries after the first attempt (netsim `RetryPolicy`).
+    pub retry_max: usize,
+    /// Initial per-send timeout in virtual microseconds (backoff doubles it).
+    pub retry_timeout_us: f64,
 }
 
 impl Default for RunSpec {
@@ -306,6 +319,12 @@ impl Default for RunSpec {
             requests: 16,
             prefix_share: false,
             shared_prefix: 0,
+            fault_enable: false,
+            fault_rank: 0,
+            fault_round: 1,
+            fault_seed: 0xFA_17,
+            retry_max: crate::netsim::RetryPolicy::default().max_retries,
+            retry_timeout_us: crate::netsim::RetryPolicy::default().timeout_s * 1e6,
         }
     }
 }
@@ -336,6 +355,12 @@ impl RunSpec {
         spec.requests = j.opt_usize("requests", spec.requests);
         spec.prefix_share = j.opt_bool("prefix_share", spec.prefix_share);
         spec.shared_prefix = j.opt_usize("shared_prefix", spec.shared_prefix);
+        spec.fault_enable = j.opt_bool("fault_enable", spec.fault_enable);
+        spec.fault_rank = j.opt_usize("fault_rank", spec.fault_rank);
+        spec.fault_round = j.opt_usize("fault_round", spec.fault_round);
+        spec.fault_seed = j.opt_f64("fault_seed", spec.fault_seed as f64) as u64;
+        spec.retry_max = j.opt_usize("retry_max", spec.retry_max);
+        spec.retry_timeout_us = j.opt_f64("retry_timeout_us", spec.retry_timeout_us);
         spec.validate()?;
         Ok(spec)
     }
@@ -363,6 +388,12 @@ impl RunSpec {
             "requests" => self.requests = value.parse()?,
             "prefix_share" => self.prefix_share = value.parse()?,
             "shared_prefix" => self.shared_prefix = value.parse()?,
+            "fault_enable" => self.fault_enable = value.parse()?,
+            "fault_rank" => self.fault_rank = value.parse()?,
+            "fault_round" => self.fault_round = value.parse()?,
+            "fault_seed" => self.fault_seed = value.parse()?,
+            "retry_max" => self.retry_max = value.parse()?,
+            "retry_timeout_us" => self.retry_timeout_us = value.parse()?,
             "cluster.preset" => self.cluster.preset = value.to_string(),
             "cluster.n_nodes" => self.cluster.n_nodes = value.parse()?,
             "cluster.gpus_per_node" => self.cluster.gpus_per_node = value.parse()?,
@@ -382,7 +413,42 @@ impl RunSpec {
         anyhow::ensure!(self.page_size >= 1, "page_size must be ≥ 1");
         anyhow::ensure!(self.pages_per_worker >= 1, "pages_per_worker must be ≥ 1");
         anyhow::ensure!(self.requests >= 1, "requests must be ≥ 1");
+        anyhow::ensure!(
+            self.retry_timeout_us > 0.0 && self.retry_timeout_us.is_finite(),
+            "retry_timeout_us must be a positive finite number"
+        );
+        if self.fault_enable {
+            anyhow::ensure!(
+                self.fault_rank < self.cluster.world_size(),
+                "fault_rank {} out of range for a {}-worker cluster",
+                self.fault_rank,
+                self.cluster.world_size()
+            );
+            anyhow::ensure!(
+                self.cluster.world_size() >= 2,
+                "fault injection needs ≥2 workers (someone must survive)"
+            );
+        }
         Ok(())
+    }
+
+    /// The netsim retry policy these knobs describe.
+    pub fn retry_policy(&self) -> crate::netsim::RetryPolicy {
+        crate::netsim::RetryPolicy {
+            max_retries: self.retry_max,
+            timeout_s: self.retry_timeout_us * 1e-6,
+            ..crate::netsim::RetryPolicy::default()
+        }
+    }
+
+    /// The fault plan these knobs describe: a single deterministic kill, or
+    /// no faults when `fault_enable` is off.
+    pub fn fault_plan(&self) -> crate::netsim::FaultPlan {
+        if self.fault_enable {
+            crate::netsim::FaultPlan::kill(self.fault_rank, self.fault_round)
+        } else {
+            crate::netsim::FaultPlan::none()
+        }
     }
 
     pub fn gpu_kind(&self) -> anyhow::Result<GpuKind> {
@@ -483,6 +549,41 @@ mod tests {
         assert!(!spec.prefix_share);
         assert_eq!(spec.shared_prefix, 512);
         assert!(spec.apply_override("prefix_share=maybe").is_err());
+    }
+
+    #[test]
+    fn fault_knobs_roundtrip_and_validate() {
+        // Off by default: healthy runs must not pay for fault plumbing.
+        let spec = RunSpec::default();
+        assert!(!spec.fault_enable);
+        assert!(spec.fault_plan().is_empty());
+        assert_eq!(spec.retry_policy().max_retries, 3);
+
+        let j = crate::ser::parse(
+            r#"{"fault_enable": true, "fault_rank": 3, "fault_round": 2,
+                "fault_seed": 99, "retry_max": 5, "retry_timeout_us": 250.0}"#,
+        )
+        .unwrap();
+        let mut spec = RunSpec::from_json(&j).unwrap();
+        assert!(spec.fault_enable);
+        assert_eq!((spec.fault_rank, spec.fault_round, spec.fault_seed), (3, 2, 99));
+        assert_eq!(spec.retry_policy().max_retries, 5);
+        assert!((spec.retry_policy().timeout_s - 250e-6).abs() < 1e-12);
+        assert!(!spec.fault_plan().is_empty());
+
+        spec.apply_override("fault_rank=1").unwrap();
+        spec.apply_override("retry_timeout_us=1000").unwrap();
+        assert_eq!(spec.fault_rank, 1);
+        spec.apply_override("fault_enable=false").unwrap();
+        assert!(spec.fault_plan().is_empty());
+        // Validation: the killed rank must exist and the timeout must be a
+        // positive number. (`apply_override` mutates before validating, so
+        // each bad override gets a fresh spec.)
+        let mut bad = RunSpec::default();
+        bad.apply_override("fault_enable=true").unwrap();
+        assert!(bad.apply_override("fault_rank=64").is_err());
+        let mut bad = RunSpec::default();
+        assert!(bad.apply_override("retry_timeout_us=0").is_err());
     }
 
     #[test]

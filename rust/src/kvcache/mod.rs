@@ -204,6 +204,21 @@ impl ShardedKvCache {
         }
     }
 
+    /// Discard the pending token: every layer row appended since the last
+    /// commit is removed and the cache returns to its pre-append state.
+    /// Degraded-decode recovery uses this for all-or-nothing token ingest —
+    /// a decode step that dies mid-collective must not leave half a token
+    /// in the cache. A no-op when nothing is pending.
+    pub fn rollback_token(&mut self) {
+        let Some(p) = self.pending.take() else { return };
+        let row = self.spec.kv_row();
+        let keep = self.shards[p.worker].len * row;
+        for l in 0..p.layers_done {
+            self.shards[p.worker].k[l].truncate(keep);
+            self.shards[p.worker].v[l].truncate(keep);
+        }
+    }
+
     /// Commit the pending token (all layers must have been appended).
     /// Returns the owning worker.
     pub fn commit_token(&mut self) -> usize {
@@ -726,6 +741,31 @@ mod tests {
         let layers = vec![k; s.n_layers];
         let mut c = ShardedKvCache::new(s);
         c.install_shared_prefix(6, 6, &layers.clone(), &layers);
+    }
+
+    #[test]
+    fn rollback_token_restores_pre_append_state() {
+        let s = spec(2, 4);
+        let mut c = ShardedKvCache::new(s);
+        let row = s.kv_row();
+        let k = vec![row_of(0, row); s.n_layers];
+        c.append_token(&k, &k.clone());
+        let snapshot = c.clone();
+        // Roll back a partially-appended token (one of two layers landed).
+        c.append_token_layer(0, &row_of(9, row), &row_of(9, row));
+        assert_eq!(c.pending_rows(0, c.worker_of(1)), 1);
+        c.rollback_token();
+        assert_eq!(c.total_len(), snapshot.total_len());
+        for w in 0..2 {
+            assert_eq!(c.shard(w).k[0], snapshot.shard(w).k[0], "worker {w}");
+            assert_eq!(c.shard(w).v[0], snapshot.shard(w).v[0], "worker {w}");
+            assert_eq!(c.pending_rows(0, w), 0);
+        }
+        // Rolling back with nothing pending is a no-op, and the cache keeps
+        // working normally afterwards.
+        c.rollback_token();
+        c.append_token(&k, &k.clone());
+        assert_eq!(c.total_len(), 2);
     }
 
     #[test]

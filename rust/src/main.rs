@@ -14,6 +14,10 @@
 //!   strategy-bench [opts]     — strategy planner crossover table
 //!                               (tree vs ring vs single, and what auto picks)
 //!   sweep  [opts]             — ring-vs-tree latency sweep (simulated)
+//!   chaos-bench [--quick] [opts] — fault-injection matrix: seeded worker
+//!                               kills through the continuous batcher, heal
+//!                               verification vs survivor replays, and a
+//!                               deterministic BENCH_chaos.json summary
 //!   bench-compare B R [--only N] — gate bench_results/ summaries in R
 //!                               against baselines in B (>10% = regression)
 //!
@@ -50,6 +54,13 @@ fn main() {
         "decode" => parse_spec(&args[1..]).and_then(|spec| cmd_decode(&spec)),
         "serve" => parse_spec(&args[1..]).and_then(|spec| cmd_serve(&spec)),
         "serve-bench" => parse_spec(&args[1..]).and_then(|spec| cmd_serve_bench(&spec)),
+        "chaos-bench" => {
+            // `--quick` is read via `bench::quick_mode()`; strip it so the
+            // remaining args parse as key=value overrides.
+            let rest: Vec<String> =
+                args[1..].iter().filter(|a| a.as_str() != "--quick").cloned().collect();
+            parse_spec(&rest).and_then(|spec| cmd_chaos_bench(&spec))
+        }
         "bench-compare" => cmd_bench_compare(&args[1..]),
         "plan-bench" => parse_spec(&args[1..]).and_then(|spec| cmd_plan_bench(&spec)),
         "strategy-bench" => parse_spec(&args[1..]).and_then(|spec| cmd_strategy_bench(&spec)),
@@ -72,13 +83,15 @@ fn main() {
 fn print_help() {
     println!(
         "treeattn — Tree Attention reproduction\n\
-         usage: treeattn <info|validate|decode|serve|serve-bench|bench-compare|plan-bench|strategy-bench|sweep> [--config f.json] [key=value ...]\n\
+         usage: treeattn <info|validate|decode|serve|serve-bench|chaos-bench|bench-compare|plan-bench|strategy-bench|sweep> [--config f.json] [key=value ...]\n\
          keys: strategy=auto|tree|ring|single  (auto = strategy planner; --strategy X is sugar)\n\
          \x20     allreduce=auto|ring|tree|twolevel  (auto = topology-aware collective planner)\n\
          \x20     model.preset=test-8m|tiny-124m  cluster.preset=h100_dgx|mi300x|rtx4090_pcie\n\
          \x20     cluster.n_nodes=N cluster.gpus_per_node=G seq_len=N decode_tokens=N batch=N\n\
          \x20     page_size=N pages_per_worker=N requests=N  (serving / admission control)\n\
-         \x20     prefix_share=true|false shared_prefix=N  (radix KV cache; --prefix-share is sugar)"
+         \x20     prefix_share=true|false shared_prefix=N  (radix KV cache; --prefix-share is sugar)\n\
+         \x20     fault_enable=true fault_rank=R fault_round=N fault_seed=S  (fault injection)\n\
+         \x20     retry_max=N retry_timeout_us=T  (send retry/backoff policy; chaos-bench --quick)"
     );
 }
 
@@ -430,6 +443,10 @@ fn cmd_serve_bench(spec: &RunSpec) -> anyhow::Result<()> {
         };
         let batcher = DecodeBatcher::new(shape, scale, cfg);
         let mut cluster = VirtualCluster::new(topo.clone());
+        cluster.world.net.set_retry_policy(spec.retry_policy());
+        if spec.fault_enable {
+            cluster.world.net.set_fault_plan(spec.fault_plan());
+        }
         let (_, m) = batcher.run(&mut cluster, &ComputeBackend::Oracle, workload())?;
         anyhow::ensure!(m.rejected == 0, "workload exceeds pages_per_worker={}", spec.pages_per_worker);
         // With sharing on, also serve the identical workload with sharing
@@ -437,6 +454,10 @@ fn cmd_serve_bench(spec: &RunSpec) -> anyhow::Result<()> {
         let baseline = if spec.prefix_share {
             let base = DecodeBatcher::new(shape, scale, BatcherConfig { prefix_share: false, ..cfg });
             let mut c2 = VirtualCluster::new(topo.clone());
+            c2.world.net.set_retry_policy(spec.retry_policy());
+            if spec.fault_enable {
+                c2.world.net.set_fault_plan(spec.fault_plan());
+            }
             let (_, mb) = base.run(&mut c2, &ComputeBackend::Oracle, workload())?;
             Some(mb)
         } else {
@@ -527,6 +548,162 @@ fn cmd_serve_bench(spec: &RunSpec) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `chaos-bench`: the fault-injection matrix. Runs ≥4 seeded worker-kill
+/// scenarios (`FaultPlan::seeded_kill`) through the continuous batcher —
+/// every scenario must surface a typed `Degraded` failure, heal onto the
+/// surviving topology, and finish with outputs matching a from-scratch solo
+/// replay on the survivors. Emits `bench_results/BENCH_chaos.json` with
+/// deterministic count metrics (gated by `bench-compare` in the chaos CI
+/// job); wall time goes under a `wall_` key, which is never compared.
+fn cmd_chaos_bench(spec: &RunSpec) -> anyhow::Result<()> {
+    use tree_attention::bench::{quick_mode, write_bench_summary};
+    use tree_attention::netsim::FaultPlan;
+    use tree_attention::serve::{synthetic_decode_workload, BatcherConfig, DecodeBatcher};
+
+    let topo = spec.cluster.topology()?;
+    let p = topo.world_size();
+    anyhow::ensure!(p >= 2, "chaos-bench needs ≥2 workers (someone must survive)");
+    let shape = AttnShape::new(1, spec.model.n_heads, spec.model.kv_heads, spec.model.d_head());
+    let scale = 1.0 / (spec.model.d_head() as f32).sqrt();
+    // Quick mode pins the workload shape so BENCH_chaos.json count metrics
+    // are identical for every fault seed the CI matrix sweeps.
+    let quick = quick_mode();
+    let (requests, max_ctx, new_toks) = if quick {
+        (4usize, 96usize, 4usize)
+    } else {
+        (spec.requests, spec.seq_len, spec.decode_tokens)
+    };
+    let min_ctx = (max_ctx / 2).max(1);
+    let scenarios: u64 = 4;
+    println!(
+        "chaos-bench: {scenarios} seeded kill scenarios on {} ({} workers) | strategy={} | {} requests, ctx {}–{}, {} tokens each{}",
+        topo.name,
+        p,
+        spec.strategy.name(),
+        requests,
+        fmt_tokens(min_ctx),
+        fmt_tokens(max_ctx),
+        new_toks,
+        if quick { " [quick]" } else { "" },
+    );
+
+    let mut table = Table::new(
+        "Chaos matrix (every scenario kills one worker mid-decode)",
+        &[
+            "seed",
+            "lost",
+            "heals",
+            "requeued",
+            "retries",
+            "evicted",
+            "resharded",
+            "max|Δ| vs replay",
+        ],
+    );
+    let wall = std::time::Instant::now();
+    let mut heals = 0usize;
+    let mut completed = 0usize;
+    let mut verified = 0usize;
+    let mut requeued = 0usize;
+    let mut retries = 0u64;
+    let mut timeouts = 0u64;
+    let mut evicted_plans = 0usize;
+    let mut resharded_rows = 0usize;
+    let mut max_diff = 0.0f32;
+    for i in 0..scenarios {
+        let seed = spec.fault_seed.wrapping_add(i);
+        let cfg = BatcherConfig {
+            // Everyone admitted at once: the batch decodes exactly
+            // `new_toks` rounds, so a seeded round in `0..new_toks` always
+            // lands and every scenario heals exactly once.
+            max_batch: requests,
+            page_size: spec.page_size,
+            pages_per_worker: spec.pages_per_worker,
+            strategy: spec.strategy,
+            algo: spec.allreduce,
+            wire_bpe: spec.wire_bpe,
+            seed: spec.seed,
+            prefix_share: false,
+        };
+        let batcher = DecodeBatcher::new(shape, scale, cfg);
+        let mut cluster = VirtualCluster::new(topo.clone());
+        cluster.world.net.set_retry_policy(spec.retry_policy());
+        cluster.world.net.set_fault_plan(FaultPlan::seeded_kill(seed, p, new_toks));
+        let reqs = synthetic_decode_workload(requests, min_ctx, max_ctx, new_toks, spec.seed);
+        let (results, m) = batcher.run(&mut cluster, &ComputeBackend::Oracle, reqs.clone())?;
+        anyhow::ensure!(m.rejected == 0, "chaos workload exceeds pages_per_worker");
+        anyhow::ensure!(m.heals >= 1, "seed {seed}: the kill never fired (no heal)");
+        // Verification: every request's full output history must match a
+        // from-scratch solo replay on the surviving topology. Bit-identity
+        // holds for pinned full-buffer strategies; under auto planning the
+        // batched and solo points may resolve differently, so gate on fp
+        // tolerance (the exactness property tests pin strategies).
+        let survivor = topo.degraded(p - m.lost_workers.len());
+        let mut scen_diff = 0.0f32;
+        for r in &reqs {
+            let got = results.iter().find(|x| x.id == r.id).unwrap();
+            let mut c2 = VirtualCluster::new(survivor.clone());
+            let want = batcher.replay_single(&mut c2, &ComputeBackend::Oracle, r)?;
+            anyhow::ensure!(
+                got.outputs.len() == want.len(),
+                "seed {seed} req {}: {} outputs vs {} replayed",
+                r.id,
+                got.outputs.len(),
+                want.len()
+            );
+            for (go, wo) in got.outputs.iter().zip(&want) {
+                scen_diff = scen_diff.max(tree_attention::attnmath::max_abs_diff(go, wo));
+            }
+            anyhow::ensure!(
+                scen_diff < 1e-4,
+                "seed {seed} req {}: healed outputs deviate from survivor replay (max|Δ| {scen_diff})",
+                r.id
+            );
+            verified += 1;
+        }
+        table.row(vec![
+            seed.to_string(),
+            format!("{:?}", m.lost_workers),
+            m.heals.to_string(),
+            m.requeued.to_string(),
+            m.fault.retries.to_string(),
+            m.evicted_plans.to_string(),
+            m.resharded_rows.to_string(),
+            format!("{scen_diff:.1e}"),
+        ]);
+        heals += m.heals;
+        completed += m.completed;
+        requeued += m.requeued;
+        retries += m.fault.retries;
+        timeouts += m.fault.timeouts;
+        evicted_plans += m.evicted_plans;
+        resharded_rows += m.resharded_rows;
+        max_diff = max_diff.max(scen_diff);
+    }
+    table.print();
+    println!(
+        "\nall {scenarios} scenarios degraded, healed, and verified against survivor replays ✓"
+    );
+    let path = write_bench_summary(
+        "chaos",
+        &[
+            ("scenarios", scenarios as f64),
+            ("heals", heals as f64),
+            ("completed", completed as f64),
+            ("verified", verified as f64),
+            ("requeued", requeued as f64),
+            ("retries", retries as f64),
+            ("timeouts", timeouts as f64),
+            ("evicted_plans", evicted_plans as f64),
+            ("resharded_rows", resharded_rows as f64),
+            ("max_abs_diff", max_diff as f64),
+            ("wall_s", wall.elapsed().as_secs_f64()),
+        ],
+    )?;
+    println!("summary: {}", path.display());
+    Ok(())
+}
+
 /// `bench-compare`: gate the deterministic `BENCH_<name>.json` summaries a
 /// bench run produced (in `<results_dir>`) against the committed baselines
 /// (in `<baseline_dir>`). A numeric baseline fails on >10% deviation in
@@ -598,10 +775,10 @@ fn cmd_bench_compare(args: &[String]) -> anyhow::Result<()> {
             compared += 1;
             match want {
                 Json::Num(v) => {
-                    let tol = 0.10 * v.abs().max(1e-12);
-                    if (got - v).abs() > tol {
+                    if (got - v).abs() > baseline_tolerance(*v) {
                         failures.push(format!(
-                            "{bench}.{key}: {got} deviates >10% from baseline {v}"
+                            "{bench}.{key}: {got} deviates from baseline {v} (tol {})",
+                            baseline_tolerance(*v)
                         ));
                     } else {
                         println!("ok {bench}.{key}: {got} (baseline {v}, ±10%)");
@@ -658,6 +835,19 @@ fn cmd_bench_compare(args: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Allowed |got − want| for a plain numeric baseline: ±10% relative for
+/// nonzero baselines, and a small ABSOLUTE epsilon for a zero baseline.
+/// (A naive `0.10 * |0|` tolerance makes a zero baseline reject even
+/// floating-point noise like 1e-18 — a zero baseline gates count metrics,
+/// where the real regression signal is a drift of ≥1, not noise.)
+fn baseline_tolerance(want: f64) -> f64 {
+    if want == 0.0 {
+        1e-9
+    } else {
+        0.10 * want.abs()
+    }
+}
+
 /// Shared JSON rendering of the global planner cache counters.
 fn planner_counters_json() -> Json {
     let c = tree_attention::planner::planner_counters();
@@ -665,9 +855,11 @@ fn planner_counters_json() -> Json {
         ("collective_hits", Json::num(c.collective_hits as f64)),
         ("collective_misses", Json::num(c.collective_misses as f64)),
         ("collective_plans", Json::num(c.collective_plans as f64)),
+        ("collective_evictions", Json::num(c.collective_evictions as f64)),
         ("strategy_hits", Json::num(c.strategy_hits as f64)),
         ("strategy_misses", Json::num(c.strategy_misses as f64)),
         ("strategy_plans", Json::num(c.strategy_plans as f64)),
+        ("strategy_evictions", Json::num(c.strategy_evictions as f64)),
     ])
 }
 
@@ -884,4 +1076,28 @@ fn cmd_plan_bench(spec: &RunSpec) -> anyhow::Result<()> {
     ]);
     println!("\n{}", json.to_string_compact());
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn baseline_tolerance_is_relative_for_nonzero() {
+        assert!((baseline_tolerance(100.0) - 10.0).abs() < 1e-12);
+        assert!((baseline_tolerance(-4.0) - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_baseline_accepts_fp_noise_but_rejects_count_drift() {
+        // The regression this guards: `0.10 * |0|` left a zero baseline with
+        // effectively no tolerance, so even 1e-18 of floating-point noise
+        // failed the gate. Zero baselines gate count metrics — noise must
+        // pass, a drift of 1 must fail.
+        let tol = baseline_tolerance(0.0);
+        assert!((1e-18f64 - 0.0).abs() <= tol, "fp noise must pass a zero baseline");
+        assert!((0.0f64 - 0.0).abs() <= tol);
+        assert!((1.0f64 - 0.0).abs() > tol, "a count drifting 0 -> 1 must fail");
+        assert!((-1.0f64 - 0.0).abs() > tol);
+    }
 }

@@ -394,7 +394,19 @@ impl ModelExecutor {
                     ShardKv { k: &s.k[layer], v: &s.v[layer], len: s.len + extra }
                 })
                 .collect();
-            let outcome = strat.decode(cluster, &backend, shape, scale, &q, &shards)?;
+            let outcome = match strat.decode(cluster, &backend, shape, scale, &q, &shards) {
+                Ok(o) => o,
+                Err(err) => {
+                    // All-or-nothing ingest: a decode that dies mid-collective
+                    // (e.g. confirmed worker loss surfacing as
+                    // `CommError::Degraded`) must not leave this token half
+                    // in the cache. Drop the pending rows so the sequence is
+                    // exactly at its pre-token state, then surface the typed
+                    // error for the healing layer to act on.
+                    seq.cache.rollback_token();
+                    return Err(err);
+                }
+            };
             accumulate(&mut stats, &outcome.stats);
 
             // -- leader: output projection + MLP ----------------------------
@@ -420,6 +432,27 @@ impl ModelExecutor {
         seq.tokens.push(token);
         seq.last_hidden = Some(h);
         Ok(stats)
+    }
+
+    /// Rebuild `seq`'s sharded KV for THIS executor's worker count by
+    /// re-running prefill over the full token history — the recovery path
+    /// after confirmed worker loss, where the dead worker's pages are gone
+    /// and cannot be copied off it. The caller constructs an executor for
+    /// the surviving worker count (same engine, same weight seed) and heals
+    /// each live sequence through it; decode then resumes as if the sequence
+    /// had always lived on the survivors. Returns virtual seconds spent
+    /// re-prefilling (the simulated price of the fault).
+    pub fn heal_sequence(
+        &self,
+        seq: &mut SequenceState,
+        cluster: &mut VirtualCluster,
+    ) -> anyhow::Result<f64> {
+        anyhow::ensure!(!seq.tokens.is_empty(), "cannot heal an empty sequence");
+        let tokens = std::mem::take(&mut seq.tokens);
+        *seq = self.start_sequence();
+        let sim = self.prefill(seq, &tokens, cluster)?;
+        self.finish_prefill(seq);
+        Ok(sim)
     }
 }
 

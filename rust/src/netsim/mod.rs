@@ -21,6 +21,207 @@
 use crate::topology::{Rank, Tier, Topology};
 use std::sync::Mutex;
 
+/// One injected fault, applied when the simulation reaches its round.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultKind {
+    /// The rank stops responding permanently: every message to or from it
+    /// times out from the fault round onward.
+    KillWorker { rank: Rank },
+    /// Drop the next `count` messages touching `rank` (transient — the
+    /// sender's retry succeeds once the budget is exhausted).
+    DropMessages { rank: Rank, count: u32 },
+    /// Add fixed extra latency to every message touching `rank`.
+    DelayRank { rank: Rank, extra_s: f64 },
+    /// Multiply the serialization time of every message on a tier.
+    SlowLink { tier: Tier, factor: f64 },
+}
+
+/// A fault scheduled for a specific decode round.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultEvent {
+    pub round: usize,
+    pub kind: FaultKind,
+}
+
+/// A deterministic, seedable schedule of faults. Install with
+/// [`NetSim::set_fault_plan`]; advance the fault clock with
+/// [`NetSim::set_round`]. With no plan installed every fault-aware path
+/// behaves exactly like the infallible one.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    pub fn none() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Kill `rank` at `round` — the canonical chaos scenario.
+    pub fn kill(rank: Rank, round: usize) -> FaultPlan {
+        FaultPlan::none().with(round, FaultKind::KillWorker { rank })
+    }
+
+    pub fn with(mut self, round: usize, kind: FaultKind) -> FaultPlan {
+        self.events.push(FaultEvent { round, kind });
+        self
+    }
+
+    /// Derive a single-kill scenario deterministically from a seed: one
+    /// worker in `0..p` dies at one round in `0..rounds`. Same seed, same
+    /// scenario — this is what `chaos-bench` and the chaos CI matrix key on.
+    pub fn seeded_kill(seed: u64, p: usize, rounds: usize) -> FaultPlan {
+        assert!(p >= 2 && rounds >= 1, "need p >= 2 and rounds >= 1");
+        let mut rng = crate::util::Rng::seed(seed ^ 0xFA_17_FA_17);
+        let rank = rng.below(p as u64) as usize;
+        let round = rng.below(rounds as u64) as usize;
+        FaultPlan::kill(rank, round)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+}
+
+/// Typed communication failure surfaced by the fault-aware paths.
+#[derive(Clone, Debug, PartialEq)]
+pub enum CommError {
+    /// A message saw no acknowledgment within the retry timeout.
+    Timeout { src: Rank, dst: Rank },
+    /// A message was dropped in flight (transient; retry may succeed).
+    Dropped { src: Rank, dst: Rank },
+    /// Worker loss confirmed after bounded retries: the collective cannot
+    /// complete on the full topology. `lost` is sorted and deduplicated.
+    Degraded { lost: Vec<Rank> },
+}
+
+impl std::fmt::Display for CommError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CommError::Timeout { src, dst } => write!(f, "timeout on {src} -> {dst}"),
+            CommError::Dropped { src, dst } => write!(f, "message dropped on {src} -> {dst}"),
+            CommError::Degraded { lost } => write!(f, "degraded: lost workers {lost:?}"),
+        }
+    }
+}
+
+impl std::error::Error for CommError {}
+
+impl CommError {
+    /// The confirmed-lost workers, if this is a `Degraded` error.
+    pub fn lost_workers(&self) -> Option<&[Rank]> {
+        match self {
+            CommError::Degraded { lost } => Some(lost),
+            _ => None,
+        }
+    }
+}
+
+/// The confirmed-lost workers if `err` carries a [`CommError::Degraded`]
+/// anywhere in its chain — how the serving layer decides a failed decode
+/// round is survivable (heal and resume) rather than fatal (propagate).
+pub fn degraded_workers(err: &anyhow::Error) -> Option<Vec<Rank>> {
+    err.chain().find_map(|c| match c.downcast_ref::<CommError>() {
+        Some(CommError::Degraded { lost }) => Some(lost.clone()),
+        _ => None,
+    })
+}
+
+/// Bounded retry with exponential backoff, applied per point-to-point send
+/// by the fault-aware paths. Each failed attempt charges `timeout_s` (then
+/// `timeout_s * backoff`, ...) of virtual time to the sender's clock.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RetryPolicy {
+    /// Retries after the first attempt (total attempts = max_retries + 1).
+    pub max_retries: usize,
+    /// Virtual seconds before an unacknowledged send is declared failed.
+    pub timeout_s: f64,
+    /// Multiplier applied to the timeout after each failed attempt.
+    pub backoff: f64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy { max_retries: 3, timeout_s: 1e-3, backoff: 2.0 }
+    }
+}
+
+/// Counters for injected-fault activity — `chaos-bench` reports these.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct FaultCounters {
+    /// Sends that timed out against a dead rank.
+    pub timeouts: u64,
+    /// Messages consumed by a `DropMessages` budget.
+    pub drops: u64,
+    /// Retry attempts posted after a failed send.
+    pub retries: u64,
+}
+
+impl FaultCounters {
+    /// Accumulate another snapshot — the serving layer sums counters across
+    /// the cluster rebuilds a heal performs.
+    pub fn absorb(&mut self, other: &FaultCounters) {
+        self.timeouts += other.timeouts;
+        self.drops += other.drops;
+        self.retries += other.retries;
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+struct FaultState {
+    /// Events not yet activated (their round is still in the future).
+    pending: Vec<FaultEvent>,
+    round: usize,
+    dead: Vec<bool>,
+    drop_budget: Vec<u32>,
+    extra_delay: Vec<f64>,
+    /// Serialization-time multiplier per tier: [intra, inter].
+    slow: [f64; 2],
+    counters: FaultCounters,
+}
+
+impl FaultState {
+    fn new(p: usize) -> FaultState {
+        FaultState {
+            pending: Vec::new(),
+            round: 0,
+            dead: vec![false; p],
+            drop_budget: vec![0; p],
+            extra_delay: vec![0.0; p],
+            slow: [1.0, 1.0],
+            counters: FaultCounters::default(),
+        }
+    }
+
+    /// Activate every pending event whose round has arrived.
+    fn activate(&mut self) {
+        let round = self.round;
+        let mut due = Vec::new();
+        self.pending.retain(|e| {
+            if e.round <= round {
+                due.push(*e);
+                false
+            } else {
+                true
+            }
+        });
+        for e in due {
+            match e.kind {
+                FaultKind::KillWorker { rank } => self.dead[rank] = true,
+                FaultKind::DropMessages { rank, count } => self.drop_budget[rank] += count,
+                FaultKind::DelayRank { rank, extra_s } => self.extra_delay[rank] += extra_s,
+                FaultKind::SlowLink { tier, factor } => {
+                    let i = match tier {
+                        Tier::Intra => 0,
+                        Tier::Inter => 1,
+                    };
+                    self.slow[i] *= factor;
+                }
+            }
+        }
+    }
+}
+
 /// Byte/message counters, split by tier — the paper's §6.3 communication-
 /// volume accounting comes straight from these.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
@@ -58,6 +259,8 @@ struct SimState {
     nic_egress: Vec<f64>,
     nic_ingress: Vec<f64>,
     counters: TrafficCounters,
+    faults: FaultState,
+    retry: RetryPolicy,
 }
 
 /// The shared network simulator.
@@ -77,6 +280,8 @@ impl NetSim {
                 nic_egress: vec![0.0; p],
                 nic_ingress: vec![0.0; p],
                 counters: TrafficCounters::default(),
+                faults: FaultState::new(p),
+                retry: RetryPolicy::default(),
             }),
         }
     }
@@ -87,20 +292,65 @@ impl NetSim {
 
     /// Post a point-to-point transfer departing at `t_dep`; returns the
     /// virtual arrival time at `dst`. Self-sends are free and instantaneous.
+    /// Infallible — ignores any installed [`FaultPlan`] (legacy callers and
+    /// cost models use this; fault-aware paths use [`NetSim::try_transfer`]).
     pub fn transfer(&self, src: Rank, dst: Rank, bytes: u64, t_dep: f64) -> f64 {
         if src == dst {
             return t_dep;
         }
-        let tier = self.topo.tier(src, dst);
-        let link = self.topo.link_for_tier(tier);
+        let mut guard = self.state.lock().unwrap();
+        Self::post(&self.topo, &mut guard, src, dst, bytes, t_dep, 1.0, 0.0)
+    }
+
+    /// Fault-aware transfer: fails with a typed [`CommError`] when either
+    /// endpoint is dead or a drop budget swallows the message; applies any
+    /// active delay/slow-link faults to the serialization time. With no
+    /// fault plan installed this is bit-for-bit [`NetSim::transfer`].
+    pub fn try_transfer(&self, src: Rank, dst: Rank, bytes: u64, t_dep: f64) -> Result<f64, CommError> {
         let mut guard = self.state.lock().unwrap();
         let st = &mut *guard;
+        if st.faults.dead[src] || st.faults.dead[dst] {
+            st.faults.counters.timeouts += 1;
+            return Err(CommError::Timeout { src, dst });
+        }
+        if src == dst {
+            return Ok(t_dep);
+        }
+        if st.faults.drop_budget[src] > 0 || st.faults.drop_budget[dst] > 0 {
+            let victim = if st.faults.drop_budget[src] > 0 { src } else { dst };
+            st.faults.drop_budget[victim] -= 1;
+            st.faults.counters.drops += 1;
+            return Err(CommError::Dropped { src, dst });
+        }
+        let tier = self.topo.tier(src, dst);
+        let slow = st.faults.slow[match tier {
+            Tier::Intra => 0,
+            Tier::Inter => 1,
+        }];
+        let extra = st.faults.extra_delay[src] + st.faults.extra_delay[dst];
+        Ok(Self::post(&self.topo, st, src, dst, bytes, t_dep, slow, extra))
+    }
+
+    /// Shared port-occupancy math for both transfer flavors. `slow`
+    /// multiplies the serialization time; `extra` adds flat latency.
+    fn post(
+        topo: &Topology,
+        st: &mut SimState,
+        src: Rank,
+        dst: Rank,
+        bytes: u64,
+        t_dep: f64,
+        slow: f64,
+        extra: f64,
+    ) -> f64 {
+        let tier = topo.tier(src, dst);
+        let link = topo.link_for_tier(tier);
         let (egress, ingress) = match tier {
             Tier::Intra => (&mut st.intra_egress, &mut st.intra_ingress),
             Tier::Inter => (&mut st.nic_egress, &mut st.nic_ingress),
         };
         let start = t_dep.max(egress[src]).max(ingress[dst]);
-        let done = start + link.latency_s + bytes as f64 / link.bandwidth_bps;
+        let done = start + (link.latency_s + bytes as f64 / link.bandwidth_bps) * slow + extra;
         egress[src] = done;
         ingress[dst] = done;
         match tier {
@@ -114,6 +364,66 @@ impl NetSim {
             }
         }
         done
+    }
+
+    // ---- fault injection -------------------------------------------------
+
+    /// Install a fault plan, replacing any previous one and resetting all
+    /// fault state (dead set, budgets, counters). Events whose round is
+    /// already current activate immediately.
+    pub fn set_fault_plan(&self, plan: FaultPlan) {
+        let mut st = self.state.lock().unwrap();
+        let round = st.faults.round;
+        st.faults = FaultState::new(self.topo.world_size());
+        st.faults.round = round;
+        st.faults.pending = plan.events;
+        st.faults.activate();
+    }
+
+    /// Remove every fault and reset fault counters.
+    pub fn clear_faults(&self) {
+        let mut st = self.state.lock().unwrap();
+        let p = self.topo.world_size();
+        st.faults = FaultState::new(p);
+    }
+
+    /// Advance the fault clock to `round`, activating any events scheduled
+    /// at or before it. The serving layer calls this once per decode round.
+    pub fn set_round(&self, round: usize) {
+        let mut st = self.state.lock().unwrap();
+        st.faults.round = round;
+        st.faults.activate();
+    }
+
+    pub fn current_round(&self) -> usize {
+        self.state.lock().unwrap().faults.round
+    }
+
+    /// Ranks currently confirmed dead, sorted ascending.
+    pub fn dead_ranks(&self) -> Vec<Rank> {
+        let st = self.state.lock().unwrap();
+        st.faults.dead.iter().enumerate().filter(|(_, &d)| d).map(|(r, _)| r).collect()
+    }
+
+    pub fn is_dead(&self, rank: Rank) -> bool {
+        self.state.lock().unwrap().faults.dead[rank]
+    }
+
+    pub fn retry_policy(&self) -> RetryPolicy {
+        self.state.lock().unwrap().retry
+    }
+
+    pub fn set_retry_policy(&self, policy: RetryPolicy) {
+        self.state.lock().unwrap().retry = policy;
+    }
+
+    /// Snapshot the fault-activity counters.
+    pub fn fault_counters(&self) -> FaultCounters {
+        self.state.lock().unwrap().faults.counters
+    }
+
+    fn note_retry(&self) {
+        self.state.lock().unwrap().faults.counters.retries += 1;
     }
 
     /// Uncontended transfer time for the route (no state change).
@@ -171,6 +481,62 @@ impl SimWorld {
         if self.clocks[dst] < arrive {
             self.clocks[dst] = arrive;
         }
+    }
+
+    /// Fault-aware [`SimWorld::send`]: one attempt, no retry. Advances
+    /// dst's clock on success; surfaces a typed error otherwise.
+    pub fn try_send(&mut self, src: Rank, dst: Rank, bytes: u64) -> Result<(), CommError> {
+        let arrive = self.net.try_transfer(src, dst, bytes, self.clocks[src])?;
+        if self.clocks[dst] < arrive {
+            self.clocks[dst] = arrive;
+        }
+        Ok(())
+    }
+
+    /// Fault-aware transfer with the network's bounded retry/backoff
+    /// policy; returns the arrival time WITHOUT merging dst's clock (for
+    /// callers that defer arrival merging, e.g. the ring rotation). Each
+    /// failed attempt charges the escalating timeout to `src`'s clock. On
+    /// exhaustion against a dead endpoint the loss is confirmed and the
+    /// error upgrades to [`CommError::Degraded`].
+    pub fn transfer_with_retry(&mut self, src: Rank, dst: Rank, bytes: u64) -> Result<f64, CommError> {
+        let policy = self.net.retry_policy();
+        let mut timeout = policy.timeout_s;
+        let mut last = CommError::Timeout { src, dst };
+        for attempt in 0..=policy.max_retries {
+            match self.net.try_transfer(src, dst, bytes, self.clocks[src]) {
+                Ok(arrive) => return Ok(arrive),
+                Err(e) => {
+                    // Failure is detected by a missing ack: charge the
+                    // timeout to the sender, back off, and retry.
+                    self.clocks[src] += timeout;
+                    timeout *= policy.backoff;
+                    if attempt < policy.max_retries {
+                        self.net.note_retry();
+                    }
+                    last = e;
+                }
+            }
+        }
+        // Retries exhausted. If the network can confirm dead endpoints,
+        // report the loss as Degraded so callers can re-plan around it.
+        let lost: Vec<Rank> =
+            [src, dst].into_iter().filter(|&r| self.net.is_dead(r)).collect();
+        if lost.is_empty() {
+            Err(last)
+        } else {
+            Err(CommError::Degraded { lost })
+        }
+    }
+
+    /// [`SimWorld::transfer_with_retry`] plus the receiver-clock max-merge
+    /// of [`SimWorld::send`].
+    pub fn send_with_retry(&mut self, src: Rank, dst: Rank, bytes: u64) -> Result<(), CommError> {
+        let arrive = self.transfer_with_retry(src, dst, bytes)?;
+        if self.clocks[dst] < arrive {
+            self.clocks[dst] = arrive;
+        }
+        Ok(())
     }
 
     /// Advance `rank`'s clock by a compute interval.
@@ -297,6 +663,94 @@ mod tests {
             let bx = topo.inter.achieved_bandwidth(bytes);
             assert!(bi > bx);
         }
+    }
+
+    #[test]
+    fn try_transfer_matches_transfer_with_no_faults() {
+        let a = NetSim::new(t2x8());
+        let b = NetSim::new(t2x8());
+        for (src, dst, bytes, dep) in [(0usize, 1usize, 1u64 << 20, 0.0), (2, 10, 1 << 24, 3.5), (5, 5, 999, 1.0)] {
+            let t1 = a.transfer(src, dst, bytes, dep);
+            let t2 = b.try_transfer(src, dst, bytes, dep).unwrap();
+            assert_eq!(t1, t2, "{src}->{dst}");
+        }
+        assert_eq!(a.counters(), b.counters());
+    }
+
+    #[test]
+    fn killed_worker_times_out_and_is_confirmed_dead() {
+        let sim = NetSim::new(t2x8());
+        sim.set_fault_plan(FaultPlan::kill(3, 2));
+        // Round 0: not yet active.
+        assert!(sim.try_transfer(0, 3, 1024, 0.0).is_ok());
+        sim.set_round(2);
+        assert_eq!(sim.try_transfer(0, 3, 1024, 0.0), Err(CommError::Timeout { src: 0, dst: 3 }));
+        assert_eq!(sim.try_transfer(3, 1, 1024, 0.0), Err(CommError::Timeout { src: 3, dst: 1 }));
+        assert_eq!(sim.dead_ranks(), vec![3]);
+        assert_eq!(sim.fault_counters().timeouts, 2);
+        // Unrelated routes still flow.
+        assert!(sim.try_transfer(0, 1, 1024, 0.0).is_ok());
+    }
+
+    #[test]
+    fn drop_budget_is_transient() {
+        let sim = NetSim::new(t2x8());
+        sim.set_fault_plan(FaultPlan::none().with(0, FaultKind::DropMessages { rank: 1, count: 2 }));
+        sim.set_round(0);
+        assert_eq!(sim.try_transfer(0, 1, 8, 0.0), Err(CommError::Dropped { src: 0, dst: 1 }));
+        assert_eq!(sim.try_transfer(0, 1, 8, 0.0), Err(CommError::Dropped { src: 0, dst: 1 }));
+        assert!(sim.try_transfer(0, 1, 8, 0.0).is_ok(), "budget exhausted, send flows");
+        assert_eq!(sim.fault_counters().drops, 2);
+    }
+
+    #[test]
+    fn slow_link_and_delay_stretch_time_only() {
+        let sim = NetSim::new(t2x8());
+        let clean = sim.try_transfer(0, 1, 1 << 20, 0.0).unwrap();
+        sim.reset();
+        sim.set_fault_plan(
+            FaultPlan::none()
+                .with(0, FaultKind::SlowLink { tier: Tier::Intra, factor: 3.0 })
+                .with(0, FaultKind::DelayRank { rank: 1, extra_s: 0.25 }),
+        );
+        sim.set_round(0);
+        let slowed = sim.try_transfer(0, 1, 1 << 20, 0.0).unwrap();
+        assert!((slowed - (clean * 3.0 + 0.25)).abs() < 1e-12, "{slowed} vs {clean}");
+    }
+
+    #[test]
+    fn send_with_retry_confirms_loss_and_charges_backoff() {
+        let mut w = SimWorld::new(t2x8());
+        w.net.set_fault_plan(FaultPlan::kill(2, 0));
+        w.net.set_round(0);
+        w.net.set_retry_policy(RetryPolicy { max_retries: 3, timeout_s: 1e-3, backoff: 2.0 });
+        let err = w.send_with_retry(0, 2, 1 << 10).unwrap_err();
+        assert_eq!(err, CommError::Degraded { lost: vec![2] });
+        // 4 attempts with timeouts 1, 2, 4, 8 ms charged to the sender.
+        assert!((w.clocks[0] - 15e-3).abs() < 1e-12, "clock {}", w.clocks[0]);
+        assert_eq!(w.net.fault_counters().retries, 3);
+        assert_eq!(w.net.fault_counters().timeouts, 4);
+    }
+
+    #[test]
+    fn send_with_retry_survives_transient_drops() {
+        let mut w = SimWorld::new(t2x8());
+        w.net.set_fault_plan(FaultPlan::none().with(0, FaultKind::DropMessages { rank: 1, count: 2 }));
+        w.net.set_round(0);
+        assert!(w.send_with_retry(0, 1, 1 << 10).is_ok());
+        assert_eq!(w.net.fault_counters().drops, 2);
+        assert_eq!(w.net.fault_counters().retries, 2);
+        assert!(w.clocks[1] > 0.0, "receiver clock advanced on the surviving attempt");
+    }
+
+    #[test]
+    fn seeded_kill_is_deterministic() {
+        let a = FaultPlan::seeded_kill(7, 8, 10);
+        let b = FaultPlan::seeded_kill(7, 8, 10);
+        assert_eq!(a, b);
+        assert_eq!(a.events.len(), 1);
+        let FaultKind::KillWorker { rank } = a.events[0].kind else { panic!("expected kill") };
+        assert!(rank < 8 && a.events[0].round < 10);
     }
 
     #[test]

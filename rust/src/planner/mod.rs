@@ -140,6 +140,8 @@ pub struct CollectivePlanner {
     cache: HashMap<PlanKey, Plan>,
     pub hits: u64,
     pub misses: u64,
+    /// Plans evicted by topology invalidation (worker loss / re-shape).
+    pub evictions: u64,
 }
 
 impl CollectivePlanner {
@@ -149,6 +151,18 @@ impl CollectivePlanner {
 
     pub fn cache_len(&self) -> usize {
         self.cache.len()
+    }
+
+    /// Evict every memoized plan for `topo` — called when the topology dies
+    /// (worker loss) so stale schedules for the old shape can never be
+    /// served again. Returns the number of plans evicted.
+    pub fn invalidate_topology(&mut self, topo: &Topology) -> usize {
+        let fp = topo_fingerprint(topo);
+        let before = self.cache.len();
+        self.cache.retain(|(key_fp, _), _| *key_fp != fp);
+        let evicted = before - self.cache.len();
+        self.evictions += evicted as u64;
+        evicted
     }
 
     /// Price every candidate for `(topo, req)` and return the cheapest,
@@ -332,6 +346,8 @@ pub struct StrategyPlanner {
     cache: HashMap<(String, StrategyRequest), StrategyPlan>,
     pub hits: u64,
     pub misses: u64,
+    /// Plans evicted by topology invalidation (worker loss / re-shape).
+    pub evictions: u64,
 }
 
 impl StrategyPlanner {
@@ -341,6 +357,17 @@ impl StrategyPlanner {
 
     pub fn cache_len(&self) -> usize {
         self.cache.len()
+    }
+
+    /// Evict every memoized strategy plan for `topo` (see
+    /// [`CollectivePlanner::invalidate_topology`]).
+    pub fn invalidate_topology(&mut self, topo: &Topology) -> usize {
+        let fp = topo_fingerprint(topo);
+        let before = self.cache.len();
+        self.cache.retain(|(key_fp, _), _| *key_fp != fp);
+        let evicted = before - self.cache.len();
+        self.evictions += evicted as u64;
+        evicted
     }
 
     /// Price every strategy for `(topo, req)` and return the full plan,
@@ -447,30 +474,45 @@ pub struct PlannerCounters {
     pub collective_hits: u64,
     pub collective_misses: u64,
     pub collective_plans: usize,
+    pub collective_evictions: u64,
     pub strategy_hits: u64,
     pub strategy_misses: u64,
     pub strategy_plans: usize,
+    pub strategy_evictions: u64,
 }
 
 pub fn planner_counters() -> PlannerCounters {
     // Lock one cache at a time (and in the same order as the planning path
     // never takes) to keep this deadlock-free.
-    let (collective_hits, collective_misses, collective_plans) = {
+    let (collective_hits, collective_misses, collective_plans, collective_evictions) = {
         let p = global_planner().lock().unwrap();
-        (p.hits, p.misses, p.cache_len())
+        (p.hits, p.misses, p.cache_len(), p.evictions)
     };
-    let (strategy_hits, strategy_misses, strategy_plans) = {
+    let (strategy_hits, strategy_misses, strategy_plans, strategy_evictions) = {
         let p = global_strategy_planner().lock().unwrap();
-        (p.hits, p.misses, p.cache_len())
+        (p.hits, p.misses, p.cache_len(), p.evictions)
     };
     PlannerCounters {
         collective_hits,
         collective_misses,
         collective_plans,
+        collective_evictions,
         strategy_hits,
         strategy_misses,
         strategy_plans,
+        strategy_evictions,
     }
+}
+
+/// Evict every memoized plan (collective AND strategy) for `topo` from the
+/// global caches. Called by the serving layer when a worker dies: plans for
+/// the dead shape must never be served to the surviving topology. Returns
+/// `(collective_evicted, strategy_evicted)`.
+pub fn invalidate_topology(topo: &Topology) -> (usize, usize) {
+    // Same one-at-a-time locking discipline as `planner_counters`.
+    let c = global_planner().lock().unwrap().invalidate_topology(topo);
+    let s = global_strategy_planner().lock().unwrap().invalidate_topology(topo);
+    (c, s)
 }
 
 /// Resolve an algorithm selector against the global plan cache: fixed
@@ -550,6 +592,60 @@ mod tests {
         planner.plan(&Topology::rtx4090_pcie(4), req);
         assert_eq!(planner.cache_len(), 3);
         assert_eq!(planner.misses, 3);
+    }
+
+    #[test]
+    fn invalidate_topology_evicts_only_the_dead_shape() {
+        let mut planner = CollectivePlanner::new();
+        let req = PlanRequest { nblocks: 16, block_elems: 130, wire_bpe: 2 };
+        let dead = Topology::h100_dgx(2);
+        let alive = Topology::h100_dgx(4);
+        planner.plan(&dead, req);
+        planner.plan(&dead, PlanRequest { nblocks: 64, block_elems: 130, wire_bpe: 2 });
+        planner.plan(&alive, req);
+        assert_eq!(planner.cache_len(), 3);
+        let evicted = planner.invalidate_topology(&dead);
+        assert_eq!(evicted, 2, "both dead-shape plans evicted");
+        assert_eq!(planner.cache_len(), 1, "survivor topology's plan remains");
+        assert_eq!(planner.evictions, 2);
+        // Re-planning for the dead shape is a fresh miss, not a stale hit.
+        let hits_before = planner.hits;
+        planner.plan(&dead, req);
+        assert_eq!(planner.hits, hits_before);
+        // Invalidating a shape with no cached plans is a harmless no-op.
+        assert_eq!(planner.invalidate_topology(&Topology::rtx4090_pcie(4)), 0);
+        assert_eq!(planner.evictions, 2);
+    }
+
+    #[test]
+    fn strategy_invalidate_topology_evicts_only_the_dead_shape() {
+        let mut planner = StrategyPlanner::new();
+        let shape = crate::attnmath::AttnShape::mha(1, 8, 128);
+        let dead = Topology::h100_dgx(2);
+        let alive = Topology::h100_dgx(4);
+        planner.plan(&dead, StrategyRequest::for_shape(shape, 1, 4096, 2));
+        planner.plan(&dead, StrategyRequest::for_shape(shape, 4, 4096, 2));
+        planner.plan(&alive, StrategyRequest::for_shape(shape, 1, 4096, 2));
+        assert_eq!(planner.cache_len(), 3);
+        assert_eq!(planner.invalidate_topology(&dead), 2);
+        assert_eq!(planner.cache_len(), 1);
+        assert_eq!(planner.evictions, 2);
+    }
+
+    #[test]
+    fn global_invalidate_topology_clears_both_caches_and_counts() {
+        // Use a topology name no other test plans against so the global
+        // caches' contents for it are fully under this test's control.
+        let topo = topo_of("evict-probe", 1, 8, LinkSpec::nvlink4(), LinkSpec::infiniband_ndr());
+        let shape = crate::attnmath::AttnShape::mha(1, 8, 128);
+        plan_for(&topo, PlanRequest { nblocks: 16, block_elems: 130, wire_bpe: 2 });
+        strategy_plan_for(&topo, StrategyRequest::for_shape(shape, 1, 4096, 2));
+        let before = planner_counters();
+        let (c, s) = invalidate_topology(&topo);
+        assert_eq!((c, s), (1, 1));
+        let after = planner_counters();
+        assert_eq!(after.collective_evictions, before.collective_evictions + 1);
+        assert_eq!(after.strategy_evictions, before.strategy_evictions + 1);
     }
 
     #[test]

@@ -174,6 +174,23 @@ pub struct BatchMetrics {
     /// `Strategy::Auto` this is where the planner's crossover behaviour
     /// becomes observable in serving metrics.
     pub strategy_rounds: BTreeMap<&'static str, usize>,
+    /// Degraded-decode recoveries: confirmed worker losses the scheduler
+    /// healed by re-planning on the surviving topology.
+    pub heals: usize,
+    /// Ranks confirmed lost over the run (original numbering, per heal).
+    pub lost_workers: Vec<usize>,
+    /// Memoized plans evicted from the global planner caches by topology
+    /// invalidation during heals (collective + strategy).
+    pub evicted_plans: usize,
+    /// KV rows regenerated onto survivors during heals (re-prefill of lost
+    /// pages + replayed decode rows).
+    pub resharded_rows: usize,
+    /// Active sessions pushed back to the queue during a heal because the
+    /// surviving pool could not host them mid-flight.
+    pub requeued: usize,
+    /// Fault-layer activity (timeouts / drops / retries), summed across the
+    /// cluster rebuilds heals perform.
+    pub fault: crate::netsim::FaultCounters,
 }
 
 impl BatchMetrics {
@@ -375,7 +392,7 @@ impl DecodeBatcher {
         backend: &ComputeBackend,
         requests: Vec<BatchRequest>,
     ) -> anyhow::Result<(Vec<BatchResult>, BatchMetrics)> {
-        let p = cluster.world_size();
+        let mut p = cluster.world_size();
         let mut pool = PagePool::new(p, self.cfg.pages_per_worker);
         let mut radix = self.cfg.prefix_share.then(|| RadixCache::new(self.cache_spec(p)));
         let mut queue: VecDeque<BatchRequest> = requests.into();
@@ -391,6 +408,12 @@ impl DecodeBatcher {
         let mut comm_bytes = 0u64;
         let mut comm_steps = 0usize;
         let mut strategy_rounds: BTreeMap<&'static str, usize> = BTreeMap::new();
+        let mut heals = 0usize;
+        let mut lost_workers: Vec<usize> = Vec::new();
+        let mut evicted_plans = 0usize;
+        let mut resharded_rows = 0usize;
+        let mut requeued = 0usize;
+        let mut fault = crate::netsim::FaultCounters::default();
 
         loop {
             // -- retire sessions that need no (more) decode ----------------
@@ -648,9 +671,135 @@ impl DecodeBatcher {
                 .sum();
             let resolved = self.resolve_round(cluster, entries.len(), total_ctx);
             let strat = strategy_impl(resolved, self.cfg.algo, self.cfg.wire_bpe)?;
-            *strategy_rounds.entry(resolved.name()).or_insert(0) += 1;
+            // Advance the fault clock: an installed FaultPlan fires events
+            // scheduled at or before this round.
+            cluster.world.net.set_round(rounds);
             let before = cluster.world.max_clock();
-            let round = strat.decode_batch(cluster, backend, self.shape, self.scale, &entries)?;
+            let round = match strat.decode_batch(cluster, backend, self.shape, self.scale, &entries)
+            {
+                Ok(r) => r,
+                Err(err) => {
+                    // Survivable only on confirmed worker loss; any other
+                    // failure propagates.
+                    let Some(lost) = crate::netsim::degraded_workers(&err) else {
+                        return Err(err);
+                    };
+                    // The net layer's dead set is authoritative; the error
+                    // names at least one member of it.
+                    let mut dead = cluster.world.net.dead_ranks();
+                    for r in lost {
+                        if !dead.contains(&r) {
+                            dead.push(r);
+                        }
+                    }
+                    dead.sort_unstable();
+                    let p2 = p - dead.len();
+                    anyhow::ensure!(p2 >= 1, "all {p} workers lost; cannot heal");
+                    crate::tlog!(
+                        Warn,
+                        "degraded decode at round {rounds}: lost workers {dead:?}, healing onto {p2} survivors"
+                    );
+
+                    // 1. Plans memoized for the dead shape must never be
+                    //    served again — evict them from the global caches.
+                    let (ec, es) = crate::planner::invalidate_topology(cluster.topology());
+                    evicted_plans += ec + es;
+
+                    // 2. Rebuild the cluster on the surviving topology.
+                    //    Virtual time moves forward through a failure (the
+                    //    retry/backoff charges are already on the clocks),
+                    //    never backward.
+                    fault.absorb(&cluster.world.net.fault_counters());
+                    let t_resume = cluster.world.max_clock();
+                    let survivor_topo = cluster.topology().degraded(p2);
+                    *cluster = VirtualCluster::new(survivor_topo);
+                    for w in 0..p2 {
+                        cluster.world.compute(w, t_resume);
+                    }
+                    p = p2;
+
+                    // 3. Fresh page pool for the survivor shape. The radix
+                    //    cache's pages were laid out for the dead shape and
+                    //    partly lived on the lost worker — drop it; later
+                    //    admissions run unshared (correctness is unaffected:
+                    //    sharing never changes output bits).
+                    pool = PagePool::new(p, self.cfg.pages_per_worker);
+                    radix = None;
+
+                    // 4. Re-shard every active session onto the survivors.
+                    //    The dead worker's pages are unrecoverable, so rows
+                    //    are regenerated deterministically (content-addressed
+                    //    prompt KV + replayed decode stream) — the simulated
+                    //    form of re-prefill — and already-emitted outputs are
+                    //    recomputed on the survivor topology, making the
+                    //    completed batch bit-identical to a from-scratch run
+                    //    on the survivors.
+                    let mut kept: Vec<ActiveSession> = Vec::new();
+                    let mut requeue: Vec<BatchRequest> = Vec::new();
+                    for mut a in active.drain(..) {
+                        let need = self.footprint(p, &a.req);
+                        if !pool.fits_capacity(&need) || !pool.try_reserve(&need) {
+                            crate::tlog!(
+                                Warn,
+                                "request {}: no survivor capacity mid-flight; restarting via the queue",
+                                a.req.id
+                            );
+                            requeue.push(a.req);
+                            continue;
+                        }
+                        a.reserved = need;
+                        a.prefix = None;
+                        let ctx = a.req.prompt.len();
+                        let (k_flat, v_flat) = self.gen_prompt_rows(&a.req.prompt, 0);
+                        let mut cache = ShardedKvCache::new(self.cache_spec(p));
+                        cache.install_shared_prefix(ctx, 0, &[k_flat], &[v_flat]);
+                        resharded_rows += ctx;
+                        let t_pref = cluster.gpu.prefill_attention_time(
+                            1,
+                            ctx,
+                            ctx,
+                            self.shape.n_heads,
+                            self.shape.d_head,
+                        ) / p as f64;
+                        for w in 0..p {
+                            cluster.world.compute(w, t_pref);
+                        }
+                        // Replay the decode stream: identical draws, now
+                        // sharded over the survivors.
+                        let mut rng = self.session_rng(a.req.id);
+                        for s in 0..a.tokens.len() {
+                            let (q, k_row, v_row) = self.draw_step(&mut rng);
+                            cache.append_token_layer(0, &k_row, &v_row);
+                            let shards = Self::shard_views(&cache, p);
+                            let sctx: usize = shards.iter().map(|x| x.len).sum();
+                            let r2 = self.resolve_round(cluster, 1, sctx);
+                            let s2 = strategy_impl(r2, self.cfg.algo, self.cfg.wire_bpe)?;
+                            let o =
+                                s2.decode(cluster, backend, self.shape, self.scale, &q, &shards)?;
+                            cache.commit_token();
+                            a.tokens[s] = detokenize_stub(&o.out);
+                            a.outputs[s] = o.out;
+                            resharded_rows += 1;
+                        }
+                        a.cache = cache;
+                        // The replayed stream sits exactly where the live one
+                        // sat before the failed round's draw: the next round
+                        // re-draws the same values the dead round consumed.
+                        a.rng = rng;
+                        kept.push(a);
+                    }
+                    active = kept;
+                    requeue.sort_by_key(|r| r.id);
+                    requeued += requeue.len();
+                    for r in requeue.into_iter().rev() {
+                        queue.push_front(r);
+                    }
+                    heals += 1;
+                    lost_workers.extend(dead);
+                    continue;
+                }
+            };
+            *strategy_rounds.entry(resolved.name()).or_insert(0) += 1;
             let after = cluster.world.max_clock();
             let round_lat = after - before;
             rounds += 1;
@@ -680,6 +829,7 @@ impl DecodeBatcher {
         let ttfts = completed_with_tokens(|r| r.ttft_sim);
         let queues = completed_with_tokens(|r| r.queue_sim);
         let prefills = completed_with_tokens(|r| r.prefill_sim);
+        fault.absorb(&cluster.world.net.fault_counters());
         let metrics = BatchMetrics {
             completed: done.iter().filter(|r| r.finish == FinishReason::Completed).count(),
             rejected: done.iter().filter(|r| r.finish == FinishReason::Rejected).count(),
@@ -701,6 +851,12 @@ impl DecodeBatcher {
             comm_bytes,
             comm_steps,
             strategy_rounds,
+            heals,
+            lost_workers,
+            evicted_plans,
+            resharded_rows,
+            requeued,
+            fault,
         };
         Ok((done, metrics))
     }
@@ -1156,6 +1312,143 @@ mod tests {
         assert_eq!(m.completed, 6);
         // Chats share the system prompt; turns share their whole history.
         assert!(m.prefix_hit_rate() > 0.5, "hit rate {}", m.prefix_hit_rate());
+    }
+
+    #[test]
+    fn worker_loss_heals_bit_identical_to_survivor_replay() {
+        // THE tentpole claim: kill worker 2 of 4 mid-run and the batch must
+        // complete with every request's FULL output history bit-identical to
+        // a solo replay on the 3-worker survivor topology — including the
+        // tokens emitted BEFORE the fault, which healing recomputes on the
+        // survivors.
+        let b = batcher(8, 8, 256);
+        let mut cluster = VirtualCluster::new(flat(4));
+        cluster.world.net.set_fault_plan(crate::netsim::FaultPlan::kill(2, 1));
+        let reqs = vec![req(0, 13, 5), req(1, 40, 5), req(2, 7, 5)];
+        let (results, metrics) =
+            b.run(&mut cluster, &ComputeBackend::Oracle, reqs.clone()).unwrap();
+        assert_eq!(metrics.completed, 3);
+        assert_eq!(metrics.heals, 1);
+        assert_eq!(metrics.lost_workers, vec![2]);
+        assert!(metrics.fault.timeouts > 0, "the kill must surface as timeouts");
+        assert!(metrics.fault.retries > 0, "retries must be attempted before degrading");
+        assert!(metrics.resharded_rows > 0, "healing must regenerate KV rows");
+        assert_eq!(metrics.requeued, 0, "the pool has room for everyone on 3 workers");
+        let survivor = flat(4).degraded(3);
+        for r in &reqs {
+            let got = results.iter().find(|x| x.id == r.id).unwrap();
+            assert_eq!(got.finish, FinishReason::Completed);
+            assert_eq!(got.tokens.len(), 5);
+            let mut c2 = VirtualCluster::new(survivor.clone());
+            let want = b.replay_single(&mut c2, &ComputeBackend::Oracle, r).unwrap();
+            assert_eq!(got.outputs, want, "request {} must match survivor replay", r.id);
+        }
+    }
+
+    #[test]
+    fn kill_at_round_zero_heals_before_any_token() {
+        // Faulting the very first round exercises the heal path with empty
+        // decode histories (nothing to replay, everything to re-prefill).
+        let b = batcher(4, 8, 256);
+        let mut cluster = VirtualCluster::new(flat(3));
+        cluster.world.net.set_fault_plan(crate::netsim::FaultPlan::kill(1, 0));
+        let reqs = vec![req(0, 9, 3), req(1, 17, 3)];
+        let (results, metrics) =
+            b.run(&mut cluster, &ComputeBackend::Oracle, reqs.clone()).unwrap();
+        assert_eq!(metrics.completed, 2);
+        assert_eq!(metrics.heals, 1);
+        let survivor = flat(3).degraded(2);
+        for r in &reqs {
+            let got = results.iter().find(|x| x.id == r.id).unwrap();
+            let mut c2 = VirtualCluster::new(survivor.clone());
+            let want = b.replay_single(&mut c2, &ComputeBackend::Oracle, r).unwrap();
+            assert_eq!(got.outputs, want, "request {}", r.id);
+        }
+    }
+
+    #[test]
+    fn heal_requeues_sessions_the_survivor_pool_cannot_hold() {
+        // Two sessions fit the 2-worker pool but not the 1-worker remnant:
+        // the heal keeps one, requeues the other, and both still finish
+        // bit-identical to solo replays on the survivor.
+        let b = batcher(4, 4, 4);
+        let mut cluster = VirtualCluster::new(flat(2));
+        cluster.world.net.set_fault_plan(crate::netsim::FaultPlan::kill(1, 1));
+        // 8 + 4 = 12 tokens -> 3 pages: (2,1) on 2 workers, (3) on 1 — two
+        // sessions need 6 of the survivor's 4 pages.
+        let reqs = vec![req(0, 8, 4), req(1, 8, 4)];
+        let (results, metrics) =
+            b.run(&mut cluster, &ComputeBackend::Oracle, reqs.clone()).unwrap();
+        assert_eq!(metrics.completed, 2);
+        assert_eq!(metrics.heals, 1);
+        assert_eq!(metrics.requeued, 1, "one session must restart via the queue");
+        let survivor = flat(2).degraded(1);
+        for r in &reqs {
+            let got = results.iter().find(|x| x.id == r.id).unwrap();
+            assert_eq!(got.finish, FinishReason::Completed);
+            let mut c2 = VirtualCluster::new(survivor.clone());
+            let want = b.replay_single(&mut c2, &ComputeBackend::Oracle, r).unwrap();
+            assert_eq!(got.outputs, want, "request {}", r.id);
+        }
+    }
+
+    #[test]
+    fn transient_drops_retry_through_without_degrading() {
+        // A bounded message-drop burst must be absorbed by the retry layer:
+        // no heal, outputs bit-identical to the fault-free run.
+        let b = batcher(4, 8, 256);
+        let reqs = vec![req(0, 13, 4), req(1, 21, 4)];
+        let mut healthy = VirtualCluster::new(flat(4));
+        let (want, _) = b.run(&mut healthy, &ComputeBackend::Oracle, reqs.clone()).unwrap();
+        let mut cluster = VirtualCluster::new(flat(4));
+        cluster.world.net.set_fault_plan(
+            crate::netsim::FaultPlan::none()
+                .with(1, crate::netsim::FaultKind::DropMessages { rank: 1, count: 2 }),
+        );
+        let (got, metrics) = b.run(&mut cluster, &ComputeBackend::Oracle, reqs).unwrap();
+        assert_eq!(metrics.heals, 0, "transient faults must not degrade");
+        assert!(metrics.fault.drops > 0 && metrics.fault.retries > 0);
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g.id, w.id);
+            assert_eq!(g.outputs, w.outputs, "request {}: drops changed data", g.id);
+        }
+    }
+
+    #[test]
+    fn heal_under_auto_planner_evicts_dead_topology_plans() {
+        // Under Strategy::Auto the pre-fault rounds populate the global plan
+        // caches for the 4-worker shape; the heal must evict those entries
+        // and the run must stay exact (to fp tolerance — Auto may resolve
+        // batched and solo points differently) against survivor replays.
+        let shape = AttnShape::new(1, 4, 2, 8);
+        let b = DecodeBatcher::new(
+            shape,
+            0.3,
+            BatcherConfig { max_batch: 4, seed: 44, ..Default::default() },
+        );
+        let mut cluster = VirtualCluster::new(flat(4));
+        cluster.world.net.set_fault_plan(crate::netsim::FaultPlan::kill(0, 1));
+        let reqs = vec![req(0, 13, 4), req(1, 29, 4)];
+        let (results, metrics) =
+            b.run(&mut cluster, &ComputeBackend::Oracle, reqs.clone()).unwrap();
+        assert_eq!(metrics.completed, 2);
+        assert_eq!(metrics.heals, 1);
+        assert_eq!(metrics.lost_workers, vec![0], "the broadcast root itself died");
+        assert!(
+            metrics.evicted_plans > 0,
+            "auto-planned rounds must leave dead-shape plans to evict"
+        );
+        let survivor = flat(4).degraded(3);
+        for r in &reqs {
+            let got = results.iter().find(|x| x.id == r.id).unwrap();
+            let mut c2 = VirtualCluster::new(survivor.clone());
+            let want = b.replay_single(&mut c2, &ComputeBackend::Oracle, r).unwrap();
+            assert_eq!(got.outputs.len(), want.len());
+            for (t, (go, wo)) in got.outputs.iter().zip(&want).enumerate() {
+                let d = crate::attnmath::max_abs_diff(go, wo);
+                assert!(d < 1e-4, "request {} token {t}: diff {d}", r.id);
+            }
+        }
     }
 
     #[test]

@@ -215,6 +215,26 @@ impl Topology {
         Topology { name: name.to_string(), n_nodes, gpus_per_node, gpu, intra, inter }
     }
 
+    /// The topology the serving layer re-plans on after confirmed worker
+    /// loss: `survivors` ranks in a flattened single-node shape. Losing an
+    /// arbitrary rank leaves a ragged layout the dense node-major model
+    /// cannot express, so the stand-in keeps the intra-node fabric when the
+    /// cluster was single-node (exact) and falls back to all-pairs on the
+    /// slower inter-node fabric otherwise (conservative for cost planning;
+    /// correctness depends only on the data layout, which is exact).
+    pub fn degraded(&self, survivors: usize) -> Topology {
+        assert!(survivors >= 1, "degraded topology needs at least one survivor");
+        let single = self.n_nodes == 1;
+        Topology {
+            name: format!("{}-deg{survivors}", self.name),
+            n_nodes: 1,
+            gpus_per_node: survivors,
+            gpu: self.gpu,
+            intra: if single { self.intra } else { self.inter },
+            inter: self.inter,
+        }
+    }
+
     /// Look up a preset by name (used by the CLI / config files).
     pub fn preset(name: &str, n_nodes: usize, gpus_per_node: usize) -> anyhow::Result<Topology> {
         match name {
@@ -292,6 +312,24 @@ mod tests {
         assert!(!t.is_multi_node());
         assert_eq!(t.tier(0, 1), Tier::Intra);
         assert_eq!(t.link(0, 1).class, LinkClass::Pcie4);
+    }
+
+    #[test]
+    fn degraded_topology_flattens_and_keeps_fabric() {
+        let single = Topology::rtx4090_pcie(4).degraded(3);
+        assert_eq!(single.world_size(), 3);
+        assert_eq!(single.n_nodes, 1);
+        assert_eq!(single.intra.class, LinkClass::Pcie4, "single-node keeps its fabric");
+        assert_eq!(single.name, "rtx4090-pcie-4-deg3");
+        let multi = Topology::h100_dgx(2).degraded(15);
+        assert_eq!(multi.world_size(), 15);
+        assert_eq!(
+            multi.intra.class,
+            LinkClass::InfiniBandNdr,
+            "multi-node falls back to the slower fabric"
+        );
+        // Distinct shapes must never share planner cache entries.
+        assert_ne!(multi.name, Topology::h100_dgx(2).name);
     }
 
     #[test]
