@@ -207,7 +207,7 @@ fn assert_aliased_cache_decode_identical(p: usize) {
     prompt.extend(100..118);
     let matched = radix.match_prefix(&prompt);
     assert_eq!(matched, 22, "p={p}: token-granular match across the fork page");
-    let (mut k_pfx, mut v_pfx) = radix.prefix_rows(&prompt, matched);
+    let (mut k_pfx, mut v_pfx) = radix.prefix_rows(&prompt, matched).unwrap();
     let tail_k = rng.normal_vec(18 * row, 1.0);
     let tail_v = rng.normal_vec(18 * row, 1.0);
     k_pfx[0].extend_from_slice(&tail_k);

@@ -74,9 +74,24 @@ pub fn sim_attention(
                 let launch = cluster.gpu.comm_launch_s * (p as f64 / 8.0).powf(1.5).max(1.0);
                 cluster.world.compute(w, launch);
             }
-            let sched = algo
-                .schedule_for(&cluster.world, shape.batch * shape.n_heads, shape.d_head + 2, wire_bpe)
-                .expect("valid collective config");
+            // Cost-model principled: an unschedulable config has no finite
+            // simulated latency — return INFINITY instead of panicking so
+            // sweeps degrade to "this point loses" rather than aborting.
+            let sched = match algo.schedule_for(
+                &cluster.world,
+                shape.batch * shape.n_heads,
+                shape.d_head + 2,
+                wire_bpe,
+            ) {
+                Ok(s) => s,
+                Err(_) => {
+                    return SimAttn {
+                        sim_time: f64::INFINITY,
+                        traffic: Default::default(),
+                        comm_steps: 0,
+                    }
+                }
+            };
             let s = execute_cost(&mut cluster.world, &sched, shape.d_head + 2, wire_bpe);
             comm_steps += s.steps;
         }
@@ -185,9 +200,19 @@ pub fn sim_batched_tree_decode(
         let launch = cluster.gpu.comm_launch_s * (p as f64 / 8.0).powf(1.5).max(1.0);
         cluster.world.compute(w, launch);
     }
-    let sched = algo
-        .schedule_for(&cluster.world, b * shape.n_heads, shape.d_head + 2, wire_bpe)
-        .expect("valid collective config");
+    let sched = match algo.schedule_for(&cluster.world, b * shape.n_heads, shape.d_head + 2, wire_bpe)
+    {
+        Ok(s) => s,
+        Err(_) => {
+            // Same cost-model convention as `sim_attention`: unschedulable
+            // points price as infinitely slow instead of panicking.
+            return SimAttn {
+                sim_time: f64::INFINITY,
+                traffic: Default::default(),
+                comm_steps: 0,
+            };
+        }
+    };
     let s = execute_cost(&mut cluster.world, &sched, shape.d_head + 2, wire_bpe);
     comm_steps += s.steps;
 

@@ -216,6 +216,21 @@ pub fn try_execute_data(
     for (r, b) in bufs.iter().enumerate() {
         assert_eq!(b.len(), elems, "rank {r} buffer length");
     }
+    // Last line of defence behind the planner's verify-at-memoization gate:
+    // in debug builds, statically verify the schedule (conservation, races,
+    // deadlocks, scratch bound) before touching any data. Release builds
+    // rely on the planner having verified every memoized plan.
+    #[cfg(debug_assertions)]
+    {
+        let v = crate::verifier::verify_any(schedule);
+        debug_assert!(
+            v.is_ok(),
+            "schedule '{}' (p={}) failed static verification before execution: {}",
+            schedule.algo,
+            schedule.p,
+            v.err().map(|e| e.to_string()).unwrap_or_default()
+        );
+    }
     // Snapshot for all-or-nothing semantics on failure.
     let entry_state: Vec<Vec<f32>> = bufs.to_vec();
     let before = world.net.counters();

@@ -170,7 +170,11 @@ impl ShardedKvCache {
     }
 
     /// Append one token's K/V for every layer at once. Returns the owner.
-    pub fn append_token(&mut self, k_layers: &[Vec<f32>], v_layers: &[Vec<f32>]) -> usize {
+    pub fn append_token(
+        &mut self,
+        k_layers: &[Vec<f32>],
+        v_layers: &[Vec<f32>],
+    ) -> anyhow::Result<usize> {
         assert_eq!(k_layers.len(), self.spec.n_layers);
         assert_eq!(v_layers.len(), self.spec.n_layers);
         for l in 0..self.spec.n_layers {
@@ -188,11 +192,14 @@ impl ShardedKvCache {
         assert_eq!(k_row.len(), row, "layer {layer} k row");
         assert_eq!(v_row.len(), row, "layer {layer} v row");
         let w = self.worker_of(self.total_len);
-        let pending = self.pending.get_or_insert(PendingToken { worker: w, layers_done: 0 });
-        assert_eq!(pending.layers_done, layer, "layers must be appended in order");
+        {
+            let pending =
+                self.pending.get_or_insert(PendingToken { worker: w, layers_done: 0 });
+            assert_eq!(pending.layers_done, layer, "layers must be appended in order");
+            pending.layers_done += 1;
+        }
         self.shards[w].k[layer].extend_from_slice(k_row);
         self.shards[w].v[layer].extend_from_slice(v_row);
-        self.pending.as_mut().unwrap().layers_done += 1;
     }
 
     /// Rows of the in-flight token visible to worker `w` at `layer`
@@ -220,14 +227,24 @@ impl ShardedKvCache {
     }
 
     /// Commit the pending token (all layers must have been appended).
-    /// Returns the owning worker.
-    pub fn commit_token(&mut self) -> usize {
-        let p = self.pending.take().expect("no pending token");
-        assert_eq!(p.layers_done, self.spec.n_layers, "token missing layers");
+    /// Returns the owning worker. Committing with no pending token or with
+    /// missing layers is a typed error — the degraded-decode recovery path
+    /// depends on token ingest failures surfacing as `Result`, not panics.
+    pub fn commit_token(&mut self) -> anyhow::Result<usize> {
+        let p = self
+            .pending
+            .take()
+            .ok_or_else(|| anyhow::anyhow!("commit_token with no pending token"))?;
+        anyhow::ensure!(
+            p.layers_done == self.spec.n_layers,
+            "pending token committed with {}/{} layers",
+            p.layers_done,
+            self.spec.n_layers
+        );
         self.shards[p.worker].len += 1;
         self.total_len += 1;
         self.update_peak(p.worker);
-        p.worker
+        Ok(p.worker)
     }
 
     /// Bulk-append a prefill chunk for ONE layer: `k`/`v` are
@@ -497,7 +514,7 @@ mod tests {
         for t in 0..16 {
             let k = vec![row_of(t, row), row_of(t + 1000, row)];
             let v = k.clone();
-            c.append_token(&k, &v);
+            c.append_token(&k, &v).unwrap();
         }
         assert_eq!(c.total_len(), 16);
         assert_eq!(c.shard_lens(), vec![8, 8]);
@@ -512,7 +529,7 @@ mod tests {
         let row = s.kv_row();
         for t in 0..6 {
             let k = vec![row_of(t, row), row_of(t, row)];
-            c.append_token(&k, &k.clone());
+            c.append_token(&k, &k.clone()).unwrap();
         }
         // pages: tokens 0,1 -> w0; 2,3 -> w1; 4,5 -> w0
         assert_eq!(c.shard_len(0), 4);
@@ -541,7 +558,7 @@ mod tests {
         for t in 0..n {
             let k = vec![row_of(t, row); s.n_layers];
             let v = vec![row_of(t + 7, row); s.n_layers];
-            single.append_token(&k, &v);
+            single.append_token(&k, &v).unwrap();
         }
         assert_eq!(bulk.shard_lens(), single.shard_lens());
         for w in 0..s.n_workers {
@@ -561,7 +578,7 @@ mod tests {
             let row = s.kv_row();
             let zero = vec![vec![0.0f32; row]; s.n_layers];
             for _ in 0..n {
-                c.append_token(&zero, &zero.clone());
+                c.append_token(&zero, &zero.clone()).unwrap();
             }
             let lens = c.shard_lens();
             assert_eq!(lens.iter().sum::<usize>(), n);
@@ -585,7 +602,7 @@ mod tests {
             let mut c = ShardedKvCache::new(s);
             let zero = vec![vec![0.0f32; s.kv_row()]; s.n_layers];
             for _ in 0..tokens {
-                c.append_token(&zero, &zero.clone());
+                c.append_token(&zero, &zero.clone()).unwrap();
             }
             for w in 0..workers {
                 assert_eq!(
@@ -724,7 +741,7 @@ mod tests {
         // Decode appends beyond the prefix are owned as usual.
         let zero = vec![vec![0.0f32; row]; s.n_layers];
         for _ in 0..2 {
-            shared.append_token(&zero, &zero.clone());
+            shared.append_token(&zero, &zero.clone()).unwrap();
         }
         assert_eq!(shared.total_len(), 12);
         assert_eq!(shared.worker_bytes(0), 4 * s.bytes_per_token());
@@ -749,7 +766,7 @@ mod tests {
         let mut c = ShardedKvCache::new(s);
         let row = s.kv_row();
         let k = vec![row_of(0, row); s.n_layers];
-        c.append_token(&k, &k.clone());
+        c.append_token(&k, &k.clone()).unwrap();
         let snapshot = c.clone();
         // Roll back a partially-appended token (one of two layers landed).
         c.append_token_layer(0, &row_of(9, row), &row_of(9, row));
@@ -764,7 +781,7 @@ mod tests {
         // Rolling back with nothing pending is a no-op, and the cache keeps
         // working normally afterwards.
         c.rollback_token();
-        c.append_token(&k, &k.clone());
+        c.append_token(&k, &k.clone()).unwrap();
         assert_eq!(c.total_len(), 2);
     }
 

@@ -253,8 +253,12 @@ impl RadixCache {
 
     /// Unpin a sequence's path (at retirement). The prefix stays cached —
     /// only pool pressure evicts it.
+    // Provable: `PrefixHandle` is not Clone, its `pin` field is private, and
+    // release takes it by value — a second release of the same pin id cannot
+    // be expressed. The expect is a corruption tripwire, not a code path.
+    #[allow(clippy::expect_used)]
     pub fn release(&mut self, handle: PrefixHandle) {
-        let pin = self.pins[handle.pin].take().expect("double release of prefix handle");
+        let pin = self.pins[handle.pin].take().expect("double release of prefix handle"); // lint:allow provable: handle is !Clone and consumed by value
         self.free_pins.push(handle.pin);
         let n = &mut self.nodes[pin.node];
         assert!(n.refcount > 0, "pin on node without refcount");
@@ -266,14 +270,23 @@ impl RadixCache {
     /// [`acquire`](Self::acquire)): `([n_layers][matched*row], same for v)`.
     /// This is the data a forking sequence copies — aliased pages and the
     /// COW partial page alike read the same bits the tree committed.
-    pub fn prefix_rows(&self, tokens: &[i32], matched: usize) -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
+    /// Errors if the requested prefix is not stored (e.g. `matched` does not
+    /// come from a live [`acquire`](Self::acquire) on this tree).
+    pub fn prefix_rows(
+        &self,
+        tokens: &[i32],
+        matched: usize,
+    ) -> anyhow::Result<(Vec<Vec<f32>>, Vec<Vec<f32>>)> {
         let row = self.spec.kv_row();
         let mut k = vec![Vec::with_capacity(matched * row); self.spec.n_layers];
         let mut v = vec![Vec::with_capacity(matched * row); self.spec.n_layers];
         let mut cur = ROOT;
         let mut pos = 0usize;
         while pos < matched {
-            let child = *self.nodes[cur].children.get(&tokens[pos]).expect("prefix not stored");
+            let child = *self.nodes[cur]
+                .children
+                .get(&tokens[pos])
+                .ok_or_else(|| anyhow::anyhow!("prefix not stored at position {pos}"))?;
             let node = &self.nodes[child];
             let take = node.tokens.len().min(matched - pos);
             debug_assert_eq!(node.start, pos, "node start drifted from path position");
@@ -284,7 +297,7 @@ impl RadixCache {
             pos += take;
             cur = child;
         }
-        (k, v)
+        Ok((k, v))
     }
 
     // ---- insertion ------------------------------------------------------
@@ -358,8 +371,11 @@ impl RadixCache {
         transferred
     }
 
+    // Provable: repin is internal and called only with pin ids read from a
+    // live handle or a `Some` entry scanned out of `self.pins` moments ago.
+    #[allow(clippy::expect_used)]
     fn repin(&mut self, pin_id: usize, node: NodeId, matched: usize) {
-        let pin = self.pins[pin_id].as_mut().expect("repin of released handle");
+        let pin = self.pins[pin_id].as_mut().expect("repin of released handle"); // lint:allow provable: callers hold a live pin
         let old = pin.node;
         pin.node = node;
         pin.matched = matched;
@@ -406,9 +422,11 @@ impl RadixCache {
         // Pins that matched past the cut alias pages now charged to the
         // lower half — move them (refcounts stay exact; see module docs).
         for pin_id in 0..self.pins.len() {
-            let needs_move = matches!(&self.pins[pin_id], Some(p) if p.node == node && p.matched > at);
-            if needs_move {
-                let matched = self.pins[pin_id].as_ref().unwrap().matched;
+            let moved = match &self.pins[pin_id] {
+                Some(p) if p.node == node && p.matched > at => Some(p.matched),
+                _ => None,
+            };
+            if let Some(matched) = moved {
                 self.repin(pin_id, lower, matched);
             }
         }
@@ -473,7 +491,9 @@ impl RadixCache {
         }
         pool.release(&pages)?;
         self.stats.evicted_pages += pages.iter().sum::<usize>();
-        let parent = self.nodes[id].parent.expect("non-root node has a parent");
+        let Some(parent) = self.nodes[id].parent else {
+            anyhow::bail!("eviction victim {id} is a non-root node without a parent (tree corrupt)");
+        };
         let first = self.nodes[id].tokens[0];
         let removed = self.nodes[parent].children.remove(&first);
         debug_assert_eq!(removed, Some(id));
@@ -490,6 +510,10 @@ impl RadixCache {
 
     /// Recompute every derived quantity from first principles and assert it
     /// matches the ledgers — the workhorse of `rust/tests/radix_prop.rs`.
+    /// This is the designated panic-on-corruption oracle: it exists to
+    /// crash loudly in tests, so its asserts are exempt from the no-panic
+    /// invariant (production code never calls it).
+    #[allow(clippy::expect_used, clippy::panic)]
     pub fn verify_integrity(&self) {
         let ps = self.spec.page_size;
         let mut recount = vec![0usize; self.spec.n_workers];
@@ -508,7 +532,7 @@ impl RadixCache {
                 *r += c;
             }
             if id != ROOT {
-                let parent = n.parent.expect("non-root parent");
+                let parent = n.parent.expect("non-root parent"); // lint:allow test oracle: panics on corruption by design
                 assert!(!n.tokens.is_empty(), "non-root node {id} with empty edge");
                 assert_eq!(
                     self.nodes[parent].children.get(&n.tokens[0]),
@@ -608,7 +632,7 @@ mod tests {
         assert_eq!(pool.used_pages(0) + pool.used_pages(1), 4);
 
         // The stored rows are the bits the inserter committed.
-        let (k, v) = cache.prefix_rows(&prompt, 16);
+        let (k, v) = cache.prefix_rows(&prompt, 16).unwrap();
         let (want_k, want_v) = rows_for(&prompt, 2);
         assert_eq!(k, want_k);
         assert_eq!(v, want_v);
@@ -644,7 +668,7 @@ mod tests {
         assert_eq!(cache.total_owned_pages(), 3 + 2, "a's 3 pages + b's 2 branch pages");
         cache.verify_integrity();
         // COW source data: the shared 6 tokens read back bit-identical.
-        let (kb, _) = cache.prefix_rows(&b, 6);
+        let (kb, _) = cache.prefix_rows(&b, 6).unwrap();
         let (ka, _) = rows_for(&a[..6].to_vec(), 2);
         assert_eq!(kb, ka);
         retire(&mut cache, &mut pool, ha, &owna);
@@ -675,7 +699,7 @@ mod tests {
         // the original path (upper via children rule, lower via moved pin).
         retire(&mut cache, &mut pool, h_fork, &own_fork);
         cache.evict_all(&mut pool).unwrap();
-        let (k, _) = cache.prefix_rows(&long, 8);
+        let (k, _) = cache.prefix_rows(&long, 8).unwrap();
         assert_eq!(k[0].len(), 8 * 2, "original path intact under deep pin");
         retire(&mut cache, &mut pool, h_long, &own_long);
         retire(&mut cache, &mut pool, h_deep, &own_deep);

@@ -20,6 +20,10 @@
 //!                               deterministic BENCH_chaos.json summary
 //!   bench-compare B R [--only N] — gate bench_results/ summaries in R
 //!                               against baselines in B (>10% = regression)
+//!   verify-schedules [--quick] — statically verify every planner-emittable
+//!                               collective schedule (all algos × p ∈ 1..=16
+//!                               × 3 presets × degraded variants) and write
+//!                               BENCH_verify.json
 //!
 //! Options are `key=value` pairs applied to the RunSpec (see config module),
 //! plus `--config <file.json>`, `--strategy auto|tree|ring|single` (sugar
@@ -62,6 +66,11 @@ fn main() {
             parse_spec(&rest).and_then(|spec| cmd_chaos_bench(&spec))
         }
         "bench-compare" => cmd_bench_compare(&args[1..]),
+        "verify-schedules" => {
+            // `--quick` is accepted for CI symmetry; the sweep is already
+            // deterministic and identical in both modes.
+            cmd_verify_schedules()
+        }
         "plan-bench" => parse_spec(&args[1..]).and_then(|spec| cmd_plan_bench(&spec)),
         "strategy-bench" => parse_spec(&args[1..]).and_then(|spec| cmd_strategy_bench(&spec)),
         "sweep" => parse_spec(&args[1..]).and_then(|spec| cmd_sweep(&spec)),
@@ -83,7 +92,7 @@ fn main() {
 fn print_help() {
     println!(
         "treeattn — Tree Attention reproduction\n\
-         usage: treeattn <info|validate|decode|serve|serve-bench|chaos-bench|bench-compare|plan-bench|strategy-bench|sweep> [--config f.json] [key=value ...]\n\
+         usage: treeattn <info|validate|decode|serve|serve-bench|chaos-bench|bench-compare|verify-schedules|plan-bench|strategy-bench|sweep> [--config f.json] [key=value ...]\n\
          keys: strategy=auto|tree|ring|single  (auto = strategy planner; --strategy X is sugar)\n\
          \x20     allreduce=auto|ring|tree|twolevel  (auto = topology-aware collective planner)\n\
          \x20     model.preset=test-8m|tiny-124m  cluster.preset=h100_dgx|mi300x|rtx4090_pcie\n\
@@ -641,7 +650,10 @@ fn cmd_chaos_bench(spec: &RunSpec) -> anyhow::Result<()> {
         let survivor = topo.degraded(p - m.lost_workers.len());
         let mut scen_diff = 0.0f32;
         for r in &reqs {
-            let got = results.iter().find(|x| x.id == r.id).unwrap();
+            let got = results
+                .iter()
+                .find(|x| x.id == r.id)
+                .ok_or_else(|| anyhow::anyhow!("seed {seed}: request {} missing from results", r.id))?;
             let mut c2 = VirtualCluster::new(survivor.clone());
             let want = batcher.replay_single(&mut c2, &ComputeBackend::Oracle, r)?;
             anyhow::ensure!(
@@ -710,6 +722,81 @@ fn cmd_chaos_bench(spec: &RunSpec) -> anyhow::Result<()> {
 /// EITHER direction (summaries are virtual-clock metrics, bit-stable across
 /// hosts — drift means behaviour changed); `{"min": x}` / `{"max": x}`
 /// baselines are hard bounds. Keys prefixed `wall_` are never compared.
+/// Outcome of comparing one bench's parsed summary against its baseline.
+struct BenchComparison {
+    compared: usize,
+    failures: Vec<String>,
+    ok_lines: Vec<String>,
+}
+
+/// Pure comparison of one parsed `BENCH_<name>.json` summary against its
+/// parsed baseline. EVERY deviation is reported with its tolerance or
+/// bound — never just the first — and structural problems (missing metrics
+/// object, missing metric, unsupported baseline form) become recorded
+/// failures rather than aborting the pass.
+fn compare_bench_summaries(bench: &str, base: &Json, res: &Json) -> BenchComparison {
+    let mut cmp = BenchComparison { compared: 0, failures: Vec::new(), ok_lines: Vec::new() };
+    let Some(base_metrics) = base.get("metrics").and_then(|m| m.as_obj()) else {
+        cmp.failures.push(format!("{bench}: baseline has no metrics object"));
+        return cmp;
+    };
+    let Some(res_metrics) = res.get("metrics").and_then(|m| m.as_obj()) else {
+        cmp.failures.push(format!("{bench}: results have no metrics object"));
+        return cmp;
+    };
+    for (key, want) in base_metrics {
+        if key.starts_with("wall_") {
+            continue;
+        }
+        let Some(got) = res_metrics.get(key).and_then(|v| v.as_f64()) else {
+            cmp.failures.push(format!("{bench}.{key}: metric missing from results"));
+            continue;
+        };
+        cmp.compared += 1;
+        match want {
+            Json::Num(v) => {
+                if (got - v).abs() > baseline_tolerance(*v) {
+                    cmp.failures.push(format!(
+                        "{bench}.{key}: {got} deviates from baseline {v} (tol {})",
+                        baseline_tolerance(*v)
+                    ));
+                } else {
+                    cmp.ok_lines.push(format!("ok {bench}.{key}: {got} (baseline {v}, ±10%)"));
+                }
+            }
+            other => {
+                let min = other.get("min").and_then(|v| v.as_f64());
+                let max = other.get("max").and_then(|v| v.as_f64());
+                if min.is_none() && max.is_none() {
+                    cmp.failures.push(format!("{bench}.{key}: unsupported baseline form"));
+                    continue;
+                }
+                let mut bad = false;
+                if let Some(lo) = min {
+                    if got < lo {
+                        cmp.failures.push(format!("{bench}.{key}: {got} below floor {lo}"));
+                        bad = true;
+                    }
+                }
+                if let Some(hi) = max {
+                    if got > hi {
+                        cmp.failures.push(format!("{bench}.{key}: {got} above ceiling {hi}"));
+                        bad = true;
+                    }
+                }
+                if !bad {
+                    cmp.ok_lines.push(format!(
+                        "ok {bench}.{key}: {got} (bounds {:?}..{:?})",
+                        min.unwrap_or(f64::NEG_INFINITY),
+                        max.unwrap_or(f64::INFINITY)
+                    ));
+                }
+            }
+        }
+    }
+    cmp
+}
+
 fn cmd_bench_compare(args: &[String]) -> anyhow::Result<()> {
     let mut dirs: Vec<String> = Vec::new();
     let mut only: Option<String> = None;
@@ -748,69 +835,36 @@ fn cmd_bench_compare(args: &[String]) -> anyhow::Result<()> {
         if only.as_deref().is_some_and(|o| o != bench) {
             continue;
         }
-        let base = tree_attention::ser::parse_file(&baseline_dir.join(fname))?;
+        // Structural problems (unreadable file, missing metrics object) are
+        // recorded as failures and the pass CONTINUES: every bench and every
+        // metric is checked in one run, so a verify-counter drift and a
+        // latency drift in the same run are both visible.
+        let base = match tree_attention::ser::parse_file(&baseline_dir.join(fname)) {
+            Ok(j) => j,
+            Err(e) => {
+                failures.push(format!("{bench}: unreadable baseline: {e}"));
+                continue;
+            }
+        };
         let res_path = results_dir.join(fname);
         if !res_path.exists() {
             failures.push(format!("{bench}: no summary at {} (bench not run?)", res_path.display()));
             continue;
         }
-        let res = tree_attention::ser::parse_file(&res_path)?;
-        let base_metrics = base
-            .get("metrics")
-            .and_then(|m| m.as_obj())
-            .ok_or_else(|| anyhow::anyhow!("{bench}: baseline has no metrics object"))?;
-        let res_metrics = res
-            .get("metrics")
-            .and_then(|m| m.as_obj())
-            .ok_or_else(|| anyhow::anyhow!("{bench}: results have no metrics object"))?;
+        let res = match tree_attention::ser::parse_file(&res_path) {
+            Ok(j) => j,
+            Err(e) => {
+                failures.push(format!("{bench}: unreadable results: {e}"));
+                continue;
+            }
+        };
         checked += 1;
-        for (key, want) in base_metrics {
-            if key.starts_with("wall_") {
-                continue;
-            }
-            let Some(got) = res_metrics.get(key).and_then(|v| v.as_f64()) else {
-                failures.push(format!("{bench}.{key}: metric missing from results"));
-                continue;
-            };
-            compared += 1;
-            match want {
-                Json::Num(v) => {
-                    if (got - v).abs() > baseline_tolerance(*v) {
-                        failures.push(format!(
-                            "{bench}.{key}: {got} deviates from baseline {v} (tol {})",
-                            baseline_tolerance(*v)
-                        ));
-                    } else {
-                        println!("ok {bench}.{key}: {got} (baseline {v}, ±10%)");
-                    }
-                }
-                other => {
-                    let min = other.get("min").and_then(|v| v.as_f64());
-                    let max = other.get("max").and_then(|v| v.as_f64());
-                    if min.is_none() && max.is_none() {
-                        failures.push(format!("{bench}.{key}: unsupported baseline form"));
-                        continue;
-                    }
-                    if let Some(lo) = min {
-                        if got < lo {
-                            failures.push(format!("{bench}.{key}: {got} below floor {lo}"));
-                            continue;
-                        }
-                    }
-                    if let Some(hi) = max {
-                        if got > hi {
-                            failures.push(format!("{bench}.{key}: {got} above ceiling {hi}"));
-                            continue;
-                        }
-                    }
-                    println!(
-                        "ok {bench}.{key}: {got} (bounds {:?}..{:?})",
-                        min.unwrap_or(f64::NEG_INFINITY),
-                        max.unwrap_or(f64::INFINITY)
-                    );
-                }
-            }
+        let cmp = compare_bench_summaries(bench, &base, &res);
+        for line in &cmp.ok_lines {
+            println!("{line}");
         }
+        compared += cmp.compared;
+        failures.extend(cmp.failures);
     }
     if checked == 0 && failures.is_empty() {
         // Genuinely nothing to gate (no baseline seeded for this bench) —
@@ -856,10 +910,14 @@ fn planner_counters_json() -> Json {
         ("collective_misses", Json::num(c.collective_misses as f64)),
         ("collective_plans", Json::num(c.collective_plans as f64)),
         ("collective_evictions", Json::num(c.collective_evictions as f64)),
+        ("collective_verified", Json::num(c.collective_verified as f64)),
+        ("collective_rejected", Json::num(c.collective_rejected as f64)),
         ("strategy_hits", Json::num(c.strategy_hits as f64)),
         ("strategy_misses", Json::num(c.strategy_misses as f64)),
         ("strategy_plans", Json::num(c.strategy_plans as f64)),
         ("strategy_evictions", Json::num(c.strategy_evictions as f64)),
+        ("strategy_verified", Json::num(c.strategy_verified as f64)),
+        ("strategy_rejected", Json::num(c.strategy_rejected as f64)),
     ])
 }
 
@@ -941,6 +999,145 @@ fn cmd_strategy_bench(spec: &RunSpec) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `verify-schedules`: statically prove every collective schedule the
+/// planner can emit before anything ever executes one. Sweeps the three
+/// hardware link personalities × p ∈ 1..=16 × {single-node, multi-node,
+/// single-kill degraded} shapes × every candidate algorithm × four payload
+/// points, runs the full verifier (conservation, race freedom, deadlock
+/// freedom, scratch bound) on each schedule, and writes the deterministic
+/// `BENCH_verify.json` summary CI gates. The committed baseline pins
+/// `rejected` at exactly 0 (zero-baseline tolerance), so a single schedule
+/// regression anywhere in the sweep fails the gate.
+fn cmd_verify_schedules() -> anyhow::Result<()> {
+    use tree_attention::collectives::{broadcast_schedule, ring_shift_schedule};
+    use tree_attention::gpumodel::GpuKind;
+    use tree_attention::netsim::SimWorld;
+    use tree_attention::planner::{candidate_algos, preset_link_personalities};
+    use tree_attention::verifier;
+
+    // Payload points: a single fused (n, d, m) block, a prime block count
+    // (exercises uneven ring segmentation), a power of two, and a wide
+    // batch. block_elems / wire_bpe only price the wire — verification is
+    // payload-size independent beyond the block count.
+    const NBLOCKS: [usize; 4] = [1, 13, 16, 256];
+    let mut table = Table::new(
+        "Static schedule verification (every planner-emittable schedule)",
+        &["preset", "p", "topologies", "schedules", "verified", "rejected", "peak scratch"],
+    );
+    let mut presets = 0usize;
+    let mut topologies = 0usize;
+    let mut schedules_checked = 0usize;
+    let mut aux_checked = 0usize;
+    let mut verified = 0usize;
+    let mut rejected = 0usize;
+    let mut max_scratch_ratio = 0.0f64;
+    let mut failures: Vec<String> = Vec::new();
+    for (label, intra, inter) in preset_link_personalities() {
+        presets += 1;
+        for p in 1..=16usize {
+            let single =
+                Topology::custom(&format!("{label}-1x{p}"), 1, p, GpuKind::H100, intra, inter);
+            let mut topos = vec![single.clone()];
+            if p >= 2 {
+                let multi =
+                    Topology::custom(&format!("{label}-{p}x1"), p, 1, GpuKind::H100, intra, inter);
+                topos.push(multi.clone());
+                // Single-kill degraded rebuilds of both shapes — the exact
+                // topologies the batcher re-plans on after a worker loss.
+                topos.push(single.degraded(p - 1));
+                topos.push(multi.degraded(p - 1));
+            }
+            let mut row_sched = 0usize;
+            let mut row_verified = 0usize;
+            let mut row_rejected = 0usize;
+            let mut row_scratch = 0.0f64;
+            for topo in &topos {
+                topologies += 1;
+                let world = SimWorld::new(topo.clone());
+                let wp = topo.world_size();
+                for algo in candidate_algos(topo) {
+                    for nblocks in NBLOCKS {
+                        row_sched += 1;
+                        let outcome = algo
+                            .schedule(&world, nblocks)
+                            .map_err(|e| e.to_string())
+                            .and_then(|sch| {
+                                verifier::verify_allreduce(&sch).map_err(|e| e.to_string())
+                            });
+                        match outcome {
+                            Ok(report) => {
+                                row_verified += 1;
+                                let ratio = report.peak_scratch_blocks as f64
+                                    / report.scratch_budget_blocks.max(1) as f64;
+                                row_scratch = row_scratch.max(ratio);
+                            }
+                            Err(e) => {
+                                row_rejected += 1;
+                                failures.push(format!(
+                                    "{} p={wp} algo={} nblocks={nblocks}: {e}",
+                                    topo.name,
+                                    algo.name()
+                                ));
+                            }
+                        }
+                    }
+                }
+                // The two non-allreduce schedule families the executors also
+                // run: Ring Attention's KV rotation and the leader broadcast.
+                for sch in [ring_shift_schedule(wp, 13), broadcast_schedule(wp, 0, 13)] {
+                    aux_checked += 1;
+                    if let Err(e) = verifier::verify_any(&sch) {
+                        row_rejected += 1;
+                        failures.push(format!("{} p={wp} algo={}: {e}", topo.name, sch.algo));
+                    }
+                }
+            }
+            schedules_checked += row_sched;
+            verified += row_verified;
+            rejected += row_rejected;
+            max_scratch_ratio = max_scratch_ratio.max(row_scratch);
+            table.row(vec![
+                label.to_string(),
+                p.to_string(),
+                topos.len().to_string(),
+                row_sched.to_string(),
+                row_verified.to_string(),
+                row_rejected.to_string(),
+                format!("{:.2}x", row_scratch),
+            ]);
+        }
+    }
+    table.print();
+    println!(
+        "\n{schedules_checked} allreduce schedules + {aux_checked} rotation/broadcast schedules \
+         across {topologies} topologies: {verified} verified, {rejected} rejected; \
+         peak scratch ≤ {max_scratch_ratio:.2}× one buffer (the paper's 2× bound counts \
+         live + scratch)."
+    );
+    for f in &failures {
+        eprintln!("REJECTED {f}");
+    }
+    let path = tree_attention::bench::write_bench_summary(
+        "verify",
+        &[
+            ("presets", presets as f64),
+            ("topologies", topologies as f64),
+            ("schedules_checked", schedules_checked as f64),
+            ("aux_checked", aux_checked as f64),
+            ("verified", verified as f64),
+            ("rejected", rejected as f64),
+            ("max_scratch_ratio", max_scratch_ratio),
+        ],
+    )?;
+    println!("wrote {}", path.display());
+    anyhow::ensure!(
+        failures.is_empty(),
+        "{} schedule(s) failed static verification",
+        failures.len()
+    );
+    Ok(())
+}
+
 fn cmd_sweep(spec: &RunSpec) -> anyhow::Result<()> {
     // Pure-simulation ring-vs-tree sweep at paper scale (no PJRT needed).
     let shape = AttnShape::new(1, 16, 16, 128); // the paper's attention block
@@ -954,7 +1151,7 @@ fn cmd_sweep(spec: &RunSpec) -> anyhow::Result<()> {
         let seq = spec.seq_len.max(p * 128);
         let t_local = seq / p;
         let ring = sim_ring_latency(&topo, t_local, shape, spec.wire_bpe);
-        let tree = sim_tree_latency(&topo, t_local, shape, spec.wire_bpe, spec.allreduce);
+        let tree = sim_tree_latency(&topo, t_local, shape, spec.wire_bpe, spec.allreduce)?;
         table.row(vec![
             nodes.to_string(),
             p.to_string(),
@@ -996,7 +1193,7 @@ pub fn sim_tree_latency(
     shape: AttnShape,
     wire_bpe: u64,
     algo: AllReduceAlgo,
-) -> f64 {
+) -> anyhow::Result<f64> {
     use tree_attention::collectives::execute_cost;
     let mut cluster = VirtualCluster::new(topo.clone());
     let p = topo.world_size();
@@ -1006,11 +1203,9 @@ pub fn sim_tree_latency(
         cluster.world.compute(w, t);
     }
     let nblocks = shape.batch * shape.n_heads;
-    let sched = algo
-        .schedule_for(&cluster.world, nblocks, shape.d_head + 2, wire_bpe)
-        .expect("valid collective config");
+    let sched = algo.schedule_for(&cluster.world, nblocks, shape.d_head + 2, wire_bpe)?;
     execute_cost(&mut cluster.world, &sched, shape.d_head + 2, wire_bpe);
-    cluster.world.barrier() - t0
+    Ok(cluster.world.barrier() - t0)
 }
 
 /// `plan-bench`: show what the topology-aware planner decides — for each
@@ -1086,6 +1281,67 @@ mod tests {
     fn baseline_tolerance_is_relative_for_nonzero() {
         assert!((baseline_tolerance(100.0) - 10.0).abs() < 1e-12);
         assert!((baseline_tolerance(-4.0) - 0.4).abs() < 1e-12);
+    }
+
+    fn metrics_json(pairs: Vec<(&str, Json)>) -> Json {
+        Json::obj(vec![("bench", Json::str("t")), ("metrics", Json::obj(pairs))])
+    }
+
+    #[test]
+    fn bench_compare_reports_every_deviation_not_just_the_first() {
+        // Regression (ISSUE 7): the gate used to stop at the first deviating
+        // metric, hiding e.g. a verify-counter drift behind a latency drift.
+        let base = metrics_json(vec![
+            ("lat", Json::num(100.0)),
+            ("rejected", Json::num(0.0)),
+            ("gone", Json::num(5.0)),
+            ("ok_metric", Json::num(2.0)),
+        ]);
+        let res = metrics_json(vec![
+            ("lat", Json::num(150.0)),     // >10% off
+            ("rejected", Json::num(3.0)),  // zero-baseline drift
+            ("ok_metric", Json::num(2.0)), // fine
+        ]);
+        let cmp = compare_bench_summaries("t", &base, &res);
+        assert_eq!(cmp.failures.len(), 3, "all deviations in one pass: {:?}", cmp.failures);
+        assert!(cmp.failures.iter().any(|f| f.contains("t.lat") && f.contains("tol")));
+        assert!(cmp.failures.iter().any(|f| f.contains("t.rejected") && f.contains("tol")));
+        assert!(cmp.failures.iter().any(|f| f.contains("t.gone") && f.contains("missing")));
+        assert_eq!(cmp.ok_lines.len(), 1);
+        assert_eq!(cmp.compared, 3);
+    }
+
+    #[test]
+    fn bench_compare_checks_bounds_and_reports_the_bound() {
+        let bound = |lo: f64, hi: f64| {
+            Json::obj(vec![("min", Json::num(lo)), ("max", Json::num(hi))])
+        };
+        let base = metrics_json(vec![
+            ("low", bound(10.0, 20.0)),
+            ("high", bound(10.0, 20.0)),
+            ("in_range", bound(10.0, 20.0)),
+        ]);
+        let res = metrics_json(vec![
+            ("low", Json::num(5.0)),
+            ("high", Json::num(25.0)),
+            ("in_range", Json::num(15.0)),
+        ]);
+        let cmp = compare_bench_summaries("t", &base, &res);
+        assert_eq!(cmp.failures.len(), 2, "{:?}", cmp.failures);
+        assert!(cmp.failures.iter().any(|f| f.contains("t.low") && f.contains("floor 10")));
+        assert!(cmp.failures.iter().any(|f| f.contains("t.high") && f.contains("ceiling 20")));
+        assert_eq!(cmp.ok_lines.len(), 1);
+    }
+
+    #[test]
+    fn bench_compare_records_structural_problems_instead_of_aborting() {
+        let base = metrics_json(vec![("m", Json::num(1.0))]);
+        let no_metrics = Json::obj(vec![("bench", Json::str("t"))]);
+        let cmp = compare_bench_summaries("t", &base, &no_metrics);
+        assert_eq!(cmp.failures.len(), 1);
+        assert!(cmp.failures[0].contains("no metrics object"));
+        let cmp = compare_bench_summaries("t", &no_metrics, &base);
+        assert!(cmp.failures[0].contains("baseline has no metrics object"));
     }
 
     #[test]

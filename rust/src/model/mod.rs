@@ -428,7 +428,7 @@ impl ModelExecutor {
             cluster.world.compute(0, t_post);
             stats.linear_sim_time += t_post;
         }
-        seq.cache.commit_token();
+        seq.cache.commit_token()?;
         seq.tokens.push(token);
         seq.last_hidden = Some(h);
         Ok(stats)

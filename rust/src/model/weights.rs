@@ -53,7 +53,12 @@ impl WeightStore {
             push(format!("layer{l}.w3"), vec![d, ff], rng.normal_vec(d * ff, inv(d)));
             push(format!("layer{l}.w2"), vec![ff, d], rng.normal_vec(ff * d, inv(ff)));
         }
-        let embed_index = tensors.iter().position(|t| t.name == "embed.table").unwrap();
+        // "embed.table" is the first tensor pushed above; unreachable! is a
+        // compile-time-obvious guard, not a runtime code path.
+        let embed_index = match tensors.iter().position(|t| t.name == "embed.table") {
+            Some(i) => i,
+            None => unreachable!("embed.table pushed unconditionally above"),
+        };
         WeightStore { spec: spec.clone(), tensors, embed_index }
     }
 

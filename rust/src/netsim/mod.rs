@@ -290,6 +290,15 @@ impl NetSim {
         &self.topo
     }
 
+    /// Lock the shared state, recovering from poison. `SimState` is plain
+    /// data mutated under the lock in complete units, so a panicking thread
+    /// (possible only in test code — non-test code is panic-free by crate
+    /// invariant) cannot leave it logically inconsistent; propagating the
+    /// poison would only turn one test failure into a cascade.
+    fn state_lock(&self) -> std::sync::MutexGuard<'_, SimState> {
+        self.state.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
     /// Post a point-to-point transfer departing at `t_dep`; returns the
     /// virtual arrival time at `dst`. Self-sends are free and instantaneous.
     /// Infallible — ignores any installed [`FaultPlan`] (legacy callers and
@@ -298,7 +307,7 @@ impl NetSim {
         if src == dst {
             return t_dep;
         }
-        let mut guard = self.state.lock().unwrap();
+        let mut guard = self.state_lock();
         Self::post(&self.topo, &mut guard, src, dst, bytes, t_dep, 1.0, 0.0)
     }
 
@@ -307,7 +316,7 @@ impl NetSim {
     /// active delay/slow-link faults to the serialization time. With no
     /// fault plan installed this is bit-for-bit [`NetSim::transfer`].
     pub fn try_transfer(&self, src: Rank, dst: Rank, bytes: u64, t_dep: f64) -> Result<f64, CommError> {
-        let mut guard = self.state.lock().unwrap();
+        let mut guard = self.state_lock();
         let st = &mut *guard;
         if st.faults.dead[src] || st.faults.dead[dst] {
             st.faults.counters.timeouts += 1;
@@ -372,7 +381,7 @@ impl NetSim {
     /// fault state (dead set, budgets, counters). Events whose round is
     /// already current activate immediately.
     pub fn set_fault_plan(&self, plan: FaultPlan) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.state_lock();
         let round = st.faults.round;
         st.faults = FaultState::new(self.topo.world_size());
         st.faults.round = round;
@@ -382,7 +391,7 @@ impl NetSim {
 
     /// Remove every fault and reset fault counters.
     pub fn clear_faults(&self) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.state_lock();
         let p = self.topo.world_size();
         st.faults = FaultState::new(p);
     }
@@ -390,40 +399,40 @@ impl NetSim {
     /// Advance the fault clock to `round`, activating any events scheduled
     /// at or before it. The serving layer calls this once per decode round.
     pub fn set_round(&self, round: usize) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.state_lock();
         st.faults.round = round;
         st.faults.activate();
     }
 
     pub fn current_round(&self) -> usize {
-        self.state.lock().unwrap().faults.round
+        self.state_lock().faults.round
     }
 
     /// Ranks currently confirmed dead, sorted ascending.
     pub fn dead_ranks(&self) -> Vec<Rank> {
-        let st = self.state.lock().unwrap();
+        let st = self.state_lock();
         st.faults.dead.iter().enumerate().filter(|(_, &d)| d).map(|(r, _)| r).collect()
     }
 
     pub fn is_dead(&self, rank: Rank) -> bool {
-        self.state.lock().unwrap().faults.dead[rank]
+        self.state_lock().faults.dead[rank]
     }
 
     pub fn retry_policy(&self) -> RetryPolicy {
-        self.state.lock().unwrap().retry
+        self.state_lock().retry
     }
 
     pub fn set_retry_policy(&self, policy: RetryPolicy) {
-        self.state.lock().unwrap().retry = policy;
+        self.state_lock().retry = policy;
     }
 
     /// Snapshot the fault-activity counters.
     pub fn fault_counters(&self) -> FaultCounters {
-        self.state.lock().unwrap().faults.counters
+        self.state_lock().faults.counters
     }
 
     fn note_retry(&self) {
-        self.state.lock().unwrap().faults.counters.retries += 1;
+        self.state_lock().faults.counters.retries += 1;
     }
 
     /// Uncontended transfer time for the route (no state change).
@@ -437,12 +446,12 @@ impl NetSim {
 
     /// Snapshot the traffic counters.
     pub fn counters(&self) -> TrafficCounters {
-        self.state.lock().unwrap().counters
+        self.state_lock().counters
     }
 
     /// Reset port timelines and counters (new experiment, same topology).
     pub fn reset(&self) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.state_lock();
         let st = &mut *st;
         for v in [&mut st.intra_egress, &mut st.intra_ingress, &mut st.nic_egress, &mut st.nic_ingress] {
             v.iter_mut().for_each(|x| *x = 0.0);

@@ -45,12 +45,17 @@ use std::sync::{Mutex, OnceLock};
 #[derive(Clone, Copy, Debug)]
 pub struct CandidateCost {
     pub algo: AllReduceAlgo,
-    /// Simulated seconds for the collective on an idle cluster.
+    /// Simulated seconds for the collective on an idle cluster
+    /// (`f64::INFINITY` when the schedule failed verification).
     pub predicted_s: f64,
     /// Communication rounds.
     pub steps: usize,
     /// Total bytes moved (both tiers).
     pub bytes: u64,
+    /// True when the schedule passed static verification
+    /// ([`crate::verifier::verify_allreduce`]); rejected candidates can
+    /// never win the argmin.
+    pub verified: bool,
 }
 
 /// The planner's decision for one (topology, payload) point.
@@ -142,6 +147,11 @@ pub struct CollectivePlanner {
     pub misses: u64,
     /// Plans evicted by topology invalidation (worker loss / re-shape).
     pub evictions: u64,
+    /// Candidate schedules that passed static verification before
+    /// memoization (see `rust/src/verifier/`).
+    pub verified: u64,
+    /// Candidate schedules rejected by the verifier (each is also logged).
+    pub rejected: u64,
 }
 
 impl CollectivePlanner {
@@ -188,52 +198,130 @@ impl CollectivePlanner {
             }
             Entry::Vacant(e) => {
                 self.misses += 1;
-                e.insert(compute_plan(topo, req))
+                let (plan, verified, rejected) = compute_plan(topo, req);
+                self.verified += verified;
+                self.rejected += rejected;
+                e.insert(plan)
             }
         }
     }
 }
 
 /// Price the candidates on fresh simulated worlds and pick the argmin.
-fn compute_plan(topo: &Topology, req: PlanRequest) -> Plan {
+/// Every candidate schedule is statically verified *before* it can be
+/// memoized: a schedule that fails to construct or to verify is priced as
+/// unusable (∞, `verified: false`) so the cache only ever serves proven
+/// plans. Returns `(plan, verified_count, rejected_count)`.
+fn compute_plan(topo: &Topology, req: PlanRequest) -> (Plan, u64, u64) {
     // Degenerate worlds / payloads: no communication happens, so any
     // schedule is free. Pick the binary tree (0 steps for p <= 1) so the
     // resolved algorithm is always valid to construct.
     if topo.world_size() <= 1 || req.nblocks == 0 {
-        return Plan {
+        let plan = Plan {
             chosen: AllReduceAlgo::Tree { fanout: 2 },
             predicted_s: 0.0,
             candidates: Vec::new(),
         };
+        return (plan, 0, 0);
     }
+    let mut verified = 0u64;
+    let mut rejected = 0u64;
     let mut candidates = Vec::new();
     for algo in candidate_algos(topo) {
         let mut world = SimWorld::new(topo.clone());
-        let sched = algo
-            .schedule(&world, req.nblocks)
-            .expect("planner candidates always have fanout >= 2");
-        let stats = execute_cost(&mut world, &sched, req.block_elems, req.wire_bpe);
-        candidates.push(CandidateCost {
-            algo,
-            predicted_s: stats.sim_time,
-            steps: stats.steps,
-            bytes: stats.traffic.total_bytes(),
-        });
-    }
-    // Strict less-than keeps the earliest candidate on ties, making the
-    // choice deterministic across runs and platforms.
-    let mut best = candidates[0];
-    for c in &candidates[1..] {
-        if c.predicted_s.total_cmp(&best.predicted_s).is_lt() {
-            best = *c;
+        let sched = match algo.schedule(&world, req.nblocks) {
+            Ok(s) => match crate::verifier::verify_allreduce(&s) {
+                Ok(_) => Some(s),
+                Err(e) => {
+                    crate::tlog!(
+                        Warn,
+                        "planner rejected '{}' (p={}, nblocks={}): {e}",
+                        algo.name(),
+                        topo.world_size(),
+                        req.nblocks
+                    );
+                    None
+                }
+            },
+            Err(e) => {
+                crate::tlog!(Warn, "planner could not construct '{}': {e}", algo.name());
+                None
+            }
+        };
+        match sched {
+            Some(s) => {
+                verified += 1;
+                let stats = execute_cost(&mut world, &s, req.block_elems, req.wire_bpe);
+                candidates.push(CandidateCost {
+                    algo,
+                    predicted_s: stats.sim_time,
+                    steps: stats.steps,
+                    bytes: stats.traffic.total_bytes(),
+                    verified: true,
+                });
+            }
+            None => {
+                rejected += 1;
+                candidates.push(CandidateCost {
+                    algo,
+                    predicted_s: f64::INFINITY,
+                    steps: 0,
+                    bytes: 0,
+                    verified: false,
+                });
+            }
         }
     }
-    Plan { chosen: best.algo, predicted_s: best.predicted_s, candidates }
+    // Strict less-than keeps the earliest candidate on ties, making the
+    // choice deterministic across runs and platforms. Unverified candidates
+    // are skipped outright so a rejected schedule can never be chosen.
+    let mut best: Option<CandidateCost> = None;
+    for c in &candidates {
+        if !c.verified {
+            continue;
+        }
+        let better = match best {
+            Some(b) => c.predicted_s.total_cmp(&b.predicted_s).is_lt(),
+            None => true,
+        };
+        if better {
+            best = Some(*c);
+        }
+    }
+    let plan = match best {
+        Some(b) => Plan { chosen: b.algo, predicted_s: b.predicted_s, candidates },
+        None => {
+            // Unreachable for the generators in this crate (the property
+            // tests prove every candidate verifies for p ∈ 1..=16), but if
+            // it ever happens, fall back deterministically and make noise
+            // rather than serving an unverified schedule silently as "best".
+            crate::tlog!(
+                Error,
+                "planner: every candidate rejected for p={} nblocks={}",
+                topo.world_size(),
+                req.nblocks
+            );
+            Plan {
+                chosen: AllReduceAlgo::Tree { fanout: 2 },
+                predicted_s: f64::INFINITY,
+                candidates,
+            }
+        }
+    };
+    (plan, verified, rejected)
 }
 
 fn global_planner() -> &'static Mutex<CollectivePlanner> {
     static PLANNER: OnceLock<Mutex<CollectivePlanner>> = OnceLock::new();
     PLANNER.get_or_init(|| Mutex::new(CollectivePlanner::new()))
+}
+
+/// Lock a planner mutex, recovering from poisoning: the caches hold plain
+/// data with no invariants spanning the lock, so a panicking holder leaves
+/// them usable — and the serving layer must keep planning mid-heal rather
+/// than cascade the panic.
+fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
 }
 
 // ---------------------------------------------------------------------------
@@ -348,6 +436,11 @@ pub struct StrategyPlanner {
     pub misses: u64,
     /// Plans evicted by topology invalidation (worker loss / re-shape).
     pub evictions: u64,
+    /// Strategy candidates whose collective schedules passed static
+    /// verification before memoization.
+    pub verified: u64,
+    /// Strategy candidates rejected by the verifier (priced infeasible).
+    pub rejected: u64,
 }
 
 impl StrategyPlanner {
@@ -392,44 +485,103 @@ impl StrategyPlanner {
             }
             Entry::Vacant(e) => {
                 self.misses += 1;
-                e.insert(compute_strategy_plan(topo, req))
+                let (plan, verified, rejected) = compute_strategy_plan(topo, req);
+                self.verified += verified;
+                self.rejected += rejected;
+                e.insert(plan)
             }
         }
     }
 }
 
+/// Statically verify the collective schedule a strategy candidate would
+/// actually execute for this request: tree runs a fused allreduce, ring a
+/// full-buffer neighbour shift, single a leader gather with no schedule.
+/// Returns `Err` with the verifier's diagnosis when the candidate must be
+/// priced infeasible.
+fn verify_strategy_schedule(
+    topo: &Topology,
+    req: &StrategyRequest,
+    strategy: Strategy,
+) -> Result<(), String> {
+    let world = SimWorld::new(topo.clone());
+    match strategy {
+        Strategy::Tree => {
+            let sched = req
+                .algo
+                .schedule_for(&world, req.batch * req.n_heads, req.d_head + 2, req.wire_bpe)
+                .map_err(|e| format!("tree allreduce failed to construct: {e}"))?;
+            crate::verifier::verify_allreduce(&sched).map_err(|e| e.to_string())
+        }
+        Strategy::Ring => {
+            let sched =
+                crate::collectives::ring_shift_schedule(topo.world_size(), req.batch.max(1));
+            crate::verifier::verify_any(&sched).map_err(|e| e.to_string())
+        }
+        // Single gathers point-to-point onto the leader; feasibility is the
+        // memory gate, there is no schedule to prove. Auto never reaches
+        // here (candidates are always fixed strategies).
+        _ => Ok(()),
+    }
+}
+
 /// Price the three strategies through their [`DecodeStrategy::cost_model`]
 /// implementations and pick the cheapest feasible one. Ties keep the
-/// earliest candidate (tree first), making the choice deterministic.
-fn compute_strategy_plan(topo: &Topology, req: StrategyRequest) -> StrategyPlan {
+/// earliest candidate (tree first), making the choice deterministic. Each
+/// candidate's collective schedule is statically verified first; failures
+/// are priced infeasible. Returns `(plan, verified_count, rejected_count)`.
+fn compute_strategy_plan(topo: &Topology, req: StrategyRequest) -> (StrategyPlan, u64, u64) {
     let shape = req.shape();
     // One device: no communication, every strategy degenerates to a local
     // flash decode — single IS the local computation, pick it outright (but
     // still price it, so callers see the round's real compute cost).
     if topo.world_size() <= 1 {
-        let imp = strategy_impl(Strategy::Single, req.algo, req.wire_bpe)
-            .expect("fixed strategies always construct");
-        let predicted_s = imp.cost_model(topo, req.batch, req.ctx, shape);
-        return StrategyPlan {
+        let (predicted_s, feasible) = match strategy_impl(Strategy::Single, req.algo, req.wire_bpe)
+        {
+            Ok(imp) => (imp.cost_model(topo, req.batch, req.ctx, shape), true),
+            Err(e) => {
+                crate::tlog!(Error, "single strategy failed to construct: {e}");
+                (f64::INFINITY, false)
+            }
+        };
+        let plan = StrategyPlan {
             chosen: Strategy::Single,
             predicted_s,
-            candidates: vec![StrategyCost {
-                strategy: Strategy::Single,
-                predicted_s,
-                feasible: true,
-            }],
+            candidates: vec![StrategyCost { strategy: Strategy::Single, predicted_s, feasible }],
         };
+        return (plan, 0, 0);
     }
+    let mut verified = 0u64;
+    let mut rejected = 0u64;
     let mut candidates = Vec::new();
     for strategy in [Strategy::Tree, Strategy::Ring, Strategy::Single] {
-        let feasible = strategy != Strategy::Single || single_gather_fits(topo, &req);
+        let mut feasible = strategy != Strategy::Single || single_gather_fits(topo, &req);
+        if feasible {
+            match verify_strategy_schedule(topo, &req, strategy) {
+                Ok(()) => verified += 1,
+                Err(e) => {
+                    crate::tlog!(
+                        Warn,
+                        "strategy planner rejected '{}' (p={}): {e}",
+                        strategy.name(),
+                        topo.world_size()
+                    );
+                    rejected += 1;
+                    feasible = false;
+                }
+            }
+        }
         let predicted_s = if feasible {
             // The tree candidate runs with the request's collective selector
             // — `Auto` by default, so the two planning levels compose; a
             // pinned collective is priced as pinned, matching execution.
-            let imp = strategy_impl(strategy, req.algo, req.wire_bpe)
-                .expect("fixed strategies always construct");
-            imp.cost_model(topo, req.batch, req.ctx, shape)
+            match strategy_impl(strategy, req.algo, req.wire_bpe) {
+                Ok(imp) => imp.cost_model(topo, req.batch, req.ctx, shape),
+                Err(e) => {
+                    crate::tlog!(Error, "strategy '{}' failed to construct: {e}", strategy.name());
+                    f64::INFINITY
+                }
+            }
         } else {
             f64::INFINITY
         };
@@ -441,7 +593,9 @@ fn compute_strategy_plan(topo: &Topology, req: StrategyRequest) -> StrategyPlan 
             best = *c;
         }
     }
-    StrategyPlan { chosen: best.strategy, predicted_s: best.predicted_s, candidates }
+    let plan =
+        StrategyPlan { chosen: best.strategy, predicted_s: best.predicted_s, candidates };
+    (plan, verified, rejected)
 }
 
 fn global_strategy_planner() -> &'static Mutex<StrategyPlanner> {
@@ -454,7 +608,7 @@ fn global_strategy_planner() -> &'static Mutex<StrategyPlanner> {
 /// for this (topology, shape, batch, ctx) point.
 pub fn resolve_strategy(strategy: Strategy, topo: &Topology, req: StrategyRequest) -> Strategy {
     match strategy {
-        Strategy::Auto => global_strategy_planner().lock().unwrap().chosen(topo, req),
+        Strategy::Auto => lock(global_strategy_planner()).chosen(topo, req),
         fixed => fixed,
     }
 }
@@ -463,7 +617,7 @@ pub fn resolve_strategy(strategy: Strategy, topo: &Topology, req: StrategyReques
 /// from the global cache — what the `strategy-bench` CLI and serving
 /// introspection read.
 pub fn strategy_plan_for(topo: &Topology, req: StrategyRequest) -> StrategyPlan {
-    global_strategy_planner().lock().unwrap().plan(topo, req)
+    lock(global_strategy_planner()).plan(topo, req)
 }
 
 /// Snapshot of both global plan caches' hit/miss counters — surfaced in the
@@ -475,32 +629,44 @@ pub struct PlannerCounters {
     pub collective_misses: u64,
     pub collective_plans: usize,
     pub collective_evictions: u64,
+    /// Candidate allreduce schedules proven by the static verifier before
+    /// memoization / rejected by it (see `rust/src/verifier/`).
+    pub collective_verified: u64,
+    pub collective_rejected: u64,
     pub strategy_hits: u64,
     pub strategy_misses: u64,
     pub strategy_plans: usize,
     pub strategy_evictions: u64,
+    /// Strategy candidates whose collective schedules were proven /
+    /// rejected by the static verifier before memoization.
+    pub strategy_verified: u64,
+    pub strategy_rejected: u64,
 }
 
 pub fn planner_counters() -> PlannerCounters {
     // Lock one cache at a time (and in the same order as the planning path
     // never takes) to keep this deadlock-free.
-    let (collective_hits, collective_misses, collective_plans, collective_evictions) = {
-        let p = global_planner().lock().unwrap();
-        (p.hits, p.misses, p.cache_len(), p.evictions)
+    let (collective_hits, collective_misses, collective_plans, collective_evictions, collective_verified, collective_rejected) = {
+        let p = lock(global_planner());
+        (p.hits, p.misses, p.cache_len(), p.evictions, p.verified, p.rejected)
     };
-    let (strategy_hits, strategy_misses, strategy_plans, strategy_evictions) = {
-        let p = global_strategy_planner().lock().unwrap();
-        (p.hits, p.misses, p.cache_len(), p.evictions)
+    let (strategy_hits, strategy_misses, strategy_plans, strategy_evictions, strategy_verified, strategy_rejected) = {
+        let p = lock(global_strategy_planner());
+        (p.hits, p.misses, p.cache_len(), p.evictions, p.verified, p.rejected)
     };
     PlannerCounters {
         collective_hits,
         collective_misses,
         collective_plans,
         collective_evictions,
+        collective_verified,
+        collective_rejected,
         strategy_hits,
         strategy_misses,
         strategy_plans,
         strategy_evictions,
+        strategy_verified,
+        strategy_rejected,
     }
 }
 
@@ -510,8 +676,8 @@ pub fn planner_counters() -> PlannerCounters {
 /// `(collective_evicted, strategy_evicted)`.
 pub fn invalidate_topology(topo: &Topology) -> (usize, usize) {
     // Same one-at-a-time locking discipline as `planner_counters`.
-    let c = global_planner().lock().unwrap().invalidate_topology(topo);
-    let s = global_strategy_planner().lock().unwrap().invalidate_topology(topo);
+    let c = lock(global_planner()).invalidate_topology(topo);
+    let s = lock(global_strategy_planner()).invalidate_topology(topo);
     (c, s)
 }
 
@@ -526,10 +692,9 @@ pub fn resolve(
     wire_bpe: u64,
 ) -> AllReduceAlgo {
     match algo {
-        AllReduceAlgo::Auto => global_planner()
-            .lock()
-            .unwrap()
-            .chosen(topo, PlanRequest { nblocks, block_elems, wire_bpe }),
+        AllReduceAlgo::Auto => {
+            lock(global_planner()).chosen(topo, PlanRequest { nblocks, block_elems, wire_bpe })
+        }
         fixed => fixed,
     }
 }
@@ -538,7 +703,7 @@ pub fn resolve(
 /// global cache — what the `plan-bench` CLI and the serving layer's
 /// introspection read.
 pub fn plan_for(topo: &Topology, req: PlanRequest) -> Plan {
-    global_planner().lock().unwrap().plan(topo, req)
+    lock(global_planner()).plan(topo, req)
 }
 
 #[cfg(test)]
@@ -733,11 +898,15 @@ mod tests {
     fn plans_are_deterministic() {
         let topo = Topology::mi300x(2, 4);
         let req = PlanRequest { nblocks: 64, block_elems: 130, wire_bpe: 2 };
-        let a = compute_plan(&topo, req);
-        let b = compute_plan(&topo, req);
+        let (a, a_verified, a_rejected) = compute_plan(&topo, req);
+        let (b, _, _) = compute_plan(&topo, req);
         assert_eq!(a.chosen, b.chosen);
         assert_eq!(a.predicted_s, b.predicted_s);
         assert_eq!(a.candidates.len(), b.candidates.len());
+        // Every candidate for a healthy topology verifies.
+        assert_eq!(a_verified as usize, a.candidates.len());
+        assert_eq!(a_rejected, 0);
+        assert!(a.candidates.iter().all(|c| c.verified));
     }
 
     // ---- strategy-level planning ---------------------------------------

@@ -121,7 +121,10 @@ impl Engine {
                 .entry(entry)
                 .ok_or_else(|| anyhow::anyhow!("entry '{entry}' not in manifest at {}", self.dir.display()))?;
             let path = self.dir.join(&e.file);
-            let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            let path_str = path
+                .to_str()
+                .ok_or_else(|| anyhow::anyhow!("non-UTF-8 artifact path {}", path.display()))?;
+            let proto = xla::HloModuleProto::from_text_file(path_str)
                 .map_err(|err| anyhow::anyhow!("parsing {}: {err}", path.display()))?;
             let comp = xla::XlaComputation::from_proto(&proto);
             let exe = self
@@ -278,7 +281,11 @@ struct ShutdownGuard {
 impl Drop for ShutdownGuard {
     fn drop(&mut self) {
         let _ = self.tx.send(Request::Shutdown);
-        if let Some(j) = self.join.lock().unwrap().take() {
+        // Poison just means another thread panicked while holding the lock;
+        // still reap the service thread rather than leaking it (and never
+        // panic inside Drop).
+        let mut join = self.join.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        if let Some(j) = join.take() {
             let _ = j.join();
         }
     }

@@ -20,13 +20,22 @@ pub enum Json {
     Obj(BTreeMap<String, Json>),
 }
 
-/// Parse error with byte offset for diagnostics.
-#[derive(Debug, thiserror::Error)]
-#[error("json parse error at byte {offset}: {message}")]
+/// Parse error with byte offset for diagnostics. (Display/Error are
+/// hand-implemented: the crate deliberately has no derive-macro
+/// dependencies — `anyhow` is the only dependency.)
+#[derive(Debug)]
 pub struct JsonError {
     pub offset: usize,
     pub message: String,
 }
+
+impl std::fmt::Display for JsonError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "json parse error at byte {}: {}", self.offset, self.message)
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 impl Json {
     // ---- constructors -------------------------------------------------
@@ -470,7 +479,8 @@ impl<'a> Parser<'a> {
                 self.pos += 1;
             }
         }
-        let text = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+        let text = std::str::from_utf8(&self.bytes[start..self.pos])
+            .map_err(|_| self.err("invalid number"))?;
         text.parse::<f64>()
             .map(Json::Num)
             .map_err(|_| self.err("invalid number"))

@@ -188,6 +188,10 @@ pub struct BatchMetrics {
     /// Active sessions pushed back to the queue during a heal because the
     /// surviving pool could not host them mid-flight.
     pub requeued: usize,
+    /// Collective schedules statically re-verified (conservation, races,
+    /// deadlocks, scratch bound) on survivor topologies after heals — a
+    /// healed batch only ever executes proven schedules.
+    pub verified_schedules: usize,
     /// Fault-layer activity (timeouts / drops / retries), summed across the
     /// cluster rebuilds heals perform.
     pub fault: crate::netsim::FaultCounters,
@@ -413,6 +417,7 @@ impl DecodeBatcher {
         let mut evicted_plans = 0usize;
         let mut resharded_rows = 0usize;
         let mut requeued = 0usize;
+        let mut verified_schedules = 0usize;
         let mut fault = crate::netsim::FaultCounters::default();
 
         loop {
@@ -467,7 +472,7 @@ impl DecodeBatcher {
                     // prefix cache: reject now so it does not wedge the
                     // queue behind it. (Deliberately ignores sharing — the
                     // reject decision must not depend on cache state.)
-                    let req = queue.pop_front().unwrap();
+                    let Some(req) = queue.pop_front() else { break };
                     crate::tlog!(
                         Warn,
                         "rejecting request {}: needs {:?} pages, capacity {} per worker",
@@ -539,14 +544,15 @@ impl DecodeBatcher {
                     // footprint and re-match against the shrunken tree
                     // (guaranteed to reserve next attempt — and if eviction
                     // somehow cannot make room, stop rather than spin).
-                    if !radix.as_mut().unwrap().evict_for(&mut pool, &need_full)? {
+                    let Some(r) = radix.as_mut() else { break };
+                    if !r.evict_for(&mut pool, &need_full)? {
                         break;
                     }
                 }
                 let Some((handle, matched, shared, need)) = admitted else {
                     break;
                 };
-                let req = queue.pop_front().unwrap();
+                let Some(req) = queue.pop_front() else { break };
                 let admit_sim = cluster.world.max_clock();
                 let rng = self.session_rng(req.id);
                 let ctx = req.prompt.len();
@@ -554,15 +560,16 @@ impl DecodeBatcher {
                 // Build the full prompt's KV rows: the matched prefix comes
                 // from the tree (bit-identical to regeneration — rows are
                 // content-addressed), the suffix is generated fresh.
-                let (k_flat, v_flat) = if matched > 0 {
-                    let r = radix.as_ref().unwrap();
-                    let (mut kp, mut vp) = r.prefix_rows(&req.prompt, matched);
-                    let (ks, vs) = self.gen_prompt_rows(&req.prompt, matched);
-                    kp[0].extend_from_slice(&ks);
-                    vp[0].extend_from_slice(&vs);
-                    (kp.remove(0), vp.remove(0))
-                } else {
-                    self.gen_prompt_rows(&req.prompt, 0)
+                let (k_flat, v_flat) = match radix.as_ref() {
+                    // matched > 0 implies a radix cache matched the prefix.
+                    Some(r) if matched > 0 => {
+                        let (mut kp, mut vp) = r.prefix_rows(&req.prompt, matched)?;
+                        let (ks, vs) = self.gen_prompt_rows(&req.prompt, matched);
+                        kp[0].extend_from_slice(&ks);
+                        vp[0].extend_from_slice(&vs);
+                        (kp.remove(0), vp.remove(0))
+                    }
+                    _ => self.gen_prompt_rows(&req.prompt, 0),
                 };
                 let k_layers = vec![k_flat];
                 let v_layers = vec![v_flat];
@@ -712,6 +719,14 @@ impl DecodeBatcher {
                     fault.absorb(&cluster.world.net.fault_counters());
                     let t_resume = cluster.world.max_clock();
                     let survivor_topo = cluster.topology().degraded(p2);
+                    // Prove every allreduce the planner could emit for the
+                    // survivor shape BEFORE any healed round executes — a
+                    // heal that would run an unverifiable schedule is a
+                    // hard error, not a silent corruption.
+                    verified_schedules += crate::verifier::verify_planner_candidates(
+                        &survivor_topo,
+                        active.len().max(1) * self.shape.n_heads,
+                    )?;
                     *cluster = VirtualCluster::new(survivor_topo);
                     for w in 0..p2 {
                         cluster.world.compute(w, t_resume);
@@ -776,7 +791,7 @@ impl DecodeBatcher {
                             let s2 = strategy_impl(r2, self.cfg.algo, self.cfg.wire_bpe)?;
                             let o =
                                 s2.decode(cluster, backend, self.shape, self.scale, &q, &shards)?;
-                            cache.commit_token();
+                            cache.commit_token()?;
                             a.tokens[s] = detokenize_stub(&o.out);
                             a.outputs[s] = o.out;
                             resharded_rows += 1;
@@ -808,7 +823,7 @@ impl DecodeBatcher {
 
             for (&i, out) in decode_idx.iter().zip(round.outs) {
                 let a = &mut active[i];
-                a.cache.commit_token();
+                a.cache.commit_token()?;
                 a.tokens.push(detokenize_stub(&out));
                 a.outputs.push(out);
                 if a.first_token_sim.is_none() {
@@ -856,6 +871,7 @@ impl DecodeBatcher {
             evicted_plans,
             resharded_rows,
             requeued,
+            verified_schedules,
             fault,
         };
         Ok((done, metrics))
@@ -892,7 +908,7 @@ impl DecodeBatcher {
             let strat = strategy_impl(resolved, self.cfg.algo, self.cfg.wire_bpe)?;
             let outcome = strat.decode(cluster, backend, self.shape, self.scale, &q, &shards)?;
             outs.push(outcome.out);
-            cache.commit_token();
+            cache.commit_token()?;
         }
         Ok(outs)
     }

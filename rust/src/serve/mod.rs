@@ -171,7 +171,7 @@ impl<'a> Server<'a> {
                         || (r.evict_for(&mut pool, &need)? && pool.try_reserve(&need));
                     if fits {
                         if m > 0 {
-                            let (k, v) = r.prefix_rows(&req.prompt, m);
+                            let (k, v) = r.prefix_rows(&req.prompt, m)?;
                             self.exec.install_prefix(
                                 &mut seq,
                                 &req.prompt[..m],

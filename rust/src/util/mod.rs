@@ -170,7 +170,12 @@ where
             })
             .collect();
         for h in handles {
-            h.join().expect("worker thread panicked");
+            // A worker panic (possible only in test code — non-test code is
+            // panic-free by crate invariant) is re-raised on the caller's
+            // thread instead of being wrapped in a second panic.
+            if let Err(payload) = h.join() {
+                std::panic::resume_unwind(payload);
+            }
         }
     });
 }
@@ -193,11 +198,22 @@ where
             break;
         }
         let v = f(&items[i]);
-        *out[i].lock().unwrap() = Some(v);
+        let mut slot = out[i].lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        *slot = Some(v);
     });
-    out.into_iter()
-        .map(|m| m.into_inner().unwrap().expect("par_map slot filled"))
-        .collect()
+    // Provable: `scoped_parallel` joins every worker before returning, and
+    // the fetch_add hands each index to exactly one worker, so every slot
+    // has been filled by the time we get here.
+    #[allow(clippy::expect_used)]
+    let collected: Vec<U> = out
+        .into_iter()
+        .map(|m| {
+            m.into_inner()
+                .unwrap_or_else(std::sync::PoisonError::into_inner)
+                .expect("par_map slot filled") // lint:allow provable: all workers joined, every index visited once
+        })
+        .collect();
+    collected
 }
 
 #[cfg(test)]

@@ -88,7 +88,10 @@ where
     F: Fn(&mut Gen) + std::panic::RefUnwindSafe,
 {
     if let Some(fail) = run(name, cases, &body) {
-        panic!(
+        // The property harness's whole job is failing a test loudly; this
+        // panic only ever fires inside #[test] functions.
+        #[allow(clippy::panic)]
+        panic!( // lint:allow test harness: failure reporting for #[test] properties
             "property '{}' failed at case {} (seed {:#x}): {}\n  reproduce with TREEATTN_PROP_SEED={}",
             fail.name, fail.case, fail.seed, fail.message, fail.seed
         );

@@ -1,0 +1,811 @@
+//! Static verification of collective schedules — run *before* execution.
+//!
+//! Tree Attention is only "exact attention" if every allreduce schedule the
+//! planner emits reduces each element exactly once; after the degraded-heal
+//! work (PR 5) a malformed schedule would not just corrupt one decode, it
+//! would corrupt the re-sharded survivor state too. This module model-checks
+//! four properties of a [`Schedule`] without executing it:
+//!
+//! 1. **Conservation** — simulating the schedule over symbolic per-rank
+//!    contribution counts (with the executor's snapshot-per-step semantics),
+//!    every `(block, destination)` pair ends with each rank's contribution
+//!    reduced/broadcast *exactly once*: no double-reduces, no orphaned
+//!    chunks. The block domain is interval-compressed over the ranges the
+//!    schedule actually names, so verifying a multi-megablock payload costs
+//!    the same as a 16-block one.
+//! 2. **Step-level race freedom** — within a step, no two sends target
+//!    overlapping ranges on one receiver (unless both are commutative
+//!    [`RecvMode::Reduce`] applications, which the executor accumulates
+//!    from pre-step snapshots), and no worker both sends and receives
+//!    overlapping ranges (relaxed only for the ring-shift pattern, whose
+//!    full-buffer neighbour exchange is exactly what the snapshot semantics
+//!    exist to make legal).
+//! 3. **Deadlock freedom** — the schedule is lowered to send/recv half
+//!    events; every recv must have its matching send in the same or an
+//!    earlier step, and the waits-for graph (recv waits on its send, each
+//!    event waits on its rank's earlier steps) must be acyclic. Cycles are
+//!    reported by name, e.g. `recv r1@s1 -> send r0@s2 -> ...`.
+//! 4. **Peak-scratch bound** — the statically computed peak scratch blocks
+//!    per worker (the largest per-step outgoing payload any rank snapshots)
+//!    must fit the executor's allocation. With the default budget of one
+//!    full buffer this machine-checks the paper's 2× peak-memory claim:
+//!    primary buffer + in-flight scratch ≤ 2× the payload.
+//!
+//! Entry points: [`verify_allreduce`] for reduction schedules,
+//! [`verify_any`] to dispatch on [`Schedule::algo`], and
+//! [`verify_planner_candidates`] to prove every schedule the planner could
+//! emit for a topology (the serving layer runs this after a degraded heal).
+//! The planner itself verifies each candidate before memoizing it; see
+//! `planner_counters()` for the verified/rejected totals.
+
+use crate::collectives::{RecvMode, Schedule};
+use std::fmt;
+use std::ops::Range;
+
+// ---------------------------------------------------------------------------
+// Error taxonomy
+// ---------------------------------------------------------------------------
+
+/// A schedule's proof failed. Each variant corresponds to one of the four
+/// checked properties (plus `Malformed` for structural nonsense that makes
+/// the other checks meaningless).
+#[derive(Clone, Debug, PartialEq)]
+pub enum VerifyError {
+    /// Structurally invalid: rank out of bounds, self-send, empty or
+    /// out-of-bounds block range, empty step.
+    Malformed { step: usize, detail: String },
+    /// A `(block, destination, contributor)` triple was reduced `got`
+    /// times instead of exactly `want` — a double-reduce (`got > want`)
+    /// or an orphaned chunk (`got < want`).
+    Conservation { rank: usize, block: usize, contributor: usize, got: u32, want: u32 },
+    /// Two operations in one step touch overlapping ranges in a way the
+    /// executor's snapshot semantics cannot serialize.
+    Race { step: usize, detail: String },
+    /// A recv waits on a send scheduled after it, or the waits-for graph
+    /// has a cycle (named in `detail`).
+    Deadlock { detail: String },
+    /// Some worker's peak per-step outgoing payload exceeds the scratch
+    /// budget the executor allocates.
+    ScratchOverflow { rank: usize, step: usize, needed_blocks: usize, budget_blocks: usize },
+}
+
+impl VerifyError {
+    /// Stable short name of the violated property (for counters and tests).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            VerifyError::Malformed { .. } => "malformed",
+            VerifyError::Conservation { .. } => "conservation",
+            VerifyError::Race { .. } => "race",
+            VerifyError::Deadlock { .. } => "deadlock",
+            VerifyError::ScratchOverflow { .. } => "scratch_overflow",
+        }
+    }
+}
+
+impl fmt::Display for VerifyError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            VerifyError::Malformed { step, detail } => {
+                write!(f, "malformed schedule at step {step}: {detail}")
+            }
+            VerifyError::Conservation { rank, block, contributor, got, want } => write!(
+                f,
+                "conservation violated: rank {rank} block {block} holds contributor \
+                 {contributor}'s data {got} times (want {want})"
+            ),
+            VerifyError::Race { step, detail } => {
+                write!(f, "race in step {step}: {detail}")
+            }
+            VerifyError::Deadlock { detail } => write!(f, "deadlock: {detail}"),
+            VerifyError::ScratchOverflow { rank, step, needed_blocks, budget_blocks } => write!(
+                f,
+                "scratch overflow: rank {rank} needs {needed_blocks} blocks in step {step} \
+                 but the executor budgets {budget_blocks}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for VerifyError {}
+
+/// What a successful verification proved (returned for introspection —
+/// `verify-schedules` prints the peak-scratch ratio from it).
+#[derive(Clone, Copy, Debug)]
+pub struct VerifyReport {
+    pub steps: usize,
+    pub sends: usize,
+    /// Largest per-step outgoing payload any single worker snapshots.
+    pub peak_scratch_blocks: usize,
+    /// The budget the peak was checked against (defaults to one full
+    /// buffer, i.e. the paper's 2× total-memory bound).
+    pub scratch_budget_blocks: usize,
+}
+
+// ---------------------------------------------------------------------------
+// Event IR (deadlock analysis + mutation testing)
+// ---------------------------------------------------------------------------
+
+/// Half of a matched send/recv pair.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    Send,
+    Recv,
+}
+
+/// One communication half-event. [`lower_events`] produces a matched pair
+/// per [`crate::collectives::SendOp`]; `verifier_prop` perturbs the `step`
+/// fields to seed deadlocks the schedule representation itself cannot
+/// express.
+#[derive(Clone, Debug)]
+pub struct CommEvent {
+    pub kind: EventKind,
+    /// The rank executing this half.
+    pub rank: usize,
+    /// The other side of the pair.
+    pub peer: usize,
+    pub step: usize,
+    pub blocks: Range<usize>,
+    pub mode: RecvMode,
+    /// Index of the matched pair — both halves of one transfer share it.
+    pub pair: usize,
+}
+
+impl CommEvent {
+    fn name(&self) -> String {
+        let k = match self.kind {
+            EventKind::Send => "send",
+            EventKind::Recv => "recv",
+        };
+        format!("{k} r{}@s{} (pair {})", self.rank, self.step, self.pair)
+    }
+}
+
+/// Lower a schedule to its send/recv half events, in step order.
+pub fn lower_events(s: &Schedule) -> Vec<CommEvent> {
+    let mut events = Vec::new();
+    let mut pair = 0usize;
+    for (step, ops) in s.steps.iter().enumerate() {
+        for op in ops {
+            events.push(CommEvent {
+                kind: EventKind::Send,
+                rank: op.src,
+                peer: op.dst,
+                step,
+                blocks: op.blocks.clone(),
+                mode: op.mode,
+                pair,
+            });
+            events.push(CommEvent {
+                kind: EventKind::Recv,
+                rank: op.dst,
+                peer: op.src,
+                step,
+                blocks: op.blocks.clone(),
+                mode: op.mode,
+                pair,
+            });
+            pair += 1;
+        }
+    }
+    events
+}
+
+// ---------------------------------------------------------------------------
+// Property 0: structure
+// ---------------------------------------------------------------------------
+
+fn check_structure(s: &Schedule) -> Result<(), VerifyError> {
+    if s.p == 0 {
+        return Err(VerifyError::Malformed { step: 0, detail: "p = 0".into() });
+    }
+    for (i, step) in s.steps.iter().enumerate() {
+        if step.is_empty() {
+            return Err(VerifyError::Malformed { step: i, detail: "empty step".into() });
+        }
+        for op in step {
+            if op.src >= s.p || op.dst >= s.p {
+                return Err(VerifyError::Malformed {
+                    step: i,
+                    detail: format!("rank out of bounds: {} -> {} with p = {}", op.src, op.dst, s.p),
+                });
+            }
+            if op.src == op.dst {
+                return Err(VerifyError::Malformed {
+                    step: i,
+                    detail: format!("self-send on rank {}", op.src),
+                });
+            }
+            if op.blocks.start >= op.blocks.end || op.blocks.end > s.nblocks {
+                return Err(VerifyError::Malformed {
+                    step: i,
+                    detail: format!(
+                        "bad block range {}..{} (nblocks = {})",
+                        op.blocks.start, op.blocks.end, s.nblocks
+                    ),
+                });
+            }
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Property 1: conservation (interval-compressed symbolic execution)
+// ---------------------------------------------------------------------------
+
+/// The compressed block domain: `bounds[i]..bounds[i+1]` are the maximal
+/// intervals that no operation in the schedule splits.
+struct Intervals {
+    bounds: Vec<usize>,
+}
+
+impl Intervals {
+    fn of(s: &Schedule) -> Intervals {
+        let mut bounds = vec![0, s.nblocks];
+        for step in &s.steps {
+            for op in step {
+                bounds.push(op.blocks.start);
+                bounds.push(op.blocks.end);
+            }
+        }
+        bounds.sort_unstable();
+        bounds.dedup();
+        // Degenerate nblocks = 0 payload: a single [0,0] bound, no
+        // intervals — conservation is vacuous, as it should be.
+        Intervals { bounds }
+    }
+
+    fn len(&self) -> usize {
+        self.bounds.len().saturating_sub(1)
+    }
+
+    /// Interval indices covered by a block range. Every op range starts
+    /// and ends on a bound by construction.
+    fn span(&self, r: &Range<usize>) -> Range<usize> {
+        let lo = self.bounds.partition_point(|&b| b < r.start);
+        let hi = self.bounds.partition_point(|&b| b < r.end);
+        lo..hi
+    }
+}
+
+/// Per-rank symbolic state: for each interval, how many times each
+/// original rank's contribution is present. Flat `[rank][interval][contrib]`
+/// with saturating u8 counts (any count > 1 is already a violation).
+struct Counts {
+    data: Vec<u8>,
+    niv: usize,
+    p: usize,
+}
+
+impl Counts {
+    fn initial(p: usize, niv: usize) -> Counts {
+        let mut c = Counts { data: vec![0; p * niv * p], niv, p };
+        for r in 0..p {
+            for iv in 0..niv {
+                c.data[c.idx(r, iv, r)] = 1;
+            }
+        }
+        c
+    }
+
+    fn idx(&self, rank: usize, iv: usize, contrib: usize) -> usize {
+        (rank * self.niv + iv) * self.p + contrib
+    }
+}
+
+/// Symbolically execute the schedule with the executor's snapshot-per-step
+/// semantics and check the final state against `want(rank, contributor)`.
+fn check_conservation<F>(s: &Schedule, ivs: &Intervals, want: F) -> Result<(), VerifyError>
+where
+    F: Fn(usize, usize) -> u32,
+{
+    let niv = ivs.len();
+    let mut counts = Counts::initial(s.p, niv);
+    for step in &s.steps {
+        // The executor snapshots every payload before applying any op in
+        // the step, so all sources are read in their pre-step state.
+        let snap = counts.data.clone();
+        for op in step {
+            for iv in ivs.span(&op.blocks) {
+                for c in 0..s.p {
+                    let d = counts.idx(op.dst, iv, c);
+                    let from = snap[counts.idx(op.src, iv, c)];
+                    counts.data[d] = match op.mode {
+                        RecvMode::Reduce => counts.data[d].saturating_add(from),
+                        RecvMode::Copy => from,
+                    };
+                }
+            }
+        }
+    }
+    for r in 0..s.p {
+        for iv in 0..niv {
+            for c in 0..s.p {
+                let got = u32::from(counts.data[counts.idx(r, iv, c)]);
+                let w = want(r, c);
+                if got != w {
+                    return Err(VerifyError::Conservation {
+                        rank: r,
+                        block: ivs.bounds[iv],
+                        contributor: c,
+                        got,
+                        want: w,
+                    });
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Property 2: step-level race freedom
+// ---------------------------------------------------------------------------
+
+fn overlap(a: &Range<usize>, b: &Range<usize>) -> bool {
+    a.start < b.end && b.start < a.end
+}
+
+/// `allow_send_recv_overlap` relaxes the same-rank send∩recv rule for the
+/// ring-shift pattern, where every rank forwards its full buffer while
+/// receiving its neighbour's — legal *only* because the executor snapshots
+/// all payloads before applying any of the step's writes.
+fn check_races(s: &Schedule, allow_send_recv_overlap: bool) -> Result<(), VerifyError> {
+    for (i, step) in s.steps.iter().enumerate() {
+        for (a_i, a) in step.iter().enumerate() {
+            for b in &step[a_i + 1..] {
+                // Two writers into one receiver: only commutative reduces
+                // may overlap (the executor accumulates both snapshots).
+                if a.dst == b.dst
+                    && overlap(&a.blocks, &b.blocks)
+                    && !(a.mode == RecvMode::Reduce && b.mode == RecvMode::Reduce)
+                {
+                    return Err(VerifyError::Race {
+                        step: i,
+                        detail: format!(
+                            "two sends into rank {} overlap on blocks {}..{} vs {}..{} \
+                             and are not both reduces",
+                            a.dst, a.blocks.start, a.blocks.end, b.blocks.start, b.blocks.end
+                        ),
+                    });
+                }
+            }
+        }
+        if allow_send_recv_overlap {
+            continue;
+        }
+        for a in step {
+            for b in step {
+                // One rank both reading (as src of `a`) and being written
+                // (as dst of `b`) on overlapping blocks in the same step.
+                if a.src == b.dst && overlap(&a.blocks, &b.blocks) {
+                    return Err(VerifyError::Race {
+                        step: i,
+                        detail: format!(
+                            "rank {} sends blocks {}..{} while receiving {}..{} in the same step",
+                            a.src, a.blocks.start, a.blocks.end, b.blocks.start, b.blocks.end
+                        ),
+                    });
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Property 3: deadlock freedom (event-level)
+// ---------------------------------------------------------------------------
+
+/// Check the lowered event list: every recv's matching send must sit in the
+/// same or an earlier step, and the waits-for graph — each recv waits on
+/// its send (when the send is later), every event waits on its own rank's
+/// earlier steps — must be acyclic. Public so `verifier_prop` can feed in
+/// mutated event lists; schedules go through [`verify_any`].
+pub fn check_deadlock_events(events: &[CommEvent]) -> Result<(), VerifyError> {
+    let n = events.len();
+    // Matching send for each pair id.
+    let mut send_of: std::collections::HashMap<usize, usize> = std::collections::HashMap::new();
+    for (i, e) in events.iter().enumerate() {
+        if e.kind == EventKind::Send {
+            send_of.insert(e.pair, i);
+        }
+    }
+    for e in events.iter().filter(|e| e.kind == EventKind::Recv) {
+        let Some(&si) = send_of.get(&e.pair) else {
+            return Err(VerifyError::Deadlock {
+                detail: format!("{} has no matching send", e.name()),
+            });
+        };
+        if events[si].step > e.step {
+            return Err(VerifyError::Deadlock {
+                detail: format!(
+                    "{} waits on {} scheduled {} step(s) later",
+                    e.name(),
+                    events[si].name(),
+                    events[si].step - e.step
+                ),
+            });
+        }
+    }
+    // Waits-for edges: event -> events it cannot start before.
+    let mut edges: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for (i, e) in events.iter().enumerate() {
+        if e.kind == EventKind::Recv {
+            if let Some(&si) = send_of.get(&e.pair) {
+                if events[si].step >= e.step {
+                    edges[i].push(si);
+                }
+            }
+        }
+        // Program order: an event waits on every same-rank event in the
+        // nearest earlier step (transitivity covers the rest).
+        let prev = events
+            .iter()
+            .enumerate()
+            .filter(|(_, o)| o.rank == e.rank && o.step < e.step)
+            .map(|(_, o)| o.step)
+            .max();
+        if let Some(ps) = prev {
+            for (j, o) in events.iter().enumerate() {
+                if o.rank == e.rank && o.step == ps {
+                    edges[i].push(j);
+                }
+            }
+        }
+    }
+    // Iterative DFS cycle detection (0 = white, 1 = on stack, 2 = done),
+    // reporting the cycle by event name.
+    let mut color = vec![0u8; n];
+    for start in 0..n {
+        if color[start] != 0 {
+            continue;
+        }
+        let mut stack: Vec<(usize, usize)> = vec![(start, 0)];
+        let mut path: Vec<usize> = vec![start];
+        color[start] = 1;
+        while let Some(&mut (node, ref mut next)) = stack.last_mut() {
+            if *next < edges[node].len() {
+                let m = edges[node][*next];
+                *next += 1;
+                match color[m] {
+                    0 => {
+                        color[m] = 1;
+                        stack.push((m, 0));
+                        path.push(m);
+                    }
+                    1 => {
+                        let pos = path.iter().position(|&x| x == m).unwrap_or(0);
+                        let names: Vec<String> =
+                            path[pos..].iter().chain([&m]).map(|&x| events[x].name()).collect();
+                        return Err(VerifyError::Deadlock {
+                            detail: format!("waits-for cycle: {}", names.join(" -> ")),
+                        });
+                    }
+                    _ => {}
+                }
+            } else {
+                color[node] = 2;
+                stack.pop();
+                path.pop();
+            }
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Property 4: peak-scratch bound
+// ---------------------------------------------------------------------------
+
+/// Peak scratch blocks any single worker snapshots in one step: the sum of
+/// its outgoing payloads (receives stream into the destination buffer —
+/// reduce accumulates, copy overwrites — so the wire copy is charged to the
+/// sender, matching `execute_data`'s per-step payload snapshots).
+pub fn peak_scratch_blocks(s: &Schedule) -> usize {
+    let mut peak = 0usize;
+    for step in &s.steps {
+        let mut per_rank = vec![0usize; s.p];
+        for op in step {
+            per_rank[op.src] += op.blocks.len();
+        }
+        peak = peak.max(per_rank.iter().copied().max().unwrap_or(0));
+    }
+    peak
+}
+
+fn check_scratch(s: &Schedule, budget_blocks: usize) -> Result<usize, VerifyError> {
+    let mut peak = 0usize;
+    for (i, step) in s.steps.iter().enumerate() {
+        let mut per_rank = vec![0usize; s.p];
+        for op in step {
+            per_rank[op.src] += op.blocks.len();
+        }
+        for (rank, &needed) in per_rank.iter().enumerate() {
+            if needed > budget_blocks {
+                return Err(VerifyError::ScratchOverflow {
+                    rank,
+                    step: i,
+                    needed_blocks: needed,
+                    budget_blocks,
+                });
+            }
+            peak = peak.max(needed);
+        }
+    }
+    Ok(peak)
+}
+
+// ---------------------------------------------------------------------------
+// Entry points
+// ---------------------------------------------------------------------------
+
+fn verify_common(
+    s: &Schedule,
+    budget_blocks: usize,
+    allow_send_recv_overlap: bool,
+) -> Result<VerifyReport, VerifyError> {
+    check_structure(s)?;
+    check_races(s, allow_send_recv_overlap)?;
+    check_deadlock_events(&lower_events(s))?;
+    let peak = check_scratch(s, budget_blocks)?;
+    Ok(VerifyReport {
+        steps: s.n_steps(),
+        sends: s.steps.iter().map(|st| st.len()).sum(),
+        peak_scratch_blocks: peak,
+        scratch_budget_blocks: budget_blocks,
+    })
+}
+
+/// Verify an allreduce schedule (ring / tree / two-level) against the
+/// default scratch budget of one full buffer — the executor allocation
+/// implied by the paper's 2× peak-memory bound.
+pub fn verify_allreduce(s: &Schedule) -> Result<VerifyReport, VerifyError> {
+    verify_allreduce_with_budget(s, s.nblocks.max(1))
+}
+
+/// [`verify_allreduce`] with an explicit scratch budget in blocks.
+pub fn verify_allreduce_with_budget(
+    s: &Schedule,
+    budget_blocks: usize,
+) -> Result<VerifyReport, VerifyError> {
+    let report = verify_common(s, budget_blocks, false)?;
+    let ivs = Intervals::of(s);
+    // Allreduce: every rank ends holding every rank's contribution once.
+    check_conservation(s, &ivs, |_, _| 1)?;
+    Ok(report)
+}
+
+/// Verify any schedule the codebase produces, dispatching the conservation
+/// model (and the ring-shift race relaxation) on [`Schedule::algo`]:
+///
+/// * `ring` / `tree` / `twolevel` — full allreduce conservation;
+/// * `broadcast` — every rank ends with exactly the root's contribution
+///   (the root is inferred as the unique rank that never receives);
+/// * `ring_shift` — every rank ends with exactly its predecessor's
+///   contribution, send/recv overlap allowed (snapshot semantics);
+/// * anything else — structure, race, deadlock, and scratch checks only.
+pub fn verify_any(s: &Schedule) -> Result<VerifyReport, VerifyError> {
+    verify_any_with_budget(s, s.nblocks.max(1))
+}
+
+/// [`verify_any`] with an explicit scratch budget in blocks.
+pub fn verify_any_with_budget(
+    s: &Schedule,
+    budget_blocks: usize,
+) -> Result<VerifyReport, VerifyError> {
+    match s.algo {
+        "ring" | "tree" | "twolevel" => verify_allreduce_with_budget(s, budget_blocks),
+        "broadcast" => {
+            let report = verify_common(s, budget_blocks, false)?;
+            let mut receives = vec![false; s.p];
+            for step in &s.steps {
+                for op in step {
+                    receives[op.dst] = true;
+                }
+            }
+            let root = receives.iter().position(|&r| !r).ok_or_else(|| VerifyError::Malformed {
+                step: 0,
+                detail: "broadcast with no root (every rank receives)".into(),
+            })?;
+            let ivs = Intervals::of(s);
+            check_conservation(s, &ivs, |_, c| u32::from(c == root))?;
+            Ok(report)
+        }
+        "ring_shift" => {
+            let report = verify_common(s, budget_blocks, true)?;
+            let ivs = Intervals::of(s);
+            // Every rank ends with its predecessor's buffer (for p = 1,
+            // the predecessor is itself and no sends exist).
+            check_conservation(s, &ivs, |r, c| u32::from(c == (r + s.p - 1) % s.p))?;
+            Ok(report)
+        }
+        _ => verify_common(s, budget_blocks, false),
+    }
+}
+
+/// Prove every allreduce schedule the planner could emit for `topo` at this
+/// payload point. Returns the number of schedules verified; the first
+/// failure aborts with context naming the algorithm. The serving layer runs
+/// this after every `Topology::degraded` rebuild so a healed batch can only
+/// ever execute proven schedules.
+pub fn verify_planner_candidates(topo: &crate::Topology, nblocks: usize) -> anyhow::Result<usize> {
+    let world = crate::netsim::SimWorld::new(topo.clone());
+    let mut n = 0usize;
+    for algo in crate::planner::candidate_algos(topo) {
+        let sched = algo.schedule(&world, nblocks).map_err(|e| {
+            anyhow::anyhow!("candidate '{}' failed to construct (p={}): {e}", algo.name(), topo.world_size())
+        })?;
+        crate::verifier::verify_allreduce(&sched).map_err(|e| {
+            anyhow::anyhow!(
+                "candidate '{}' failed verification (p={}, nblocks={}): {e}",
+                algo.name(),
+                topo.world_size(),
+                nblocks
+            )
+        })?;
+        n += 1;
+    }
+    Ok(n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::schedules::{
+        broadcast_schedule, ring_allreduce_schedule, ring_shift_schedule, tree_allreduce_schedule,
+        two_level_allreduce_schedule,
+    };
+    use crate::collectives::SendOp;
+    use crate::gpumodel::GpuKind;
+    use crate::topology::LinkSpec;
+    use crate::Topology;
+
+    fn topo_of(name: &str, nodes: usize, gpn: usize, intra: LinkSpec, inter: LinkSpec) -> Topology {
+        Topology::custom(&format!("{name}-{nodes}x{gpn}"), nodes, gpn, GpuKind::H100, intra, inter)
+    }
+
+    #[test]
+    fn ring_tree_twolevel_verify_clean() {
+        for p in 1..=16 {
+            for nblocks in [1usize, 5, 16, 64] {
+                let r = ring_allreduce_schedule(p, nblocks);
+                verify_allreduce(&r).unwrap();
+                for k in [2, 3, 4] {
+                    let t = tree_allreduce_schedule(p, nblocks, k).unwrap();
+                    verify_allreduce(&t).unwrap();
+                }
+                if p >= 2 {
+                    let topo = topo_of(
+                        "v",
+                        2,
+                        p.div_ceil(2),
+                        LinkSpec::nvlink4(),
+                        LinkSpec::infiniband_ndr(),
+                    );
+                    let tl = two_level_allreduce_schedule(&topo, nblocks, 2).unwrap();
+                    verify_allreduce(&tl).unwrap();
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn broadcast_and_ring_shift_verify_clean() {
+        for p in 1..=16 {
+            let b = broadcast_schedule(p, 0, 8);
+            verify_any(&b).unwrap();
+            let s = ring_shift_schedule(p, 8);
+            verify_any(&s).unwrap();
+        }
+    }
+
+    #[test]
+    fn dropped_send_is_a_conservation_error() {
+        let mut s = ring_allreduce_schedule(4, 8);
+        s.steps[0].pop();
+        let err = verify_allreduce(&s).unwrap_err();
+        assert!(matches!(err, VerifyError::Conservation { .. }), "got {err}");
+    }
+
+    #[test]
+    fn duplicated_reduce_is_a_conservation_error() {
+        let mut s = ring_allreduce_schedule(4, 8);
+        let dup = s.steps[0][0].clone();
+        s.steps[0].push(dup);
+        let err = verify_allreduce(&s).unwrap_err();
+        assert!(matches!(err, VerifyError::Conservation { got: 2, .. }), "got {err}");
+    }
+
+    #[test]
+    fn overlapping_copies_are_a_race() {
+        let s = Schedule {
+            steps: vec![vec![
+                SendOp { src: 0, dst: 2, blocks: 0..4, mode: RecvMode::Copy },
+                SendOp { src: 1, dst: 2, blocks: 2..6, mode: RecvMode::Copy },
+            ]],
+            nblocks: 8,
+            p: 3,
+            algo: "hand",
+        };
+        let err = verify_any(&s).unwrap_err();
+        assert!(matches!(err, VerifyError::Race { .. }), "got {err}");
+    }
+
+    #[test]
+    fn late_send_is_a_deadlock() {
+        let s = ring_allreduce_schedule(3, 6);
+        let mut events = lower_events(&s);
+        // Push one send a step after its recv.
+        let i = events.iter().position(|e| e.kind == EventKind::Send).unwrap();
+        events[i].step += 1;
+        let err = check_deadlock_events(&events).unwrap_err();
+        assert!(matches!(err, VerifyError::Deadlock { .. }), "got {err}");
+    }
+
+    #[test]
+    fn crossed_waits_report_a_named_cycle() {
+        // Two rendezvous pairs whose sends each sit behind the other
+        // rank's recv: a genuine waits-for cycle.
+        let mk = |kind, rank, peer, step, pair| CommEvent {
+            kind,
+            rank,
+            peer,
+            step,
+            blocks: 0..1,
+            mode: RecvMode::Copy,
+            pair,
+        };
+        let events = vec![
+            mk(EventKind::Recv, 1, 0, 1, 0),
+            mk(EventKind::Send, 0, 1, 2, 0),
+            mk(EventKind::Recv, 0, 1, 1, 1),
+            mk(EventKind::Send, 1, 0, 2, 1),
+        ];
+        match check_deadlock_events(&events) {
+            Err(VerifyError::Deadlock { detail }) => {
+                assert!(detail.contains("waits") || detail.contains("later"), "{detail}")
+            }
+            other => panic!("expected deadlock, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn shrunken_budget_is_a_scratch_overflow() {
+        let s = tree_allreduce_schedule(4, 8, 2).unwrap();
+        // Tree children send the full buffer; any budget below it fails.
+        let err = verify_allreduce_with_budget(&s, 7).unwrap_err();
+        assert!(matches!(err, VerifyError::ScratchOverflow { needed_blocks: 8, .. }), "got {err}");
+        verify_allreduce_with_budget(&s, 8).unwrap();
+    }
+
+    #[test]
+    fn swapped_steps_break_conservation() {
+        let mut s = ring_allreduce_schedule(4, 8);
+        let last = s.steps.len() - 1;
+        s.steps.swap(0, last);
+        let err = verify_allreduce(&s).unwrap_err();
+        assert!(matches!(err, VerifyError::Conservation { .. }), "got {err}");
+    }
+
+    #[test]
+    fn structure_errors_are_malformed() {
+        let mut s = ring_allreduce_schedule(3, 6);
+        s.steps[0][0].dst = 7;
+        assert!(matches!(verify_allreduce(&s), Err(VerifyError::Malformed { .. })));
+        let mut s = ring_allreduce_schedule(3, 6);
+        s.steps[0][0].blocks = 4..4;
+        assert!(matches!(verify_allreduce(&s), Err(VerifyError::Malformed { .. })));
+    }
+
+    #[test]
+    fn planner_candidates_verify_for_every_preset() {
+        for (name, intra, inter) in crate::planner::preset_link_personalities() {
+            for p in 1..=8 {
+                let topo = topo_of(name, 1, p, intra, inter);
+                let n = verify_planner_candidates(&topo, 96).unwrap();
+                assert!(n >= 4, "preset {name} p={p} verified only {n}");
+            }
+        }
+    }
+}

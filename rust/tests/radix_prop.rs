@@ -86,7 +86,7 @@ fn radix_page_accounting_prop() {
                 // matched prefix equal a fresh content-addressed compute.
                 let (k, v) = rows_for(&prompt, row);
                 if handle.matched > 0 {
-                    let (tk, tv) = radix.prefix_rows(&prompt, handle.matched);
+                    let (tk, tv) = radix.prefix_rows(&prompt, handle.matched).unwrap();
                     assert_eq!(tk[0], k[0][..handle.matched * row], "stored k rows drifted");
                     assert_eq!(tv[0], v[0][..handle.matched * row], "stored v rows drifted");
                 }

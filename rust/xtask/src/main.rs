@@ -1,0 +1,455 @@
+//! `cargo xtask lint` — the project's source-invariant lint pass.
+//!
+//! The fault-injection layer (PR 5) and the static schedule verifier (PR 7)
+//! both depend on one crate-wide invariant: **non-test code never panics on
+//! a recoverable path** — every failure surfaces as a typed error. This
+//! binary enforces that invariant (and a few schedule-math hygiene rules)
+//! mechanically, with zero dependencies, so it runs in the offline build
+//! environment where `syn` is unavailable. It lexes Rust source directly:
+//! comments and string/char-literal *contents* are blanked (delimiters are
+//! kept) so rules never fire on prose, and everything from a file's
+//! trailing `#[cfg(test)]` module to EOF is exempt.
+//!
+//! Rules (see `docs/verifier.md` for the allowlist policy):
+//!   1. no `.unwrap()` in non-test code (covers `partial_cmp().unwrap()`);
+//!   2. no `.expect("...")` in non-test code;
+//!   3. no `panic!` in non-test code;
+//!   4. no truncating `as u8/u16/u32/i32` casts in schedule index math
+//!      (`collectives/schedules.rs`, `collectives/mod.rs`, `verifier/mod.rs`);
+//!   5. every public `collectives`/`attention` entry point returns `Result`
+//!      (pure helpers and infallible accessors live in an explicit
+//!      allowlist below).
+//!
+//! A finding is suppressed only by a same-line `// lint:allow <rationale>`
+//! comment, which must state why the panic is a provable invariant. Run as
+//! `cargo xtask lint` (alias in `.cargo/config.toml`); exits non-zero on
+//! any finding, so CI can block on it.
+
+use std::path::{Path, PathBuf};
+
+/// Public functions in `collectives`/`attention` that legitimately do not
+/// return `Result`: pure schedule/topology math, infallible accessors, and
+/// the infallible legacy executors (`execute_data`/`execute_cost` assert on
+/// caller bugs only; the fault-aware path is `try_execute_data`, which does
+/// return `Result`). Growing this list is an API-review decision — prefer
+/// returning `Result` for anything that can fail at runtime.
+const PUB_FN_ALLOWLIST: &[&str] = &[
+    // Schedule accessors / pure helpers (collectives/mod.rs)
+    "n_steps",
+    "total_blocks_sent",
+    "critical_steps",
+    "name",
+    "is_auto",
+    "execute_data",
+    "execute_cost",
+    // Schedule generators and tree math (collectives/schedules.rs) — pure
+    // functions of (p, nblocks, fanout); invalid fanouts already return
+    // Result from the generators that take one.
+    "segment",
+    "ring_allreduce_schedule",
+    "broadcast_schedule",
+    "ring_shift_schedule",
+    "tree_parent",
+    "tree_children",
+    "tree_depth",
+    "tree_max_depth",
+    // Memory model (attention/memory.rs): pure arithmetic.
+    "elements",
+    "bytes",
+    "peak_memory_model",
+    // Flash-attention partials (attention/mod.rs): pure math on slices.
+    "partial",
+    "partial_batch",
+];
+
+/// Files whose index arithmetic feeds schedule construction/verification:
+/// a truncating cast there can silently corrupt a rank or block index.
+const NARROW_CAST_FILES: &[&str] =
+    &["collectives/schedules.rs", "collectives/mod.rs", "verifier/mod.rs"];
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("lint") => {
+            let findings = run_lint();
+            if findings.is_empty() {
+                println!("xtask lint: clean");
+            } else {
+                for f in &findings {
+                    eprintln!("{f}");
+                }
+                eprintln!("xtask lint: {} finding(s)", findings.len());
+                std::process::exit(1);
+            }
+        }
+        _ => {
+            eprintln!("usage: cargo xtask lint");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn src_root() -> PathBuf {
+    // xtask lives at rust/xtask; the sources to lint are rust/src.
+    Path::new(env!("CARGO_MANIFEST_DIR")).parent().map(|p| p.join("src")).unwrap_or_default()
+}
+
+fn run_lint() -> Vec<String> {
+    let root = src_root();
+    let mut files = Vec::new();
+    collect_rs(&root, &mut files);
+    files.sort();
+    let mut findings = Vec::new();
+    for path in &files {
+        let Ok(raw) = std::fs::read_to_string(path) else {
+            findings.push(format!("{}: unreadable", path.display()));
+            continue;
+        };
+        let rel = path.strip_prefix(&root).unwrap_or(path).display().to_string().replace('\\', "/");
+        lint_file(&rel, &raw, &mut findings);
+    }
+    findings
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = std::fs::read_dir(dir) else { return };
+    for e in entries.flatten() {
+        let p = e.path();
+        if p.is_dir() {
+            collect_rs(&p, out);
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            out.push(p);
+        }
+    }
+}
+
+fn lint_file(rel: &str, raw: &str, findings: &mut Vec<String>) {
+    let stripped = strip_comments_and_strings(raw);
+    let raw_lines: Vec<&str> = raw.lines().collect();
+    let lines: Vec<&str> = stripped.lines().collect();
+
+    // Everything from the trailing `#[cfg(test)]` module to EOF is exempt —
+    // the repo keeps exactly one test module per file, at the end.
+    let test_start =
+        lines.iter().position(|l| l.trim_start().starts_with("#[cfg(test)]")).unwrap_or(lines.len());
+
+    let allowed = |i: usize| raw_lines.get(i).is_some_and(|l| l.contains("lint:allow"));
+    let narrow_cast_file = NARROW_CAST_FILES.iter().any(|f| rel == *f);
+
+    for (i, line) in lines.iter().enumerate().take(test_start) {
+        if allowed(i) {
+            continue;
+        }
+        let report = |findings: &mut Vec<String>, rule: &str, what: &str| {
+            findings.push(format!("src/{rel}:{}: [{rule}] {what}", i + 1));
+        };
+        if line.contains(".unwrap()") {
+            report(findings, "no-unwrap", "`.unwrap()` in non-test code — return a typed error");
+        }
+        if line.contains(".expect(\"") {
+            report(findings, "no-expect", "`.expect(..)` in non-test code — return a typed error");
+        }
+        if has_panic_macro(line) {
+            report(findings, "no-panic", "`panic!` in non-test code — return a typed error");
+        }
+        if narrow_cast_file {
+            for cast in [" as u8", " as u16", " as u32", " as i32"] {
+                // Word boundary: ` as u32` must not also fire on ` as u32x4`
+                // or ` as usize` (checked by the candidate list itself).
+                let mut from = 0;
+                while let Some(off) = line[from..].find(cast) {
+                    let end = from + off + cast.len();
+                    let next = line[end..].chars().next();
+                    if !next.is_some_and(|c| c.is_ascii_alphanumeric() || c == '_') {
+                        report(
+                            findings,
+                            "no-narrow-cast",
+                            "truncating integer cast in schedule index math — use try_from",
+                        );
+                        break;
+                    }
+                    from = end;
+                }
+            }
+        }
+    }
+
+    // Rule 5: public collectives/attention entry points return Result.
+    if rel.starts_with("collectives/") || rel.starts_with("attention/") {
+        check_pub_fns(rel, &lines[..test_start], findings, &allowed);
+    }
+}
+
+fn check_pub_fns(
+    rel: &str,
+    lines: &[&str],
+    findings: &mut Vec<String>,
+    allowed: &dyn Fn(usize) -> bool,
+) {
+    let mut i = 0;
+    while i < lines.len() {
+        let t = lines[i].trim_start();
+        if let Some(rest) = t.strip_prefix("pub fn ") {
+            let fn_line = i;
+            let name: String = rest
+                .chars()
+                .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+                .collect();
+            // Signature = everything up to the body's `{` (or `;` for trait
+            // decls). Multi-line signatures are common here.
+            let mut sig = String::new();
+            while i < lines.len() {
+                let l = lines[i];
+                sig.push_str(l);
+                sig.push(' ');
+                if l.contains('{') || l.trim_end().ends_with(';') {
+                    break;
+                }
+                i += 1;
+            }
+            let sig = sig.split('{').next().unwrap_or("");
+            if !sig.contains("Result") && !PUB_FN_ALLOWLIST.contains(&name.as_str()) && !allowed(fn_line)
+            {
+                findings.push(format!(
+                    "src/{rel}:{}: [pub-result] public fn `{name}` does not return Result \
+                     (add to the xtask allowlist only if it provably cannot fail)",
+                    fn_line + 1
+                ));
+            }
+        }
+        i += 1;
+    }
+}
+
+/// True if the line invokes the `panic!` macro (not `debug_assert!`, not an
+/// identifier merely ending in "panic").
+fn has_panic_macro(line: &str) -> bool {
+    let bytes = line.as_bytes();
+    let mut from = 0;
+    while let Some(off) = line[from..].find("panic!") {
+        let at = from + off;
+        let prev = if at == 0 { None } else { Some(bytes[at - 1] as char) };
+        let ident_prev = prev.is_some_and(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':');
+        if !ident_prev {
+            return true;
+        }
+        from = at + "panic!".len();
+    }
+    false
+}
+
+/// Blank out comment text and the *contents* of string/char literals while
+/// keeping their delimiters, so line numbers and code structure survive.
+/// Handles line comments, (nested) block comments, escapes, raw strings
+/// `r"…"`/`r#"…"#`, and byte strings.
+fn strip_comments_and_strings(src: &str) -> String {
+    let b: Vec<char> = src.chars().collect();
+    let mut out = String::with_capacity(src.len());
+    let mut i = 0;
+    while i < b.len() {
+        let c = b[i];
+        // Line comment.
+        if c == '/' && b.get(i + 1) == Some(&'/') {
+            while i < b.len() && b[i] != '\n' {
+                i += 1;
+            }
+            continue;
+        }
+        // Block comment (nested).
+        if c == '/' && b.get(i + 1) == Some(&'*') {
+            let mut depth = 1;
+            i += 2;
+            while i < b.len() && depth > 0 {
+                if b[i] == '/' && b.get(i + 1) == Some(&'*') {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == '*' && b.get(i + 1) == Some(&'/') {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    if b[i] == '\n' {
+                        out.push('\n'); // keep line numbers aligned
+                    }
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // Raw string r"…" / r#"…"# / br#"…"# (with any # count).
+        if c == 'r' || (c == 'b' && b.get(i + 1) == Some(&'r')) {
+            let start = if c == 'b' { i + 1 } else { i };
+            let mut j = start + 1;
+            let mut hashes = 0;
+            while b.get(j) == Some(&'#') {
+                hashes += 1;
+                j += 1;
+            }
+            if b.get(j) == Some(&'"') {
+                for k in i..=j {
+                    out.push(b[k]);
+                }
+                i = j + 1;
+                // scan to closing "###…
+                'raw: while i < b.len() {
+                    if b[i] == '"' {
+                        let mut ok = true;
+                        for h in 0..hashes {
+                            if b.get(i + 1 + h) != Some(&'#') {
+                                ok = false;
+                                break;
+                            }
+                        }
+                        if ok {
+                            out.push('"');
+                            for _ in 0..hashes {
+                                out.push('#');
+                            }
+                            i += 1 + hashes;
+                            break 'raw;
+                        }
+                    }
+                    if b[i] == '\n' {
+                        out.push('\n');
+                    }
+                    i += 1;
+                }
+                continue;
+            }
+        }
+        // Ordinary string / byte string.
+        if c == '"' || (c == 'b' && b.get(i + 1) == Some(&'"')) {
+            if c == 'b' {
+                out.push('b');
+                i += 1;
+            }
+            out.push('"');
+            i += 1;
+            while i < b.len() {
+                if b[i] == '\\' {
+                    i += 2;
+                    continue;
+                }
+                if b[i] == '"' {
+                    out.push('"');
+                    i += 1;
+                    break;
+                }
+                if b[i] == '\n' {
+                    out.push('\n');
+                }
+                i += 1;
+            }
+            continue;
+        }
+        // Char literal — only when it can't be a lifetime. A plain char
+        // literal (`'x'`, one `char`, multi-byte included since we lex
+        // chars) closes at i+2; an escaped one (`'\n'`, `'\\'`, `'\''`)
+        // closes at i+3. Lifetimes (`'a` in `<'a>`) fall through.
+        if c == '\'' {
+            let is_escape = b.get(i + 1) == Some(&'\\');
+            let close = if is_escape {
+                if b.get(i + 3) == Some(&'\'') {
+                    Some(i + 3)
+                } else {
+                    None
+                }
+            } else if b.get(i + 2) == Some(&'\'') {
+                Some(i + 2)
+            } else {
+                None
+            };
+            if let Some(k) = close {
+                out.push('\'');
+                out.push('\'');
+                i = k + 1;
+                continue;
+            }
+        }
+        out.push(c);
+        i += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strings_and_comments_are_blanked_but_delimited() {
+        let s = strip_comments_and_strings(
+            "let x = \"contains .unwrap() text\"; // trailing .unwrap()\nreal.unwrap();",
+        );
+        assert!(s.contains("let x = \"\";"));
+        assert!(!s.lines().next().unwrap().contains(".unwrap()"));
+        assert!(s.lines().nth(1).unwrap().contains("real.unwrap()"));
+    }
+
+    #[test]
+    fn expect_with_string_arg_still_detected_after_stripping() {
+        let s = strip_comments_and_strings("self.pending.take().expect(\"no pending token\");");
+        assert!(s.contains(".expect(\"\")"));
+        // …while the byte-arg parser helper does NOT match the rule:
+        let t = strip_comments_and_strings("self.expect(b'[')?;");
+        assert!(!t.contains(".expect(\""));
+    }
+
+    #[test]
+    fn panic_macro_detection_has_word_boundaries() {
+        assert!(has_panic_macro("    panic!(\"boom\")"));
+        assert!(has_panic_macro("return panic!();"));
+        assert!(!has_panic_macro("debug_assert!(x); // not a panic"));
+        assert!(!has_panic_macro("core::panicking::panic_fmt();"));
+        assert!(!has_panic_macro("std::panic::resume_unwind(p);"));
+    }
+
+    #[test]
+    fn raw_strings_do_not_derail_the_lexer() {
+        let s = strip_comments_and_strings("let j = r#\"{\"k\": \".unwrap()\"}\"#; x.unwrap();");
+        assert!(!s.contains(".unwrap()\""));
+        assert!(s.contains("x.unwrap()"));
+    }
+
+    #[test]
+    fn escaped_char_literals_do_not_derail_the_lexer() {
+        // '\\' used to defeat the close-quote scan; code after it must
+        // still be linted.
+        let s = strip_comments_and_strings("match c { '\\\\' => x.unwrap(), '\\'' => y }");
+        assert!(s.contains("x.unwrap()"), "{s}");
+        assert!(!s.contains('\\'), "{s}");
+    }
+
+    #[test]
+    fn lint_findings_carry_rule_names() {
+        let mut f = Vec::new();
+        lint_file("collectives/mod.rs", "pub fn bad() -> usize { v.unwrap() }\n", &mut f);
+        assert!(f.iter().any(|x| x.contains("[no-unwrap]")));
+        assert!(f.iter().any(|x| x.contains("[pub-result]") && x.contains("`bad`")));
+    }
+
+    #[test]
+    fn lint_allow_and_test_modules_are_exempt() {
+        let mut f = Vec::new();
+        let src = "let a = b.unwrap(); // lint:allow provable: xyz\n#[cfg(test)]\nmod tests { fn t() { x.unwrap(); panic!(); } }\n";
+        lint_file("serve/batcher.rs", src, &mut f);
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn narrow_casts_flagged_only_in_schedule_math_files() {
+        let mut f = Vec::new();
+        lint_file("collectives/schedules.rs", "let r = x as u32;\nlet ok = y as usize;\n", &mut f);
+        assert_eq!(f.iter().filter(|x| x.contains("[no-narrow-cast]")).count(), 1, "{f:?}");
+        let mut g = Vec::new();
+        lint_file("bench/papersim.rs", "let r = x as u32;\n", &mut g);
+        assert!(g.is_empty(), "{g:?}");
+    }
+
+    #[test]
+    fn the_repo_itself_is_clean() {
+        // The real gate CI runs — kept as a test so `cargo test` catches a
+        // regression even before the CI lint job does.
+        let findings = run_lint();
+        assert!(findings.is_empty(), "lint findings:\n{}", findings.join("\n"));
+    }
+}
