@@ -1,0 +1,11 @@
+//! Pipeline ablation bench target — thin wrapper over
+//! `tree_attention::bench::pipeline::run`, the same sweep the `treeattn
+//! pipeline-bench` CLI command runs, so CI and the CLI gate one harness.
+
+fn main() {
+    let quick = tree_attention::bench::quick_mode();
+    if let Err(e) = tree_attention::bench::pipeline::run(quick) {
+        eprintln!("pipeline bench failed: {e:#}");
+        std::process::exit(1);
+    }
+}

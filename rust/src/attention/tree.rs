@@ -57,7 +57,21 @@ pub fn tree_decode(
     }
 
     // -- step 2: local flash partials (parallel in virtual time) ----------
+    // (`Auto` resolves against the planner for this exact payload shape.)
+    // The schedule is resolved before the compute so the overlap model
+    // below knows its chunk count: with a pipelined (chunks > 1) schedule
+    // only the first 1/chunks slice of the flash partial gates the first
+    // in-flight chunk — the rest overlaps the collective. Each rank is
+    // floored at its full compute time afterwards, so overlap can hide
+    // communication behind compute (and vice versa) but never shortens
+    // the work itself. chunks <= 1 charges the full partial up front,
+    // bit-identical in data AND virtual time to the pre-pipelining path.
+    let op = AttnCombineOp { d_head: shape.d_head };
+    let sched =
+        algo.schedule_for(&cluster.world, shape.batch * shape.n_heads, op.block_len(), wire_bpe)?;
+    let overlap = sched.chunks.max(1) as f64;
     let mut wires: Vec<Vec<f32>> = Vec::with_capacity(p);
+    let mut compute_done: Vec<f64> = Vec::with_capacity(p);
     for (w, kv) in shards.iter().enumerate() {
         let t_comp = cluster.gpu.decode_attention_time(
             shape.batch,
@@ -65,16 +79,13 @@ pub fn tree_decode(
             shape.kv_heads,
             shape.d_head,
         );
-        cluster.world.compute(w, t_comp);
+        compute_done.push(cluster.world.clocks[w] + t_comp);
+        cluster.world.compute(w, t_comp / overlap);
         let partial = backend.partial(shape, scale, q, *kv)?;
         wires.push(partial.to_wire());
     }
 
     // -- step 3: fused AllReduce of (n, d, m) ------------------------------
-    // (`Auto` resolves against the planner for this exact payload shape)
-    let op = AttnCombineOp { d_head: shape.d_head };
-    let sched =
-        algo.schedule_for(&cluster.world, shape.batch * shape.n_heads, op.block_len(), wire_bpe)?;
     let stats = match try_execute_data(&mut cluster.world, &sched, &mut wires, &op, wire_bpe) {
         Ok(s) => s,
         Err(e) => {
@@ -85,6 +96,9 @@ pub fn tree_decode(
         }
     };
     steps += stats.steps;
+    for (w, &t_done) in compute_done.iter().enumerate() {
+        cluster.world.advance_to(w, t_done);
+    }
 
     // -- step 4: finalize on the leader ------------------------------------
     let part = AttnPartial::from_wire(shape, &wires[0]);
@@ -161,25 +175,30 @@ pub fn tree_decode_batch(
     }
 
     // -- step 2: per-worker flash partials, one launch over all sessions --
+    // (`Auto` re-plans when the batch width crosses a cost crossover: the
+    // payload is proportional to B, which is exactly what the planner keys
+    // its plan cache on.) As in `tree_decode`, the schedule is resolved
+    // first so a pipelined choice overlaps all but the first 1/chunks
+    // slice of the fused flash launch with the in-flight chunks.
+    let op = AttnCombineOp { d_head: shape.d_head };
+    let sched = algo.schedule_for(&cluster.world, b * shape.n_heads, op.block_len(), wire_bpe)?;
+    let overlap = sched.chunks.max(1) as f64;
     let qs: Vec<&[f32]> = entries.iter().map(|e| e.q).collect();
     let mut wires: Vec<Vec<f32>> = Vec::with_capacity(p);
+    let mut compute_done: Vec<f64> = Vec::with_capacity(p);
     for w in 0..p {
         let kvs: Vec<ShardKv<'_>> = entries.iter().map(|e| e.shards[w]).collect();
         let total_len: usize = kvs.iter().map(|kv| kv.len).sum();
         let t_comp =
             cluster.gpu.decode_attention_time(1, total_len, shape.kv_heads, shape.d_head);
-        cluster.world.compute(w, t_comp);
+        compute_done.push(cluster.world.clocks[w] + t_comp);
+        cluster.world.compute(w, t_comp / overlap);
         let parts = backend.partial_batch(shape, scale, &qs, &kvs)?;
         let session_wires: Vec<Vec<f32>> = parts.iter().map(|part| part.to_wire()).collect();
         wires.push(AttnPartial::stack_wires(shape, &session_wires));
     }
 
     // -- step 3: ONE fused AllReduce over B·n_heads blocks -----------------
-    // (`Auto` re-plans when the batch width crosses a cost crossover: the
-    // payload is proportional to B, which is exactly what the planner keys
-    // its plan cache on)
-    let op = AttnCombineOp { d_head: shape.d_head };
-    let sched = algo.schedule_for(&cluster.world, b * shape.n_heads, op.block_len(), wire_bpe)?;
     let stats = match try_execute_data(&mut cluster.world, &sched, &mut wires, &op, wire_bpe) {
         Ok(s) => s,
         Err(e) => {
@@ -190,6 +209,9 @@ pub fn tree_decode_batch(
         }
     };
     steps += stats.steps;
+    for (w, &t_done) in compute_done.iter().enumerate() {
+        cluster.world.advance_to(w, t_done);
+    }
 
     // -- step 4: finalize per session on the leader ------------------------
     let outs: Vec<Vec<f32>> = AttnPartial::unstack_wire(shape, &wires[0], b)

@@ -4,6 +4,7 @@
 //! uses these helpers and prints the rows/series of one paper table/figure.
 
 pub mod papersim;
+pub mod pipeline;
 
 use crate::ser::Json;
 use crate::util::{Stopwatch, Summary};

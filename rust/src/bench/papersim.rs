@@ -62,21 +62,12 @@ pub fn sim_attention(
 
     match strategy {
         Strategy::Tree => {
-            for w in 0..p {
-                let t = cluster.gpu.decode_attention_time(shape.batch, t_local, shape.kv_heads, shape.d_head);
-                cluster.world.compute(w, t);
-                // One collective launch for the fused (n,d,m) AllReduce.
-                // Dispatch cost grows with world size (NCCL communicator
-                // fan-out + cross-host framework coordination); p^1.5
-                // normalized to the 8-GPU single-node baseline. Calibrated so
-                // the 128-GPU speedup lands near the paper's measured ~x8
-                // rather than the pure wire-time prediction (x100+).
-                let launch = cluster.gpu.comm_launch_s * (p as f64 / 8.0).powf(1.5).max(1.0);
-                cluster.world.compute(w, launch);
-            }
             // Cost-model principled: an unschedulable config has no finite
             // simulated latency — return INFINITY instead of panicking so
             // sweeps degrade to "this point loses" rather than aborting.
+            // Resolved before the compute charge so a pipelined (chunks >
+            // 1) schedule can overlap the flash partial with the in-flight
+            // chunks, exactly as `attention::tree_decode` executes it.
             let sched = match algo.schedule_for(
                 &cluster.world,
                 shape.batch * shape.n_heads,
@@ -92,8 +83,28 @@ pub fn sim_attention(
                     }
                 }
             };
+            let chunked = sched.chunks.max(1) as f64;
+            let mut compute_done = vec![0.0f64; p];
+            for w in 0..p {
+                let t = cluster.gpu.decode_attention_time(shape.batch, t_local, shape.kv_heads, shape.d_head);
+                // One collective launch for the fused (n,d,m) AllReduce.
+                // Dispatch cost grows with world size (NCCL communicator
+                // fan-out + cross-host framework coordination); p^1.5
+                // normalized to the 8-GPU single-node baseline. Calibrated so
+                // the 128-GPU speedup lands near the paper's measured ~x8
+                // rather than the pure wire-time prediction (x100+). The
+                // launch is never hidden — only the flash partial beyond its
+                // first 1/chunks slice overlaps the pipelined collective
+                // (each rank is floored at its full compute time below).
+                let launch = cluster.gpu.comm_launch_s * (p as f64 / 8.0).powf(1.5).max(1.0);
+                compute_done[w] = cluster.world.clocks[w] + t + launch;
+                cluster.world.compute(w, t / chunked + launch);
+            }
             let s = execute_cost(&mut cluster.world, &sched, shape.d_head + 2, wire_bpe);
             comm_steps += s.steps;
+            for (w, &t_done) in compute_done.iter().enumerate() {
+                cluster.world.advance_to(w, t_done);
+            }
         }
         Strategy::Ring => {
             let row = shape.kv_heads * shape.d_head;
@@ -191,15 +202,6 @@ pub fn sim_batched_tree_decode(
         }
     }
 
-    for w in 0..p {
-        // One fused flash-decode launch over ALL resident session shards…
-        let t = cluster.gpu.decode_attention_time(1, b * t_local, shape.kv_heads, shape.d_head);
-        cluster.world.compute(w, t);
-        // …and ONE collective launch for the whole round (same p^1.5 dispatch
-        // scaling as `sim_attention`, amortized over the batch).
-        let launch = cluster.gpu.comm_launch_s * (p as f64 / 8.0).powf(1.5).max(1.0);
-        cluster.world.compute(w, launch);
-    }
     let sched = match algo.schedule_for(&cluster.world, b * shape.n_heads, shape.d_head + 2, wire_bpe)
     {
         Ok(s) => s,
@@ -213,8 +215,27 @@ pub fn sim_batched_tree_decode(
             };
         }
     };
+    // Pipelined schedules overlap the fused flash launch with the
+    // in-flight chunks: only the first 1/chunks slice gates chunk 0, the
+    // rest hides behind communication (floored at full compute time after
+    // the collective) — the same model `attention::tree_decode_batch`
+    // executes. The collective launch itself is never hidden.
+    let chunked = sched.chunks.max(1) as f64;
+    let mut compute_done = vec![0.0f64; p];
+    for w in 0..p {
+        // One fused flash-decode launch over ALL resident session shards…
+        let t = cluster.gpu.decode_attention_time(1, b * t_local, shape.kv_heads, shape.d_head);
+        // …and ONE collective launch for the whole round (same p^1.5 dispatch
+        // scaling as `sim_attention`, amortized over the batch).
+        let launch = cluster.gpu.comm_launch_s * (p as f64 / 8.0).powf(1.5).max(1.0);
+        compute_done[w] = cluster.world.clocks[w] + t + launch;
+        cluster.world.compute(w, t / chunked + launch);
+    }
     let s = execute_cost(&mut cluster.world, &sched, shape.d_head + 2, wire_bpe);
     comm_steps += s.steps;
+    for (w, &t_done) in compute_done.iter().enumerate() {
+        cluster.world.advance_to(w, t_done);
+    }
 
     let t1 = cluster.world.barrier();
     SimAttn { sim_time: t1 - t0, traffic: cluster.world.net.counters().since(&before), comm_steps }

@@ -1,0 +1,213 @@
+//! Pipeline ablation — the tentpole acceptance harness for chunked
+//! wave-pipelined collectives (`treeattn pipeline-bench` and
+//! `benches/pipeline.rs` share this sweep).
+//!
+//! For every (preset, cluster size, context, batch) point it prices the
+//! simulated continuous-batched decode round under every fixed candidate
+//! algorithm — unpipelined (ring, k-ary trees, two-level) AND pipelined
+//! (tree2/ring × chunks ∈ {2, 4, 8}) — plus `AllReduceAlgo::Auto`, and
+//! checks the two contracts the pipelining work must honor:
+//!
+//!   1. **Never worse**: Auto with pipelined candidates in its search space
+//!      is within 1% of the best *unpipelined* fixed algorithm at EVERY
+//!      point (it should be exactly ≤: the planner only picks a chunked
+//!      schedule when the α–β model prices it cheaper, and the overlap
+//!      model can hide communication behind compute, never lengthen it).
+//!   2. **Actually wins**: the sweep contains a bandwidth-bound crossover
+//!      point where the pipelined round beats the best unpipelined round by
+//!      at least 1.5× — i.e. the chunk-count search dimension pays for
+//!      itself rather than merely matching the status quo.
+//!
+//! The winning regime is exactly where the cost model says it should be:
+//! slow links (PCIe host-staged), payloads large enough that β·payload
+//! dwarfs α, and compute small enough that the collective dominates the
+//! round — there the chunked tree's critical path α·(depth + C − 1) +
+//! β·payload·(depth + C − 1)/C collapses the plain tree's β·payload·depth
+//! term and the overlap hides the flash partial behind chunk 0's flight.
+
+use crate::attnmath::AttnShape;
+use crate::bench::papersim::sim_batched_tree_decode;
+use crate::bench::Table;
+use crate::collectives::AllReduceAlgo;
+use crate::planner::candidate_algos;
+use crate::ser::Json;
+use crate::topology::Topology;
+use crate::util::{fmt_bytes, fmt_secs, fmt_tokens};
+
+const SHAPE: AttnShape = AttnShape { batch: 1, n_heads: 16, kv_heads: 16, d_head: 128 };
+const WIRE_BPE: u64 = 2;
+
+fn payload_bytes(batch: usize) -> u64 {
+    (batch * SHAPE.n_heads * (SHAPE.d_head + 2)) as u64 * WIRE_BPE
+}
+
+/// Run the sweep, print the table, enforce both contracts, and write
+/// `bench_results/pipeline.json` + `bench_results/BENCH_pipeline.json`.
+pub fn run(quick: bool) -> anyhow::Result<()> {
+    // The paper's three testbeds. The quick grid is chosen to still contain
+    // a proven ≥1.5× crossover point (rtx4090 p=8, short context, wide
+    // batch: payload-bandwidth-bound on the host-staged PCIe link) so the
+    // CI smoke run gates the win, not just the no-regression bound.
+    let topos: Vec<(&str, Topology)> = if quick {
+        vec![
+            ("h100_dgx", Topology::h100_dgx(4)),
+            ("mi300x", Topology::mi300x(2, 8)),
+            ("rtx4090_pcie", Topology::rtx4090_pcie(8)),
+        ]
+    } else {
+        vec![
+            ("h100_dgx", Topology::h100_dgx(1)),
+            ("h100_dgx", Topology::h100_dgx(2)),
+            ("h100_dgx", Topology::h100_dgx(4)),
+            ("h100_dgx", Topology::h100_dgx(16)),
+            ("mi300x", Topology::mi300x(1, 8)),
+            ("mi300x", Topology::mi300x(2, 8)),
+            ("rtx4090_pcie", Topology::rtx4090_pcie(2)),
+            ("rtx4090_pcie", Topology::rtx4090_pcie(4)),
+            ("rtx4090_pcie", Topology::rtx4090_pcie(8)),
+        ]
+    };
+    let contexts: Vec<usize> =
+        if quick { vec![8_000, 128_000] } else { vec![8_000, 128_000, 1_280_000] };
+    let batches: Vec<usize> = if quick { vec![64, 512, 4096] } else { vec![1, 8, 64, 512, 4096] };
+
+    let mut table = Table::new(
+        "Pipeline ablation — pipelined-searched Auto vs best unpipelined fixed algorithm",
+        &["preset", "GPUs", "ctx", "batch", "payload", "best", "unpiped", "auto", "chosen", "win"],
+    );
+    let mut results = Vec::new();
+    let mut max_auto_over_unpiped = 0.0f64;
+    let mut best_win = 0.0f64;
+    let mut best_point = String::new();
+    let mut pipelined_chosen = 0usize;
+    let mut points = 0usize;
+
+    for (preset, topo) in &topos {
+        for &ctx in &contexts {
+            for &batch in &batches {
+                points += 1;
+                // Price every fixed candidate through the same round sim the
+                // serving path executes (collective + overlap model), so the
+                // comparison is round-level, not collective-only.
+                let timed: Vec<(AllReduceAlgo, f64)> = candidate_algos(topo)
+                    .into_iter()
+                    .map(|algo| {
+                        (algo, sim_batched_tree_decode(topo, batch, ctx, SHAPE, WIRE_BPE, algo).sim_time)
+                    })
+                    .collect();
+                let mut unpiped: Option<(AllReduceAlgo, f64)> = None;
+                for &(a, t) in timed.iter().filter(|(a, _)| a.chunks() == 1) {
+                    if unpiped.map_or(true, |(_, bt)| t < bt) {
+                        unpiped = Some((a, t));
+                    }
+                }
+                let Some((unpiped_algo, unpiped_t)) = unpiped else {
+                    anyhow::bail!("no unpipelined candidate for {preset}");
+                };
+                let auto_t =
+                    sim_batched_tree_decode(topo, batch, ctx, SHAPE, WIRE_BPE, AllReduceAlgo::Auto)
+                        .sim_time;
+                // The plan the Auto round above resolved to (memoized, so
+                // this is a cache hit on the very same entry).
+                let chosen = crate::planner::resolve(
+                    AllReduceAlgo::Auto,
+                    topo,
+                    batch * SHAPE.n_heads,
+                    SHAPE.d_head + 2,
+                    WIRE_BPE,
+                );
+                if chosen.chunks() > 1 {
+                    pipelined_chosen += 1;
+                }
+
+                // Contract 1: searching chunk counts never loses a round.
+                assert!(
+                    auto_t <= unpiped_t * 1.01,
+                    "{preset} p={} ctx={ctx} batch={batch}: pipelined-searched auto {auto_t} \
+                     worse than best unpipelined {} = {unpiped_t}",
+                    topo.world_size(),
+                    unpiped_algo.name()
+                );
+                max_auto_over_unpiped = max_auto_over_unpiped.max(auto_t / unpiped_t);
+                let win = unpiped_t / auto_t;
+                if win > best_win {
+                    best_win = win;
+                    best_point = format!(
+                        "{preset} p={} ctx={ctx} batch={batch} ({})",
+                        topo.world_size(),
+                        chosen.name()
+                    );
+                }
+
+                table.row(vec![
+                    preset.to_string(),
+                    topo.world_size().to_string(),
+                    fmt_tokens(ctx),
+                    batch.to_string(),
+                    fmt_bytes(payload_bytes(batch)),
+                    unpiped_algo.name(),
+                    fmt_secs(unpiped_t),
+                    fmt_secs(auto_t),
+                    chosen.name(),
+                    format!("{win:.3}x"),
+                ]);
+                let fixed_json: Vec<Json> = timed
+                    .iter()
+                    .map(|(a, t)| {
+                        Json::obj(vec![
+                            ("algo", Json::str(&a.name())),
+                            ("chunks", Json::num(a.chunks() as f64)),
+                            ("sim_s", Json::num(*t)),
+                        ])
+                    })
+                    .collect();
+                results.push(Json::obj(vec![
+                    ("preset", Json::str(preset)),
+                    ("gpus", Json::num(topo.world_size() as f64)),
+                    ("ctx", Json::num(ctx as f64)),
+                    ("batch", Json::num(batch as f64)),
+                    ("payload_bytes", Json::num(payload_bytes(batch) as f64)),
+                    ("best_unpipelined", Json::str(&unpiped_algo.name())),
+                    ("best_unpipelined_s", Json::num(unpiped_t)),
+                    ("auto_s", Json::num(auto_t)),
+                    ("chosen", Json::str(&chosen.name())),
+                    ("win", Json::num(win)),
+                    ("candidates", Json::arr(fixed_json)),
+                ]));
+            }
+        }
+    }
+    table.print();
+
+    // Contract 2: the sweep contains a bandwidth-bound crossover where
+    // pipelining wins big, and Auto actually picked a chunked schedule
+    // somewhere — otherwise the whole search dimension is dead weight.
+    assert!(
+        best_win >= 1.5,
+        "sweep must contain a bandwidth-bound point where pipelining wins >= 1.5x \
+         (best: {best_win:.3}x at {best_point})"
+    );
+    assert!(
+        pipelined_chosen >= 1,
+        "auto must choose a pipelined schedule at least once in the sweep"
+    );
+    println!(
+        "\npipelining in this sweep: auto chose a chunked schedule at {pipelined_chosen} of \
+         {points} points; best round-level win {best_win:.3}x at {best_point}; auto was never \
+         worse than the best unpipelined fixed algorithm (max ratio \
+         {max_auto_over_unpiped:.6})."
+    );
+    let path = crate::bench::write_results("pipeline", &Json::arr(results))?;
+    println!("results written to {}", path.display());
+    let s = crate::bench::write_bench_summary(
+        "pipeline",
+        &[
+            ("max_auto_over_unpiped", max_auto_over_unpiped),
+            ("best_win", best_win),
+            ("pipelined_chosen", pipelined_chosen as f64),
+            ("points", points as f64),
+        ],
+    )?;
+    println!("summary written to {}", s.display());
+    Ok(())
+}

@@ -93,6 +93,12 @@ pub struct Schedule {
     /// World size.
     pub p: usize,
     pub algo: &'static str,
+    /// Payload chunk count for pipelined (wave-structured) schedules: the
+    /// buffer is split into `chunks` contiguous block ranges and chunk c's
+    /// base step s is laid out at wave s + c, so chunk c+1's sends overlap
+    /// chunk c's reduce in virtual time. `<= 1` (including `Default`'s 0)
+    /// means unpipelined: every step moves whole-payload ranges.
+    pub chunks: usize,
 }
 
 impl Schedule {
@@ -171,15 +177,18 @@ pub fn execute_data(
             .iter()
             .map(|s| bufs[s.src][s.blocks.start * bl..s.blocks.end * bl].to_vec())
             .collect();
+        // Wire traffic first: one message per (src, dst) pair per step
+        // (empty-range sends move no bytes, pay no α, count no message).
+        for (src, dst, bytes) in
+            coalesced_sends(step, |s| (s.blocks.len() * bl) as u64 * wire_bytes_per_elem)
+        {
+            world.send(src, dst, bytes);
+        }
+        // Then land the data, per op, from the pre-step snapshots.
         for (sendop, payload) in step.iter().zip(payloads) {
             if payload.is_empty() {
-                // Empty-range send: no bytes move, so it must not pay the α
-                // latency term nor count as a message (generators no longer
-                // emit these; guard hand-built schedules too).
                 continue;
             }
-            let bytes = (payload.len() as u64) * wire_bytes_per_elem;
-            world.send(sendop.src, sendop.dst, bytes);
             let dst_seg = &mut bufs[sendop.dst][sendop.blocks.start * bl..sendop.blocks.end * bl];
             match sendop.mode {
                 RecvMode::Reduce => op.combine(dst_seg, &payload),
@@ -240,14 +249,19 @@ pub fn try_execute_data(
             .iter()
             .map(|s| bufs[s.src][s.blocks.start * bl..s.blocks.end * bl].to_vec())
             .collect();
+        // One retried wire message per (src, dst) pair per step, matching
+        // [`execute_data`]'s coalescing bit-for-bit in time and traffic.
+        for (src, dst, bytes) in
+            coalesced_sends(step, |s| (s.blocks.len() * bl) as u64 * wire_bytes_per_elem)
+        {
+            if let Err(e) = world.send_with_retry(src, dst, bytes) {
+                bufs.clone_from_slice(&entry_state);
+                return Err(e);
+            }
+        }
         for (sendop, payload) in step.iter().zip(payloads) {
             if payload.is_empty() {
                 continue;
-            }
-            let bytes = (payload.len() as u64) * wire_bytes_per_elem;
-            if let Err(e) = world.send_with_retry(sendop.src, sendop.dst, bytes) {
-                bufs.clone_from_slice(&entry_state);
-                return Err(e);
             }
             let dst_seg = &mut bufs[sendop.dst][sendop.blocks.start * bl..sendop.blocks.end * bl];
             match sendop.mode {
@@ -276,12 +290,10 @@ pub fn execute_cost(
     let before = world.net.counters();
     let t0 = world.barrier();
     for step in &schedule.steps {
-        for s in step {
-            let bytes = (s.blocks.len() * block_elems) as u64 * wire_bytes_per_elem;
-            if bytes == 0 {
-                continue; // zero-byte send: no α charge, no message counted
-            }
-            world.send(s.src, s.dst, bytes);
+        for (src, dst, bytes) in
+            coalesced_sends(step, |s| (s.blocks.len() * block_elems) as u64 * wire_bytes_per_elem)
+        {
+            world.send(src, dst, bytes);
         }
         step_barrier(world, step);
     }
@@ -305,6 +317,28 @@ pub fn execute_cost(
 /// synchronous-collective ablations.
 fn step_barrier(_world: &mut SimWorld, _step: &[SendOp]) {}
 
+/// Coalesce a step's sends by (src, dst) pair, in first-appearance order,
+/// summing byte counts. All sends within a step between the same pair of
+/// ranks travel as ONE wire message paying one α (a real transport posts
+/// them as a single grouped launch) — without this, pipelined schedules
+/// whose waves carry several chunk pieces over the same link would pay one
+/// launch latency per piece and inflate `*_msgs`. `bytes_of` maps an op to
+/// its wire size; zero-byte ops are skipped entirely (no α, no message).
+fn coalesced_sends(step: &[SendOp], bytes_of: impl Fn(&SendOp) -> u64) -> Vec<(Rank, Rank, u64)> {
+    let mut out: Vec<(Rank, Rank, u64)> = Vec::new();
+    for op in step {
+        let bytes = bytes_of(op);
+        if bytes == 0 {
+            continue;
+        }
+        match out.iter_mut().find(|(s, d, _)| *s == op.src && *d == op.dst) {
+            Some(slot) => slot.2 += bytes,
+            None => out.push((op.src, op.dst, bytes)),
+        }
+    }
+    out
+}
+
 /// High-level algorithm selector used by config / CLI / benches.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum AllReduceAlgo {
@@ -315,6 +349,15 @@ pub enum AllReduceAlgo {
     /// Topology-aware: intra-node reduce → inter-node tree allreduce among
     /// node leaders → intra-node broadcast (what NCCL does across DGX nodes).
     TwoLevel { inter_fanout: usize },
+    /// Chunked wave-pipelined k-ary tree: the payload is split into `chunks`
+    /// ranges that flow up (and back down) the tree in overlapping waves, so
+    /// the bandwidth term stops multiplying the depth — cost ≈ α·depth +
+    /// β·payload instead of (α + β·payload)·depth. See `docs/pipelining.md`.
+    PipelinedTree { fanout: usize, chunks: usize },
+    /// Chunked wave-pipelined ring (reduce-scatter + allgather per chunk).
+    /// The plain ring is already segment-pipelined, so this mostly prices
+    /// worse and exists to let the planner *prove* that, not assume it.
+    PipelinedRing { chunks: usize },
     /// Topology-aware automatic selection: the [`crate::planner`] prices
     /// every candidate schedule against the live topology's α–β model and
     /// picks the cheapest for the actual payload — the paper's Fig. 3
@@ -328,6 +371,8 @@ impl AllReduceAlgo {
             AllReduceAlgo::Ring => "ring".into(),
             AllReduceAlgo::Tree { fanout } => format!("tree{fanout}"),
             AllReduceAlgo::TwoLevel { inter_fanout } => format!("twolevel{inter_fanout}"),
+            AllReduceAlgo::PipelinedTree { fanout, chunks } => format!("tree{fanout}p{chunks}"),
+            AllReduceAlgo::PipelinedRing { chunks } => format!("ringp{chunks}"),
             AllReduceAlgo::Auto => "auto".into(),
         }
     }
@@ -335,7 +380,9 @@ impl AllReduceAlgo {
     /// Parse a selector name. `tree<k>` / `twolevel<k>` accept any fanout
     /// k ≥ 2, so every algorithm the planner can choose (and `plan-bench`
     /// can print) is expressible — e.g. `allreduce=tree3` pins the planner's
-    /// `tree3` decision. Bare `tree` / `twolevel` mean k = 2.
+    /// `tree3` decision. Bare `tree` / `twolevel` mean k = 2. Pipelined
+    /// variants spell the chunk count with a `p<c>` suffix (`tree2p4`,
+    /// `ringp8`); c ≥ 2, since one chunk IS the unpipelined algorithm.
     pub fn parse(s: &str) -> anyhow::Result<AllReduceAlgo> {
         let fanout_of = |suffix: &str| -> anyhow::Result<usize> {
             let k: usize = suffix
@@ -344,18 +391,39 @@ impl AllReduceAlgo {
             anyhow::ensure!(k >= 2, "allreduce algo '{s}': fanout must be >= 2");
             Ok(k)
         };
+        let chunks_of = |suffix: &str| -> anyhow::Result<usize> {
+            let c: usize = suffix
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad chunk count '{suffix}' in allreduce algo '{s}'"))?;
+            anyhow::ensure!(
+                c >= 2,
+                "allreduce algo '{s}': chunks must be >= 2 (one chunk is the unpipelined spelling)"
+            );
+            Ok(c)
+        };
         match s {
             "auto" => Ok(AllReduceAlgo::Auto),
             "ring" => Ok(AllReduceAlgo::Ring),
             "tree" => Ok(AllReduceAlgo::Tree { fanout: 2 }),
             "twolevel" => Ok(AllReduceAlgo::TwoLevel { inter_fanout: 2 }),
             other => {
-                if let Some(k) = other.strip_prefix("twolevel") {
+                if let Some(c) = other.strip_prefix("ringp") {
+                    Ok(AllReduceAlgo::PipelinedRing { chunks: chunks_of(c)? })
+                } else if let Some(k) = other.strip_prefix("twolevel") {
                     Ok(AllReduceAlgo::TwoLevel { inter_fanout: fanout_of(k)? })
                 } else if let Some(k) = other.strip_prefix("tree") {
-                    Ok(AllReduceAlgo::Tree { fanout: fanout_of(k)? })
+                    match k.split_once('p') {
+                        Some((f, c)) => Ok(AllReduceAlgo::PipelinedTree {
+                            fanout: fanout_of(f)?,
+                            chunks: chunks_of(c)?,
+                        }),
+                        None => Ok(AllReduceAlgo::Tree { fanout: fanout_of(k)? }),
+                    }
                 } else {
-                    anyhow::bail!("unknown allreduce algo '{other}' (auto | ring | tree[k] | twolevel[k])")
+                    anyhow::bail!(
+                        "unknown allreduce algo '{other}' (auto | ring | ringp<c> | tree[k] | \
+                         tree<k>p<c> | twolevel[k])"
+                    )
                 }
             }
         }
@@ -364,6 +432,16 @@ impl AllReduceAlgo {
     /// True for the planner-resolved selector.
     pub fn is_auto(&self) -> bool {
         matches!(self, AllReduceAlgo::Auto)
+    }
+
+    /// Payload chunk count this algorithm pipelines with (1 for the
+    /// unpipelined algorithms — a single chunk IS the unpipelined case).
+    pub fn chunks(&self) -> usize {
+        match *self {
+            AllReduceAlgo::PipelinedTree { chunks, .. }
+            | AllReduceAlgo::PipelinedRing { chunks } => chunks,
+            _ => 1,
+        }
     }
 
     /// Build the schedule for a FIXED algorithm on the given world. `Auto`
@@ -379,6 +457,12 @@ impl AllReduceAlgo {
             }
             AllReduceAlgo::TwoLevel { inter_fanout } => {
                 two_level_allreduce_schedule(world.topology(), nblocks, inter_fanout)
+            }
+            AllReduceAlgo::PipelinedTree { fanout, chunks } => {
+                pipelined_tree_allreduce_schedule(world.world_size(), nblocks, fanout, chunks)
+            }
+            AllReduceAlgo::PipelinedRing { chunks } => {
+                Ok(pipelined_ring_allreduce_schedule(world.world_size(), nblocks, chunks))
             }
             AllReduceAlgo::Auto => anyhow::bail!(
                 "Auto has no payload-independent schedule; call schedule_for(world, nblocks, \
@@ -616,6 +700,7 @@ mod tests {
             nblocks: 4,
             p: 4,
             algo: "hand",
+            chunks: 1,
         };
         let mut w1 = world(1, 4);
         let s_cost = execute_cost(&mut w1, &sched, 1, 2);
@@ -709,6 +794,11 @@ mod tests {
             AllReduceAlgo::TwoLevel { inter_fanout: 2 },
             AllReduceAlgo::TwoLevel { inter_fanout: 3 },
             AllReduceAlgo::TwoLevel { inter_fanout: 4 },
+            AllReduceAlgo::PipelinedTree { fanout: 2, chunks: 2 },
+            AllReduceAlgo::PipelinedTree { fanout: 2, chunks: 8 },
+            AllReduceAlgo::PipelinedTree { fanout: 3, chunks: 4 },
+            AllReduceAlgo::PipelinedRing { chunks: 2 },
+            AllReduceAlgo::PipelinedRing { chunks: 8 },
         ] {
             assert_eq!(AllReduceAlgo::parse(&algo.name()).unwrap(), algo, "{}", algo.name());
         }
@@ -718,8 +808,12 @@ mod tests {
             AllReduceAlgo::parse("twolevel").unwrap(),
             AllReduceAlgo::TwoLevel { inter_fanout: 2 }
         );
-        // Degenerate fanouts and junk are rejected with clear errors.
-        for bad in ["tree0", "tree1", "twolevel1", "treex", "twolevel-3", "star"] {
+        // Degenerate fanouts, degenerate chunk counts, and junk are rejected
+        // with clear errors ("tree2p1" must be spelled "tree2").
+        for bad in [
+            "tree0", "tree1", "twolevel1", "treex", "twolevel-3", "star", "ringp0", "ringp1",
+            "ringpx", "tree2p0", "tree2p1", "tree1p4", "treep4", "tree2p",
+        ] {
             assert!(AllReduceAlgo::parse(bad).is_err(), "{bad} must not parse");
         }
     }
@@ -757,6 +851,12 @@ mod tests {
             AllReduceAlgo::TwoLevel { inter_fanout: 2 },
             AllReduceAlgo::TwoLevel { inter_fanout: 3 },
             AllReduceAlgo::TwoLevel { inter_fanout: 4 },
+            AllReduceAlgo::PipelinedTree { fanout: 2, chunks: 2 },
+            AllReduceAlgo::PipelinedTree { fanout: 2, chunks: 4 },
+            AllReduceAlgo::PipelinedTree { fanout: 2, chunks: 8 },
+            AllReduceAlgo::PipelinedRing { chunks: 2 },
+            AllReduceAlgo::PipelinedRing { chunks: 4 },
+            AllReduceAlgo::PipelinedRing { chunks: 8 },
         ];
         let mut best = f64::INFINITY;
         let mut matched = false;
@@ -776,5 +876,92 @@ mod tests {
             auto.sim_time,
             best
         );
+    }
+
+    #[test]
+    fn same_peer_sends_coalesce_into_one_message() {
+        // Regression (ISSUE 8 satellite): two block ranges travelling
+        // between the same pair of ranks in one step used to pay one α each
+        // and count as two messages; they must coalesce into ONE wire
+        // message whose cost equals a single send of the summed bytes.
+        let split = Schedule {
+            steps: vec![vec![
+                SendOp { src: 0, dst: 1, blocks: 0..2, mode: RecvMode::Reduce },
+                SendOp { src: 0, dst: 1, blocks: 3..5, mode: RecvMode::Reduce },
+            ]],
+            nblocks: 6,
+            p: 2,
+            algo: "hand",
+            chunks: 1,
+        };
+        let merged = Schedule {
+            steps: vec![vec![SendOp { src: 0, dst: 1, blocks: 0..4, mode: RecvMode::Reduce }]],
+            nblocks: 6,
+            p: 2,
+            algo: "hand",
+            chunks: 1,
+        };
+        let mut w1 = world(1, 2);
+        let c_split = execute_cost(&mut w1, &split, 1, 2);
+        let mut w2 = world(1, 2);
+        let c_merged = execute_cost(&mut w2, &merged, 1, 2);
+        assert_eq!(c_split.traffic.total_msgs(), 1, "split ranges must be one message");
+        assert_eq!(c_split.traffic, c_merged.traffic);
+        assert!((c_split.sim_time - c_merged.sim_time).abs() < 1e-18);
+
+        // Data and fault-aware executors agree, and the data still lands
+        // per-range (blocks 2 and 5 untouched).
+        let bufs0: Vec<Vec<f32>> = vec![vec![1.0; 6], vec![10.0; 6]];
+        let mut w3 = world(1, 2);
+        let mut a = bufs0.clone();
+        let d = execute_data(&mut w3, &split, &mut a, &SumOp, 2);
+        assert_eq!(d.traffic.total_msgs(), 1);
+        assert!((d.sim_time - c_split.sim_time).abs() < 1e-18);
+        assert_eq!(a[1], vec![11.0, 11.0, 10.0, 11.0, 11.0, 10.0]);
+        let mut w4 = world(1, 2);
+        let mut b = bufs0.clone();
+        let t = try_execute_data(&mut w4, &split, &mut b, &SumOp, 2).unwrap();
+        assert_eq!(t.traffic.total_msgs(), 1);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn pipelined_allreduce_bit_identical_to_unpipelined() {
+        // Chunking only re-times the wire traffic; every block still meets
+        // its contributors in the same order, so the reduction must be
+        // bit-identical — not merely close — to the unpipelined algorithm.
+        let mut rng = Rng::seed(18);
+        let nblocks = 40;
+        let bufs0 = random_bufs(&mut rng, 8, nblocks);
+        for (plain, pipelined) in [
+            (AllReduceAlgo::Tree { fanout: 2 }, AllReduceAlgo::PipelinedTree { fanout: 2, chunks: 4 }),
+            (AllReduceAlgo::Ring, AllReduceAlgo::PipelinedRing { chunks: 3 }),
+        ] {
+            let mut wp = world(2, 4);
+            let mut want = bufs0.clone();
+            allreduce(&mut wp, plain, &mut want, &SumOp, 2).unwrap();
+            let mut wq = world(2, 4);
+            let mut got = bufs0.clone();
+            let stats = allreduce(&mut wq, pipelined, &mut got, &SumOp, 2).unwrap();
+            assert_eq!(got, want, "{} diverges from {}", pipelined.name(), plain.name());
+            assert!(stats.sim_time > 0.0);
+        }
+    }
+
+    #[test]
+    fn pipelined_tree_beats_plain_tree_on_bandwidth_bound_payload() {
+        // The tentpole's cost claim: with the payload chunked into C waves,
+        // the tree's bandwidth term stops multiplying its depth. On a
+        // payload large enough that β dominates α, the pipelined tree must
+        // price strictly (and substantially) below the unpipelined one.
+        let nblocks = 1 << 16;
+        let mut wp = world(1, 16);
+        let plain = AllReduceAlgo::Tree { fanout: 2 }.schedule(&wp, nblocks).unwrap();
+        let tp = execute_cost(&mut wp, &plain, 1, 2).sim_time;
+        let mut wq = world(1, 16);
+        let piped =
+            AllReduceAlgo::PipelinedTree { fanout: 2, chunks: 8 }.schedule(&wq, nblocks).unwrap();
+        let tq = execute_cost(&mut wq, &piped, 1, 2).sim_time;
+        assert!(tq < tp * 0.67, "pipelined {tq} vs plain {tp}: expected ≥1.5x win");
     }
 }

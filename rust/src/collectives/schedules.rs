@@ -68,7 +68,7 @@ pub fn ring_allreduce_schedule(p: usize, nblocks: usize) -> Schedule {
             push_step(&mut steps, ops);
         }
     }
-    Schedule { steps, nblocks, p, algo: "ring" }
+    Schedule { steps, nblocks, p, algo: "ring", chunks: 1 }
 }
 
 // ---- k-ary tree helpers ---------------------------------------------------
@@ -125,7 +125,7 @@ pub fn tree_allreduce_schedule(p: usize, nblocks: usize, fanout: usize) -> anyho
     let ranks: Vec<Rank> = (0..p).collect();
     let mut steps = tree_reduce_steps(&ranks, nblocks, fanout);
     steps.extend(tree_broadcast_steps(&ranks, nblocks, fanout));
-    Ok(Schedule { steps, nblocks, p, algo: "tree" })
+    Ok(Schedule { steps, nblocks, p, algo: "tree", chunks: 1 })
 }
 
 /// Reduce phase of a k-ary tree over an explicit rank set (`members[0]` is
@@ -239,7 +239,7 @@ pub fn two_level_allreduce_schedule(
     }
     merge_parallel(&mut steps, node_bcast);
 
-    Ok(Schedule { steps, nblocks, p, algo: "twolevel" })
+    Ok(Schedule { steps, nblocks, p, algo: "twolevel", chunks: 1 })
 }
 
 /// Append per-group step lists, merging same-index steps across groups
@@ -265,7 +265,7 @@ pub fn broadcast_schedule(p: usize, root: Rank, nblocks: usize) -> Schedule {
     let reindex = |v: usize| (v + root) % p;
     let mut steps = Vec::new();
     if nblocks == 0 {
-        return Schedule { steps, nblocks, p, algo: "broadcast" };
+        return Schedule { steps, nblocks, p, algo: "broadcast", chunks: 1 };
     }
     let mut informed = 1usize;
     while informed < p {
@@ -281,7 +281,7 @@ pub fn broadcast_schedule(p: usize, root: Rank, nblocks: usize) -> Schedule {
         steps.push(ops);
         informed *= 2;
     }
-    Schedule { steps, nblocks, p, algo: "broadcast" }
+    Schedule { steps, nblocks, p, algo: "broadcast", chunks: 1 }
 }
 
 /// One ring-shift round: every rank forwards its full buffer to the next
@@ -297,7 +297,74 @@ pub fn ring_shift_schedule(p: usize, nblocks: usize) -> Schedule {
         }
         steps.push(ops);
     }
-    Schedule { steps, nblocks, p, algo: "ring_shift" }
+    Schedule { steps, nblocks, p, algo: "ring_shift", chunks: 1 }
+}
+
+// ---- chunked wave pipelining ---------------------------------------------
+
+/// Chunked wave-pipelined tree allreduce: the payload is split into
+/// `chunks` contiguous block ranges ([`segment`]`(nblocks, chunks, c)`) and
+/// chunk c runs the base tree schedule offset by c waves — chunk c's base
+/// step s lands at wave s + c. Because the per-chunk block ranges are
+/// disjoint, waves carry ops from several chunks race-free, and each
+/// chunk's internal step order (its dependency chain) is preserved; the
+/// executor's per-rank clock merge then prices the overlap, collapsing the
+/// tree's cost from (α + β·payload)·depth to ≈ α·(depth + chunks − 1) +
+/// β·payload·(depth + chunks − 1)/chunks. Effective chunk count is clamped
+/// to `nblocks` (can't split finer than a block) and to ≥ 1; a clamp to 1
+/// reproduces the base structure under the pipelined algo tag.
+pub fn pipelined_tree_allreduce_schedule(
+    p: usize,
+    nblocks: usize,
+    fanout: usize,
+    chunks: usize,
+) -> anyhow::Result<Schedule> {
+    let base = tree_allreduce_schedule(p, nblocks, fanout)?;
+    Ok(pipeline_schedule(base, chunks, "tree_pipelined"))
+}
+
+/// Chunked wave-pipelined ring allreduce (same wave construction as
+/// [`pipelined_tree_allreduce_schedule`] over the ring base schedule). The
+/// plain ring is already segment-pipelined around the ring, so this
+/// generally prices *worse* — it exists so the planner can prove that from
+/// the α–β model instead of assuming it.
+pub fn pipelined_ring_allreduce_schedule(p: usize, nblocks: usize, chunks: usize) -> Schedule {
+    pipeline_schedule(ring_allreduce_schedule(p, nblocks), chunks, "ring_pipelined")
+}
+
+/// Wave-pipeline any base schedule: chunk c's copy of base step s is laid
+/// out at wave s + c, with every op's block range intersected with chunk
+/// c's range. Within a wave, chunk 0's (deepest-advanced) ops come first so
+/// a parent's forward of an already-received chunk is posted before the
+/// next chunk's arrival can (falsely) delay its departure clock. Per-block
+/// contributor order is exactly the base schedule's, so data execution is
+/// bit-identical to the unpipelined algorithm.
+fn pipeline_schedule(base: Schedule, chunks: usize, algo: &'static str) -> Schedule {
+    let nblocks = base.nblocks;
+    let c_eff = chunks.min(nblocks).max(1);
+    let depth = base.steps.len();
+    let mut steps = Vec::new();
+    if depth > 0 {
+        for wave in 0..depth + c_eff - 1 {
+            let mut ops = Vec::new();
+            for c in 0..c_eff {
+                let Some(s) = wave.checked_sub(c) else { break };
+                if s >= depth {
+                    continue; // chunk c already ran this base step at an earlier wave
+                }
+                let crange = segment(nblocks, c_eff, c);
+                for op in &base.steps[s] {
+                    let lo = op.blocks.start.max(crange.start);
+                    let hi = op.blocks.end.min(crange.end);
+                    if lo < hi {
+                        ops.push(SendOp { src: op.src, dst: op.dst, blocks: lo..hi, mode: op.mode });
+                    }
+                }
+            }
+            push_step(&mut steps, ops);
+        }
+    }
+    Schedule { steps, nblocks, p: base.p, algo, chunks: c_eff }
 }
 
 #[cfg(test)]
@@ -509,6 +576,117 @@ mod tests {
             // Dropping empty sends loses no volume: every segment still
             // travels p-1 times per phase, so total = 2·(p-1)·nblocks.
             assert_eq!(s.total_blocks_sent(), 2 * (p - 1) * nblocks);
+        }
+    }
+
+    #[test]
+    fn pipelined_schedules_validate_partition_and_preserve_volume() {
+        for p in [1usize, 2, 5, 8, 16] {
+            for chunks in [1usize, 2, 3, 8] {
+                for nblocks in [1usize, 13, 64] {
+                    let tree = pipelined_tree_allreduce_schedule(p, nblocks, 2, chunks).unwrap();
+                    let ring = pipelined_ring_allreduce_schedule(p, nblocks, chunks);
+                    for (s, base_volume) in [
+                        (&tree, tree_allreduce_schedule(p, nblocks, 2).unwrap().total_blocks_sent()),
+                        (&ring, ring_allreduce_schedule(p, nblocks).total_blocks_sent()),
+                    ] {
+                        s.validate().unwrap();
+                        assert_eq!(s.chunks, chunks.min(nblocks).max(1));
+                        // Chunking re-times the traffic; it must not change
+                        // how much of it there is.
+                        assert_eq!(s.total_blocks_sent(), base_volume, "p={p} chunks={chunks}");
+                        // Every op lies entirely within one chunk's range.
+                        for step in &s.steps {
+                            for op in step {
+                                assert!(
+                                    (0..s.chunks).any(|c| {
+                                        let r = segment(nblocks, s.chunks, c);
+                                        op.blocks.start >= r.start && op.blocks.end <= r.end
+                                    }),
+                                    "p={p} chunks={chunks}: op {:?} spans chunks",
+                                    op.blocks
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pipelined_wave_count_is_depth_plus_chunks_minus_one() {
+        for (p, chunks) in [(8usize, 4usize), (16, 8), (5, 2)] {
+            let nblocks = 64;
+            let base = tree_allreduce_schedule(p, nblocks, 2).unwrap();
+            let piped = pipelined_tree_allreduce_schedule(p, nblocks, 2, chunks).unwrap();
+            assert!(
+                piped.n_steps() <= base.n_steps() + chunks - 1,
+                "p={p} chunks={chunks}: {} waves > {} + {}",
+                piped.n_steps(),
+                base.n_steps(),
+                chunks - 1
+            );
+            assert!(piped.n_steps() >= base.n_steps());
+            let ring_base = ring_allreduce_schedule(p, nblocks);
+            let ring_piped = pipelined_ring_allreduce_schedule(p, nblocks, chunks);
+            assert!(ring_piped.n_steps() <= ring_base.n_steps() + chunks - 1);
+        }
+    }
+
+    #[test]
+    fn pipelined_degenerate_block_counts_emit_nothing() {
+        // Same contract as the base generators: nblocks == 0 means no steps,
+        // and no wave may hold an empty step or an empty-range send.
+        for p in [1usize, 2, 8] {
+            assert_eq!(pipelined_ring_allreduce_schedule(p, 0, 4).n_steps(), 0);
+            assert_eq!(pipelined_tree_allreduce_schedule(p, 0, 2, 4).unwrap().n_steps(), 0);
+        }
+        for (p, nblocks, chunks) in [(8usize, 3usize, 8usize), (16, 5, 4), (7, 2, 3)] {
+            let s = pipelined_ring_allreduce_schedule(p, nblocks, chunks);
+            for (i, step) in s.steps.iter().enumerate() {
+                assert!(!step.is_empty(), "p={p} wave {i} empty");
+                for op in step {
+                    assert!(!op.blocks.is_empty(), "p={p} wave {i} empty-range send");
+                }
+            }
+            assert_eq!(s.total_blocks_sent(), 2 * (p - 1) * nblocks);
+        }
+        // Degenerate fanout still errors through the pipelined entry point.
+        assert!(pipelined_tree_allreduce_schedule(8, 16, 1, 4).is_err());
+    }
+
+    #[test]
+    fn pipelined_chunks_preserve_per_chunk_step_order() {
+        // Each chunk's filtered sub-schedule must replay the base schedule's
+        // step sequence restricted to that chunk's range — that is the
+        // dependency chain the verifier's per-chunk conservation pass checks.
+        let (p, nblocks, chunks) = (8usize, 24usize, 3usize);
+        let base = tree_allreduce_schedule(p, nblocks, 2).unwrap();
+        let piped = pipelined_tree_allreduce_schedule(p, nblocks, 2, chunks).unwrap();
+        for c in 0..chunks {
+            let crange = segment(nblocks, chunks, c);
+            let restrict = |s: &Schedule| -> Vec<Vec<SendOp>> {
+                s.steps
+                    .iter()
+                    .map(|step| {
+                        step.iter()
+                            .filter_map(|op| {
+                                let lo = op.blocks.start.max(crange.start);
+                                let hi = op.blocks.end.min(crange.end);
+                                (lo < hi).then(|| SendOp {
+                                    src: op.src,
+                                    dst: op.dst,
+                                    blocks: lo..hi,
+                                    mode: op.mode,
+                                })
+                            })
+                            .collect::<Vec<_>>()
+                    })
+                    .filter(|v| !v.is_empty())
+                    .collect()
+            };
+            assert_eq!(restrict(&piped), restrict(&base), "chunk {c} reordered");
         }
     }
 

@@ -22,8 +22,12 @@
 //!                               against baselines in B (>10% = regression)
 //!   verify-schedules [--quick] — statically verify every planner-emittable
 //!                               collective schedule (all algos × p ∈ 1..=16
-//!                               × 3 presets × degraded variants) and write
-//!                               BENCH_verify.json
+//!                               × 3 presets × degraded variants, pipelined
+//!                               included) and write BENCH_verify.json
+//!   pipeline-bench [--quick]  — chunked-pipelining ablation: pipelined-
+//!                               searched Auto vs best unpipelined fixed
+//!                               algorithm per (preset, p, ctx, batch);
+//!                               asserts never-worse + a ≥1.5x crossover
 //!
 //! Options are `key=value` pairs applied to the RunSpec (see config module),
 //! plus `--config <file.json>`, `--strategy auto|tree|ring|single` (sugar
@@ -72,6 +76,10 @@ fn main() {
             cmd_verify_schedules()
         }
         "plan-bench" => parse_spec(&args[1..]).and_then(|spec| cmd_plan_bench(&spec)),
+        "pipeline-bench" => {
+            // `--quick` shrinks the sweep exactly like the bench target.
+            tree_attention::bench::pipeline::run(args[1..].iter().any(|a| a == "--quick"))
+        }
         "strategy-bench" => parse_spec(&args[1..]).and_then(|spec| cmd_strategy_bench(&spec)),
         "sweep" => parse_spec(&args[1..]).and_then(|spec| cmd_sweep(&spec)),
         "help" | "--help" | "-h" => {
@@ -92,7 +100,7 @@ fn main() {
 fn print_help() {
     println!(
         "treeattn — Tree Attention reproduction\n\
-         usage: treeattn <info|validate|decode|serve|serve-bench|chaos-bench|bench-compare|verify-schedules|plan-bench|strategy-bench|sweep> [--config f.json] [key=value ...]\n\
+         usage: treeattn <info|validate|decode|serve|serve-bench|chaos-bench|bench-compare|verify-schedules|plan-bench|pipeline-bench|strategy-bench|sweep> [--config f.json] [key=value ...]\n\
          keys: strategy=auto|tree|ring|single  (auto = strategy planner; --strategy X is sugar)\n\
          \x20     allreduce=auto|ring|tree|twolevel  (auto = topology-aware collective planner)\n\
          \x20     model.preset=test-8m|tiny-124m  cluster.preset=h100_dgx|mi300x|rtx4090_pcie\n\
@@ -912,6 +920,7 @@ fn planner_counters_json() -> Json {
         ("collective_evictions", Json::num(c.collective_evictions as f64)),
         ("collective_verified", Json::num(c.collective_verified as f64)),
         ("collective_rejected", Json::num(c.collective_rejected as f64)),
+        ("collective_pipelined_wins", Json::num(c.collective_pipelined_wins as f64)),
         ("strategy_hits", Json::num(c.strategy_hits as f64)),
         ("strategy_misses", Json::num(c.strategy_misses as f64)),
         ("strategy_plans", Json::num(c.strategy_plans as f64)),
@@ -1062,7 +1071,12 @@ fn cmd_verify_schedules() -> anyhow::Result<()> {
                             .schedule(&world, nblocks)
                             .map_err(|e| e.to_string())
                             .and_then(|sch| {
-                                verifier::verify_allreduce(&sch).map_err(|e| e.to_string())
+                                // Dispatches on the schedule tag: plain
+                                // allreduce conservation for ring/tree/
+                                // twolevel, the per-chunk partition model
+                                // (and double-buffer scratch budget) for
+                                // the pipelined candidates.
+                                verifier::verify_any(&sch).map_err(|e| e.to_string())
                             });
                         match outcome {
                             Ok(report) => {

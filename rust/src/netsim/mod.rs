@@ -554,6 +554,17 @@ impl SimWorld {
         self.clocks[rank] += secs;
     }
 
+    /// Raise `rank`'s clock to at least `t` (no-op when already past it).
+    /// The compute/communication overlap model uses this to floor a rank
+    /// at the completion time of work that was only partially charged
+    /// before a pipelined collective: overlap can hide communication
+    /// behind compute (and vice versa), never shorten the work itself.
+    pub fn advance_to(&mut self, rank: Rank, t: f64) {
+        if self.clocks[rank] < t {
+            self.clocks[rank] = t;
+        }
+    }
+
     /// Synchronize all ranks to the maximum clock; returns that time.
     pub fn barrier(&mut self) -> f64 {
         let t = self.max_clock();

@@ -53,7 +53,7 @@ pub struct CandidateCost {
     /// Total bytes moved (both tiers).
     pub bytes: u64,
     /// True when the schedule passed static verification
-    /// ([`crate::verifier::verify_allreduce`]); rejected candidates can
+    /// ([`crate::verifier::verify_any`]); rejected candidates can
     /// never win the argmin.
     pub verified: bool,
 }
@@ -134,6 +134,16 @@ pub fn candidate_algos(topo: &Topology) -> Vec<AllReduceAlgo> {
             v.push(AllReduceAlgo::TwoLevel { inter_fanout: k });
         }
     }
+    // Chunked wave-pipelined variants: chunk count is a first-class
+    // candidate dimension (chunks = 1 IS the plain schedules above), so
+    // `Auto` turns pipelining on exactly where the α–β model says the
+    // chunked critical path beats both the plain tree (bandwidth-serial)
+    // and the ring (latency-serial). Enumerated after the plain variants
+    // so cost ties keep the unpipelined schedule.
+    for chunks in [2usize, 4, 8] {
+        v.push(AllReduceAlgo::PipelinedTree { fanout: 2, chunks });
+        v.push(AllReduceAlgo::PipelinedRing { chunks });
+    }
     v
 }
 
@@ -152,6 +162,9 @@ pub struct CollectivePlanner {
     pub verified: u64,
     /// Candidate schedules rejected by the verifier (each is also logged).
     pub rejected: u64,
+    /// Plans whose winning algorithm is a pipelined (chunks > 1) variant —
+    /// how often the chunk-count search dimension actually pays off.
+    pub pipelined_wins: u64,
 }
 
 impl CollectivePlanner {
@@ -201,6 +214,9 @@ impl CollectivePlanner {
                 let (plan, verified, rejected) = compute_plan(topo, req);
                 self.verified += verified;
                 self.rejected += rejected;
+                if plan.chosen.chunks() > 1 {
+                    self.pipelined_wins += 1;
+                }
                 e.insert(plan)
             }
         }
@@ -230,7 +246,10 @@ fn compute_plan(topo: &Topology, req: PlanRequest) -> (Plan, u64, u64) {
     for algo in candidate_algos(topo) {
         let mut world = SimWorld::new(topo.clone());
         let sched = match algo.schedule(&world, req.nblocks) {
-            Ok(s) => match crate::verifier::verify_allreduce(&s) {
+            // `verify_any` dispatches on the schedule tag: plain allreduce
+            // conservation for ring/tree/twolevel, the per-chunk partition
+            // and conservation model for the pipelined variants.
+            Ok(s) => match crate::verifier::verify_any(&s) {
                 Ok(_) => Some(s),
                 Err(e) => {
                     crate::tlog!(
@@ -372,15 +391,18 @@ impl StrategyRequest {
         self
     }
 
-    /// Round `ctx` up to the next power of two (min 16) — the serving-path
-    /// quantization. A sequence's context grows every token, so planning at
-    /// exact ctx would miss the cache every round and grow it without
-    /// bound; cost crossovers are orders of magnitude coarser than one
-    /// token, so pow2 granularity changes no observable decision while
+    /// Round `ctx` up to the next power of two (min 16) and `batch` up to
+    /// the next power of two — the serving-path quantization. A sequence's
+    /// context grows every token and a continuous batcher's width jitters
+    /// with every admit/retire, so planning at exact (ctx, batch) would
+    /// miss the cache every round and grow it without bound; cost
+    /// crossovers are orders of magnitude coarser than one token or one
+    /// session, so pow2 granularity changes no observable decision while
     /// making steady-state serving all cache hits. Benches that check the
     /// auto-vs-fixed contract at exact points deliberately do NOT bucket.
     pub fn bucketed(mut self) -> StrategyRequest {
         self.ctx = self.ctx.next_power_of_two().max(16);
+        self.batch = self.batch.next_power_of_two().max(1);
         self
     }
 
@@ -633,6 +655,8 @@ pub struct PlannerCounters {
     /// memoization / rejected by it (see `rust/src/verifier/`).
     pub collective_verified: u64,
     pub collective_rejected: u64,
+    /// Collective plans won by a pipelined (chunks > 1) candidate.
+    pub collective_pipelined_wins: u64,
     pub strategy_hits: u64,
     pub strategy_misses: u64,
     pub strategy_plans: usize,
@@ -646,9 +670,17 @@ pub struct PlannerCounters {
 pub fn planner_counters() -> PlannerCounters {
     // Lock one cache at a time (and in the same order as the planning path
     // never takes) to keep this deadlock-free.
-    let (collective_hits, collective_misses, collective_plans, collective_evictions, collective_verified, collective_rejected) = {
+    let (
+        collective_hits,
+        collective_misses,
+        collective_plans,
+        collective_evictions,
+        collective_verified,
+        collective_rejected,
+        collective_pipelined_wins,
+    ) = {
         let p = lock(global_planner());
-        (p.hits, p.misses, p.cache_len(), p.evictions, p.verified, p.rejected)
+        (p.hits, p.misses, p.cache_len(), p.evictions, p.verified, p.rejected, p.pipelined_wins)
     };
     let (strategy_hits, strategy_misses, strategy_plans, strategy_evictions, strategy_verified, strategy_rejected) = {
         let p = lock(global_strategy_planner());
@@ -661,6 +693,7 @@ pub fn planner_counters() -> PlannerCounters {
         collective_evictions,
         collective_verified,
         collective_rejected,
+        collective_pipelined_wins,
         strategy_hits,
         strategy_misses,
         strategy_plans,
@@ -1094,6 +1127,61 @@ mod tests {
         let tree_point = strategy_plan_for(&Topology::h100_dgx(4), gqa_request(8, 128_000));
         assert_eq!(tree_point.chosen, Strategy::Tree);
         assert!(cost(&tree_point, Strategy::Tree) < cost(&tree_point, Strategy::Ring));
+    }
+
+    #[test]
+    fn bucketed_batches_share_plan_entries() {
+        // A continuous batcher's width jitters with every admit/retire;
+        // ragged batches in one pow2 bucket must hit the same entry.
+        let mut planner = StrategyPlanner::new();
+        let topo = Topology::h100_dgx(2);
+        for batch in 5..=8 {
+            planner.plan(&topo, gqa_request(batch, 4096).bucketed());
+        }
+        assert_eq!(planner.cache_len(), 1, "one pow2 batch bucket, one entry");
+        assert_eq!((planner.misses, planner.hits), (1, 3), "ragged widths are cache hits");
+        // Bucketing rounds batch up to the next power of two.
+        assert_eq!(gqa_request(5, 4096).bucketed().batch, 8);
+        assert_eq!(gqa_request(8, 4096).bucketed().batch, 8);
+        assert_eq!(gqa_request(9, 4096).bucketed().batch, 16);
+    }
+
+    #[test]
+    fn pipelined_candidates_are_priced_and_verified() {
+        // The chunk-count dimension is searched: every pipelined variant
+        // (tree2 x {2,4,8} chunks + ring x {2,4,8} chunks) is priced
+        // finite and statically proven before it can win the argmin.
+        let topo = Topology::h100_dgx(2);
+        let req = PlanRequest { nblocks: 2048, block_elems: 130, wire_bpe: 2 };
+        let (plan, verified, rejected) = compute_plan(&topo, req);
+        assert_eq!(rejected, 0);
+        assert_eq!(verified as usize, plan.candidates.len());
+        let piped: Vec<&CandidateCost> =
+            plan.candidates.iter().filter(|c| c.algo.chunks() > 1).collect();
+        assert_eq!(piped.len(), 6, "three chunk counts x two pipelined families");
+        for c in &piped {
+            assert!(c.verified, "{} must verify", c.algo.name());
+            assert!(c.predicted_s.is_finite(), "{} must price finite", c.algo.name());
+        }
+    }
+
+    #[test]
+    fn pipelined_win_counter_tracks_chosen_plans() {
+        // The counter moves exactly when a fresh plan is won by a
+        // chunks > 1 candidate, and never on cache hits.
+        let mut planner = CollectivePlanner::new();
+        let topo = topo_of("pipewin", 1, 16, LinkSpec::pcie4(), LinkSpec::roce());
+        let mut expect = 0u64;
+        for shift in 0..14 {
+            let req = PlanRequest { nblocks: 4usize << shift, block_elems: 130, wire_bpe: 2 };
+            let plan = planner.plan(&topo, req);
+            if plan.chosen.chunks() > 1 {
+                expect += 1;
+            }
+            planner.plan(&topo, req);
+        }
+        assert_eq!(planner.pipelined_wins, expect);
+        assert_eq!(planner.hits, 14, "second lookups must all hit");
     }
 
     #[test]

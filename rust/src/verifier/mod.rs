@@ -32,6 +32,9 @@
 //!    primary buffer + in-flight scratch ≤ 2× the payload.
 //!
 //! Entry points: [`verify_allreduce`] for reduction schedules,
+//! [`verify_pipelined_allreduce_with_budget`] for chunked wave-pipelined
+//! reductions (adds the chunk-partition and per-chunk conservation model,
+//! against the double-buffer scratch bound),
 //! [`verify_any`] to dispatch on [`Schedule::algo`], and
 //! [`verify_planner_candidates`] to prove every schedule the planner could
 //! emit for a topology (the serving layer runs this after a degraded heal).
@@ -294,10 +297,12 @@ impl Counts {
 }
 
 /// Symbolically execute the schedule with the executor's snapshot-per-step
-/// semantics and check the final state against `want(rank, contributor)`.
+/// semantics and check the final state against `want(rank, block, contributor)`
+/// (`block` is the first block of the compressed interval, so chunk-local
+/// expectations — the pipelined per-chunk model — can vary by position).
 fn check_conservation<F>(s: &Schedule, ivs: &Intervals, want: F) -> Result<(), VerifyError>
 where
-    F: Fn(usize, usize) -> u32,
+    F: Fn(usize, usize, usize) -> u32,
 {
     let niv = ivs.len();
     let mut counts = Counts::initial(s.p, niv);
@@ -322,7 +327,7 @@ where
         for iv in 0..niv {
             for c in 0..s.p {
                 let got = u32::from(counts.data[counts.idx(r, iv, c)]);
-                let w = want(r, c);
+                let w = want(r, ivs.bounds[iv], c);
                 if got != w {
                     return Err(VerifyError::Conservation {
                         rank: r,
@@ -572,7 +577,98 @@ pub fn verify_allreduce_with_budget(
     let report = verify_common(s, budget_blocks, false)?;
     let ivs = Intervals::of(s);
     // Allreduce: every rank ends holding every rank's contribution once.
-    check_conservation(s, &ivs, |_, _| 1)?;
+    check_conservation(s, &ivs, |_, _, _| 1)?;
+    Ok(report)
+}
+
+/// Verify a pipelined (wave-structured) allreduce schedule. Beyond the full
+/// allreduce conservation over the whole payload, this proves the pipelining
+/// invariants the executor's overlap model relies on:
+///
+/// 1. **Chunk partition** — every send lies entirely inside one chunk
+///    segment of the payload ([`crate::collectives::schedules::segment`]),
+///    so in-flight chunks can never alias each other's buffers
+///    (`Malformed` otherwise).
+/// 2. **Per-chunk conservation** — restricting the schedule to any one
+///    chunk's segment yields a complete, self-contained allreduce of that
+///    segment: each chunk's dependency chain is intact on its own, not
+///    just in aggregate (`Conservation` names the offending block).
+/// 3. **Race freedom across in-flight chunks** — the step-level race check
+///    runs on the overlapped wave structure, where one rank legitimately
+///    forwards chunk `c+1` while reducing chunk `c`; disjoint segments are
+///    what make that race-free, and this check proves it rather than
+///    assuming it.
+/// 4. **Double-buffer scratch bound** — checked against `budget_blocks`;
+///    [`verify_any`] budgets two full buffers for pipelined schedules
+///    (primary + in-flight double buffer).
+pub fn verify_pipelined_allreduce_with_budget(
+    s: &Schedule,
+    budget_blocks: usize,
+) -> Result<VerifyReport, VerifyError> {
+    let report = verify_common(s, budget_blocks, false)?;
+    let chunks = s.chunks.max(1);
+    let seg = |c: usize| crate::collectives::schedules::segment(s.nblocks, chunks, c);
+    // Property 1: chunk partition. Map each op to the unique chunk segment
+    // containing its start; spanning a boundary is structurally malformed.
+    for (i, step) in s.steps.iter().enumerate() {
+        for op in step {
+            let c = (0..chunks)
+                .find(|&c| seg(c).contains(&op.blocks.start))
+                .ok_or_else(|| VerifyError::Malformed {
+                    step: i,
+                    detail: format!(
+                        "pipelined send {}..{} starts outside every chunk segment",
+                        op.blocks.start, op.blocks.end
+                    ),
+                })?;
+            let r = seg(c);
+            if op.blocks.end > r.end {
+                return Err(VerifyError::Malformed {
+                    step: i,
+                    detail: format!(
+                        "pipelined send {}..{} spans the chunk boundary at {} \
+                         (chunk {c} of {chunks} is {}..{})",
+                        op.blocks.start, op.blocks.end, r.end, r.start, r.end
+                    ),
+                });
+            }
+        }
+    }
+    // Whole-payload conservation: the chunks together are still one exact
+    // allreduce.
+    let ivs = Intervals::of(s);
+    check_conservation(s, &ivs, |_, _, _| 1)?;
+    // Property 2: per-chunk conservation. Each chunk's sub-schedule must be
+    // a complete allreduce of its own segment while leaving every other
+    // block untouched (still the owner's original contribution).
+    for c in 0..chunks {
+        let r = seg(c);
+        if r.is_empty() {
+            continue;
+        }
+        let sub = Schedule {
+            steps: s
+                .steps
+                .iter()
+                .map(|step| {
+                    step.iter().filter(|op| r.contains(&op.blocks.start)).cloned().collect()
+                })
+                .filter(|step: &Vec<_>| !step.is_empty())
+                .collect(),
+            nblocks: s.nblocks,
+            p: s.p,
+            algo: s.algo,
+            chunks: 1,
+        };
+        let sub_ivs = Intervals::of(&sub);
+        check_conservation(&sub, &sub_ivs, |rank, block, contrib| {
+            if r.contains(&block) {
+                1
+            } else {
+                u32::from(contrib == rank)
+            }
+        })?;
+    }
     Ok(report)
 }
 
@@ -580,13 +676,23 @@ pub fn verify_allreduce_with_budget(
 /// model (and the ring-shift race relaxation) on [`Schedule::algo`]:
 ///
 /// * `ring` / `tree` / `twolevel` — full allreduce conservation;
+/// * `tree_pipelined` / `ring_pipelined` — allreduce conservation plus the
+///   per-chunk partition/conservation/race model
+///   ([`verify_pipelined_allreduce_with_budget`]), against the enlarged
+///   double-buffer scratch budget of **two** full buffers;
 /// * `broadcast` — every rank ends with exactly the root's contribution
 ///   (the root is inferred as the unique rank that never receives);
 /// * `ring_shift` — every rank ends with exactly its predecessor's
 ///   contribution, send/recv overlap allowed (snapshot semantics);
 /// * anything else — structure, race, deadlock, and scratch checks only.
 pub fn verify_any(s: &Schedule) -> Result<VerifyReport, VerifyError> {
-    verify_any_with_budget(s, s.nblocks.max(1))
+    let budget = match s.algo {
+        // Pipelined schedules run double-buffered: primary payload plus
+        // one full buffer of in-flight chunk scratch.
+        "tree_pipelined" | "ring_pipelined" => (2 * s.nblocks).max(1),
+        _ => s.nblocks.max(1),
+    };
+    verify_any_with_budget(s, budget)
 }
 
 /// [`verify_any`] with an explicit scratch budget in blocks.
@@ -596,6 +702,9 @@ pub fn verify_any_with_budget(
 ) -> Result<VerifyReport, VerifyError> {
     match s.algo {
         "ring" | "tree" | "twolevel" => verify_allreduce_with_budget(s, budget_blocks),
+        "tree_pipelined" | "ring_pipelined" => {
+            verify_pipelined_allreduce_with_budget(s, budget_blocks)
+        }
         "broadcast" => {
             let report = verify_common(s, budget_blocks, false)?;
             let mut receives = vec![false; s.p];
@@ -609,7 +718,7 @@ pub fn verify_any_with_budget(
                 detail: "broadcast with no root (every rank receives)".into(),
             })?;
             let ivs = Intervals::of(s);
-            check_conservation(s, &ivs, |_, c| u32::from(c == root))?;
+            check_conservation(s, &ivs, |_, _, c| u32::from(c == root))?;
             Ok(report)
         }
         "ring_shift" => {
@@ -617,7 +726,7 @@ pub fn verify_any_with_budget(
             let ivs = Intervals::of(s);
             // Every rank ends with its predecessor's buffer (for p = 1,
             // the predecessor is itself and no sends exist).
-            check_conservation(s, &ivs, |r, c| u32::from(c == (r + s.p - 1) % s.p))?;
+            check_conservation(s, &ivs, |r, _, c| u32::from(c == (r + s.p - 1) % s.p))?;
             Ok(report)
         }
         _ => verify_common(s, budget_blocks, false),
@@ -636,7 +745,7 @@ pub fn verify_planner_candidates(topo: &crate::Topology, nblocks: usize) -> anyh
         let sched = algo.schedule(&world, nblocks).map_err(|e| {
             anyhow::anyhow!("candidate '{}' failed to construct (p={}): {e}", algo.name(), topo.world_size())
         })?;
-        crate::verifier::verify_allreduce(&sched).map_err(|e| {
+        crate::verifier::verify_any(&sched).map_err(|e| {
             anyhow::anyhow!(
                 "candidate '{}' failed verification (p={}, nblocks={}): {e}",
                 algo.name(),
@@ -727,6 +836,7 @@ mod tests {
             nblocks: 8,
             p: 3,
             algo: "hand",
+            chunks: 1,
         };
         let err = verify_any(&s).unwrap_err();
         assert!(matches!(err, VerifyError::Race { .. }), "got {err}");
@@ -796,6 +906,65 @@ mod tests {
         let mut s = ring_allreduce_schedule(3, 6);
         s.steps[0][0].blocks = 4..4;
         assert!(matches!(verify_allreduce(&s), Err(VerifyError::Malformed { .. })));
+    }
+
+    #[test]
+    fn pipelined_schedules_verify_clean_with_double_buffer_budget() {
+        use crate::collectives::schedules::{
+            pipelined_ring_allreduce_schedule, pipelined_tree_allreduce_schedule,
+        };
+        for p in 1..=16 {
+            for chunks in [2usize, 3, 8] {
+                for nblocks in [1usize, 13, 64] {
+                    let t = pipelined_tree_allreduce_schedule(p, nblocks, 2, chunks).unwrap();
+                    let rt = verify_any(&t).unwrap();
+                    // verify_any budgets the double buffer for pipelined
+                    // tags, but disjoint chunk segments keep the *actual*
+                    // peak within a single buffer.
+                    assert_eq!(rt.scratch_budget_blocks, (2 * nblocks).max(1));
+                    assert!(rt.peak_scratch_blocks <= nblocks.max(1));
+                    let r = pipelined_ring_allreduce_schedule(p, nblocks, chunks);
+                    verify_any(&r).unwrap();
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_boundary_spanning_send_is_malformed() {
+        use crate::collectives::schedules::pipelined_tree_allreduce_schedule;
+        let mut s = pipelined_tree_allreduce_schedule(4, 16, 2, 4).unwrap();
+        // Stretch the first send over the whole payload: it now crosses
+        // every chunk boundary, violating the partition the overlap model
+        // depends on (while staying structurally in-bounds).
+        s.steps[0][0].blocks = 0..16;
+        let err = verify_any(&s).unwrap_err();
+        assert!(matches!(err, VerifyError::Malformed { .. }), "got {err}");
+    }
+
+    #[test]
+    fn truncated_chunk_tail_is_a_conservation_error() {
+        use crate::collectives::schedules::{pipelined_ring_allreduce_schedule, segment};
+        let mut s = pipelined_ring_allreduce_schedule(4, 16, 4);
+        // Shrink the final wave's op (the last chunk's allgather tail) so
+        // part of that chunk is never delivered. The partition still
+        // holds; per-chunk conservation must localize the orphan to a
+        // block inside the mutilated chunk's segment.
+        let last = s.steps.len() - 1;
+        let op = &mut s.steps[last][0];
+        let chunk = (0..4).find(|&c| segment(16, 4, c).contains(&op.blocks.start)).unwrap();
+        assert!(op.blocks.len() >= 2, "mutation needs a splittable range");
+        op.blocks.end -= 1;
+        let err = verify_any(&s).unwrap_err();
+        match err {
+            VerifyError::Conservation { block, .. } => {
+                assert!(
+                    segment(16, 4, chunk).contains(&block),
+                    "error should localize to chunk {chunk}, got block {block}"
+                );
+            }
+            other => panic!("expected conservation error, got {other}"),
+        }
     }
 
     #[test]

@@ -1,0 +1,261 @@
+//! Property tests over the chunked wave-pipelined collectives (the
+//! pipelining PR's "property tests" satellite): for world sizes p ∈ 1..=16
+//! — including non-powers-of-two — uneven KV shardings (zero-length shards
+//! included) and chunk counts ∈ {1, 2, 3, 4, 8}:
+//!
+//!   1. pipelined tree/ring decode is BIT-IDENTICAL to its unpipelined
+//!      base algorithm on attention outputs AND softmax denominators —
+//!      pipelining reorders virtual time, never data (per-block combine
+//!      order is exactly the base schedule's);
+//!   2. every pipelined schedule the generators can emit passes the static
+//!      verifier clean, within the double-buffer scratch budget; and
+//!   3. seeded mutations of the chunk dependency structure are rejected
+//!      with the correct typed `VerifyError`: a send widened across its
+//!      chunk boundary is `Malformed`, dropping or duplicating a chunk's
+//!      send is `Conservation`, and any budget below the proven scratch
+//!      peak is `ScratchOverflow`.
+
+use tree_attention::attention::{tree_decode, ComputeBackend, DecodeOutcome, ShardKv};
+use tree_attention::attnmath::{max_abs_diff, ref_attention, AttnShape};
+use tree_attention::cluster::VirtualCluster;
+use tree_attention::collectives::{
+    pipelined_ring_allreduce_schedule, pipelined_tree_allreduce_schedule, segment, AllReduceAlgo,
+    RecvMode, Schedule,
+};
+use tree_attention::gpumodel::GpuKind;
+use tree_attention::topology::{LinkSpec, Topology};
+use tree_attention::util::prop::{check, Gen};
+use tree_attention::util::Rng;
+use tree_attention::verifier::{verify_any, verify_any_with_budget};
+
+const CHUNK_CHOICES: [usize; 5] = [1, 2, 3, 4, 8];
+
+fn flat(p: usize) -> Topology {
+    Topology::custom(
+        "pipeline-prop",
+        1,
+        p,
+        GpuKind::H100,
+        LinkSpec::nvlink4(),
+        LinkSpec::infiniband_ndr(),
+    )
+}
+
+struct Session {
+    q: Vec<f32>,
+    ks: Vec<Vec<f32>>,
+    vs: Vec<Vec<f32>>,
+    lens: Vec<usize>,
+}
+
+impl Session {
+    fn random(rng: &mut Rng, shape: AttnShape, lens: Vec<usize>) -> Session {
+        let row = shape.kv_heads * shape.d_head;
+        Session {
+            q: rng.normal_vec(shape.q_elems(), 1.0),
+            ks: lens.iter().map(|&l| rng.normal_vec(l * row, 1.0)).collect(),
+            vs: lens.iter().map(|&l| rng.normal_vec(l * row, 1.0)).collect(),
+            lens,
+        }
+    }
+
+    fn shards(&self) -> Vec<ShardKv<'_>> {
+        (0..self.lens.len())
+            .map(|w| ShardKv { k: &self.ks[w], v: &self.vs[w], len: self.lens[w] })
+            .collect()
+    }
+
+    fn reference(&self, shape: AttnShape, scale: f32) -> Vec<f32> {
+        let k_all: Vec<f32> = self.ks.concat();
+        let v_all: Vec<f32> = self.vs.concat();
+        let t: usize = self.lens.iter().sum();
+        ref_attention(shape, &self.q, &k_all, &v_all, t, scale)
+    }
+}
+
+fn decode(
+    topo: &Topology,
+    shape: AttnShape,
+    scale: f32,
+    sess: &Session,
+    algo: AllReduceAlgo,
+) -> DecodeOutcome {
+    let shards = sess.shards();
+    let mut c = VirtualCluster::new(topo.clone());
+    tree_decode(&mut c, &ComputeBackend::Oracle, shape, scale, &sess.q, &shards, algo, 2)
+        .unwrap_or_else(|e| panic!("{} decode failed: {e}", algo.name()))
+}
+
+// ---------------------------------------------------------------------------
+// 1. Pipelining reorders virtual time, never data
+// ---------------------------------------------------------------------------
+
+#[test]
+fn pipelined_decode_bit_identical_to_unpipelined() {
+    check("pipelined == plain (out + den, bit-exact)", 30, |g| {
+        let shape = AttnShape::new(1, 8, 2, 16);
+        let scale = 0.25;
+        let p = g.usize_in(1..17); // non-powers-of-two included
+        let chunks = *g.choose(&CHUNK_CHOICES);
+        let mut lens: Vec<usize> = (0..p).map(|_| g.usize_in(0..40)).collect();
+        if lens.iter().sum::<usize>() == 0 {
+            lens[g.usize_in(0..p)] = 1 + g.usize_in(0..8);
+        }
+        let seed = g.rng().next_u64();
+        let mut rng = Rng::seed(seed);
+        let sess = Session::random(&mut rng, shape, lens);
+        let topo = flat(p);
+
+        let piped_tree = AllReduceAlgo::PipelinedTree { fanout: 2, chunks };
+        let pairs = [
+            (AllReduceAlgo::Tree { fanout: 2 }, piped_tree),
+            (AllReduceAlgo::Ring, AllReduceAlgo::PipelinedRing { chunks }),
+        ];
+        let reference = sess.reference(shape, scale);
+        for (plain_algo, piped_algo) in pairs {
+            let plain = decode(&topo, shape, scale, &sess, plain_algo);
+            let piped = decode(&topo, shape, scale, &sess, piped_algo);
+            // Bit-identical, not merely close: chunking partitions the
+            // payload by block and preserves each block's contributor
+            // order, so the floating-point fold is the same fold.
+            assert!(
+                piped.out == plain.out,
+                "p={p} chunks={chunks} {}: outputs differ from {} by {}",
+                piped_algo.name(),
+                plain_algo.name(),
+                max_abs_diff(&piped.out, &plain.out)
+            );
+            assert!(
+                piped.den == plain.den,
+                "p={p} chunks={chunks} {}: denominators differ from {} by {}",
+                piped_algo.name(),
+                plain_algo.name(),
+                max_abs_diff(&piped.den, &plain.den)
+            );
+            assert!(
+                max_abs_diff(&piped.out, &reference) < 1e-4,
+                "p={p} chunks={chunks} {}: diverges from the oracle",
+                piped_algo.name()
+            );
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// 2. Every emittable pipelined schedule proves clean
+// ---------------------------------------------------------------------------
+
+#[test]
+fn every_pipelined_schedule_verifies_clean() {
+    for p in 1..=16usize {
+        for &chunks in &CHUNK_CHOICES {
+            for nblocks in [1usize, 5, 13, 16, 64] {
+                let mut scheds = vec![pipelined_ring_allreduce_schedule(p, nblocks, chunks)];
+                for fanout in [2usize, 3, 4] {
+                    let s = pipelined_tree_allreduce_schedule(p, nblocks, fanout, chunks);
+                    scheds.push(s.expect("valid fanout"));
+                }
+                for s in &scheds {
+                    let report = verify_any(s).unwrap_or_else(|e| {
+                        panic!("p={p} chunks={chunks} nblocks={nblocks} {}: {e}", s.algo)
+                    });
+                    assert!(
+                        report.peak_scratch_blocks <= report.scratch_budget_blocks,
+                        "p={p} chunks={chunks} nblocks={nblocks} {}: scratch over budget",
+                        s.algo
+                    );
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 3. Sensitivity: chunk-dependency mutations are rejected with the right
+//    typed error
+// ---------------------------------------------------------------------------
+
+/// A known-good pipelined schedule with an effective chunk count >= 2 (so
+/// chunk boundaries exist) and p >= 2 (so it has sends to mutate).
+fn pick_pipelined(g: &mut Gen) -> Schedule {
+    let p = g.usize_in(2..17);
+    let chunks = *g.choose(&[2usize, 3, 4, 8]);
+    let nblocks = g.usize_in(2..65);
+    if g.usize_in(0..2) == 0 {
+        pipelined_ring_allreduce_schedule(p, nblocks, chunks)
+    } else {
+        let fanout = 2 + g.usize_in(0..3);
+        pipelined_tree_allreduce_schedule(p, nblocks, fanout, chunks).expect("valid fanout")
+    }
+}
+
+#[test]
+fn widening_a_send_across_its_chunk_boundary_is_malformed() {
+    check("chunk-boundary-spanning send is malformed", 64, |g| {
+        let mut s = pick_pipelined(g);
+        // The first step of any pipelined schedule is wave 0: chunk 0's
+        // reduce ops only (later waves interleave chunks). Chunk 0 ends
+        // strictly before the payload end because c_eff >= 2 here, so
+        // widening one of its sends past the boundary breaks the chunk
+        // partition that makes in-flight chunks alias-free.
+        let bound = segment(s.nblocks, s.chunks, 0).end;
+        assert!(bound < s.nblocks, "c_eff >= 2 guarantees a real boundary");
+        let op = &mut s.steps[0][0];
+        assert!(op.blocks.start < bound, "wave 0 carries chunk 0 only");
+        op.blocks.end = bound + 1;
+        let err = verify_any(&s).expect_err("boundary-spanning send verified");
+        assert_eq!(err.kind(), "malformed", "got {err}");
+    });
+}
+
+#[test]
+fn dropping_any_pipelined_send_is_a_conservation_error() {
+    check("dropped pipelined send orphans its chunk", 64, |g| {
+        let mut s = pick_pipelined(g);
+        let step = g.usize_in(0..s.steps.len());
+        let op = g.usize_in(0..s.steps[step].len());
+        s.steps[step].remove(op);
+        if s.steps[step].is_empty() {
+            s.steps.remove(step);
+        }
+        if s.steps.is_empty() {
+            return; // nothing left to verify
+        }
+        let err = verify_any(&s).expect_err("mutated schedule verified");
+        assert_eq!(err.kind(), "conservation", "got {err}");
+    });
+}
+
+#[test]
+fn duplicating_a_chunk_reduce_is_a_conservation_error() {
+    // Wave-0 ops move at most one chunk, so the duplicate stays far below
+    // the double-buffer scratch budget and the double-count is what the
+    // verifier must see.
+    check("duplicated chunk reduce double-counts", 64, |g| {
+        let mut s = pick_pipelined(g);
+        let dup = s.steps[0][g.usize_in(0..s.steps[0].len())].clone();
+        if dup.mode != RecvMode::Reduce {
+            return; // wave 0 is the reduce phase; guard stays for safety
+        }
+        s.steps[0].push(dup);
+        let err = verify_any(&s).expect_err("mutated schedule verified");
+        assert_eq!(err.kind(), "conservation", "got {err}");
+    });
+}
+
+#[test]
+fn any_budget_below_pipelined_peak_is_a_scratch_overflow() {
+    check("undersized pipelined scratch budgets overflow", 64, |g| {
+        let s = pick_pipelined(g);
+        let report = verify_any(&s).expect("known-good schedule");
+        let peak = report.peak_scratch_blocks;
+        assert!(peak >= 1, "p >= 2 schedules move data");
+        assert!(
+            peak <= report.scratch_budget_blocks,
+            "double-buffer budget holds for every emittable schedule"
+        );
+        let budget = g.usize_in(0..peak);
+        let err = verify_any_with_budget(&s, budget).expect_err("overflow not caught");
+        assert_eq!(err.kind(), "scratch_overflow", "got {err}");
+    });
+}

@@ -221,6 +221,7 @@ fn overlapping_non_reduce_writers_are_a_race() {
         nblocks: 8,
         p: 3,
         algo: "hand",
+        chunks: 1,
     };
     let err = verify_any(&s).expect_err("racy schedule verified");
     assert_eq!(err.kind(), "race", "got {err}");
@@ -234,6 +235,7 @@ fn overlapping_non_reduce_writers_are_a_race() {
         nblocks: 8,
         p: 3,
         algo: "hand",
+        chunks: 1,
     };
     let err = verify_any(&s).expect_err("racy schedule verified");
     assert_eq!(err.kind(), "race", "got {err}");
