@@ -1,0 +1,48 @@
+#!/usr/bin/env python3
+"""Blocking coverage floor for rust/src/obs/.
+
+Reads a `cargo llvm-cov --json` export (llvm-cov export format) and fails
+unless aggregate line coverage over the obs subsystem clears the floor.
+
+Usage: check_obs_coverage.py <coverage.json> <floor-percent>
+"""
+import json
+import sys
+
+
+def main() -> int:
+    if len(sys.argv) != 3:
+        print(__doc__, file=sys.stderr)
+        return 2
+    path, floor = sys.argv[1], float(sys.argv[2])
+    with open(path) as f:
+        export = json.load(f)
+    covered = total = 0
+    files = []
+    for data in export.get("data", []):
+        for fe in data.get("files", []):
+            name = fe.get("filename", "").replace("\\", "/")
+            if "/src/obs/" not in name:
+                continue
+            lines = fe.get("summary", {}).get("lines", {})
+            covered += lines.get("covered", 0)
+            total += lines.get("count", 0)
+            files.append((name, lines))
+    if total == 0:
+        print("no rust/src/obs/ files in the coverage export", file=sys.stderr)
+        return 1
+    for name, lines in sorted(files):
+        print(f"  {name}: {lines.get('covered', 0)}/{lines.get('count', 0)} lines")
+    pct = 100.0 * covered / total
+    print(f"rust/src/obs/ line coverage: {pct:.1f}% (floor {floor:.0f}%)")
+    if pct < floor:
+        print(
+            f"FAIL: obs coverage {pct:.1f}% is below the {floor:.0f}% floor",
+            file=sys.stderr,
+        )
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -31,7 +31,29 @@ use crate::bench::papersim::{
 use crate::cluster::VirtualCluster;
 use crate::collectives::AllReduceAlgo;
 use crate::config::Strategy;
+use crate::obs;
 use crate::topology::Topology;
+
+/// Wrap one strategy dispatch in an [`obs::EventKind::StrategyDispatch`]
+/// span on the driver row, bounded by the cluster's max virtual clock
+/// before/after. Zero-cost (one atomic load) when tracing is off, and the
+/// span is recorded even when the dispatch fails — a degraded round's time
+/// is exactly what a timeline is for.
+fn traced_dispatch<T>(
+    cluster: &mut VirtualCluster,
+    strategy: &'static str,
+    batch: u64,
+    f: impl FnOnce(&mut VirtualCluster) -> anyhow::Result<T>,
+) -> anyhow::Result<T> {
+    if !obs::enabled() {
+        return f(cluster);
+    }
+    let t0 = cluster.world.max_clock();
+    let out = f(cluster);
+    let t1 = cluster.world.max_clock();
+    obs::span(obs::DRIVER, obs::EventKind::StrategyDispatch { strategy, batch }, t0, t1);
+    out
+}
 
 /// A distributed decode strategy: single-session decode, fused batched
 /// decode, and a cost model for the planner. See the module docs.
@@ -87,7 +109,9 @@ impl DecodeStrategy for TreeStrategy {
         q: &[f32],
         shards: &[ShardKv<'_>],
     ) -> anyhow::Result<DecodeOutcome> {
-        tree_decode(cluster, backend, shape, scale, q, shards, self.algo, self.wire_bpe)
+        traced_dispatch(cluster, self.name(), 1, |c| {
+            tree_decode(c, backend, shape, scale, q, shards, self.algo, self.wire_bpe)
+        })
     }
 
     fn decode_batch(
@@ -98,7 +122,9 @@ impl DecodeStrategy for TreeStrategy {
         scale: f32,
         entries: &[BatchEntry<'_>],
     ) -> anyhow::Result<BatchDecodeOutcome> {
-        tree_decode_batch(cluster, backend, shape, scale, entries, self.algo, self.wire_bpe)
+        traced_dispatch(cluster, self.name(), entries.len() as u64, |c| {
+            tree_decode_batch(c, backend, shape, scale, entries, self.algo, self.wire_bpe)
+        })
     }
 
     fn cost_model(&self, topo: &Topology, batch: usize, ctx: usize, shape: AttnShape) -> f64 {
@@ -130,7 +156,9 @@ impl DecodeStrategy for RingStrategy {
         q: &[f32],
         shards: &[ShardKv<'_>],
     ) -> anyhow::Result<DecodeOutcome> {
-        ring_decode(cluster, backend, shape, scale, q, shards, self.wire_bpe, self.overlap)
+        traced_dispatch(cluster, self.name(), 1, |c| {
+            ring_decode(c, backend, shape, scale, q, shards, self.wire_bpe, self.overlap)
+        })
     }
 
     fn decode_batch(
@@ -141,7 +169,9 @@ impl DecodeStrategy for RingStrategy {
         scale: f32,
         entries: &[BatchEntry<'_>],
     ) -> anyhow::Result<BatchDecodeOutcome> {
-        ring_decode_batch(cluster, backend, shape, scale, entries, self.wire_bpe, self.overlap)
+        traced_dispatch(cluster, self.name(), entries.len() as u64, |c| {
+            ring_decode_batch(c, backend, shape, scale, entries, self.wire_bpe, self.overlap)
+        })
     }
 
     fn cost_model(&self, topo: &Topology, batch: usize, ctx: usize, shape: AttnShape) -> f64 {
@@ -170,7 +200,9 @@ impl DecodeStrategy for SingleStrategy {
         q: &[f32],
         shards: &[ShardKv<'_>],
     ) -> anyhow::Result<DecodeOutcome> {
-        single_decode(cluster, backend, shape, scale, q, shards, self.wire_bpe)
+        traced_dispatch(cluster, self.name(), 1, |c| {
+            single_decode(c, backend, shape, scale, q, shards, self.wire_bpe)
+        })
     }
 
     fn decode_batch(
@@ -181,7 +213,9 @@ impl DecodeStrategy for SingleStrategy {
         scale: f32,
         entries: &[BatchEntry<'_>],
     ) -> anyhow::Result<BatchDecodeOutcome> {
-        single_decode_batch(cluster, backend, shape, scale, entries, self.wire_bpe)
+        traced_dispatch(cluster, self.name(), entries.len() as u64, |c| {
+            single_decode_batch(c, backend, shape, scale, entries, self.wire_bpe)
+        })
     }
 
     fn cost_model(&self, topo: &Topology, batch: usize, ctx: usize, shape: AttnShape) -> f64 {

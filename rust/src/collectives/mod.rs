@@ -19,6 +19,7 @@ pub mod schedules;
 pub use schedules::*;
 
 use crate::netsim::{CommError, SimWorld, TrafficCounters};
+use crate::obs;
 use crate::topology::Rank;
 use std::ops::Range;
 
@@ -170,7 +171,8 @@ pub fn execute_data(
     }
     let before = world.net.counters();
     let t0 = world.barrier();
-    for step in &schedule.steps {
+    for (wi, step) in schedule.steps.iter().enumerate() {
+        trace_wave(world, schedule, wi);
         // Snapshot payloads first so intra-step sends observe pre-step data
         // (all sends in a step are concurrent).
         let payloads: Vec<Vec<f32>> = step
@@ -198,6 +200,7 @@ pub fn execute_data(
         // Step barrier: every rank waits for the slowest participant.
         step_barrier(world, step);
     }
+    obs::set_wave(None);
     let t1 = world.barrier();
     ExecStats {
         steps: schedule.n_steps(),
@@ -244,7 +247,8 @@ pub fn try_execute_data(
     let entry_state: Vec<Vec<f32>> = bufs.to_vec();
     let before = world.net.counters();
     let t0 = world.barrier();
-    for step in &schedule.steps {
+    for (wi, step) in schedule.steps.iter().enumerate() {
+        trace_wave(world, schedule, wi);
         let payloads: Vec<Vec<f32>> = step
             .iter()
             .map(|s| bufs[s.src][s.blocks.start * bl..s.blocks.end * bl].to_vec())
@@ -256,6 +260,7 @@ pub fn try_execute_data(
         {
             if let Err(e) = world.send_with_retry(src, dst, bytes) {
                 bufs.clone_from_slice(&entry_state);
+                obs::set_wave(None);
                 return Err(e);
             }
         }
@@ -271,6 +276,7 @@ pub fn try_execute_data(
         }
         step_barrier(world, step);
     }
+    obs::set_wave(None);
     let t1 = world.barrier();
     Ok(ExecStats {
         steps: schedule.n_steps(),
@@ -289,7 +295,8 @@ pub fn execute_cost(
 ) -> ExecStats {
     let before = world.net.counters();
     let t0 = world.barrier();
-    for step in &schedule.steps {
+    for (wi, step) in schedule.steps.iter().enumerate() {
+        trace_wave(world, schedule, wi);
         for (src, dst, bytes) in
             coalesced_sends(step, |s| (s.blocks.len() * block_elems) as u64 * wire_bytes_per_elem)
         {
@@ -297,12 +304,30 @@ pub fn execute_cost(
         }
         step_barrier(world, step);
     }
+    obs::set_wave(None);
     let t1 = world.barrier();
     ExecStats {
         steps: schedule.n_steps(),
         sim_time: t1 - t0,
         traffic: world.net.counters().since(&before),
     }
+}
+
+/// Stamp the recorder's wave context with step `wi` and mark its start on
+/// the driver row (no-op unless tracing is on). Sends posted by the step
+/// then carry the wave index, which is what lets `treeattn trace --check`
+/// recompute the verifier's peak-scratch bound from the trace alone.
+fn trace_wave(world: &SimWorld, schedule: &Schedule, wi: usize) {
+    if !obs::enabled() {
+        return;
+    }
+    let wave = wi as u64;
+    obs::set_wave(Some(wave));
+    obs::instant(
+        obs::DRIVER,
+        obs::EventKind::Wave { wave, algo: schedule.algo },
+        world.max_clock(),
+    );
 }
 
 /// After a step, participating ranks synchronize pairwise: the receiver's

@@ -490,7 +490,15 @@ impl RadixCache {
             *o -= p;
         }
         pool.release(&pages)?;
-        self.stats.evicted_pages += pages.iter().sum::<usize>();
+        let n_pages = pages.iter().sum::<usize>();
+        self.stats.evicted_pages += n_pages;
+        // Timestamped 0: the radix cache has no virtual-clock access; the
+        // driver-row ordering context comes from the enclosing admission span.
+        crate::obs::instant(
+            crate::obs::DRIVER,
+            crate::obs::EventKind::KvEvict { pages: n_pages as u64 },
+            0.0,
+        );
         let Some(parent) = self.nodes[id].parent else {
             anyhow::bail!("eviction victim {id} is a non-root node without a parent (tree corrupt)");
         };

@@ -34,6 +34,7 @@ pub mod gpumodel;
 pub mod kvcache;
 pub mod model;
 pub mod netsim;
+pub mod obs;
 pub mod planner;
 pub mod runtime;
 pub mod ser;

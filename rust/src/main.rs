@@ -18,6 +18,17 @@
 //!                               kills through the continuous batcher, heal
 //!                               verification vs survivor replays, and a
 //!                               deterministic BENCH_chaos.json summary
+//!   trace [--quick] [--check] [--trace-out DIR] [--metrics-out FILE]
+//!                             — observability sweep: every cluster preset
+//!                               × {tree, ring, pipelined, degraded-heal}
+//!                               with tracing on; emits one Chrome
+//!                               trace_event timeline per scenario plus a
+//!                               metrics snapshot and BENCH_obs.json.
+//!                               --check cross-validates traced bytes
+//!                               against the cost executor, peak wave
+//!                               payloads against the static verifier's
+//!                               scratch bound, and bit-identity of the
+//!                               serving stack with tracing on vs off
 //!   bench-compare B R [--only N] — gate bench_results/ summaries in R
 //!                               against baselines in B (>10% = regression)
 //!   verify-schedules [--quick] — statically verify every planner-emittable
@@ -46,6 +57,7 @@ use tree_attention::cluster::VirtualCluster;
 use tree_attention::collectives::AllReduceAlgo;
 use tree_attention::config::{ModelSpec, RunSpec};
 use tree_attention::model::{ExecutorConfig, ModelExecutor};
+use tree_attention::obs;
 use tree_attention::runtime::{find_artifacts, EngineHandle};
 use tree_attention::ser::Json;
 use tree_attention::serve::{synthetic_workload, ServeConfig, Server};
@@ -61,14 +73,20 @@ fn main() {
         "validate" => cmd_validate(),
         "decode" => parse_spec(&args[1..]).and_then(|spec| cmd_decode(&spec)),
         "serve" => parse_spec(&args[1..]).and_then(|spec| cmd_serve(&spec)),
-        "serve-bench" => parse_spec(&args[1..]).and_then(|spec| cmd_serve_bench(&spec)),
+        "serve-bench" => split_obs_flags(&args[1..]).and_then(|(rest, sinks)| {
+            parse_spec(&rest).and_then(|spec| cmd_serve_bench(&spec, &sinks))
+        }),
         "chaos-bench" => {
-            // `--quick` is read via `bench::quick_mode()`; strip it so the
-            // remaining args parse as key=value overrides.
+            // `--quick` is read via `bench::quick_mode()`; strip it (and the
+            // observability sinks) so the remaining args parse as key=value
+            // overrides.
             let rest: Vec<String> =
                 args[1..].iter().filter(|a| a.as_str() != "--quick").cloned().collect();
-            parse_spec(&rest).and_then(|spec| cmd_chaos_bench(&spec))
+            split_obs_flags(&rest).and_then(|(rest, sinks)| {
+                parse_spec(&rest).and_then(|spec| cmd_chaos_bench(&spec, &sinks))
+            })
         }
+        "trace" => cmd_trace(&args[1..]),
         "bench-compare" => cmd_bench_compare(&args[1..]),
         "verify-schedules" => {
             // `--quick` is accepted for CI symmetry; the sweep is already
@@ -100,7 +118,9 @@ fn main() {
 fn print_help() {
     println!(
         "treeattn — Tree Attention reproduction\n\
-         usage: treeattn <info|validate|decode|serve|serve-bench|chaos-bench|bench-compare|verify-schedules|plan-bench|pipeline-bench|strategy-bench|sweep> [--config f.json] [key=value ...]\n\
+         usage: treeattn <info|validate|decode|serve|serve-bench|chaos-bench|trace|bench-compare|verify-schedules|plan-bench|pipeline-bench|strategy-bench|sweep> [--config f.json] [key=value ...]\n\
+         \x20     trace [--quick] [--check] [--trace-out DIR] [--metrics-out FILE]  (observability sweep + BENCH_obs.json)\n\
+         \x20     serve-bench/chaos-bench also take --trace-out FILE --metrics-out FILE (Chrome trace + metrics snapshot)\n\
          keys: strategy=auto|tree|ring|single  (auto = strategy planner; --strategy X is sugar)\n\
          \x20     allreduce=auto|ring|tree|twolevel  (auto = topology-aware collective planner)\n\
          \x20     model.preset=test-8m|tiny-124m  cluster.preset=h100_dgx|mi300x|rtx4090_pcie\n\
@@ -384,7 +404,349 @@ fn cmd_serve(spec: &RunSpec) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_serve_bench(spec: &RunSpec) -> anyhow::Result<()> {
+/// Optional observability sinks shared by `serve-bench` and `chaos-bench`:
+/// `--trace-out` names a Chrome `trace_event` JSON file (load it in
+/// Perfetto / chrome://tracing), `--metrics-out` a metrics snapshot
+/// (schema `treeattn.metrics.v1`). Either flag turns tracing on for the
+/// run.
+struct ObsSinks {
+    trace_out: Option<std::path::PathBuf>,
+    metrics_out: Option<std::path::PathBuf>,
+}
+
+impl ObsSinks {
+    fn active(&self) -> bool {
+        self.trace_out.is_some() || self.metrics_out.is_some()
+    }
+
+    /// Snapshot the global recorder/registry into the requested files. The
+    /// timeline is validated before it is written — a structurally broken
+    /// trace is a hard error, not a bad artifact.
+    fn write(&self) -> anyhow::Result<()> {
+        if let Some(path) = &self.trace_out {
+            let doc = obs::export::snapshot_trace_json();
+            obs::validate_trace(&doc)
+                .map_err(|e| anyhow::anyhow!("refusing to write invalid trace: {e:#}"))?;
+            write_with_parents(path, &doc.to_string_compact())?;
+            println!("trace: {}", path.display());
+        }
+        if let Some(path) = &self.metrics_out {
+            let doc = obs::with_metrics(|m| m.to_json());
+            write_with_parents(path, &doc.to_string_pretty())?;
+            println!("metrics: {}", path.display());
+        }
+        Ok(())
+    }
+}
+
+fn write_with_parents(path: &std::path::Path, contents: &str) -> anyhow::Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(path, contents)?;
+    Ok(())
+}
+
+/// Strip `--trace-out <path>` / `--metrics-out <path>` from `args` so the
+/// rest parses as key=value overrides.
+fn split_obs_flags(args: &[String]) -> anyhow::Result<(Vec<String>, ObsSinks)> {
+    let mut rest = Vec::new();
+    let mut sinks = ObsSinks { trace_out: None, metrics_out: None };
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--trace-out" => {
+                anyhow::ensure!(i + 1 < args.len(), "--trace-out needs a path");
+                sinks.trace_out = Some(std::path::PathBuf::from(&args[i + 1]));
+                i += 2;
+            }
+            "--metrics-out" => {
+                anyhow::ensure!(i + 1 < args.len(), "--metrics-out needs a path");
+                sinks.metrics_out = Some(std::path::PathBuf::from(&args[i + 1]));
+                i += 2;
+            }
+            _ => {
+                rest.push(args[i].clone());
+                i += 1;
+            }
+        }
+    }
+    Ok((rest, sinks))
+}
+
+/// `trace`: the observability sweep. Runs every cluster preset ×
+/// {tree, ring, pipelined, degraded-heal} with tracing on, emits one
+/// Chrome `trace_event` timeline per scenario (`--trace-out DIR`), a
+/// per-scenario metrics snapshot (`--metrics-out FILE`), and the
+/// deterministic `bench_results/BENCH_obs.json` gated by `bench-compare`.
+///
+/// With `--check` every scenario also self-validates:
+/// * the timeline parses, spans nest, and flow events pair up;
+/// * traced bytes-on-wire equal the cost executor's traffic counters
+///   EXACTLY (collective scenarios);
+/// * the peak per-(wave, rank) send payload equals the static verifier's
+///   `peak_scratch_blocks` and sits within its scratch budget;
+/// * the degraded-heal serving run is bit-identical — outputs AND virtual
+///   clock — with tracing on vs off (tracing is a pure observer).
+fn cmd_trace(args: &[String]) -> anyhow::Result<()> {
+    use tree_attention::bench::write_bench_summary;
+    use tree_attention::collectives::execute_cost;
+    use tree_attention::config::Strategy;
+    use tree_attention::netsim::{FaultPlan, SimWorld};
+    use tree_attention::serve::{
+        synthetic_decode_workload, BatchMetrics, BatchResult, BatcherConfig, DecodeBatcher,
+    };
+    use tree_attention::verifier;
+
+    let check = args.iter().any(|a| a == "--check");
+    let quick = tree_attention::bench::quick_mode();
+    let mut trace_dir: Option<std::path::PathBuf> = None;
+    let mut metrics_out: Option<std::path::PathBuf> = None;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--quick" | "--check" => i += 1,
+            "--trace-out" => {
+                anyhow::ensure!(i + 1 < args.len(), "--trace-out needs a directory");
+                trace_dir = Some(std::path::PathBuf::from(&args[i + 1]));
+                i += 2;
+            }
+            "--metrics-out" => {
+                anyhow::ensure!(i + 1 < args.len(), "--metrics-out needs a path");
+                metrics_out = Some(std::path::PathBuf::from(&args[i + 1]));
+                i += 2;
+            }
+            other => anyhow::bail!("trace: unknown argument '{other}'"),
+        }
+    }
+
+    // One decode round's worth of allreduce payload: batch × n_heads blocks
+    // of d_head + 2 elements (the flash partial plus its (m, ℓ) reduction
+    // pair) on a bf16 wire — the same shape the strategy verifier prices.
+    const NBLOCKS: usize = 32;
+    const BLOCK_ELEMS: usize = 66;
+    const WIRE_BPE: u64 = 2;
+
+    let presets: Vec<(&str, Topology)> = if quick {
+        vec![
+            ("h100", Topology::h100_dgx(1)),
+            ("mi300x", Topology::mi300x(1, 8)),
+            ("rtx4090", Topology::rtx4090_pcie(4)),
+        ]
+    } else {
+        vec![
+            ("h100", Topology::h100_dgx(2)),
+            ("mi300x", Topology::mi300x(2, 8)),
+            ("rtx4090", Topology::rtx4090_pcie(8)),
+        ]
+    };
+    let algos: [(&str, AllReduceAlgo); 3] = [
+        ("tree", AllReduceAlgo::Tree { fanout: 2 }),
+        ("ring", AllReduceAlgo::Ring),
+        ("pipelined", AllReduceAlgo::PipelinedTree { fanout: 2, chunks: 4 }),
+    ];
+
+    if let Some(dir) = &trace_dir {
+        std::fs::create_dir_all(dir)?;
+    }
+    println!(
+        "trace: observability sweep over {} presets × {{tree, ring, pipelined, heal}}{}{}",
+        presets.len(),
+        if quick { " [quick]" } else { "" },
+        if check { " [check]" } else { "" },
+    );
+    let wall = std::time::Instant::now();
+    let mut table = Table::new(
+        "Observability sweep (virtual clocks; bytes exact vs the cost executor)",
+        &["preset", "scenario", "p", "events", "spans", "flows", "send bytes", "peak wave/rank"],
+    );
+    let mut pairs: Vec<(String, f64)> = Vec::new();
+    let mut scenario_metrics: Vec<(String, Json)> = Vec::new();
+    let mut scenarios = 0usize;
+    let mut heals_total = 0usize;
+
+    for (pname, topo) in &presets {
+        let p = topo.world_size();
+
+        // ---- fixed-collective scenarios: byte + scratch exactness ----
+        for (sname, algo) in &algos {
+            obs::reset(obs::DEFAULT_CAPACITY);
+            let mut world = SimWorld::new(topo.clone());
+            let sched = algo.schedule_for(&world, NBLOCKS, BLOCK_ELEMS, WIRE_BPE)?;
+            let stats = {
+                let _t = obs::TraceGuard::enable();
+                execute_cost(&mut world, &sched, BLOCK_ELEMS, WIRE_BPE)
+            };
+            let doc = obs::export::snapshot_trace_json();
+            let ts = obs::validate_trace(&doc)
+                .map_err(|e| anyhow::anyhow!("{pname}/{sname}: invalid trace: {e:#}"))?;
+            anyhow::ensure!(ts.dropped == 0, "{pname}/{sname}: recorder dropped events");
+            if check {
+                anyhow::ensure!(
+                    ts.send_bytes_total == stats.traffic.total_bytes(),
+                    "{pname}/{sname}: traced send bytes {} != executor traffic {}",
+                    ts.send_bytes_total,
+                    stats.traffic.total_bytes()
+                );
+                let report = verifier::verify_any(&sched)?;
+                let unit = BLOCK_ELEMS as u64 * WIRE_BPE;
+                anyhow::ensure!(
+                    ts.peak_wave_rank_bytes == report.peak_scratch_blocks as u64 * unit,
+                    "{pname}/{sname}: traced peak wave payload {} B != verifier peak {} blocks × {unit} B",
+                    ts.peak_wave_rank_bytes,
+                    report.peak_scratch_blocks
+                );
+                anyhow::ensure!(
+                    report.peak_scratch_blocks <= report.scratch_budget_blocks,
+                    "{pname}/{sname}: scratch peak {} over budget {}",
+                    report.peak_scratch_blocks,
+                    report.scratch_budget_blocks
+                );
+            }
+            if let Some(dir) = &trace_dir {
+                std::fs::write(
+                    dir.join(format!("{pname}_{sname}.trace.json")),
+                    doc.to_string_compact(),
+                )?;
+            }
+            scenario_metrics
+                .push((format!("{pname}_{sname}"), obs::with_metrics(|m| m.to_json())));
+            table.row(vec![
+                (*pname).to_string(),
+                (*sname).to_string(),
+                p.to_string(),
+                ts.events.to_string(),
+                ts.spans.to_string(),
+                ts.flows.to_string(),
+                fmt_bytes(ts.send_bytes_total),
+                fmt_bytes(ts.peak_wave_rank_bytes),
+            ]);
+            pairs.push((format!("{pname}_{sname}_send_bytes"), ts.send_bytes_total as f64));
+            pairs.push((format!("{pname}_{sname}_events"), ts.events as f64));
+            pairs.push((format!("{pname}_{sname}_flows"), ts.flows as f64));
+            scenarios += 1;
+        }
+
+        // ---- degraded-heal scenario: the full serving stack, traced ----
+        let shape = AttnShape::new(1, 8, 4, 64);
+        let scale = 1.0 / (64.0f32).sqrt();
+        let (requests, max_ctx, new_toks) =
+            if quick { (4usize, 96usize, 4usize) } else { (8, 256, 8) };
+        let min_ctx = (max_ctx / 2).max(1);
+        let cfg = BatcherConfig {
+            // Everyone admitted at once so the seeded kill round always
+            // lands (same shape chaos-bench pins in quick mode).
+            max_batch: requests,
+            page_size: 16,
+            pages_per_worker: 4096,
+            strategy: Strategy::Tree,
+            algo: AllReduceAlgo::Tree { fanout: 2 },
+            wire_bpe: WIRE_BPE,
+            seed: 0xBA7C4,
+            prefix_share: false,
+        };
+        let batcher = DecodeBatcher::new(shape, scale, cfg);
+        let run_once = |traced: bool| -> anyhow::Result<(Vec<BatchResult>, BatchMetrics)> {
+            obs::reset(obs::DEFAULT_CAPACITY);
+            let _t = traced.then(obs::TraceGuard::enable);
+            let mut cluster = VirtualCluster::new(topo.clone());
+            cluster.world.net.set_fault_plan(FaultPlan::seeded_kill(1, p, new_toks));
+            let reqs = synthetic_decode_workload(requests, min_ctx, max_ctx, new_toks, 0xC0FFEE);
+            batcher.run(&mut cluster, &ComputeBackend::Oracle, reqs)
+        };
+        let (res_off, m_off) = run_once(false)?;
+        let (res_on, m_on) = run_once(true)?;
+        let doc = obs::export::snapshot_trace_json();
+        let ts = obs::validate_trace(&doc)
+            .map_err(|e| anyhow::anyhow!("{pname}/heal: invalid trace: {e:#}"))?;
+        anyhow::ensure!(m_on.heals >= 1, "{pname}/heal: the seeded kill never fired");
+        heals_total += m_on.heals;
+        if check {
+            anyhow::ensure!(ts.dropped == 0, "{pname}/heal: recorder dropped events");
+            // Tracing must be a pure observer: outputs AND the virtual
+            // clock bit-identical with the recorder on vs off.
+            anyhow::ensure!(
+                res_on.len() == res_off.len(),
+                "{pname}/heal: result count differs with tracing on"
+            );
+            for (a, b) in res_on.iter().zip(&res_off) {
+                anyhow::ensure!(
+                    a.id == b.id && a.tokens == b.tokens && a.outputs == b.outputs,
+                    "{pname}/heal: request {} output differs with tracing on",
+                    a.id
+                );
+            }
+            anyhow::ensure!(
+                m_on.throughput_sim.to_bits() == m_off.throughput_sim.to_bits(),
+                "{pname}/heal: virtual throughput {} (traced) != {} (untraced)",
+                m_on.throughput_sim,
+                m_off.throughput_sim
+            );
+            let reg_bytes = obs::with_metrics(|m| m.counter("net.send_bytes"));
+            anyhow::ensure!(
+                ts.send_bytes_total == reg_bytes,
+                "{pname}/heal: trace bytes {} != metrics counter {}",
+                ts.send_bytes_total,
+                reg_bytes
+            );
+            anyhow::ensure!(
+                ts.by_name.get("heal").copied().unwrap_or(0) >= 1
+                    && ts.by_name.get("round").copied().unwrap_or(0) >= 1,
+                "{pname}/heal: timeline is missing heal/round spans"
+            );
+        }
+        obs::with_metrics(|mm| mm.absorb_batch(&m_on));
+        if let Some(dir) = &trace_dir {
+            std::fs::write(dir.join(format!("{pname}_heal.trace.json")), doc.to_string_compact())?;
+        }
+        scenario_metrics.push((format!("{pname}_heal"), obs::with_metrics(|m| m.to_json())));
+        table.row(vec![
+            (*pname).to_string(),
+            "heal".to_string(),
+            p.to_string(),
+            ts.events.to_string(),
+            ts.spans.to_string(),
+            ts.flows.to_string(),
+            fmt_bytes(ts.send_bytes_total),
+            fmt_bytes(ts.peak_wave_rank_bytes),
+        ]);
+        pairs.push((format!("{pname}_heal_send_bytes"), ts.send_bytes_total as f64));
+        pairs.push((format!("{pname}_heal_events"), ts.events as f64));
+        pairs.push((format!("{pname}_heal_flows"), ts.flows as f64));
+        scenarios += 1;
+    }
+
+    table.print();
+    if let Some(dir) = &trace_dir {
+        println!("traces: {}", dir.display());
+    }
+    if let Some(path) = &metrics_out {
+        let doc = Json::obj(vec![
+            ("bench", Json::str("trace")),
+            ("schema", Json::str(tree_attention::obs::metrics_json_schema())),
+            ("scenarios", Json::Obj(scenario_metrics.into_iter().collect())),
+        ]);
+        write_with_parents(path, &doc.to_string_pretty())?;
+        println!("metrics: {}", path.display());
+    }
+    pairs.push(("scenarios".to_string(), scenarios as f64));
+    pairs.push(("heals".to_string(), heals_total as f64));
+    pairs.push(("wall_s".to_string(), wall.elapsed().as_secs_f64()));
+    let refs: Vec<(&str, f64)> = pairs.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+    let path = write_bench_summary("obs", &refs)?;
+    println!("summary: {}", path.display());
+    if check {
+        println!(
+            "all {scenarios} scenarios checked: bytes exact vs executor, scratch within \
+             verifier budget, tracing bit-transparent ✓"
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve_bench(spec: &RunSpec, sinks: &ObsSinks) -> anyhow::Result<()> {
     use tree_attention::serve::{
         synthetic_decode_workload, synthetic_shared_prefix_workload, BatcherConfig, DecodeBatcher,
     };
@@ -392,6 +754,15 @@ fn cmd_serve_bench(spec: &RunSpec) -> anyhow::Result<()> {
     let shape = AttnShape::new(1, spec.model.n_heads, spec.model.kv_heads, spec.model.d_head());
     let scale = 1.0 / (spec.model.d_head() as f32).sqrt();
     let min_ctx = (spec.seq_len / 2).max(1);
+    // Observability: when a sink is requested the whole sweep is traced.
+    // The recorder is cleared per batch width (each width restarts the
+    // virtual clock, and a Chrome timeline needs one monotonic clock), so
+    // the emitted trace covers the LAST (widest) width while the metrics
+    // registry accumulates across all of them.
+    let _obs = sinks.active().then(|| {
+        obs::reset(obs::DEFAULT_CAPACITY);
+        obs::TraceGuard::enable()
+    });
     println!(
         "serve-bench: continuous-batching decode (strategy={}, prefix_share={}) on {} | model {} | {} requests, ctx {}–{}, shared prefix {}, {} tokens each",
         spec.strategy.name(),
@@ -448,6 +819,9 @@ fn cmd_serve_bench(spec: &RunSpec) -> anyhow::Result<()> {
     widths.push(spec.batch);
     let mut rows: Vec<Json> = Vec::new();
     for &max_batch in &widths {
+        if sinks.active() {
+            obs::with_recorder(|r| r.clear());
+        }
         let cfg = BatcherConfig {
             max_batch,
             page_size: spec.page_size,
@@ -466,9 +840,16 @@ fn cmd_serve_bench(spec: &RunSpec) -> anyhow::Result<()> {
         }
         let (_, m) = batcher.run(&mut cluster, &ComputeBackend::Oracle, workload())?;
         anyhow::ensure!(m.rejected == 0, "workload exceeds pages_per_worker={}", spec.pages_per_worker);
+        if sinks.active() {
+            obs::with_metrics(|mm| mm.absorb_batch(&m));
+        }
         // With sharing on, also serve the identical workload with sharing
         // off: the TTFT / reserved-page comparison IS the feature's report.
         let baseline = if spec.prefix_share {
+            // The baseline replays the workload on a second cluster whose
+            // virtual clock restarts at zero — mute it so the emitted
+            // timeline stays monotonic.
+            let _mute = obs::suppress();
             let base = DecodeBatcher::new(shape, scale, BatcherConfig { prefix_share: false, ..cfg });
             let mut c2 = VirtualCluster::new(topo.clone());
             c2.world.net.set_retry_policy(spec.retry_policy());
@@ -562,6 +943,10 @@ fn cmd_serve_bench(spec: &RunSpec) -> anyhow::Result<()> {
         ("planner", planner_counters_json()),
     ]);
     println!("\n{}", json.to_string_compact());
+    if sinks.active() {
+        obs::with_metrics(|mm| mm.absorb_planner(&tree_attention::planner::planner_counters()));
+        sinks.write()?;
+    }
     Ok(())
 }
 
@@ -572,11 +957,18 @@ fn cmd_serve_bench(spec: &RunSpec) -> anyhow::Result<()> {
 /// replay on the survivors. Emits `bench_results/BENCH_chaos.json` with
 /// deterministic count metrics (gated by `bench-compare` in the chaos CI
 /// job); wall time goes under a `wall_` key, which is never compared.
-fn cmd_chaos_bench(spec: &RunSpec) -> anyhow::Result<()> {
+fn cmd_chaos_bench(spec: &RunSpec, sinks: &ObsSinks) -> anyhow::Result<()> {
     use tree_attention::bench::{quick_mode, write_bench_summary};
     use tree_attention::netsim::FaultPlan;
     use tree_attention::serve::{synthetic_decode_workload, BatcherConfig, DecodeBatcher};
 
+    // Observability: the recorder is cleared per scenario (each scenario's
+    // cluster restarts the virtual clock), so the emitted trace covers the
+    // LAST scenario while metrics accumulate across all of them.
+    let _obs = sinks.active().then(|| {
+        obs::reset(obs::DEFAULT_CAPACITY);
+        obs::TraceGuard::enable()
+    });
     let topo = spec.cluster.topology()?;
     let p = topo.world_size();
     anyhow::ensure!(p >= 2, "chaos-bench needs ≥2 workers (someone must survive)");
@@ -628,6 +1020,9 @@ fn cmd_chaos_bench(spec: &RunSpec) -> anyhow::Result<()> {
     let mut resharded_rows = 0usize;
     let mut max_diff = 0.0f32;
     for i in 0..scenarios {
+        if sinks.active() {
+            obs::with_recorder(|r| r.clear());
+        }
         let seed = spec.fault_seed.wrapping_add(i);
         let cfg = BatcherConfig {
             // Everyone admitted at once: the batch decodes exactly
@@ -650,6 +1045,12 @@ fn cmd_chaos_bench(spec: &RunSpec) -> anyhow::Result<()> {
         let (results, m) = batcher.run(&mut cluster, &ComputeBackend::Oracle, reqs.clone())?;
         anyhow::ensure!(m.rejected == 0, "chaos workload exceeds pages_per_worker");
         anyhow::ensure!(m.heals >= 1, "seed {seed}: the kill never fired (no heal)");
+        if sinks.active() {
+            obs::with_metrics(|mm| mm.absorb_batch(&m));
+        }
+        // The replay clusters below restart the virtual clock at zero —
+        // mute them so the emitted timeline stays monotonic.
+        let _mute = obs::suppress();
         // Verification: every request's full output history must match a
         // from-scratch solo replay on the surviving topology. Bit-identity
         // holds for pinned full-buffer strategies; under auto planning the
@@ -721,6 +1122,10 @@ fn cmd_chaos_bench(spec: &RunSpec) -> anyhow::Result<()> {
         ],
     )?;
     println!("summary: {}", path.display());
+    if sinks.active() {
+        obs::with_metrics(|mm| mm.absorb_planner(&tree_attention::planner::planner_counters()));
+        sinks.write()?;
+    }
     Ok(())
 }
 

@@ -18,6 +18,7 @@
 //! step. All state is behind a mutex so concurrently-running worker threads
 //! can share one simulator.
 
+use crate::obs;
 use crate::topology::{Rank, Tier, Topology};
 use std::sync::Mutex;
 
@@ -486,7 +487,11 @@ impl SimWorld {
     /// Transfer `bytes` from `src` to `dst`, departing at src's current
     /// clock; advances dst's clock to the arrival (if later).
     pub fn send(&mut self, src: Rank, dst: Rank, bytes: u64) {
-        let arrive = self.net.transfer(src, dst, bytes, self.clocks[src]);
+        let depart = self.clocks[src];
+        let arrive = self.net.transfer(src, dst, bytes, depart);
+        if src != dst {
+            obs::transfer(src, dst, bytes, depart, arrive);
+        }
         if self.clocks[dst] < arrive {
             self.clocks[dst] = arrive;
         }
@@ -495,11 +500,35 @@ impl SimWorld {
     /// Fault-aware [`SimWorld::send`]: one attempt, no retry. Advances
     /// dst's clock on success; surfaces a typed error otherwise.
     pub fn try_send(&mut self, src: Rank, dst: Rank, bytes: u64) -> Result<(), CommError> {
-        let arrive = self.net.try_transfer(src, dst, bytes, self.clocks[src])?;
+        let depart = self.clocks[src];
+        let arrive = match self.net.try_transfer(src, dst, bytes, depart) {
+            Ok(t) => t,
+            Err(e) => {
+                Self::trace_comm_error(src, &e, depart);
+                return Err(e);
+            }
+        };
+        if src != dst {
+            obs::transfer(src, dst, bytes, depart, arrive);
+        }
         if self.clocks[dst] < arrive {
             self.clocks[dst] = arrive;
         }
         Ok(())
+    }
+
+    /// Trace-side mirror of a failed attempt: an instant on the sender's
+    /// row at the attempted departure time (no-op unless tracing is on).
+    fn trace_comm_error(src: Rank, err: &CommError, depart: f64) {
+        match err {
+            CommError::Timeout { dst, .. } => {
+                obs::instant(obs::rank32(src), obs::EventKind::Timeout { dst: obs::rank32(*dst) }, depart);
+            }
+            CommError::Dropped { dst, .. } => {
+                obs::instant(obs::rank32(src), obs::EventKind::PacketDrop { dst: obs::rank32(*dst) }, depart);
+            }
+            CommError::Degraded { .. } => {}
+        }
     }
 
     /// Fault-aware transfer with the network's bounded retry/backoff
@@ -513,15 +542,27 @@ impl SimWorld {
         let mut timeout = policy.timeout_s;
         let mut last = CommError::Timeout { src, dst };
         for attempt in 0..=policy.max_retries {
-            match self.net.try_transfer(src, dst, bytes, self.clocks[src]) {
-                Ok(arrive) => return Ok(arrive),
+            let depart = self.clocks[src];
+            match self.net.try_transfer(src, dst, bytes, depart) {
+                Ok(arrive) => {
+                    if src != dst {
+                        obs::transfer(src, dst, bytes, depart, arrive);
+                    }
+                    return Ok(arrive);
+                }
                 Err(e) => {
+                    Self::trace_comm_error(src, &e, depart);
                     // Failure is detected by a missing ack: charge the
                     // timeout to the sender, back off, and retry.
                     self.clocks[src] += timeout;
                     timeout *= policy.backoff;
                     if attempt < policy.max_retries {
                         self.net.note_retry();
+                        obs::instant(
+                            obs::rank32(src),
+                            obs::EventKind::Retry { attempt: attempt as u64 + 1 },
+                            self.clocks[src],
+                        );
                     }
                     last = e;
                 }
@@ -551,7 +592,9 @@ impl SimWorld {
     /// Advance `rank`'s clock by a compute interval.
     pub fn compute(&mut self, rank: Rank, secs: f64) {
         assert!(secs >= 0.0);
+        let t0 = self.clocks[rank];
         self.clocks[rank] += secs;
+        obs::span(obs::rank32(rank), obs::EventKind::Compute, t0, self.clocks[rank]);
     }
 
     /// Raise `rank`'s clock to at least `t` (no-op when already past it).

@@ -1,0 +1,460 @@
+//! Exporters and validators for the `treeattn.trace.v1` schema.
+//!
+//! [`chrome_trace_json`] emits Chrome `trace_event` JSON (the object form,
+//! `{"traceEvents": [...]}`), loadable directly in `chrome://tracing` or
+//! <https://ui.perfetto.dev>: one *process* row per rank (`pid` = rank, the
+//! driver at [`DRIVER_PID`]), duration events (`ph: "X"`) for spans,
+//! thread-scoped instants (`ph: "i"`) for point events, and flow events
+//! (`ph: "s"` / `"f"`) linking every send to its recv so collectives render
+//! as arrows. Timestamps are **virtual-clock microseconds** — determinism
+//! is the point: two runs of the same seed produce byte-identical traces.
+//!
+//! [`validate_trace`] is the machine check CI's `obs` job and
+//! `treeattn trace --check` run over every emitted trace: schema shape,
+//! finite monotone timestamps, balanced span nesting per row, paired flow
+//! events, and the per-rank byte/wave accounting that the self-check
+//! cross-validates against `execute_cost` and the verifier's scratch bound.
+
+use super::{Event, EventKind, DRIVER};
+use crate::ser::Json;
+use std::collections::BTreeMap;
+
+/// Chrome-trace pid of the coordinator row (workers use their rank).
+pub const DRIVER_PID: u64 = 1_000_000;
+
+/// Identifier of the stable trace export shape (see docs/observability.md).
+pub fn trace_json_schema() -> &'static str {
+    "treeattn.trace.v1"
+}
+
+fn pid_of(rank: u32) -> u64 {
+    if rank == DRIVER {
+        DRIVER_PID
+    } else {
+        u64::from(rank)
+    }
+}
+
+fn us(t: f64) -> f64 {
+    t * 1e6
+}
+
+fn args_of(kind: &EventKind) -> Vec<(&'static str, Json)> {
+    match kind {
+        EventKind::Round { round, batch, strategy } => vec![
+            ("round", Json::num(*round as f64)),
+            ("batch", Json::num(*batch as f64)),
+            ("strategy", Json::str(strategy)),
+        ],
+        EventKind::StrategyDispatch { strategy, batch } => {
+            vec![("strategy", Json::str(strategy)), ("batch", Json::num(*batch as f64))]
+        }
+        EventKind::Compute => vec![],
+        EventKind::Wave { wave, algo } => {
+            vec![("wave", Json::num(*wave as f64)), ("algo", Json::str(algo))]
+        }
+        EventKind::Send { dst, bytes, wave } => vec![
+            ("dst", Json::num(f64::from(*dst))),
+            ("bytes", Json::num(*bytes as f64)),
+            ("wave", Json::num(*wave as f64)),
+        ],
+        EventKind::Recv { src, bytes, wave } => vec![
+            ("src", Json::num(f64::from(*src))),
+            ("bytes", Json::num(*bytes as f64)),
+            ("wave", Json::num(*wave as f64)),
+        ],
+        EventKind::PlannerLookup { planner, hit } => {
+            vec![("planner", Json::str(planner)), ("hit", Json::Bool(*hit))]
+        }
+        EventKind::PlanEvict { planner, evicted } => {
+            vec![("planner", Json::str(planner)), ("evicted", Json::num(*evicted as f64))]
+        }
+        EventKind::Retry { attempt } => vec![("attempt", Json::num(*attempt as f64))],
+        EventKind::Timeout { dst } => vec![("dst", Json::num(f64::from(*dst)))],
+        EventKind::PacketDrop { dst } => vec![("dst", Json::num(f64::from(*dst)))],
+        EventKind::Admission { admitted } => vec![("admitted", Json::num(*admitted as f64))],
+        EventKind::Prefill { tokens } => vec![("tokens", Json::num(*tokens as f64))],
+        EventKind::Heal { lost, survivors } => vec![
+            ("lost", Json::num(*lost as f64)),
+            ("survivors", Json::num(*survivors as f64)),
+        ],
+        EventKind::KvEvict { pages } => vec![("pages", Json::num(*pages as f64))],
+    }
+}
+
+/// Render recorded events as Chrome `trace_event` JSON. `dropped` is the
+/// recorder's overflow counter, surfaced in `otherData` so a truncated
+/// trace is detectable. Events are emitted sorted by timestamp (stable:
+/// record order breaks ties), which [`validate_trace`] re-checks.
+pub fn chrome_trace_json(events: &[Event], dropped: u64) -> Json {
+    // Metadata rows: name every pid that appears.
+    let mut pids: Vec<u64> = events.iter().map(|e| pid_of(e.rank)).collect();
+    pids.sort_unstable();
+    pids.dedup();
+    let mut out: Vec<Json> = pids
+        .iter()
+        .map(|&pid| {
+            let name =
+                if pid == DRIVER_PID { "driver".to_string() } else { format!("rank {pid}") };
+            Json::obj(vec![
+                ("name", Json::str("process_name")),
+                ("ph", Json::str("M")),
+                ("pid", Json::num(pid as f64)),
+                ("tid", Json::num(0.0)),
+                ("args", Json::obj(vec![("name", Json::str(&name))])),
+            ])
+        })
+        .collect();
+
+    // Timestamp-sorted payload events (stable sort keeps a flow's `s`
+    // before its `f` when depart == arrive).
+    let mut order: Vec<&Event> = events.iter().collect();
+    order.sort_by(|a, b| a.t0.partial_cmp(&b.t0).unwrap_or(std::cmp::Ordering::Equal));
+    for e in &order {
+        let pid = pid_of(e.rank) as f64;
+        let ts = us(e.t0);
+        let mut fields = vec![
+            ("name", Json::str(e.kind.name())),
+            ("pid", Json::num(pid)),
+            ("tid", Json::num(0.0)),
+            ("ts", Json::num(ts)),
+            ("args", Json::obj(args_of(&e.kind))),
+        ];
+        if e.kind.is_span() {
+            fields.push(("ph", Json::str("X")));
+            fields.push(("dur", Json::num(us(e.t1) - ts)));
+        } else {
+            fields.push(("ph", Json::str("i")));
+            fields.push(("s", Json::str("t")));
+        }
+        out.push(Json::obj(fields));
+        // Flow half-events ride at the same timestamp as their instant.
+        match e.kind {
+            EventKind::Send { .. } if e.flow != 0 => out.push(Json::obj(vec![
+                ("name", Json::str("xfer")),
+                ("cat", Json::str("net")),
+                ("ph", Json::str("s")),
+                ("id", Json::num(e.flow as f64)),
+                ("pid", Json::num(pid)),
+                ("tid", Json::num(0.0)),
+                ("ts", Json::num(ts)),
+            ])),
+            EventKind::Recv { .. } if e.flow != 0 => out.push(Json::obj(vec![
+                ("name", Json::str("xfer")),
+                ("cat", Json::str("net")),
+                ("ph", Json::str("f")),
+                ("bp", Json::str("e")),
+                ("id", Json::num(e.flow as f64)),
+                ("pid", Json::num(pid)),
+                ("tid", Json::num(0.0)),
+                ("ts", Json::num(ts)),
+            ])),
+            _ => {}
+        }
+    }
+
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(out)),
+        ("displayTimeUnit", Json::str("ms")),
+        (
+            "otherData",
+            Json::obj(vec![
+                ("schema", Json::str(trace_json_schema())),
+                ("dropped", Json::num(dropped as f64)),
+            ]),
+        ),
+    ])
+}
+
+/// Export the *global* recorder's current contents.
+pub fn snapshot_trace_json() -> Json {
+    super::with_recorder(|r| chrome_trace_json(r.events(), r.dropped()))
+}
+
+/// Aggregates [`validate_trace`] computes while checking a trace — the raw
+/// material of `treeattn trace --check`'s cross-validation.
+#[derive(Clone, Debug, Default)]
+pub struct TraceStats {
+    /// Payload events (metadata and flow half-events excluded).
+    pub events: usize,
+    pub spans: usize,
+    pub instants: usize,
+    /// Matched send→recv flow pairs.
+    pub flows: usize,
+    /// Recorder overflow counter from `otherData.dropped`.
+    pub dropped: u64,
+    /// Total bytes across `send` events.
+    pub send_bytes_total: u64,
+    /// Bytes sent per rank (pid).
+    pub send_bytes_by_rank: BTreeMap<u64, u64>,
+    /// Largest per-(wave, rank) outgoing byte sum over sends with a wave
+    /// stamp — the trace-side view of the verifier's peak-scratch claim.
+    pub peak_wave_rank_bytes: u64,
+    /// Payload event counts by name.
+    pub by_name: BTreeMap<String, usize>,
+}
+
+fn field_f64(ev: &Json, key: &str) -> anyhow::Result<f64> {
+    ev.get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| anyhow::anyhow!("trace event missing numeric '{key}': {}", ev.to_string_compact()))
+}
+
+/// Validate a Chrome-trace JSON document against the `treeattn.trace.v1`
+/// contract:
+///
+/// 1. structural shape (`traceEvents` array, `otherData.schema`, required
+///    fields per event, finite non-negative timestamps, non-negative
+///    durations);
+/// 2. the event array is timestamp-sorted (monotone non-decreasing);
+/// 3. span nesting balanced per (pid, tid): any two `ph: "X"` spans on one
+///    row are disjoint or properly nested;
+/// 4. flow events paired: every flow id has exactly one `s` and one `f`,
+///    with `ts(f) ≥ ts(s)`;
+/// 5. byte accounting: every `send`/`recv` instant carries `bytes` and a
+///    `wave` stamp (−1 outside collectives), accumulated into
+///    [`TraceStats`].
+pub fn validate_trace(doc: &Json) -> anyhow::Result<TraceStats> {
+    let other = doc.get("otherData").ok_or_else(|| anyhow::anyhow!("missing otherData"))?;
+    let schema = other.req_str("schema")?;
+    anyhow::ensure!(
+        schema == trace_json_schema(),
+        "unknown trace schema '{schema}' (expected {})",
+        trace_json_schema()
+    );
+    let dropped = field_f64(other, "dropped")? as u64;
+    let events = doc
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("missing traceEvents array"))?;
+
+    let mut stats = TraceStats { dropped, ..TraceStats::default() };
+    // (pid, tid) -> [(ts, dur)] for the nesting check.
+    let mut spans: BTreeMap<(u64, u64), Vec<(f64, f64)>> = BTreeMap::new();
+    // flow id -> (s count, f count, ts_s, ts_f)
+    let mut flows: BTreeMap<u64, (usize, usize, f64, f64)> = BTreeMap::new();
+    let mut last_ts = f64::NEG_INFINITY;
+
+    for ev in events {
+        let ph = ev.req_str("ph")?;
+        if ph == "M" {
+            continue;
+        }
+        let pid = field_f64(ev, "pid")? as u64;
+        let tid = field_f64(ev, "tid")? as u64;
+        let ts = field_f64(ev, "ts")?;
+        anyhow::ensure!(ts.is_finite() && ts >= 0.0, "bad timestamp {ts}");
+        anyhow::ensure!(
+            ts >= last_ts,
+            "timestamps not monotone: {ts} after {last_ts}"
+        );
+        last_ts = ts;
+        match ph {
+            "s" | "f" => {
+                let id = field_f64(ev, "id")? as u64;
+                let e = flows.entry(id).or_insert((0, 0, 0.0, 0.0));
+                if ph == "s" {
+                    e.0 += 1;
+                    e.2 = ts;
+                } else {
+                    e.1 += 1;
+                    e.3 = ts;
+                }
+                continue;
+            }
+            "X" => {
+                let dur = field_f64(ev, "dur")?;
+                anyhow::ensure!(dur.is_finite() && dur >= 0.0, "bad span duration {dur}");
+                spans.entry((pid, tid)).or_default().push((ts, dur));
+                stats.spans += 1;
+            }
+            "i" => {
+                stats.instants += 1;
+            }
+            other => anyhow::bail!("unexpected event phase '{other}'"),
+        }
+        let name = ev.req_str("name")?;
+        stats.events += 1;
+        *stats.by_name.entry(name.to_string()).or_insert(0) += 1;
+        if name == "send" {
+            let args = ev.get("args").ok_or_else(|| anyhow::anyhow!("send without args"))?;
+            let bytes = field_f64(args, "bytes")? as u64;
+            let wave = field_f64(args, "wave")?;
+            stats.send_bytes_total += bytes;
+            *stats.send_bytes_by_rank.entry(pid).or_insert(0) += bytes;
+            if wave >= 0.0 {
+                // Accumulated below via a second pass map to keep this loop
+                // single-allocation; see wave_bytes.
+            }
+        } else if name == "recv" {
+            let args = ev.get("args").ok_or_else(|| anyhow::anyhow!("recv without args"))?;
+            field_f64(args, "bytes")?;
+            field_f64(args, "wave")?;
+        }
+    }
+
+    // Per-(wave, rank) outgoing byte peaks.
+    let mut wave_bytes: BTreeMap<(i64, u64), u64> = BTreeMap::new();
+    for ev in events {
+        if ev.req_str("ph")? != "i" || ev.req_str("name")? != "send" {
+            continue;
+        }
+        let pid = field_f64(ev, "pid")? as u64;
+        let args = ev.get("args").ok_or_else(|| anyhow::anyhow!("send without args"))?;
+        let wave = field_f64(args, "wave")? as i64;
+        if wave >= 0 {
+            *wave_bytes.entry((wave, pid)).or_insert(0) += field_f64(args, "bytes")? as u64;
+        }
+    }
+    stats.peak_wave_rank_bytes = wave_bytes.values().copied().max().unwrap_or(0);
+
+    // Flow pairing.
+    for (id, (s, f, ts_s, ts_f)) in &flows {
+        anyhow::ensure!(
+            *s == 1 && *f == 1,
+            "flow {id} has {s} start(s) and {f} finish(es) (want exactly 1 each)"
+        );
+        anyhow::ensure!(
+            ts_f >= ts_s,
+            "flow {id} finishes at {ts_f} before it starts at {ts_s}"
+        );
+    }
+    stats.flows = flows.len();
+
+    // Span nesting, per row: sort by (start asc, dur desc) and sweep with
+    // an end-time stack. Timestamps are exact virtual-clock products, but
+    // a relative epsilon absorbs the µs-scaling rounding at shared edges.
+    for ((pid, tid), row) in &mut spans {
+        row.sort_by(|a, b| {
+            a.0.partial_cmp(&b.0)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal))
+        });
+        let mut stack: Vec<f64> = Vec::new();
+        for &(ts, dur) in row.iter() {
+            let eps = 1e-9 * ts.abs().max(1.0);
+            while stack.last().is_some_and(|&end| end <= ts + eps) {
+                stack.pop();
+            }
+            if let Some(&end) = stack.last() {
+                anyhow::ensure!(
+                    ts + dur <= end + eps,
+                    "unbalanced span nesting on pid {pid} tid {tid}: \
+                     span [{ts}, {}] overlaps enclosing span ending at {end}",
+                    ts + dur
+                );
+            }
+            stack.push(ts + dur);
+        }
+    }
+
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Event, EventKind, TraceRecorder, DRIVER};
+    use super::*;
+
+    fn span(rank: u32, t0: f64, t1: f64) -> Event {
+        Event { kind: EventKind::Compute, rank, t0, t1, flow: 0 }
+    }
+
+    #[test]
+    fn export_parses_and_validates() {
+        let mut r = TraceRecorder::with_capacity(64);
+        r.record(span(0, 0.0, 1.0));
+        r.record(span(0, 0.25, 0.5));
+        r.record_transfer(0, 1, 4096, 1.0, 2.5);
+        r.record(Event {
+            kind: EventKind::Round { round: 0, batch: 2, strategy: "tree" },
+            rank: DRIVER,
+            t0: 0.0,
+            t1: 3.0,
+            flow: 0,
+        });
+        let doc = chrome_trace_json(r.events(), r.dropped());
+        // Byte-exact round trip through the hand-rolled serializer.
+        let parsed = crate::ser::parse(&doc.to_string_pretty()).expect("parses");
+        let stats = validate_trace(&parsed).expect("validates");
+        assert_eq!(stats.flows, 1);
+        assert_eq!(stats.send_bytes_total, 4096);
+        assert_eq!(stats.send_bytes_by_rank.get(&0), Some(&4096));
+        assert_eq!(stats.by_name.get("compute"), Some(&2));
+        assert_eq!(stats.dropped, 0);
+        assert!(stats.spans >= 3);
+    }
+
+    #[test]
+    fn overlapping_spans_fail_nesting() {
+        let evs = vec![span(0, 0.0, 2.0), span(0, 1.0, 3.0)];
+        let doc = chrome_trace_json(&evs, 0);
+        let err = validate_trace(&doc).unwrap_err().to_string();
+        assert!(err.contains("unbalanced span nesting"), "{err}");
+    }
+
+    #[test]
+    fn same_row_sequential_and_nested_spans_pass() {
+        let evs = vec![
+            span(0, 0.0, 4.0),
+            span(0, 0.0, 1.0), // shares the start edge: nested
+            span(0, 1.0, 2.0),
+            span(0, 4.0, 5.0), // shares an edge with the parent: sequential
+        ];
+        let doc = chrome_trace_json(&evs, 0);
+        validate_trace(&doc).expect("nesting with shared edges is legal");
+    }
+
+    #[test]
+    fn unpaired_flow_fails() {
+        let evs = vec![Event {
+            kind: EventKind::Send { dst: 1, bytes: 8, wave: 0 },
+            rank: 0,
+            t0: 0.0,
+            t1: 0.0,
+            flow: 9,
+        }];
+        let doc = chrome_trace_json(&evs, 0);
+        let err = validate_trace(&doc).unwrap_err().to_string();
+        assert!(err.contains("flow 9"), "{err}");
+    }
+
+    #[test]
+    fn wave_peaks_track_the_heaviest_step() {
+        let mut r = TraceRecorder::with_capacity(64);
+        r.set_wave(Some(0));
+        r.record_transfer(0, 1, 100, 0.0, 1.0);
+        r.record_transfer(0, 2, 150, 0.0, 1.0); // rank 0, wave 0: 250
+        r.set_wave(Some(1));
+        r.record_transfer(2, 0, 200, 1.0, 2.0);
+        r.set_wave(None);
+        r.record_transfer(1, 0, 999, 2.0, 3.0); // no wave: excluded from peaks
+        let stats = validate_trace(&chrome_trace_json(r.events(), 0)).expect("validates");
+        assert_eq!(stats.peak_wave_rank_bytes, 250);
+        assert_eq!(stats.send_bytes_total, 100 + 150 + 200 + 999);
+    }
+
+    #[test]
+    fn wrong_schema_is_rejected() {
+        let doc = Json::obj(vec![
+            ("traceEvents", Json::arr(vec![])),
+            ("otherData", Json::obj(vec![("schema", Json::str("bogus")), ("dropped", Json::num(0.0))])),
+        ]);
+        assert!(validate_trace(&doc).is_err());
+    }
+
+    #[test]
+    fn driver_rank_exports_its_own_pid() {
+        let evs = vec![Event {
+            kind: EventKind::PlannerLookup { planner: "collective", hit: false },
+            rank: DRIVER,
+            t0: 0.0,
+            t1: 0.0,
+            flow: 0,
+        }];
+        let doc = chrome_trace_json(&evs, 0);
+        let s = doc.to_string_compact();
+        assert!(s.contains(&DRIVER_PID.to_string()), "{s}");
+        assert!(s.contains("\"driver\""), "{s}");
+    }
+}

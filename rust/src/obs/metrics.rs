@@ -1,0 +1,363 @@
+//! Counters, gauges, and fixed log-bucket histograms — and the stable
+//! `treeattn.metrics.v1` JSON schema shared by `serve-bench`, `chaos-bench`,
+//! and `treeattn trace`.
+//!
+//! The registry absorbs (and supersedes as the export path) the ad-hoc
+//! counter structs that grew per-PR: [`crate::planner::PlannerCounters`],
+//! [`crate::netsim::FaultCounters`], and the serving layer's
+//! [`crate::serve::BatchMetrics`] — each `absorb_*` method maps one of them
+//! onto namespaced metric names, so every exporter emits one schema instead
+//! of three bespoke JSON shapes.
+//!
+//! Histograms are **fixed log-bucket**: 512 buckets, 4 per octave (powers
+//! of two), spanning 2⁻⁴⁰ (≈ 1e-12, sub-picosecond virtual times) to 2⁸⁸
+//! (≈ 3e26, far past any byte count here). No dependencies, O(1) record,
+//! deterministic quantiles: a value always lands in the same bucket, so
+//! p50/p95/p99 are bit-stable across hosts and safe to gate in
+//! `bench-compare`.
+
+use crate::ser::Json;
+use std::collections::BTreeMap;
+
+/// Buckets per octave (factor-of-two range). 4 → ≤ ~19% relative width.
+const BUCKETS_PER_OCTAVE: usize = 4;
+/// Exponent (base 2) of the first bucket's lower bound.
+const MIN_EXP: i32 = -40;
+/// Total bucket count: 128 octaves × 4.
+const NBUCKETS: usize = 512;
+
+/// A fixed log-bucket histogram over non-negative samples. Zeros (legal:
+/// zero-duration rounds) are counted in a dedicated underflow slot whose
+/// representative value is 0.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct LogHistogram {
+    buckets: Vec<u64>,
+    zeros: u64,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl LogHistogram {
+    pub fn new() -> LogHistogram {
+        LogHistogram { buckets: Vec::new(), zeros: 0, count: 0, sum: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    fn bucket_of(v: f64) -> usize {
+        let idx = ((v.log2() - f64::from(MIN_EXP)) * BUCKETS_PER_OCTAVE as f64).floor();
+        if idx < 0.0 {
+            0
+        } else if idx >= NBUCKETS as f64 {
+            NBUCKETS - 1
+        } else {
+            idx as usize
+        }
+    }
+
+    /// Geometric midpoint of bucket `i` — the quantile representative.
+    fn bucket_mid(i: usize) -> f64 {
+        let lo = f64::from(MIN_EXP) + i as f64 / BUCKETS_PER_OCTAVE as f64;
+        let hi = lo + 1.0 / BUCKETS_PER_OCTAVE as f64;
+        ((lo + hi) / 2.0).exp2()
+    }
+
+    /// Record one sample. Negative or non-finite samples are clamped to the
+    /// underflow slot (they cannot occur on the virtual-clock paths; this
+    /// just keeps the histogram total).
+    pub fn record(&mut self, v: f64) {
+        let v = if v.is_finite() { v } else { 0.0 };
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+        if v <= 0.0 {
+            self.zeros += 1;
+            return;
+        }
+        if self.buckets.is_empty() {
+            self.buckets = vec![0; NBUCKETS];
+        }
+        self.buckets[Self::bucket_of(v)] += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// Quantile estimate (bucket geometric midpoint, clamped to the exact
+    /// observed [min, max]). `q` in [0, 1]; returns 0 on an empty histogram.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut seen = self.zeros;
+        if seen >= target {
+            return 0.0f64.max(self.min());
+        }
+        for (i, &n) in self.buckets.iter().enumerate() {
+            seen += n;
+            if seen >= target {
+                return Self::bucket_mid(i).clamp(self.min(), self.max());
+            }
+        }
+        self.max()
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::num(self.count as f64)),
+            ("sum", Json::num(self.sum)),
+            ("min", Json::num(self.min())),
+            ("max", Json::num(self.max())),
+            ("p50", Json::num(self.quantile(0.50))),
+            ("p95", Json::num(self.quantile(0.95))),
+            ("p99", Json::num(self.quantile(0.99))),
+        ])
+    }
+}
+
+/// The metrics registry: named counters (monotone u64), gauges (f64
+/// last-write-wins), and [`LogHistogram`]s. `BTreeMap` keys make every
+/// export deterministically ordered.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsRegistry {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    hists: BTreeMap<String, LogHistogram>,
+}
+
+/// Identifier of the stable metrics export shape. Bumped only on breaking
+/// changes (renaming/removing a key is breaking; adding is not) — see
+/// docs/observability.md.
+pub fn metrics_json_schema() -> &'static str {
+    "treeattn.metrics.v1"
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    pub fn counter_add(&mut self, name: &str, by: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    /// Overwrite a counter with an externally-accumulated total (the
+    /// `absorb_*` paths).
+    pub fn counter_set(&mut self, name: &str, value: u64) {
+        self.counters.insert(name.to_string(), value);
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn gauge_set(&mut self, name: &str, value: f64) {
+        self.gauges.insert(name.to_string(), value);
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    pub fn observe(&mut self, name: &str, value: f64) {
+        self.hists.entry(name.to_string()).or_default().record(value);
+    }
+
+    pub fn histogram(&self, name: &str) -> Option<&LogHistogram> {
+        self.hists.get(name)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty() && self.gauges.is_empty() && self.hists.is_empty()
+    }
+
+    pub fn clear(&mut self) {
+        self.counters.clear();
+        self.gauges.clear();
+        self.hists.clear();
+    }
+
+    /// Absorb the global planner cache counters under `planner.*`.
+    pub fn absorb_planner(&mut self, c: &crate::planner::PlannerCounters) {
+        self.counter_set("planner.collective.hits", c.collective_hits);
+        self.counter_set("planner.collective.misses", c.collective_misses);
+        self.counter_set("planner.collective.plans", c.collective_plans as u64);
+        self.counter_set("planner.collective.evictions", c.collective_evictions);
+        self.counter_set("planner.collective.verified", c.collective_verified);
+        self.counter_set("planner.collective.rejected", c.collective_rejected);
+        self.counter_set("planner.collective.pipelined_wins", c.collective_pipelined_wins);
+        self.counter_set("planner.strategy.hits", c.strategy_hits);
+        self.counter_set("planner.strategy.misses", c.strategy_misses);
+        self.counter_set("planner.strategy.plans", c.strategy_plans as u64);
+        self.counter_set("planner.strategy.evictions", c.strategy_evictions);
+        self.counter_set("planner.strategy.verified", c.strategy_verified);
+        self.counter_set("planner.strategy.rejected", c.strategy_rejected);
+    }
+
+    /// Absorb a fault-layer counter snapshot under `fault.*`.
+    pub fn absorb_fault(&mut self, c: &crate::netsim::FaultCounters) {
+        self.counter_set("fault.timeouts", c.timeouts);
+        self.counter_set("fault.drops", c.drops);
+        self.counter_set("fault.retries", c.retries);
+    }
+
+    /// Absorb a serving run's [`crate::serve::BatchMetrics`] under
+    /// `serve.*` (latency summaries become gauges; the fault snapshot goes
+    /// through [`Self::absorb_fault`]).
+    pub fn absorb_batch(&mut self, m: &crate::serve::BatchMetrics) {
+        self.counter_set("serve.completed", m.completed as u64);
+        self.counter_set("serve.rejected", m.rejected as u64);
+        self.counter_set("serve.tokens_out", m.total_tokens_out as u64);
+        self.counter_set("serve.rounds", m.rounds as u64);
+        self.counter_set("serve.peak_active", m.peak_active as u64);
+        self.counter_set("serve.deduped_pages", m.deduped_pages as u64);
+        self.counter_set("serve.peak_used_pages", m.peak_used_pages as u64);
+        self.counter_set("serve.comm_bytes", m.comm_bytes);
+        self.counter_set("serve.comm_steps", m.comm_steps as u64);
+        self.counter_set("serve.heals", m.heals as u64);
+        self.counter_set("serve.lost_workers", m.lost_workers.len() as u64);
+        self.counter_set("serve.evicted_plans", m.evicted_plans as u64);
+        self.counter_set("serve.resharded_rows", m.resharded_rows as u64);
+        self.counter_set("serve.requeued", m.requeued as u64);
+        self.counter_set("serve.verified_schedules", m.verified_schedules as u64);
+        for (name, rounds) in &m.strategy_rounds {
+            self.counter_set(&format!("serve.strategy_rounds.{name}"), *rounds as u64);
+        }
+        self.gauge_set("serve.throughput_tok_per_s", m.throughput_sim);
+        self.gauge_set("serve.token_latency_mean_s", m.token_latency.mean);
+        self.gauge_set("serve.ttft_mean_s", m.ttft.mean);
+        self.gauge_set("serve.prefix_hit_rate", m.prefix_hit_rate());
+        self.absorb_fault(&m.fault);
+    }
+
+    /// Export the whole registry as `treeattn.metrics.v1` JSON.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema", Json::str(metrics_json_schema())),
+            (
+                "counters",
+                Json::Obj(
+                    self.counters
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::num(*v as f64)))
+                        .collect(),
+                ),
+            ),
+            (
+                "gauges",
+                Json::Obj(self.gauges.iter().map(|(k, v)| (k.clone(), Json::num(*v))).collect()),
+            ),
+            (
+                "histograms",
+                Json::Obj(self.hists.iter().map(|(k, h)| (k.clone(), h.to_json())).collect()),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_bracket_the_data() {
+        let mut h = LogHistogram::new();
+        for i in 1..=1000 {
+            h.record(i as f64);
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.quantile(0.5);
+        let p95 = h.quantile(0.95);
+        let p99 = h.quantile(0.99);
+        // Log buckets at 4/octave: ≤ ~19% relative bucket width.
+        assert!((p50 / 500.0 - 1.0).abs() < 0.2, "p50 {p50}");
+        assert!((p95 / 950.0 - 1.0).abs() < 0.2, "p95 {p95}");
+        assert!((p99 / 990.0 - 1.0).abs() < 0.2, "p99 {p99}");
+        assert!(p50 <= p95 && p95 <= p99);
+        assert_eq!(h.min(), 1.0);
+        assert_eq!(h.max(), 1000.0);
+    }
+
+    #[test]
+    fn histogram_is_deterministic_across_orderings() {
+        let mut a = LogHistogram::new();
+        let mut b = LogHistogram::new();
+        let vals = [3.5, 0.0, 1e-9, 7e8, 0.25, 42.0];
+        for v in vals {
+            a.record(v);
+        }
+        for v in vals.iter().rev() {
+            b.record(*v);
+        }
+        for q in [0.0, 0.25, 0.5, 0.9, 0.99, 1.0] {
+            assert_eq!(a.quantile(q), b.quantile(q), "q={q}");
+        }
+    }
+
+    #[test]
+    fn zeros_and_extremes_are_representable() {
+        let mut h = LogHistogram::new();
+        h.record(0.0);
+        h.record(1e-13); // below the first bucket: clamps, still counted
+        h.record(1e30); // above the last bucket: clamps, still counted
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.quantile(0.0), 0.0);
+        assert!(h.quantile(1.0) <= h.max());
+    }
+
+    #[test]
+    fn registry_counters_gauges_histograms_roundtrip() {
+        let mut m = MetricsRegistry::new();
+        m.counter_add("a.b", 2);
+        m.counter_add("a.b", 3);
+        m.gauge_set("g", 1.5);
+        m.observe("h", 4.0);
+        assert_eq!(m.counter("a.b"), 5);
+        assert_eq!(m.gauge("g"), Some(1.5));
+        assert_eq!(m.histogram("h").map(LogHistogram::count), Some(1));
+        let j = m.to_json();
+        let s = j.to_string_pretty();
+        let parsed = crate::ser::parse(&s).expect("export parses");
+        assert_eq!(
+            parsed.req_str("schema").expect("schema key"),
+            metrics_json_schema()
+        );
+        m.clear();
+        assert!(m.is_empty());
+    }
+
+    #[test]
+    fn absorbs_planner_and_fault_counters() {
+        let mut m = MetricsRegistry::new();
+        let pc = crate::planner::PlannerCounters { collective_hits: 7, strategy_misses: 3, ..Default::default() };
+        m.absorb_planner(&pc);
+        assert_eq!(m.counter("planner.collective.hits"), 7);
+        assert_eq!(m.counter("planner.strategy.misses"), 3);
+        let fc = crate::netsim::FaultCounters { timeouts: 1, drops: 2, retries: 3 };
+        m.absorb_fault(&fc);
+        assert_eq!(m.counter("fault.retries"), 3);
+    }
+}

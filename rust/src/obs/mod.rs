@@ -1,0 +1,524 @@
+//! Structured tracing & metrics — the observability tentpole (PR 9).
+//!
+//! The bench suite asserts the paper's claims (×8 decode speedup, lower
+//! communication volume, 2× peak memory) as end-of-run aggregates; this
+//! module makes them *inspectable per round*: a [`TraceRecorder`] of typed
+//! span/instant events stamped with rank + virtual-clock times from
+//! [`crate::netsim::SimWorld`], a [`MetricsRegistry`] of counters / gauges /
+//! fixed log-bucket histograms (p50/p95/p99 with no dependencies), and two
+//! exporters — Chrome `trace_event` JSON (one pid per rank, flow events
+//! linking each send to its recv so collectives render as arrows in
+//! Perfetto / `chrome://tracing`) and a stable machine-readable metrics
+//! JSON schema shared by `serve-bench`, `chaos-bench`, and `treeattn trace`.
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Zero interference.** Tracing observes the simulation, never
+//!    participates in it: no hook touches a clock, a buffer, or an RNG, so
+//!    a traced run is bit-identical — decode outputs AND virtual time — to
+//!    an untraced one (`rust/tests/obs_prop.rs` proves this for every
+//!    strategy × pipelining × fault point).
+//! 2. **Safe under load.** The recorder is a ring buffer with a hard
+//!    capacity; overflow drops *new* events and counts them
+//!    ([`TraceRecorder::dropped`]) rather than corrupting or reallocating,
+//!    and a send/recv pair is dropped atomically so retained flow events
+//!    always pair up.
+//! 3. **Cheap when off.** Every hook is gated on one relaxed atomic load
+//!    ([`enabled`]); tracing is off by default and costs nothing on the
+//!    tier-1 path.
+//!
+//! The wire points live in [`crate::netsim`] (per-send/recv + retry /
+//! timeout / drop), [`crate::collectives`] (per-wave context for the
+//! executors), [`crate::attention::strategy`] (dispatch spans),
+//! [`crate::planner`] (lookup hit/miss/evict), and
+//! [`crate::serve`] (admission / prefill / round / heal). See
+//! `docs/observability.md` for the event taxonomy and schema guarantees.
+
+pub mod export;
+pub mod metrics;
+
+pub use export::{chrome_trace_json, validate_trace, TraceStats};
+pub use metrics::{metrics_json_schema, LogHistogram, MetricsRegistry};
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+/// Sentinel rank for events attributable to the coordinator rather than a
+/// worker (round/admission/heal spans, planner lookups). Exported as its
+/// own Chrome-trace process row, named "driver".
+pub const DRIVER: u32 = u32::MAX;
+
+/// Wave value stamped on sends that happen outside any collective step
+/// (ring rotation hops, single-strategy gathers).
+pub const NO_WAVE: i64 = -1;
+
+/// Default event capacity: enough for a quick bench run; the serving layer
+/// and CLI raise it explicitly for full traces.
+pub const DEFAULT_CAPACITY: usize = 1 << 18;
+
+// ---------------------------------------------------------------------------
+// Typed events
+// ---------------------------------------------------------------------------
+
+/// The typed event taxonomy (docs/observability.md). Span kinds carry a
+/// duration (`t0..t1`); instant kinds ignore `t1`.
+#[derive(Clone, Debug, PartialEq)]
+pub enum EventKind {
+    /// One serving decode round (span, driver row).
+    Round { round: u64, batch: u64, strategy: &'static str },
+    /// One `DecodeStrategy::decode{,_batch}` call (span, driver row).
+    StrategyDispatch { strategy: &'static str, batch: u64 },
+    /// A flash-partial / local compute interval (span, worker row) —
+    /// emitted by [`crate::netsim::SimWorld::compute`].
+    Compute,
+    /// Start of one collective step/wave (instant, driver row).
+    Wave { wave: u64, algo: &'static str },
+    /// One wire message departing `rank` (instant, worker row; flow start).
+    /// `wave` is the collective step it belongs to, [`NO_WAVE`] outside
+    /// schedule execution.
+    Send { dst: u32, bytes: u64, wave: i64 },
+    /// The matching arrival (instant, worker row; flow end).
+    Recv { src: u32, bytes: u64, wave: i64 },
+    /// A plan-cache probe (instant, driver row). `planner` is
+    /// `"collective"` or `"strategy"`.
+    PlannerLookup { planner: &'static str, hit: bool },
+    /// Plans evicted from a planner cache (instant, driver row).
+    PlanEvict { planner: &'static str, evicted: u64 },
+    /// One failed transfer attempt that will be retried (instant, sender
+    /// row).
+    Retry { attempt: u64 },
+    /// A transfer aborted on a dead endpoint (instant, sender row).
+    Timeout { dst: u32 },
+    /// A message swallowed by an injected drop budget (instant, sender row).
+    PacketDrop { dst: u32 },
+    /// One admission pass of the serving batcher (span, driver row).
+    Admission { admitted: u64 },
+    /// One session prefill (span, driver row).
+    Prefill { tokens: u64 },
+    /// One degraded-heal: re-plan + re-shard onto survivors (span, driver
+    /// row).
+    Heal { lost: u64, survivors: u64 },
+    /// KV pages evicted to admit a new session (instant, driver row).
+    KvEvict { pages: u64 },
+}
+
+impl EventKind {
+    /// Stable event name (the Chrome-trace `name` field; part of the
+    /// `treeattn.trace.v1` schema).
+    pub fn name(&self) -> &'static str {
+        match self {
+            EventKind::Round { .. } => "round",
+            EventKind::StrategyDispatch { .. } => "strategy_dispatch",
+            EventKind::Compute => "compute",
+            EventKind::Wave { .. } => "wave",
+            EventKind::Send { .. } => "send",
+            EventKind::Recv { .. } => "recv",
+            EventKind::PlannerLookup { .. } => "planner_lookup",
+            EventKind::PlanEvict { .. } => "plan_evict",
+            EventKind::Retry { .. } => "retry",
+            EventKind::Timeout { .. } => "timeout",
+            EventKind::PacketDrop { .. } => "packet_drop",
+            EventKind::Admission { .. } => "admission",
+            EventKind::Prefill { .. } => "prefill",
+            EventKind::Heal { .. } => "heal",
+            EventKind::KvEvict { .. } => "kv_evict",
+        }
+    }
+
+    /// True for duration (`ph: "X"`) events; false for instants.
+    pub fn is_span(&self) -> bool {
+        matches!(
+            self,
+            EventKind::Round { .. }
+                | EventKind::StrategyDispatch { .. }
+                | EventKind::Compute
+                | EventKind::Admission { .. }
+                | EventKind::Prefill { .. }
+                | EventKind::Heal { .. }
+        )
+    }
+}
+
+/// One recorded event: a typed kind, the rank it happened on ([`DRIVER`]
+/// for coordinator events), virtual-clock start/end seconds, and a flow id
+/// (`0` = none) linking a [`EventKind::Send`] to its [`EventKind::Recv`].
+#[derive(Clone, Debug)]
+pub struct Event {
+    pub kind: EventKind,
+    pub rank: u32,
+    pub t0: f64,
+    pub t1: f64,
+    pub flow: u64,
+}
+
+// ---------------------------------------------------------------------------
+// Recorder
+// ---------------------------------------------------------------------------
+
+/// Bounded in-memory trace buffer. Overflow keeps the earliest events (they
+/// anchor the timeline) and counts every dropped newcomer; see the module
+/// docs for why drops never corrupt retained events.
+pub struct TraceRecorder {
+    events: Vec<Event>,
+    capacity: usize,
+    dropped: u64,
+    next_flow: u64,
+    wave: i64,
+}
+
+impl Default for TraceRecorder {
+    fn default() -> Self {
+        TraceRecorder::with_capacity(DEFAULT_CAPACITY)
+    }
+}
+
+impl TraceRecorder {
+    pub fn with_capacity(capacity: usize) -> TraceRecorder {
+        TraceRecorder { events: Vec::new(), capacity, dropped: 0, next_flow: 0, wave: NO_WAVE }
+    }
+
+    /// Record one event; returns false (and counts a drop) at capacity.
+    pub fn record(&mut self, ev: Event) -> bool {
+        if self.events.len() >= self.capacity {
+            self.dropped += 1;
+            return false;
+        }
+        self.events.push(ev);
+        true
+    }
+
+    /// Record a send/recv pair atomically: either both fit or both drop, so
+    /// the retained trace never contains a half-flow.
+    pub fn record_transfer(&mut self, src: u32, dst: u32, bytes: u64, depart: f64, arrive: f64) {
+        let wave = self.wave;
+        if self.events.len() + 2 > self.capacity {
+            self.dropped += 2;
+            return;
+        }
+        self.next_flow += 1;
+        let flow = self.next_flow;
+        self.events.push(Event {
+            kind: EventKind::Send { dst, bytes, wave },
+            rank: src,
+            t0: depart,
+            t1: depart,
+            flow,
+        });
+        self.events.push(Event {
+            kind: EventKind::Recv { src, bytes, wave },
+            rank: dst,
+            t0: arrive,
+            t1: arrive,
+            flow,
+        });
+    }
+
+    /// Set (or clear, with `None`) the collective step index stamped on
+    /// subsequent transfers.
+    pub fn set_wave(&mut self, wave: Option<u64>) {
+        // Step indices are bounded by schedule length (≪ i64::MAX); the
+        // fallback only defends against a nonsensical caller.
+        self.wave = match wave {
+            Some(w) => i64::try_from(w).unwrap_or(NO_WAVE),
+            None => NO_WAVE,
+        };
+    }
+
+    pub fn events(&self) -> &[Event] {
+        &self.events
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Change the hard cap. Shrinking below the current length keeps
+    /// already-recorded events (the cap gates *new* ones only).
+    pub fn set_capacity(&mut self, capacity: usize) {
+        self.capacity = capacity;
+    }
+
+    /// Clear events, drop counter, flow ids, and wave context.
+    pub fn clear(&mut self) {
+        self.events.clear();
+        self.dropped = 0;
+        self.next_flow = 0;
+        self.wave = NO_WAVE;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Global instance + hooks
+// ---------------------------------------------------------------------------
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static RECORDER: OnceLock<Mutex<TraceRecorder>> = OnceLock::new();
+static METRICS: OnceLock<Mutex<MetricsRegistry>> = OnceLock::new();
+
+thread_local! {
+    // Depth of active [`suppress`] guards on this thread. Planner pricing
+    // replays candidate schedules on scratch worlds through the same send
+    // path as real traffic; suppression keeps those hypothetical transfers
+    // out of the trace so `--check`'s byte accounting stays exact.
+    static SUPPRESSED: std::cell::Cell<u32> = const { std::cell::Cell::new(0) };
+}
+
+/// RAII guard that mutes observability hooks on the current thread (used by
+/// planner cost pricing). Nests; cheap; never affects other threads.
+pub struct SuppressGuard {
+    _private: (),
+}
+
+/// Mute hooks on this thread until the returned guard drops.
+pub fn suppress() -> SuppressGuard {
+    SUPPRESSED.with(|c| c.set(c.get() + 1));
+    SuppressGuard { _private: () }
+}
+
+impl Drop for SuppressGuard {
+    fn drop(&mut self) {
+        SUPPRESSED.with(|c| c.set(c.get().saturating_sub(1)));
+    }
+}
+
+fn lock<T>(cell: &'static OnceLock<Mutex<T>>) -> MutexGuard<'static, T>
+where
+    T: Default,
+{
+    // Same poison-recovery idiom as the global planners: observability
+    // state stays usable even if a test thread panicked mid-record.
+    cell.get_or_init(Mutex::default).lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// True when tracing/metrics hooks are live. One relaxed atomic load on
+/// untraced runs — the entire cost of observability there; the thread-local
+/// suppression check only runs once tracing is globally on.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed) && SUPPRESSED.with(|c| c.get()) == 0
+}
+
+/// Turn the hooks on/off (they start off).
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Run `f` against the global recorder (creating it on first use).
+pub fn with_recorder<R>(f: impl FnOnce(&mut TraceRecorder) -> R) -> R {
+    f(&mut lock(&RECORDER))
+}
+
+/// Run `f` against the global metrics registry (creating it on first use).
+pub fn with_metrics<R>(f: impl FnOnce(&mut MetricsRegistry) -> R) -> R {
+    f(&mut lock(&METRICS))
+}
+
+/// Reset recorder and metrics to a pristine state with the given trace
+/// capacity. The CLI / benches call this before each traced run.
+pub fn reset(capacity: usize) {
+    with_recorder(|r| {
+        r.clear();
+        r.set_capacity(capacity);
+    });
+    with_metrics(MetricsRegistry::clear);
+}
+
+/// Record a span event (no-op unless [`enabled`]).
+pub fn span(rank: u32, kind: EventKind, t0: f64, t1: f64) {
+    if !enabled() {
+        return;
+    }
+    with_recorder(|r| r.record(Event { kind, rank, t0, t1, flow: 0 }));
+}
+
+/// Record an instant event (no-op unless [`enabled`]).
+pub fn instant(rank: u32, kind: EventKind, t: f64) {
+    if !enabled() {
+        return;
+    }
+    with_recorder(|r| r.record(Event { kind, rank, t0: t, t1: t, flow: 0 }));
+}
+
+/// Record one wire transfer: a flow-linked send/recv pair stamped with the
+/// current wave, plus the `net.*` metrics (no-op unless [`enabled`]).
+pub fn transfer(src: usize, dst: usize, bytes: u64, depart: f64, arrive: f64) {
+    if !enabled() {
+        return;
+    }
+    with_recorder(|r| r.record_transfer(rank32(src), rank32(dst), bytes, depart, arrive));
+    with_metrics(|m| {
+        m.counter_add("net.sends", 1);
+        m.counter_add("net.send_bytes", bytes);
+        m.observe("net.send_bytes_hist", bytes as f64);
+        m.observe("net.transfer_s", arrive - depart);
+    });
+}
+
+/// Set the collective step index stamped on subsequent transfers (no-op
+/// unless [`enabled`]).
+pub fn set_wave(wave: Option<u64>) {
+    if !enabled() {
+        return;
+    }
+    with_recorder(|r| r.set_wave(wave));
+}
+
+/// Bump a metrics counter (no-op unless [`enabled`]).
+pub fn counter_add(name: &str, by: u64) {
+    if !enabled() {
+        return;
+    }
+    with_metrics(|m| m.counter_add(name, by));
+}
+
+/// Record a histogram observation (no-op unless [`enabled`]).
+pub fn observe(name: &str, value: f64) {
+    if !enabled() {
+        return;
+    }
+    with_metrics(|m| m.observe(name, value));
+}
+
+/// Narrow a rank to the event representation ([`DRIVER`] saturation keeps
+/// this total; world sizes are far below u32::MAX).
+pub fn rank32(rank: usize) -> u32 {
+    u32::try_from(rank).unwrap_or(DRIVER)
+}
+
+/// RAII guard that enables tracing on construction and restores the prior
+/// state on drop — keeps `--trace-out` plumbing panic-safe in benches.
+pub struct TraceGuard {
+    was: bool,
+}
+
+impl TraceGuard {
+    pub fn enable() -> TraceGuard {
+        let was = enabled();
+        set_enabled(true);
+        TraceGuard { was }
+    }
+}
+
+impl Drop for TraceGuard {
+    fn drop(&mut self) {
+        set_enabled(self.was);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Tests that touch the process-global ENABLED flag / recorder must not
+    /// interleave with each other (other modules' tests never *enable*
+    /// tracing, so holding this lock is sufficient).
+    fn global_guard() -> MutexGuard<'static, ()> {
+        static GUARD: Mutex<()> = Mutex::new(());
+        GUARD.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
+    fn ev(kind: EventKind, rank: u32, t: f64) -> Event {
+        Event { kind, rank, t0: t, t1: t, flow: 0 }
+    }
+
+    #[test]
+    fn recorder_caps_and_counts_drops_without_corrupting_prefix() {
+        let mut r = TraceRecorder::with_capacity(3);
+        for i in 0..5 {
+            r.record(ev(EventKind::Compute, 0, i as f64));
+        }
+        assert_eq!(r.events().len(), 3);
+        assert_eq!(r.dropped(), 2);
+        // Earlier events intact, in order.
+        for (i, e) in r.events().iter().enumerate() {
+            assert_eq!(e.t0, i as f64);
+        }
+    }
+
+    #[test]
+    fn transfer_pairs_drop_atomically() {
+        let mut r = TraceRecorder::with_capacity(3);
+        r.record_transfer(0, 1, 100, 0.0, 1.0); // fits (2 events)
+        r.record_transfer(1, 2, 100, 1.0, 2.0); // would straddle the cap: dropped whole
+        assert_eq!(r.events().len(), 2);
+        assert_eq!(r.dropped(), 2);
+        // The retained pair still shares one flow id.
+        assert_eq!(r.events()[0].flow, r.events()[1].flow);
+        assert_ne!(r.events()[0].flow, 0);
+    }
+
+    #[test]
+    fn wave_context_stamps_sends() {
+        let mut r = TraceRecorder::with_capacity(16);
+        r.set_wave(Some(3));
+        r.record_transfer(0, 1, 8, 0.0, 1.0);
+        r.set_wave(None);
+        r.record_transfer(1, 0, 8, 1.0, 2.0);
+        match &r.events()[0].kind {
+            EventKind::Send { wave, .. } => assert_eq!(*wave, 3),
+            k => panic!("expected send, got {k:?}"),
+        }
+        match &r.events()[2].kind {
+            EventKind::Send { wave, .. } => assert_eq!(*wave, NO_WAVE),
+            k => panic!("expected send, got {k:?}"),
+        }
+    }
+
+    #[test]
+    fn hooks_are_inert_when_disabled() {
+        let _g = global_guard();
+        set_enabled(false);
+        reset(64);
+        span(0, EventKind::Compute, 0.0, 1.0);
+        instant(0, EventKind::Timeout { dst: 1 }, 0.5);
+        transfer(0, 1, 99, 0.0, 1.0);
+        counter_add("x", 1);
+        observe("y", 1.0);
+        with_recorder(|r| assert!(r.events().is_empty()));
+        with_metrics(|m| assert!(m.is_empty()));
+    }
+
+    #[test]
+    fn trace_guard_restores_prior_state() {
+        let _g = global_guard();
+        set_enabled(false);
+        {
+            let _t = TraceGuard::enable();
+            assert!(enabled());
+        }
+        assert!(!enabled());
+    }
+
+    #[test]
+    fn suppression_gates_enabled_and_nests() {
+        let _g = global_guard();
+        set_enabled(true);
+        assert!(enabled());
+        {
+            let _s = suppress();
+            assert!(!enabled());
+            {
+                let _s2 = suppress();
+                assert!(!enabled());
+            }
+            assert!(!enabled(), "outer suppression still active");
+        }
+        assert!(enabled(), "all guards dropped");
+        set_enabled(false);
+    }
+
+    #[test]
+    fn event_names_are_stable() {
+        // The schema guarantee (docs/observability.md): renaming an event
+        // is a breaking change to treeattn.trace.v1.
+        assert_eq!(EventKind::Round { round: 0, batch: 0, strategy: "tree" }.name(), "round");
+        assert_eq!(EventKind::Send { dst: 0, bytes: 0, wave: 0 }.name(), "send");
+        assert_eq!(EventKind::PlannerLookup { planner: "collective", hit: true }.name(), "planner_lookup");
+        assert!(EventKind::Heal { lost: 1, survivors: 3 }.is_span());
+        assert!(!EventKind::Retry { attempt: 1 }.is_span());
+    }
+}

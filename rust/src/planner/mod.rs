@@ -185,6 +185,13 @@ impl CollectivePlanner {
         self.cache.retain(|(key_fp, _), _| *key_fp != fp);
         let evicted = before - self.cache.len();
         self.evictions += evicted as u64;
+        if evicted > 0 {
+            crate::obs::instant(
+                crate::obs::DRIVER,
+                crate::obs::EventKind::PlanEvict { planner: "collective", evicted: evicted as u64 },
+                0.0,
+            );
+        }
         evicted
     }
 
@@ -207,10 +214,24 @@ impl CollectivePlanner {
         match self.cache.entry(key) {
             Entry::Occupied(e) => {
                 self.hits += 1;
+                crate::obs::instant(
+                    crate::obs::DRIVER,
+                    crate::obs::EventKind::PlannerLookup { planner: "collective", hit: true },
+                    0.0,
+                );
                 e.into_mut()
             }
             Entry::Vacant(e) => {
                 self.misses += 1;
+                crate::obs::instant(
+                    crate::obs::DRIVER,
+                    crate::obs::EventKind::PlannerLookup { planner: "collective", hit: false },
+                    0.0,
+                );
+                // Candidate pricing replays schedules on scratch worlds
+                // through the real send path; keep those hypothetical
+                // transfers out of any live trace.
+                let _mute = crate::obs::suppress();
                 let (plan, verified, rejected) = compute_plan(topo, req);
                 self.verified += verified;
                 self.rejected += rejected;
@@ -482,6 +503,13 @@ impl StrategyPlanner {
         self.cache.retain(|(key_fp, _), _| *key_fp != fp);
         let evicted = before - self.cache.len();
         self.evictions += evicted as u64;
+        if evicted > 0 {
+            crate::obs::instant(
+                crate::obs::DRIVER,
+                crate::obs::EventKind::PlanEvict { planner: "strategy", evicted: evicted as u64 },
+                0.0,
+            );
+        }
         evicted
     }
 
@@ -503,10 +531,23 @@ impl StrategyPlanner {
         match self.cache.entry(key) {
             Entry::Occupied(e) => {
                 self.hits += 1;
+                crate::obs::instant(
+                    crate::obs::DRIVER,
+                    crate::obs::EventKind::PlannerLookup { planner: "strategy", hit: true },
+                    0.0,
+                );
                 e.into_mut()
             }
             Entry::Vacant(e) => {
                 self.misses += 1;
+                crate::obs::instant(
+                    crate::obs::DRIVER,
+                    crate::obs::EventKind::PlannerLookup { planner: "strategy", hit: false },
+                    0.0,
+                );
+                // See CollectivePlanner::plan_entry: pricing is hypothetical
+                // traffic, muted from live traces.
+                let _mute = crate::obs::suppress();
                 let (plan, verified, rejected) = compute_strategy_plan(topo, req);
                 self.verified += verified;
                 self.rejected += rejected;

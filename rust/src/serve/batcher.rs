@@ -465,6 +465,8 @@ impl DecodeBatcher {
             }
 
             // -- admission: refill free slots in strict FIFO order ---------
+            let adm_t0 = cluster.world.max_clock();
+            let active_before_admission = active.len();
             while let Some(front) = queue.front() {
                 let need_full = self.footprint(p, front);
                 if !pool.fits_capacity(&need_full) {
@@ -611,9 +613,16 @@ impl DecodeBatcher {
                 } else {
                     0.0
                 };
+                let pf_t0 = cluster.world.max_clock();
                 for w in 0..p {
                     cluster.world.compute(w, t_pref);
                 }
+                crate::obs::span(
+                    crate::obs::DRIVER,
+                    crate::obs::EventKind::Prefill { tokens: n_new as u64 },
+                    pf_t0,
+                    cluster.world.max_clock(),
+                );
                 crate::tlog!(
                     Debug,
                     "admitted request {} (ctx {ctx}, prefix hit {matched})",
@@ -634,6 +643,14 @@ impl DecodeBatcher {
                     first_token_sim: None,
                 });
             }
+            crate::obs::span(
+                crate::obs::DRIVER,
+                crate::obs::EventKind::Admission {
+                    admitted: (active.len() - active_before_admission) as u64,
+                },
+                adm_t0,
+                cluster.world.max_clock(),
+            );
             peak_active = peak_active.max(active.len());
             peak_used_pages = peak_used_pages.max((0..p).map(|w| pool.used_pages(w)).sum());
 
@@ -702,6 +719,7 @@ impl DecodeBatcher {
                     dead.sort_unstable();
                     let p2 = p - dead.len();
                     anyhow::ensure!(p2 >= 1, "all {p} workers lost; cannot heal");
+                    let heal_t0 = cluster.world.max_clock();
                     crate::tlog!(
                         Warn,
                         "degraded decode at round {rounds}: lost workers {dead:?}, healing onto {p2} survivors"
@@ -810,6 +828,15 @@ impl DecodeBatcher {
                         queue.push_front(r);
                     }
                     heals += 1;
+                    crate::obs::span(
+                        crate::obs::DRIVER,
+                        crate::obs::EventKind::Heal {
+                            lost: dead.len() as u64,
+                            survivors: p2 as u64,
+                        },
+                        heal_t0,
+                        cluster.world.max_clock(),
+                    );
                     lost_workers.extend(dead);
                     continue;
                 }
@@ -817,6 +844,17 @@ impl DecodeBatcher {
             *strategy_rounds.entry(resolved.name()).or_insert(0) += 1;
             let after = cluster.world.max_clock();
             let round_lat = after - before;
+            crate::obs::span(
+                crate::obs::DRIVER,
+                crate::obs::EventKind::Round {
+                    round: rounds as u64,
+                    batch: decode_idx.len() as u64,
+                    strategy: resolved.name(),
+                },
+                before,
+                after,
+            );
+            crate::obs::observe("serve.round_s", round_lat);
             rounds += 1;
             comm_bytes += round.stats.traffic.total_bytes();
             comm_steps += round.stats.comm_steps;

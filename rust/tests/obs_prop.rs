@@ -1,0 +1,208 @@
+//! Property tests over the observability subsystem: tracing must be a pure
+//! observer of the decode stack.
+//!
+//!   1. every collective schedule the planner can emit — all algorithms,
+//!      plain and chunk-pipelined, world sizes 1..=16 including
+//!      non-powers-of-two — produces a timeline that parses and nests, and
+//!      whose per-rank send bytes sum EXACTLY to the cost executor's
+//!      traffic counters;
+//!   2. the traced peak per-(wave, rank) payload equals the static
+//!      verifier's peak-scratch claim, block for block;
+//!   3. the serving stack under a seeded worker kill is bit-identical —
+//!      outputs AND virtual clock — with tracing on vs off, for every
+//!      strategy × {plain, pipelined C ∈ {2, 4}};
+//!   4. recorder-capacity overflow increments the drop counter without
+//!      corrupting the retained prefix (the truncated trace still
+//!      validates).
+//!
+//! Tracing state is process-global, so every test here holds `OBS_LOCK`
+//! for its whole body.
+
+use std::sync::{Mutex, MutexGuard, PoisonError};
+
+use tree_attention::attention::ComputeBackend;
+use tree_attention::attnmath::AttnShape;
+use tree_attention::cluster::VirtualCluster;
+use tree_attention::collectives::{execute_cost, AllReduceAlgo};
+use tree_attention::gpumodel::GpuKind;
+use tree_attention::netsim::{FaultPlan, SimWorld};
+use tree_attention::obs;
+use tree_attention::serve::{
+    synthetic_decode_workload, BatchMetrics, BatchResult, BatcherConfig, DecodeBatcher,
+};
+use tree_attention::topology::{LinkSpec, Topology};
+use tree_attention::verifier;
+use tree_attention::Strategy;
+
+static OBS_LOCK: Mutex<()> = Mutex::new(());
+
+fn obs_lock() -> MutexGuard<'static, ()> {
+    OBS_LOCK.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+fn flat(p: usize) -> Topology {
+    Topology::custom(
+        "obs-prop",
+        1,
+        p,
+        GpuKind::H100,
+        LinkSpec::nvlink4(),
+        LinkSpec::infiniband_ndr(),
+    )
+}
+
+const WIRE_BPE: u64 = 2;
+const BLOCK_ELEMS: usize = 10;
+
+#[test]
+fn collective_traces_parse_nest_and_match_executor_bytes_exactly() {
+    let _g = obs_lock();
+    let algos = [
+        AllReduceAlgo::Ring,
+        AllReduceAlgo::Tree { fanout: 2 },
+        AllReduceAlgo::Tree { fanout: 3 },
+        AllReduceAlgo::TwoLevel { inter_fanout: 2 },
+        AllReduceAlgo::PipelinedTree { fanout: 2, chunks: 2 },
+        AllReduceAlgo::PipelinedTree { fanout: 2, chunks: 4 },
+        AllReduceAlgo::PipelinedRing { chunks: 4 },
+    ];
+    for p in [1usize, 2, 3, 5, 8, 12, 16] {
+        for algo in &algos {
+            obs::reset(obs::DEFAULT_CAPACITY);
+            let mut world = SimWorld::new(flat(p));
+            let sched = algo
+                .schedule_for(&world, 6, BLOCK_ELEMS, WIRE_BPE)
+                .unwrap_or_else(|e| panic!("p={p} {algo:?}: schedule: {e:#}"));
+            let stats = {
+                let _t = obs::TraceGuard::enable();
+                execute_cost(&mut world, &sched, BLOCK_ELEMS, WIRE_BPE)
+            };
+            let doc = obs::export::snapshot_trace_json();
+            let ts = obs::validate_trace(&doc)
+                .unwrap_or_else(|e| panic!("p={p} {}: invalid trace: {e:#}", sched.algo));
+            assert_eq!(ts.dropped, 0, "p={p} {}", sched.algo);
+            // Byte exactness: the trace and the NetSim counters are
+            // independent observers of the same sends.
+            assert_eq!(
+                ts.send_bytes_total,
+                stats.traffic.total_bytes(),
+                "p={p} {}: traced bytes != executor traffic",
+                sched.algo
+            );
+            let per_rank: u64 = ts.send_bytes_by_rank.values().sum();
+            assert_eq!(per_rank, ts.send_bytes_total, "p={p} {}", sched.algo);
+            // Scratch exactness: the heaviest traced (wave, rank) payload
+            // is the verifier's peak-scratch claim, scaled to bytes.
+            let report = verifier::verify_any(&sched)
+                .unwrap_or_else(|e| panic!("p={p} {}: verify: {e}", sched.algo));
+            assert_eq!(
+                ts.peak_wave_rank_bytes,
+                report.peak_scratch_blocks as u64 * BLOCK_ELEMS as u64 * WIRE_BPE,
+                "p={p} {}: traced peak != verifier peak_scratch_blocks",
+                sched.algo
+            );
+        }
+    }
+}
+
+#[test]
+fn serving_with_seeded_kill_is_bit_identical_with_tracing_on_and_off() {
+    let _g = obs_lock();
+    let p = 4;
+    let shape = AttnShape::new(1, 4, 2, 32);
+    let scale = 1.0 / (32.0f32).sqrt();
+    let algos = [
+        AllReduceAlgo::Tree { fanout: 2 },
+        AllReduceAlgo::PipelinedTree { fanout: 2, chunks: 2 },
+        AllReduceAlgo::PipelinedTree { fanout: 2, chunks: 4 },
+    ];
+    for strategy in [Strategy::Tree, Strategy::Ring, Strategy::Single] {
+        for algo in algos {
+            let cfg = BatcherConfig {
+                // Everyone admitted at once so the seeded kill round always
+                // lands inside the decode window.
+                max_batch: 3,
+                page_size: 4,
+                pages_per_worker: 4096,
+                strategy,
+                algo,
+                wire_bpe: WIRE_BPE,
+                seed: 7,
+                prefix_share: false,
+            };
+            let batcher = DecodeBatcher::new(shape, scale, cfg);
+            let run = |traced: bool| -> (Vec<BatchResult>, BatchMetrics, f64) {
+                obs::reset(obs::DEFAULT_CAPACITY);
+                let _t = traced.then(obs::TraceGuard::enable);
+                let mut cluster = VirtualCluster::new(flat(p));
+                cluster.world.net.set_fault_plan(FaultPlan::seeded_kill(3, p, 3));
+                let reqs = synthetic_decode_workload(3, 32, 48, 3, 11);
+                let (res, m) = batcher
+                    .run(&mut cluster, &ComputeBackend::Oracle, reqs)
+                    .unwrap_or_else(|e| panic!("{} {algo:?}: run: {e:#}", strategy.name()));
+                (res, m, cluster.world.max_clock())
+            };
+            let (res_off, m_off, clock_off) = run(false);
+            let (res_on, m_on, clock_on) = run(true);
+            assert!(m_on.heals >= 1, "{} {algo:?}: the kill never fired", strategy.name());
+            assert_eq!(m_on.heals, m_off.heals, "{} {algo:?}", strategy.name());
+            assert_eq!(
+                clock_on.to_bits(),
+                clock_off.to_bits(),
+                "{} {algo:?}: tracing bent the virtual clock",
+                strategy.name()
+            );
+            assert_eq!(
+                m_on.throughput_sim.to_bits(),
+                m_off.throughput_sim.to_bits(),
+                "{} {algo:?}: tracing bent the virtual throughput",
+                strategy.name()
+            );
+            assert_eq!(res_on.len(), res_off.len());
+            for (a, b) in res_on.iter().zip(&res_off) {
+                assert_eq!(a.id, b.id);
+                assert_eq!(a.tokens, b.tokens, "{} {algo:?} req {}", strategy.name(), a.id);
+                assert_eq!(a.outputs, b.outputs, "{} {algo:?} req {}", strategy.name(), a.id);
+            }
+            // The traced run's timeline is structurally sound and agrees
+            // with the metrics registry's independent byte counter.
+            let doc = obs::export::snapshot_trace_json();
+            let ts = obs::validate_trace(&doc)
+                .unwrap_or_else(|e| panic!("{} {algo:?}: invalid trace: {e:#}", strategy.name()));
+            assert!(
+                ts.by_name.get("heal").copied().unwrap_or(0) >= 1,
+                "{} {algo:?}: no heal span in the timeline",
+                strategy.name()
+            );
+            assert!(
+                ts.by_name.get("round").copied().unwrap_or(0) >= 1,
+                "{} {algo:?}: no round span in the timeline",
+                strategy.name()
+            );
+            let reg_bytes = obs::with_metrics(|m| m.counter("net.send_bytes"));
+            assert_eq!(ts.send_bytes_total, reg_bytes, "{} {algo:?}", strategy.name());
+        }
+    }
+}
+
+#[test]
+fn recorder_overflow_counts_drops_and_keeps_the_prefix_valid() {
+    let _g = obs_lock();
+    obs::reset(32); // tiny cap: a p=8 ring overflows in the first steps
+    let mut world = SimWorld::new(flat(8));
+    let sched = AllReduceAlgo::Ring
+        .schedule_for(&world, 8, BLOCK_ELEMS, WIRE_BPE)
+        .expect("ring schedule");
+    {
+        let _t = obs::TraceGuard::enable();
+        execute_cost(&mut world, &sched, BLOCK_ELEMS, WIRE_BPE);
+    }
+    let (kept, dropped) = obs::with_recorder(|r| (r.events().len(), r.dropped()));
+    assert!(kept <= 32, "capacity not honored: kept {kept}");
+    assert!(dropped > 0, "expected overflow at capacity 32");
+    let doc = obs::export::snapshot_trace_json();
+    let ts = obs::validate_trace(&doc).expect("retained prefix must stay a valid trace");
+    assert_eq!(ts.dropped, dropped);
+    // Leave the global capacity as other tests expect it.
+    obs::reset(obs::DEFAULT_CAPACITY);
+}

@@ -21,9 +21,14 @@
 //!      allowlist below).
 //!
 //! A finding is suppressed only by a same-line `// lint:allow <rationale>`
-//! comment, which must state why the panic is a provable invariant. Run as
-//! `cargo xtask lint` (alias in `.cargo/config.toml`); exits non-zero on
-//! any finding, so CI can block on it.
+//! comment, which must state why the panic is a provable invariant. The
+//! allowlist itself is audited: a marker with no rationale text is an
+//! `[empty-allow]` finding, and a marker on a line no rule fires on is a
+//! `[stale-allow]` finding (suppressions must not outlive the code they
+//! excuse). Lines whose stripped text is empty — doc comments or prose
+//! that merely *mention* the marker — are not suppressions and are never
+//! audited. Run as `cargo xtask lint` (alias in `.cargo/config.toml`);
+//! exits non-zero on any finding, so CI can block on it.
 
 use std::path::{Path, PathBuf};
 
@@ -136,48 +141,86 @@ fn lint_file(rel: &str, raw: &str, findings: &mut Vec<String>) {
     let allowed = |i: usize| raw_lines.get(i).is_some_and(|l| l.contains("lint:allow"));
     let narrow_cast_file = NARROW_CAST_FILES.iter().any(|f| rel == *f);
 
+    // Rule hits are computed for EVERY non-test line — allowed or not — so
+    // the allowlist audit below can tell a live suppression from a stale
+    // one.
+    let mut hit_lines = vec![false; lines.len()];
     for (i, line) in lines.iter().enumerate().take(test_start) {
+        let hits = line_hits(line, narrow_cast_file);
+        if !hits.is_empty() {
+            hit_lines[i] = true;
+        }
         if allowed(i) {
             continue;
         }
-        let report = |findings: &mut Vec<String>, rule: &str, what: &str| {
+        for (rule, what) in hits {
             findings.push(format!("src/{rel}:{}: [{rule}] {what}", i + 1));
-        };
-        if line.contains(".unwrap()") {
-            report(findings, "no-unwrap", "`.unwrap()` in non-test code — return a typed error");
-        }
-        if line.contains(".expect(\"") {
-            report(findings, "no-expect", "`.expect(..)` in non-test code — return a typed error");
-        }
-        if has_panic_macro(line) {
-            report(findings, "no-panic", "`panic!` in non-test code — return a typed error");
-        }
-        if narrow_cast_file {
-            for cast in [" as u8", " as u16", " as u32", " as i32"] {
-                // Word boundary: ` as u32` must not also fire on ` as u32x4`
-                // or ` as usize` (checked by the candidate list itself).
-                let mut from = 0;
-                while let Some(off) = line[from..].find(cast) {
-                    let end = from + off + cast.len();
-                    let next = line[end..].chars().next();
-                    if !next.is_some_and(|c| c.is_ascii_alphanumeric() || c == '_') {
-                        report(
-                            findings,
-                            "no-narrow-cast",
-                            "truncating integer cast in schedule index math — use try_from",
-                        );
-                        break;
-                    }
-                    from = end;
-                }
-            }
         }
     }
 
     // Rule 5: public collectives/attention entry points return Result.
     if rel.starts_with("collectives/") || rel.starts_with("attention/") {
-        check_pub_fns(rel, &lines[..test_start], findings, &allowed);
+        check_pub_fns(rel, &lines[..test_start], findings, &allowed, &mut hit_lines);
     }
+
+    // Allowlist audit. Marker text lives in comments, so scan RAW lines —
+    // but a line whose stripped text is empty is a doc comment or prose
+    // *mentioning* the marker, not a suppression, and is skipped.
+    for (i, rl) in raw_lines.iter().enumerate().take(test_start) {
+        let Some(pos) = rl.find("lint:allow") else { continue };
+        let code = lines.get(i).map(|l| l.trim()).unwrap_or("");
+        if code.is_empty() {
+            continue;
+        }
+        if rl[pos + "lint:allow".len()..].trim().is_empty() {
+            findings.push(format!(
+                "src/{rel}:{}: [empty-allow] `lint:allow` without a rationale — \
+                 state the provable invariant it relies on",
+                i + 1
+            ));
+        }
+        if !hit_lines[i] {
+            findings.push(format!(
+                "src/{rel}:{}: [stale-allow] `lint:allow` on a line no rule fires on — \
+                 remove the marker",
+                i + 1
+            ));
+        }
+    }
+}
+
+/// Rule hits on one stripped line, as `(rule, message)` pairs.
+fn line_hits(line: &str, narrow_cast_file: bool) -> Vec<(&'static str, &'static str)> {
+    let mut hits: Vec<(&'static str, &'static str)> = Vec::new();
+    if line.contains(".unwrap()") {
+        hits.push(("no-unwrap", "`.unwrap()` in non-test code — return a typed error"));
+    }
+    if line.contains(".expect(\"") {
+        hits.push(("no-expect", "`.expect(..)` in non-test code — return a typed error"));
+    }
+    if has_panic_macro(line) {
+        hits.push(("no-panic", "`panic!` in non-test code — return a typed error"));
+    }
+    if narrow_cast_file {
+        for cast in [" as u8", " as u16", " as u32", " as i32"] {
+            // Word boundary: ` as u32` must not also fire on ` as u32x4`
+            // or ` as usize` (checked by the candidate list itself).
+            let mut from = 0;
+            while let Some(off) = line[from..].find(cast) {
+                let end = from + off + cast.len();
+                let next = line[end..].chars().next();
+                if !next.is_some_and(|c| c.is_ascii_alphanumeric() || c == '_') {
+                    hits.push((
+                        "no-narrow-cast",
+                        "truncating integer cast in schedule index math — use try_from",
+                    ));
+                    break;
+                }
+                from = end;
+            }
+        }
+    }
+    hits
 }
 
 fn check_pub_fns(
@@ -185,6 +228,7 @@ fn check_pub_fns(
     lines: &[&str],
     findings: &mut Vec<String>,
     allowed: &dyn Fn(usize) -> bool,
+    hit_lines: &mut [bool],
 ) {
     let mut i = 0;
     while i < lines.len() {
@@ -208,13 +252,19 @@ fn check_pub_fns(
                 i += 1;
             }
             let sig = sig.split('{').next().unwrap_or("");
-            if !sig.contains("Result") && !PUB_FN_ALLOWLIST.contains(&name.as_str()) && !allowed(fn_line)
-            {
-                findings.push(format!(
-                    "src/{rel}:{}: [pub-result] public fn `{name}` does not return Result \
-                     (add to the xtask allowlist only if it provably cannot fail)",
-                    fn_line + 1
-                ));
+            if !sig.contains("Result") && !PUB_FN_ALLOWLIST.contains(&name.as_str()) {
+                // A hit even when comment-suppressed: the allowlist audit
+                // needs to know the marker is load-bearing.
+                if let Some(slot) = hit_lines.get_mut(fn_line) {
+                    *slot = true;
+                }
+                if !allowed(fn_line) {
+                    findings.push(format!(
+                        "src/{rel}:{}: [pub-result] public fn `{name}` does not return Result \
+                         (add to the xtask allowlist only if it provably cannot fail)",
+                        fn_line + 1
+                    ));
+                }
             }
         }
         i += 1;
@@ -431,6 +481,44 @@ mod tests {
     fn lint_allow_and_test_modules_are_exempt() {
         let mut f = Vec::new();
         let src = "let a = b.unwrap(); // lint:allow provable: xyz\n#[cfg(test)]\nmod tests { fn t() { x.unwrap(); panic!(); } }\n";
+        lint_file("serve/batcher.rs", src, &mut f);
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn empty_allow_rationale_is_flagged_but_still_suppresses() {
+        let mut f = Vec::new();
+        lint_file("serve/batcher.rs", "let a = b.unwrap(); // lint:allow\n", &mut f);
+        assert!(f.iter().any(|x| x.contains("[empty-allow]")), "{f:?}");
+        assert!(!f.iter().any(|x| x.contains("[no-unwrap]")), "{f:?}");
+        assert!(!f.iter().any(|x| x.contains("[stale-allow]")), "{f:?}");
+    }
+
+    #[test]
+    fn stale_allow_is_flagged_and_prose_mentions_are_not() {
+        let mut f = Vec::new();
+        let src = "// doc text mentioning lint:allow is prose, not a suppression\n\
+                   let ok = 1; // lint:allow nothing fires on this line\n";
+        lint_file("serve/batcher.rs", src, &mut f);
+        assert_eq!(f.iter().filter(|x| x.contains("[stale-allow]")).count(), 1, "{f:?}");
+        assert!(f.iter().all(|x| x.contains(":2:")), "{f:?}");
+    }
+
+    #[test]
+    fn allow_on_a_pub_fn_without_result_counts_as_live() {
+        let mut f = Vec::new();
+        lint_file(
+            "collectives/mod.rs",
+            "pub fn helper() -> usize { 1 } // lint:allow pure accessor, cannot fail\n",
+            &mut f,
+        );
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn stale_allow_in_test_modules_is_not_audited() {
+        let mut f = Vec::new();
+        let src = "#[cfg(test)]\nmod tests { let ok = 1; // lint:allow leftover\n}\n";
         lint_file("serve/batcher.rs", src, &mut f);
         assert!(f.is_empty(), "{f:?}");
     }
