@@ -1,0 +1,11 @@
+//! Health & recovery bench target — thin wrapper over
+//! `tree_attention::bench::health::run`, the same sweep the `treeattn
+//! health-bench` CLI command runs, so CI and the CLI gate one harness.
+
+fn main() {
+    let quick = tree_attention::bench::quick_mode();
+    if let Err(e) = tree_attention::bench::health::run(quick) {
+        eprintln!("health bench failed: {e:#}");
+        std::process::exit(1);
+    }
+}

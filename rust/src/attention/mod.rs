@@ -181,6 +181,10 @@ pub struct BatchEntry<'a> {
 pub struct BatchDecodeOutcome {
     /// Per-session attention output, `[n_heads * d_head]` each.
     pub outs: Vec<Vec<f32>>,
+    /// Per-session final softmax denominators, `[n_heads]` each — same
+    /// rationale as [`DecodeOutcome::den`]: exactness claims must hold on
+    /// the un-normalized state, not just the quotient.
+    pub dens: Vec<Vec<f32>>,
     pub stats: DecodeStats,
 }
 

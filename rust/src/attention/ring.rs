@@ -310,6 +310,7 @@ pub fn ring_decode_batch(
     }
 
     let outs: Vec<Vec<f32>> = accs[0].iter().map(|a| a.finalize()).collect();
+    let dens: Vec<Vec<f32>> = accs[0].iter().map(|a| a.den.clone()).collect();
     let t1 = cluster.world.barrier();
 
     for w in 0..p {
@@ -318,6 +319,7 @@ pub fn ring_decode_batch(
 
     Ok(BatchDecodeOutcome {
         outs,
+        dens,
         stats: DecodeStats {
             sim_time: t1 - t0,
             comm_steps: steps,

@@ -130,11 +130,13 @@ pub fn single_decode_batch(
         .collect();
     let parts = backend.partial_batch(shape, scale, &qs, &kvs)?;
     let outs: Vec<Vec<f32>> = parts.iter().map(|part| part.finalize()).collect();
+    let dens: Vec<Vec<f32>> = parts.into_iter().map(|part| part.den).collect();
     let t1 = cluster.world.barrier();
     cluster.mem.free(0, 2 * (grand_total * row) as u64 * wire_bpe);
 
     Ok(BatchDecodeOutcome {
         outs,
+        dens,
         stats: DecodeStats {
             sim_time: t1 - t0,
             comm_steps: steps,

@@ -214,10 +214,9 @@ pub fn tree_decode_batch(
     }
 
     // -- step 4: finalize per session on the leader ------------------------
-    let outs: Vec<Vec<f32>> = AttnPartial::unstack_wire(shape, &wires[0], b)
-        .iter()
-        .map(|part| part.finalize())
-        .collect();
+    let parts = AttnPartial::unstack_wire(shape, &wires[0], b);
+    let outs: Vec<Vec<f32>> = parts.iter().map(|part| part.finalize()).collect();
+    let dens: Vec<Vec<f32>> = parts.into_iter().map(|part| part.den).collect();
     let t1 = cluster.world.barrier();
 
     for w in 0..p {
@@ -226,6 +225,7 @@ pub fn tree_decode_batch(
 
     Ok(BatchDecodeOutcome {
         outs,
+        dens,
         stats: DecodeStats {
             sim_time: t1 - t0,
             comm_steps: steps,

@@ -3,6 +3,7 @@
 //! output. Every `benches/*.rs` target is a `harness = false` main that
 //! uses these helpers and prints the rows/series of one paper table/figure.
 
+pub mod health;
 pub mod papersim;
 pub mod pipeline;
 

@@ -1,0 +1,412 @@
+//! Health monitoring — closing the loop from observation back to the plan.
+//!
+//! The planner prices schedules against the *nominal* topology: what the
+//! hardware is on paper. A gray failure — one slow NIC, a rank stalled
+//! behind a noisy neighbour — re-shapes the effective topology without
+//! killing anything, and a plan frozen against the nominal α–β numbers can
+//! silently lose the paper's entire tree-vs-ring margin. This module
+//! maintains per-link (tier) and per-rank EWMAs of *observed / expected*
+//! timing ratios from the virtual-clock measurements the serving layer
+//! already has, detects degradation against an α–β expectation band, and
+//! emits a *measured topology overlay* ([`Topology::with_measured_links`])
+//! that the planners re-price against — so a straggler triggers automatic
+//! plan migration instead of quietly serving a stale schedule.
+//!
+//! Expectations come straight from the Hockney model: a transfer of `b`
+//! bytes over link `l` should take `l.latency_s + b / l.bandwidth_bps` on
+//! an uncontended fabric ([`LinkSpec::transfer_time`]); a decode round
+//! should take the planner's `predicted_s` for the adopted plan. Healthy
+//! traffic therefore hovers near ratio 1.0 (contention pushes it slightly
+//! above), and the detection band is multiplicative: only a sustained
+//! ratio above `band` — not a single contended transfer — trips a
+//! [`Degradation`].
+//!
+//! The monitor is deliberately passive: it never sends probe traffic (which
+//! would consume fault budgets and perturb the very clocks it observes) and
+//! never touches the planners itself. The serving layer decides when to
+//! adopt an overlay, runs it through the schedule verifier, and counts the
+//! migration (`straggler_replans`).
+
+use crate::topology::{LinkSpec, Rank, Tier, Topology};
+
+/// Exponentially weighted moving average over observed/expected ratios.
+/// The first sample seeds the average directly so detection does not have
+/// to climb from an arbitrary prior.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Ewma {
+    value: f64,
+    samples: u32,
+}
+
+impl Ewma {
+    /// Fold in one observation with smoothing factor `alpha` (weight of the
+    /// newest sample).
+    pub fn update(&mut self, x: f64, alpha: f64) {
+        self.value = if self.samples == 0 { x } else { alpha * x + (1.0 - alpha) * self.value };
+        self.samples = self.samples.saturating_add(1);
+    }
+
+    /// Current average; 1.0 (the healthy ratio) before any samples.
+    pub fn value(&self) -> f64 {
+        if self.samples == 0 {
+            1.0
+        } else {
+            self.value
+        }
+    }
+
+    pub fn samples(&self) -> u32 {
+        self.samples
+    }
+}
+
+/// Detection thresholds. Defaults favour fast reaction (a straggler caught
+/// within 2–3 rounds) over statistical smoothness — the overlay is verified
+/// before adoption, so a false positive costs a re-plan, not correctness.
+#[derive(Clone, Copy, Debug)]
+pub struct HealthConfig {
+    /// EWMA smoothing factor (weight of the newest sample).
+    pub alpha: f64,
+    /// Multiplicative expectation band: ratios above this are degraded.
+    pub band: f64,
+    /// Samples an EWMA needs before it can trip detection — one contended
+    /// transfer must never re-plan the cluster.
+    pub min_samples: u32,
+}
+
+impl Default for HealthConfig {
+    fn default() -> HealthConfig {
+        HealthConfig { alpha: 0.5, band: 2.0, min_samples: 2 }
+    }
+}
+
+/// A detected deviation from the α–β expectation band.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Degradation {
+    /// A whole link tier running `factor`× slower than its nominal spec.
+    SlowLink { tier: Tier, factor: f64 },
+    /// One rank's rounds running `factor`× slower than the cluster median.
+    DelayRank { rank: Rank, factor: f64 },
+}
+
+/// Passive health monitor: EWMAs per link tier and per rank, fed by the
+/// serving layer's virtual-clock timings.
+#[derive(Clone, Debug)]
+pub struct HealthMonitor {
+    cfg: HealthConfig,
+    /// Observed/expected transfer-time ratio per tier ([intra, inter]).
+    tiers: [Ewma; 2],
+    /// Observed/expected round-time ratio per rank.
+    ranks: Vec<Ewma>,
+}
+
+fn tier_idx(tier: Tier) -> usize {
+    match tier {
+        Tier::Intra => 0,
+        Tier::Inter => 1,
+    }
+}
+
+impl HealthMonitor {
+    pub fn new(world_size: usize) -> HealthMonitor {
+        HealthMonitor::with_config(world_size, HealthConfig::default())
+    }
+
+    pub fn with_config(world_size: usize, cfg: HealthConfig) -> HealthMonitor {
+        HealthMonitor { cfg, tiers: [Ewma::default(); 2], ranks: vec![Ewma::default(); world_size] }
+    }
+
+    pub fn config(&self) -> HealthConfig {
+        self.cfg
+    }
+
+    /// Forget everything — called when the cluster re-shapes (heal or
+    /// rejoin): timings measured against the old shape's expectations say
+    /// nothing about the new one.
+    pub fn reset(&mut self, world_size: usize) {
+        self.tiers = [Ewma::default(); 2];
+        self.ranks = vec![Ewma::default(); world_size];
+    }
+
+    /// Feed one wire transfer: `elapsed_s` of virtual time for `bytes` over
+    /// the `src -> dst` route, priced against `topo`'s nominal link spec.
+    pub fn record_transfer(
+        &mut self,
+        topo: &Topology,
+        src: Rank,
+        dst: Rank,
+        bytes: u64,
+        elapsed_s: f64,
+    ) {
+        if src == dst || src >= topo.world_size() || dst >= topo.world_size() {
+            return;
+        }
+        let tier = topo.tier(src, dst);
+        let expected = topo.link(src, dst).transfer_time(bytes);
+        self.record_tier(tier, elapsed_s, expected);
+    }
+
+    /// Feed one tier-level timing directly: `elapsed_s` observed where the
+    /// α–β model expected `expected_s`. This is what the serving layer uses
+    /// per round (it knows the planner's prediction and which tier the
+    /// adopted schedule's critical path crosses).
+    pub fn record_tier(&mut self, tier: Tier, elapsed_s: f64, expected_s: f64) {
+        if !(expected_s > 0.0) || !elapsed_s.is_finite() {
+            return;
+        }
+        self.tiers[tier_idx(tier)].update((elapsed_s / expected_s).max(0.0), self.cfg.alpha);
+    }
+
+    /// Feed one rank's round timing: virtual-clock seconds this rank spent
+    /// in the round vs the expected round time.
+    pub fn record_rank_round(&mut self, rank: Rank, elapsed_s: f64, expected_s: f64) {
+        if rank >= self.ranks.len() || !(expected_s > 0.0) || !elapsed_s.is_finite() {
+            return;
+        }
+        self.ranks[rank].update((elapsed_s / expected_s).max(0.0), self.cfg.alpha);
+    }
+
+    /// Measured slowdown factor for a tier (1.0 = nominal; only meaningful
+    /// once the tier has samples).
+    pub fn tier_factor(&self, tier: Tier) -> f64 {
+        self.tiers[tier_idx(tier)].value()
+    }
+
+    fn tier_tripped(&self, tier: Tier) -> bool {
+        let e = &self.tiers[tier_idx(tier)];
+        e.samples() >= self.cfg.min_samples && e.value() > self.cfg.band
+    }
+
+    /// Everything currently outside the expectation band: slow tiers, then
+    /// ranks whose round EWMA exceeds `band`× the cluster median (the
+    /// median, not the nominal expectation, so a uniformly slow fabric
+    /// reads as [`Degradation::SlowLink`] rather than "every rank is
+    /// delayed").
+    pub fn degradations(&self) -> Vec<Degradation> {
+        let mut out = Vec::new();
+        for tier in [Tier::Intra, Tier::Inter] {
+            if self.tier_tripped(tier) {
+                out.push(Degradation::SlowLink { tier, factor: self.tier_factor(tier) });
+            }
+        }
+        let sampled: Vec<f64> = self
+            .ranks
+            .iter()
+            .filter(|e| e.samples() >= self.cfg.min_samples)
+            .map(Ewma::value)
+            .collect();
+        if sampled.len() >= 2 {
+            let mut sorted = sampled;
+            sorted.sort_by(f64::total_cmp);
+            let median = sorted[sorted.len() / 2].max(f64::MIN_POSITIVE);
+            for (rank, e) in self.ranks.iter().enumerate() {
+                if e.samples() >= self.cfg.min_samples && e.value() > self.cfg.band * median {
+                    out.push(Degradation::DelayRank { rank, factor: e.value() / median });
+                }
+            }
+        }
+        out
+    }
+
+    /// The measured topology overlay, when any tier is outside the band:
+    /// `topo` with each tripped tier's link spec re-priced to what the
+    /// fabric is actually delivering (bandwidth ÷ factor, latency ×
+    /// factor — the two α–β degradation modes are indistinguishable from
+    /// round timings, so both are scaled; either alone re-orders candidate
+    /// schedules the same way). `None` while everything is healthy.
+    ///
+    /// Per-rank delay cannot be expressed in the dense two-tier model, so
+    /// [`Degradation::DelayRank`] surfaces through [`Self::degradations`]
+    /// for the serving layer to handle (today: reported; a kill + heal
+    /// remains the escalation path).
+    ///
+    /// The factor applied to the links is quantized to the nearest power of
+    /// two: the raw EWMA drifts a little every round, and an overlay whose
+    /// exact float value changed would mint a fresh planner fingerprint
+    /// each time — cache misses and a "re-plan" per round with no actual
+    /// topology change. Quantization makes consecutive overlays of the same
+    /// degradation bit-identical, so adopting one is idempotent.
+    pub fn overlay(&self, topo: &Topology) -> Option<Topology> {
+        let scale = |tier: Tier, spec: &LinkSpec| -> LinkSpec {
+            if !self.tier_tripped(tier) {
+                return *spec;
+            }
+            let f = Self::quantize_pow2(self.tier_factor(tier).max(1.0));
+            LinkSpec {
+                class: spec.class,
+                bandwidth_bps: spec.bandwidth_bps / f,
+                latency_s: spec.latency_s * f,
+            }
+        };
+        if !self.tier_tripped(Tier::Intra) && !self.tier_tripped(Tier::Inter) {
+            return None;
+        }
+        let intra = scale(Tier::Intra, &topo.intra);
+        let inter = scale(Tier::Inter, &topo.inter);
+        Some(topo.with_measured_links(intra, inter))
+    }
+
+    /// Nearest power of two (in log space), floored at 1.0.
+    fn quantize_pow2(f: f64) -> f64 {
+        2f64.powf(f.log2().round()).max(1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::LinkClass;
+
+    #[test]
+    fn ewma_seeds_on_first_sample_and_smooths_after() {
+        let mut e = Ewma::default();
+        assert_eq!(e.value(), 1.0, "no samples reads as healthy");
+        e.update(8.0, 0.5);
+        assert_eq!(e.value(), 8.0, "first sample seeds directly");
+        e.update(4.0, 0.5);
+        assert!((e.value() - 6.0).abs() < 1e-12);
+        assert_eq!(e.samples(), 2);
+    }
+
+    #[test]
+    fn healthy_traffic_never_trips() {
+        let topo = Topology::rtx4090_pcie(4);
+        let mut m = HealthMonitor::new(4);
+        for _ in 0..16 {
+            // Contention keeps observed slightly above nominal — in band.
+            let expected = topo.intra.transfer_time(1 << 20);
+            m.record_transfer(&topo, 0, 1, 1 << 20, expected * 1.3);
+            for r in 0..4 {
+                m.record_rank_round(r, 1.1e-3, 1.0e-3);
+            }
+        }
+        assert!(m.degradations().is_empty());
+        assert!(m.overlay(&topo).is_none());
+    }
+
+    #[test]
+    fn slow_tier_detected_and_overlay_reprices_links() {
+        let topo = Topology::rtx4090_pcie(4);
+        let mut m = HealthMonitor::new(4);
+        let bytes = 1u64 << 20;
+        let expected = topo.intra.transfer_time(bytes);
+        for _ in 0..4 {
+            m.record_transfer(&topo, 0, 1, bytes, expected * 8.0);
+        }
+        let degs = m.degradations();
+        assert_eq!(degs.len(), 1);
+        match degs[0] {
+            Degradation::SlowLink { tier, factor } => {
+                assert_eq!(tier, Tier::Intra);
+                assert!((factor - 8.0).abs() < 1e-9);
+            }
+            other => panic!("expected SlowLink, got {other:?}"),
+        }
+        let overlay = m.overlay(&topo).expect("tripped tier must emit an overlay");
+        assert!(overlay.name.ends_with("-measured"));
+        assert_eq!(overlay.intra.class, LinkClass::Pcie4);
+        assert!((overlay.intra.bandwidth_bps - topo.intra.bandwidth_bps / 8.0).abs() < 1.0);
+        assert!((overlay.intra.latency_s - topo.intra.latency_s * 8.0).abs() < 1e-12);
+        // The healthy tier is untouched.
+        assert_eq!(overlay.inter, topo.inter);
+    }
+
+    #[test]
+    fn overlay_factor_quantizes_so_drift_is_idempotent() {
+        // Two monitors converged near (but not exactly at) the same
+        // slowdown must emit bit-identical overlays — the planner keys its
+        // cache on the link specs' bit patterns, and a raw-EWMA overlay
+        // would mint a new fingerprint every round.
+        let topo = Topology::rtx4090_pcie(4);
+        let bytes = 1u64 << 20;
+        let expected = topo.intra.transfer_time(bytes);
+        let mut a = HealthMonitor::new(4);
+        let mut b = HealthMonitor::new(4);
+        for _ in 0..6 {
+            a.record_transfer(&topo, 0, 1, bytes, expected * 7.3);
+            b.record_transfer(&topo, 0, 1, bytes, expected * 8.9);
+        }
+        let oa = a.overlay(&topo).expect("tripped");
+        let ob = b.overlay(&topo).expect("tripped");
+        assert_eq!(oa.intra.bandwidth_bps.to_bits(), ob.intra.bandwidth_bps.to_bits());
+        assert_eq!(oa.intra.latency_s.to_bits(), ob.intra.latency_s.to_bits());
+        // Both land on the 8x bucket.
+        assert!((oa.intra.latency_s - topo.intra.latency_s * 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_outlier_respects_min_samples() {
+        let topo = Topology::h100_dgx(2);
+        let mut m = HealthMonitor::new(16);
+        let expected = topo.inter.transfer_time(4096);
+        m.record_transfer(&topo, 0, 8, 4096, expected * 100.0);
+        assert!(m.degradations().is_empty(), "one contended transfer must not re-plan");
+        assert!(m.overlay(&topo).is_none());
+        m.record_transfer(&topo, 0, 8, 4096, expected * 100.0);
+        assert!(!m.degradations().is_empty(), "a sustained ratio trips");
+    }
+
+    #[test]
+    fn delayed_rank_detected_against_median() {
+        let mut m = HealthMonitor::new(4);
+        for _ in 0..4 {
+            for r in 0..4 {
+                let elapsed = if r == 2 { 6.0e-3 } else { 1.0e-3 };
+                m.record_rank_round(r, elapsed, 1.0e-3);
+            }
+        }
+        let degs = m.degradations();
+        assert_eq!(degs.len(), 1);
+        match degs[0] {
+            Degradation::DelayRank { rank, factor } => {
+                assert_eq!(rank, 2);
+                assert!(factor > 2.0);
+            }
+            other => panic!("expected DelayRank, got {other:?}"),
+        }
+        // A per-rank delay is not a tier problem: no overlay.
+        assert!(m.overlay(&Topology::rtx4090_pcie(4)).is_none());
+    }
+
+    #[test]
+    fn uniformly_slow_ranks_read_as_fabric_not_delay() {
+        // Every rank 5x slow vs expectation but equal to each other: the
+        // median comparison must stay quiet (the tier EWMA is the one that
+        // should fire, fed separately).
+        let mut m = HealthMonitor::new(4);
+        for _ in 0..4 {
+            for r in 0..4 {
+                m.record_rank_round(r, 5.0e-3, 1.0e-3);
+            }
+        }
+        assert!(m.degradations().is_empty());
+    }
+
+    #[test]
+    fn reset_forgets_history() {
+        let topo = Topology::rtx4090_pcie(4);
+        let mut m = HealthMonitor::new(4);
+        let expected = topo.intra.transfer_time(1 << 16);
+        for _ in 0..4 {
+            m.record_transfer(&topo, 0, 1, 1 << 16, expected * 8.0);
+        }
+        assert!(m.overlay(&topo).is_some());
+        m.reset(3);
+        assert!(m.degradations().is_empty());
+        assert!(m.overlay(&topo).is_none());
+        assert_eq!(m.tier_factor(Tier::Intra), 1.0);
+    }
+
+    #[test]
+    fn bad_inputs_are_ignored() {
+        let topo = Topology::rtx4090_pcie(2);
+        let mut m = HealthMonitor::new(2);
+        m.record_transfer(&topo, 0, 0, 1024, 1.0); // self-send
+        m.record_transfer(&topo, 0, 7, 1024, 1.0); // out of range
+        m.record_rank_round(9, 1.0, 1.0); // out of range
+        m.record_rank_round(0, f64::NAN, 1.0); // non-finite
+        m.record_tier(Tier::Intra, 1.0, 0.0); // zero expectation
+        assert!(m.degradations().is_empty());
+        assert_eq!(m.tier_factor(Tier::Intra), 1.0);
+    }
+}

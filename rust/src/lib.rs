@@ -31,6 +31,7 @@ pub mod cluster;
 pub mod collectives;
 pub mod config;
 pub mod gpumodel;
+pub mod health;
 pub mod kvcache;
 pub mod model;
 pub mod netsim;

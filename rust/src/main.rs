@@ -39,6 +39,13 @@
 //!                               searched Auto vs best unpipelined fixed
 //!                               algorithm per (preset, p, ctx, batch);
 //!                               asserts never-worse + a ≥1.5x crossover
+//!   health-bench [--quick]    — health & recovery acceptance: frozen
+//!                               pre-fault plan vs health-driven re-plan on
+//!                               a seeded SlowLink (asserts ≥1.5x at the
+//!                               best migration point), plus straggler /
+//!                               rejoin / cascade / corruption scenarios
+//!                               with bit-exact recovery oracles; writes
+//!                               BENCH_health.json
 //!
 //! Options are `key=value` pairs applied to the RunSpec (see config module),
 //! plus `--config <file.json>`, `--strategy auto|tree|ring|single` (sugar
@@ -98,6 +105,12 @@ fn main() {
             // `--quick` shrinks the sweep exactly like the bench target.
             tree_attention::bench::pipeline::run(args[1..].iter().any(|a| a == "--quick"))
         }
+        "health-bench" => {
+            // Straggler re-planning / rejoin / multi-fault acceptance sweep;
+            // `--quick` shrinks the migration grid exactly like the bench
+            // target.
+            tree_attention::bench::health::run(args[1..].iter().any(|a| a == "--quick"))
+        }
         "strategy-bench" => parse_spec(&args[1..]).and_then(|spec| cmd_strategy_bench(&spec)),
         "sweep" => parse_spec(&args[1..]).and_then(|spec| cmd_sweep(&spec)),
         "help" | "--help" | "-h" => {
@@ -118,7 +131,7 @@ fn main() {
 fn print_help() {
     println!(
         "treeattn — Tree Attention reproduction\n\
-         usage: treeattn <info|validate|decode|serve|serve-bench|chaos-bench|trace|bench-compare|verify-schedules|plan-bench|pipeline-bench|strategy-bench|sweep> [--config f.json] [key=value ...]\n\
+         usage: treeattn <info|validate|decode|serve|serve-bench|chaos-bench|trace|bench-compare|verify-schedules|plan-bench|pipeline-bench|health-bench|strategy-bench|sweep> [--config f.json] [key=value ...]\n\
          \x20     trace [--quick] [--check] [--trace-out DIR] [--metrics-out FILE]  (observability sweep + BENCH_obs.json)\n\
          \x20     serve-bench/chaos-bench also take --trace-out FILE --metrics-out FILE (Chrome trace + metrics snapshot)\n\
          keys: strategy=auto|tree|ring|single  (auto = strategy planner; --strategy X is sugar)\n\
@@ -1332,6 +1345,7 @@ fn planner_counters_json() -> Json {
         ("strategy_evictions", Json::num(c.strategy_evictions as f64)),
         ("strategy_verified", Json::num(c.strategy_verified as f64)),
         ("strategy_rejected", Json::num(c.strategy_rejected as f64)),
+        ("straggler_replans", Json::num(c.straggler_replans as f64)),
     ])
 }
 

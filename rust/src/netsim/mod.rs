@@ -35,6 +35,36 @@ pub enum FaultKind {
     DelayRank { rank: Rank, extra_s: f64 },
     /// Multiply the serialization time of every message on a tier.
     SlowLink { tier: Tier, factor: f64 },
+    /// Flip bits in the next `count` payloads touching `rank`. With
+    /// checksums on (the default) the receiver's FNV-1a check fails and the
+    /// send surfaces [`CommError::Corrupt`] (transient — a retry re-sends
+    /// clean data once the budget is exhausted); with checksums off the
+    /// garbage is delivered silently.
+    CorruptPayload { rank: Rank, count: u32 },
+}
+
+impl FaultKind {
+    /// The rank this fault targets, if any (`SlowLink` is rank-less).
+    pub fn rank(&self) -> Option<Rank> {
+        match *self {
+            FaultKind::KillWorker { rank }
+            | FaultKind::DropMessages { rank, .. }
+            | FaultKind::DelayRank { rank, .. }
+            | FaultKind::CorruptPayload { rank, .. } => Some(rank),
+            FaultKind::SlowLink { .. } => None,
+        }
+    }
+
+    /// The same fault retargeted at `rank` (identity for rank-less kinds).
+    pub fn with_rank(self, rank: Rank) -> FaultKind {
+        match self {
+            FaultKind::KillWorker { .. } => FaultKind::KillWorker { rank },
+            FaultKind::DropMessages { count, .. } => FaultKind::DropMessages { rank, count },
+            FaultKind::DelayRank { extra_s, .. } => FaultKind::DelayRank { rank, extra_s },
+            FaultKind::CorruptPayload { count, .. } => FaultKind::CorruptPayload { rank, count },
+            slow @ FaultKind::SlowLink { .. } => slow,
+        }
+    }
 }
 
 /// A fault scheduled for a specific decode round.
@@ -82,6 +112,26 @@ impl FaultPlan {
     pub fn is_empty(&self) -> bool {
         self.events.is_empty()
     }
+
+    /// Renumber every event's target rank through `map`; events whose
+    /// target maps to `None` (no seat in the new world) are dropped,
+    /// rank-less events pass through unchanged. The serving layer uses this
+    /// to carry a fault schedule across a heal/rejoin rebuild, where
+    /// surviving ranks get compacted onto `0..p'`.
+    pub fn remap(self, map: impl Fn(Rank) -> Option<Rank>) -> FaultPlan {
+        FaultPlan {
+            events: self
+                .events
+                .into_iter()
+                .filter_map(|e| match e.kind.rank() {
+                    None => Some(e),
+                    Some(r) => {
+                        map(r).map(|nr| FaultEvent { round: e.round, kind: e.kind.with_rank(nr) })
+                    }
+                })
+                .collect(),
+        }
+    }
 }
 
 /// Typed communication failure surfaced by the fault-aware paths.
@@ -91,6 +141,10 @@ pub enum CommError {
     Timeout { src: Rank, dst: Rank },
     /// A message was dropped in flight (transient; retry may succeed).
     Dropped { src: Rank, dst: Rank },
+    /// The payload arrived but its FNV-1a checksum did not match (transient
+    /// if the corruption budget runs out; persistent corruption escalates
+    /// to the caller once retries are exhausted).
+    Corrupt { src: Rank, dst: Rank },
     /// Worker loss confirmed after bounded retries: the collective cannot
     /// complete on the full topology. `lost` is sorted and deduplicated.
     Degraded { lost: Vec<Rank> },
@@ -101,6 +155,9 @@ impl std::fmt::Display for CommError {
         match self {
             CommError::Timeout { src, dst } => write!(f, "timeout on {src} -> {dst}"),
             CommError::Dropped { src, dst } => write!(f, "message dropped on {src} -> {dst}"),
+            CommError::Corrupt { src, dst } => {
+                write!(f, "payload checksum mismatch on {src} -> {dst}")
+            }
             CommError::Degraded { lost } => write!(f, "degraded: lost workers {lost:?}"),
         }
     }
@@ -156,6 +213,8 @@ pub struct FaultCounters {
     pub drops: u64,
     /// Retry attempts posted after a failed send.
     pub retries: u64,
+    /// Payloads whose receiver-side FNV-1a check failed.
+    pub corruptions: u64,
 }
 
 impl FaultCounters {
@@ -165,7 +224,19 @@ impl FaultCounters {
         self.timeouts += other.timeouts;
         self.drops += other.drops;
         self.retries += other.retries;
+        self.corruptions += other.corruptions;
     }
+}
+
+/// FNV-1a over a byte slice — the checksum the simulated wire carries per
+/// payload (cheap, deterministic, and sensitive to any single-bit flip).
+pub fn fnv1a(data: &[u8]) -> u64 {
+    let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+    for &b in data {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
 }
 
 #[derive(Clone, Debug, Default)]
@@ -175,6 +246,7 @@ struct FaultState {
     round: usize,
     dead: Vec<bool>,
     drop_budget: Vec<u32>,
+    corrupt_budget: Vec<u32>,
     extra_delay: Vec<f64>,
     /// Serialization-time multiplier per tier: [intra, inter].
     slow: [f64; 2],
@@ -188,6 +260,7 @@ impl FaultState {
             round: 0,
             dead: vec![false; p],
             drop_budget: vec![0; p],
+            corrupt_budget: vec![0; p],
             extra_delay: vec![0.0; p],
             slow: [1.0, 1.0],
             counters: FaultCounters::default(),
@@ -218,6 +291,7 @@ impl FaultState {
                     };
                     self.slow[i] *= factor;
                 }
+                FaultKind::CorruptPayload { rank, count } => self.corrupt_budget[rank] += count,
             }
         }
     }
@@ -262,6 +336,12 @@ struct SimState {
     counters: TrafficCounters,
     faults: FaultState,
     retry: RetryPolicy,
+    /// Receiver-side FNV-1a payload verification (on by default). With it
+    /// off, a `CorruptPayload` fault delivers garbage silently.
+    checksum: bool,
+    /// Monotonic message sequence number — the synthetic payload identity
+    /// the wire checksum is computed over.
+    msg_seq: u64,
 }
 
 /// The shared network simulator.
@@ -283,6 +363,8 @@ impl NetSim {
                 counters: TrafficCounters::default(),
                 faults: FaultState::new(p),
                 retry: RetryPolicy::default(),
+                checksum: true,
+                msg_seq: 0,
             }),
         }
     }
@@ -338,7 +420,41 @@ impl NetSim {
             Tier::Inter => 1,
         }];
         let extra = st.faults.extra_delay[src] + st.faults.extra_delay[dst];
-        Ok(Self::post(&self.topo, st, src, dst, bytes, t_dep, slow, extra))
+        // Payload integrity: every message carries an FNV-1a digest of its
+        // (synthetic) payload identity. A corruption fault flips payload
+        // bits in flight, so the digest the receiver recomputes disagrees
+        // with the one on the wire. Unlike a drop, the garbage still
+        // crossed the network — the ports stay occupied either way.
+        let seq = st.msg_seq;
+        st.msg_seq += 1;
+        let payload = Self::payload_tag(src, dst, bytes, seq);
+        let sent_digest = fnv1a(&payload.to_le_bytes());
+        let corrupted = st.faults.corrupt_budget[src] > 0 || st.faults.corrupt_budget[dst] > 0;
+        let wire_digest = if corrupted {
+            let victim = if st.faults.corrupt_budget[src] > 0 { src } else { dst };
+            st.faults.corrupt_budget[victim] -= 1;
+            // A bit flip in the payload changes its recomputed digest.
+            fnv1a(&(payload ^ 1).to_le_bytes())
+        } else {
+            sent_digest
+        };
+        let done = Self::post(&self.topo, st, src, dst, bytes, t_dep, slow, extra);
+        if st.checksum && wire_digest != sent_digest {
+            st.faults.counters.corruptions += 1;
+            return Err(CommError::Corrupt { src, dst });
+        }
+        Ok(done)
+    }
+
+    /// Synthetic payload identity for the wire checksum: a deterministic
+    /// function of route, size, and message sequence number (the simulator
+    /// carries no real tensor bytes).
+    fn payload_tag(src: Rank, dst: Rank, bytes: u64, seq: u64) -> u64 {
+        (src as u64)
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add((dst as u64).wrapping_mul(0xD1B5_4A32_D192_ED03))
+            .wrapping_add(bytes.rotate_left(17))
+            .wrapping_add(seq)
     }
 
     /// Shared port-occupancy math for both transfer flavors. `slow`
@@ -407,6 +523,25 @@ impl NetSim {
 
     pub fn current_round(&self) -> usize {
         self.state_lock().faults.round
+    }
+
+    /// Fault events whose round has not arrived yet. The serving layer
+    /// snapshots these before a heal/rejoin rebuilds the cluster so the
+    /// remaining schedule can be carried (rank-remapped) onto the new
+    /// world — a cascading fault must not die with the old `NetSim`.
+    pub fn pending_events(&self) -> Vec<FaultEvent> {
+        self.state_lock().faults.pending.clone()
+    }
+
+    /// Enable/disable receiver-side FNV payload verification (on by
+    /// default). Off, a `CorruptPayload` fault delivers garbage silently —
+    /// the "why checksums" ablation.
+    pub fn set_checksums(&self, enabled: bool) {
+        self.state_lock().checksum = enabled;
+    }
+
+    pub fn checksums_enabled(&self) -> bool {
+        self.state_lock().checksum
     }
 
     /// Ranks currently confirmed dead, sorted ascending.
@@ -527,6 +662,9 @@ impl SimWorld {
             CommError::Dropped { dst, .. } => {
                 obs::instant(obs::rank32(src), obs::EventKind::PacketDrop { dst: obs::rank32(*dst) }, depart);
             }
+            CommError::Corrupt { dst, .. } => {
+                obs::instant(obs::rank32(src), obs::EventKind::Corrupt { dst: obs::rank32(*dst) }, depart);
+            }
             CommError::Degraded { .. } => {}
         }
     }
@@ -552,9 +690,13 @@ impl SimWorld {
                 }
                 Err(e) => {
                     Self::trace_comm_error(src, &e, depart);
-                    // Failure is detected by a missing ack: charge the
-                    // timeout to the sender, back off, and retry.
+                    // Failure is detected by a missing ack (or a checksum
+                    // NACK): charge the timeout to the sender, back off,
+                    // and retry. The charged backoff is exported as the
+                    // `treeattn.retry.backoff_us` histogram so escalation
+                    // under stragglers is visible from `--metrics-out`.
                     self.clocks[src] += timeout;
+                    obs::observe("treeattn.retry.backoff_us", timeout * 1e6);
                     timeout *= policy.backoff;
                     if attempt < policy.max_retries {
                         self.net.note_retry();
@@ -804,6 +946,92 @@ mod tests {
         assert_eq!(w.net.fault_counters().drops, 2);
         assert_eq!(w.net.fault_counters().retries, 2);
         assert!(w.clocks[1] > 0.0, "receiver clock advanced on the surviving attempt");
+    }
+
+    #[test]
+    fn transient_corruption_is_detected_and_retried_through() {
+        let mut w = SimWorld::new(t2x8());
+        w.net.set_fault_plan(
+            FaultPlan::none().with(0, FaultKind::CorruptPayload { rank: 1, count: 2 }),
+        );
+        w.net.set_round(0);
+        // One attempt surfaces the typed checksum error.
+        let err = w.try_send(0, 1, 1 << 10).unwrap_err();
+        assert_eq!(err, CommError::Corrupt { src: 0, dst: 1 });
+        // The retry loop re-sends clean data once the budget is exhausted.
+        assert!(w.send_with_retry(0, 1, 1 << 10).is_ok());
+        assert_eq!(w.net.fault_counters().corruptions, 2);
+        assert!(w.net.fault_counters().retries >= 1);
+    }
+
+    #[test]
+    fn persistent_corruption_escalates_typed_after_retries() {
+        let mut w = SimWorld::new(t2x8());
+        w.net.set_fault_plan(
+            FaultPlan::none().with(0, FaultKind::CorruptPayload { rank: 1, count: 1000 }),
+        );
+        w.net.set_round(0);
+        let err = w.send_with_retry(0, 1, 1 << 10).unwrap_err();
+        // Nobody is dead, so the error must stay `Corrupt` (persistent
+        // corruption is an escalation to the caller, not a degrade).
+        assert_eq!(err, CommError::Corrupt { src: 0, dst: 1 });
+        assert_eq!(w.net.fault_counters().corruptions, 4, "initial try + 3 retries");
+        assert!(w.clocks[0] > 0.0, "backoff charged to the sender through the failure");
+    }
+
+    #[test]
+    fn corruption_without_checksums_is_silent() {
+        let sim = NetSim::new(t2x8());
+        sim.set_checksums(false);
+        assert!(!sim.checksums_enabled());
+        sim.set_fault_plan(
+            FaultPlan::none().with(0, FaultKind::CorruptPayload { rank: 1, count: 2 }),
+        );
+        sim.set_round(0);
+        // Garbage is delivered as if nothing happened — the ablation that
+        // motivates carrying a wire checksum at all.
+        assert!(sim.try_transfer(0, 1, 1 << 10, 0.0).is_ok());
+        assert!(sim.try_transfer(0, 1, 1 << 10, 0.0).is_ok());
+        assert_eq!(sim.fault_counters().corruptions, 0);
+    }
+
+    #[test]
+    fn fnv1a_is_bit_sensitive() {
+        assert_eq!(fnv1a(b""), 0xCBF2_9CE4_8422_2325);
+        assert_ne!(fnv1a(&1u64.to_le_bytes()), fnv1a(&0u64.to_le_bytes()));
+        assert_ne!(fnv1a(b"tree"), fnv1a(b"trees"));
+    }
+
+    #[test]
+    fn pending_events_snapshot_excludes_activated() {
+        let sim = NetSim::new(t2x8());
+        sim.set_fault_plan(FaultPlan::kill(1, 0).with(5, FaultKind::KillWorker { rank: 2 }));
+        sim.set_round(0);
+        let pending = sim.pending_events();
+        assert_eq!(pending, vec![FaultEvent { round: 5, kind: FaultKind::KillWorker { rank: 2 } }]);
+    }
+
+    #[test]
+    fn remap_renumbers_and_drops_unseated_events() {
+        // Survivors of a kill of rank 1 on p=4, compacted: old 0->0, 2->1,
+        // 3->2. Events on rank 1 vanish; SlowLink passes through untouched.
+        let survivors = [0usize, 2, 3];
+        let plan = FaultPlan::none()
+            .with(3, FaultKind::KillWorker { rank: 3 })
+            .with(4, FaultKind::DropMessages { rank: 1, count: 2 })
+            .with(5, FaultKind::SlowLink { tier: Tier::Inter, factor: 2.0 })
+            .with(6, FaultKind::CorruptPayload { rank: 2, count: 1 })
+            .remap(|r| survivors.iter().position(|&s| s == r));
+        assert_eq!(
+            plan.events,
+            vec![
+                FaultEvent { round: 3, kind: FaultKind::KillWorker { rank: 2 } },
+                FaultEvent { round: 5, kind: FaultKind::SlowLink { tier: Tier::Inter, factor: 2.0 } },
+                FaultEvent { round: 6, kind: FaultKind::CorruptPayload { rank: 1, count: 1 } },
+            ]
+        );
+        assert_eq!(FaultKind::DelayRank { rank: 0, extra_s: 0.1 }.rank(), Some(0));
+        assert_eq!(FaultKind::SlowLink { tier: Tier::Intra, factor: 4.0 }.rank(), None);
     }
 
     #[test]

@@ -79,6 +79,14 @@ fn args_of(kind: &EventKind) -> Vec<(&'static str, Json)> {
             ("survivors", Json::num(*survivors as f64)),
         ],
         EventKind::KvEvict { pages } => vec![("pages", Json::num(*pages as f64))],
+        EventKind::Corrupt { dst } => vec![("dst", Json::num(f64::from(*dst)))],
+        EventKind::Rejoin { rank, world } => vec![
+            ("rank", Json::num(f64::from(*rank))),
+            ("world", Json::num(*world as f64)),
+        ],
+        EventKind::StragglerReplan { evicted } => {
+            vec![("evicted", Json::num(*evicted as f64))]
+        }
     }
 }
 

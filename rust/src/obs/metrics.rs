@@ -215,6 +215,7 @@ impl MetricsRegistry {
         self.counter_set("planner.strategy.evictions", c.strategy_evictions);
         self.counter_set("planner.strategy.verified", c.strategy_verified);
         self.counter_set("planner.strategy.rejected", c.strategy_rejected);
+        self.counter_set("planner.straggler_replans", c.straggler_replans);
     }
 
     /// Absorb a fault-layer counter snapshot under `fault.*`.
@@ -222,6 +223,7 @@ impl MetricsRegistry {
         self.counter_set("fault.timeouts", c.timeouts);
         self.counter_set("fault.drops", c.drops);
         self.counter_set("fault.retries", c.retries);
+        self.counter_set("fault.corruptions", c.corruptions);
     }
 
     /// Absorb a serving run's [`crate::serve::BatchMetrics`] under
@@ -243,6 +245,8 @@ impl MetricsRegistry {
         self.counter_set("serve.resharded_rows", m.resharded_rows as u64);
         self.counter_set("serve.requeued", m.requeued as u64);
         self.counter_set("serve.verified_schedules", m.verified_schedules as u64);
+        self.counter_set("serve.rejoins", m.rejoins as u64);
+        self.counter_set("serve.straggler_replans", m.straggler_replans as u64);
         for (name, rounds) in &m.strategy_rounds {
             self.counter_set(&format!("serve.strategy_rounds.{name}"), *rounds as u64);
         }
@@ -356,8 +360,9 @@ mod tests {
         m.absorb_planner(&pc);
         assert_eq!(m.counter("planner.collective.hits"), 7);
         assert_eq!(m.counter("planner.strategy.misses"), 3);
-        let fc = crate::netsim::FaultCounters { timeouts: 1, drops: 2, retries: 3 };
+        let fc = crate::netsim::FaultCounters { timeouts: 1, drops: 2, retries: 3, corruptions: 4 };
         m.absorb_fault(&fc);
         assert_eq!(m.counter("fault.retries"), 3);
+        assert_eq!(m.counter("fault.corruptions"), 4);
     }
 }

@@ -91,6 +91,16 @@ pub enum EventKind {
     Timeout { dst: u32 },
     /// A message swallowed by an injected drop budget (instant, sender row).
     PacketDrop { dst: u32 },
+    /// A payload whose receiver-side FNV checksum failed (instant, sender
+    /// row).
+    Corrupt { dst: u32 },
+    /// A previously lost rank re-entering the cluster (span, driver row):
+    /// topology rebuilt to full strength, plans invalidated, KV re-sharded.
+    Rejoin { rank: u32, world: u64 },
+    /// A health-driven plan migration: the measured topology overlay
+    /// replaced the nominal one and memoized plans were re-priced (instant,
+    /// driver row).
+    StragglerReplan { evicted: u64 },
     /// One admission pass of the serving batcher (span, driver row).
     Admission { admitted: u64 },
     /// One session prefill (span, driver row).
@@ -118,6 +128,9 @@ impl EventKind {
             EventKind::Retry { .. } => "retry",
             EventKind::Timeout { .. } => "timeout",
             EventKind::PacketDrop { .. } => "packet_drop",
+            EventKind::Corrupt { .. } => "corrupt",
+            EventKind::Rejoin { .. } => "rejoin",
+            EventKind::StragglerReplan { .. } => "straggler_replan",
             EventKind::Admission { .. } => "admission",
             EventKind::Prefill { .. } => "prefill",
             EventKind::Heal { .. } => "heal",
@@ -135,6 +148,7 @@ impl EventKind {
                 | EventKind::Admission { .. }
                 | EventKind::Prefill { .. }
                 | EventKind::Heal { .. }
+                | EventKind::Rejoin { .. }
         )
     }
 }
@@ -520,5 +534,10 @@ mod tests {
         assert_eq!(EventKind::PlannerLookup { planner: "collective", hit: true }.name(), "planner_lookup");
         assert!(EventKind::Heal { lost: 1, survivors: 3 }.is_span());
         assert!(!EventKind::Retry { attempt: 1 }.is_span());
+        assert_eq!(EventKind::Corrupt { dst: 1 }.name(), "corrupt");
+        assert_eq!(EventKind::Rejoin { rank: 2, world: 8 }.name(), "rejoin");
+        assert_eq!(EventKind::StragglerReplan { evicted: 3 }.name(), "straggler_replan");
+        assert!(EventKind::Rejoin { rank: 2, world: 8 }.is_span());
+        assert!(!EventKind::StragglerReplan { evicted: 0 }.is_span());
     }
 }

@@ -39,6 +39,7 @@ use crate::config::Strategy;
 use crate::netsim::SimWorld;
 use crate::topology::Topology;
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Mutex, OnceLock};
 
 /// What one candidate algorithm would cost for a given payload.
@@ -706,6 +707,9 @@ pub struct PlannerCounters {
     /// rejected by the static verifier before memoization.
     pub strategy_verified: u64,
     pub strategy_rejected: u64,
+    /// Health-driven plan migrations: a measured topology overlay replaced
+    /// the nominal one and stale plans were evicted for re-pricing.
+    pub straggler_replans: u64,
 }
 
 pub fn planner_counters() -> PlannerCounters {
@@ -741,6 +745,7 @@ pub fn planner_counters() -> PlannerCounters {
         strategy_evictions,
         strategy_verified,
         strategy_rejected,
+        straggler_replans: straggler_replans(),
     }
 }
 
@@ -753,6 +758,28 @@ pub fn invalidate_topology(topo: &Topology) -> (usize, usize) {
     let c = lock(global_planner()).invalidate_topology(topo);
     let s = lock(global_strategy_planner()).invalidate_topology(topo);
     (c, s)
+}
+
+static STRAGGLER_REPLANS: AtomicU64 = AtomicU64::new(0);
+
+/// Count one health-driven plan migration: the serving layer adopted a
+/// measured topology overlay (straggler detected), evicted `evicted` stale
+/// plans, and will re-price against the overlay. Emits the
+/// `straggler_replan` trace instant alongside the counter so the migration
+/// is visible in both `--metrics-out` and `--trace-out`.
+pub fn note_straggler_replan(evicted: u64) {
+    STRAGGLER_REPLANS.fetch_add(1, Ordering::Relaxed);
+    crate::obs::instant(
+        crate::obs::DRIVER,
+        crate::obs::EventKind::StragglerReplan { evicted },
+        0.0,
+    );
+}
+
+/// Total health-driven plan migrations since process start (see
+/// [`note_straggler_replan`]).
+pub fn straggler_replans() -> u64 {
+    STRAGGLER_REPLANS.load(Ordering::Relaxed)
 }
 
 /// Resolve an algorithm selector against the global plan cache: fixed
@@ -1223,6 +1250,17 @@ mod tests {
         }
         assert_eq!(planner.pipelined_wins, expect);
         assert_eq!(planner.hits, 14, "second lookups must all hit");
+    }
+
+    #[test]
+    fn straggler_replan_counter_counts_migrations() {
+        // Global and monotonic (other tests may also bump it), so assert
+        // the delta, not the absolute value.
+        let before = planner_counters().straggler_replans;
+        note_straggler_replan(3);
+        note_straggler_replan(0);
+        assert_eq!(planner_counters().straggler_replans, before + 2);
+        assert!(straggler_replans() >= 2);
     }
 
     #[test]

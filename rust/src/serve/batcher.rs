@@ -50,10 +50,14 @@ use crate::attnmath::AttnShape;
 use crate::cluster::VirtualCluster;
 use crate::collectives::AllReduceAlgo;
 use crate::config::Strategy;
+use crate::health::HealthMonitor;
 use crate::kvcache::{CacheSpec, PagePool, PrefixHandle, RadixCache, RadixStats, ShardedKvCache};
+use crate::netsim::{FaultCounters, FaultEvent, FaultPlan};
 use crate::planner::StrategyRequest;
+use crate::topology::{Tier, Topology};
 use crate::util::{Rng, Summary};
 use std::collections::{BTreeMap, VecDeque};
+use std::sync::Mutex;
 
 /// A decode request against the batcher: `prompt` tokens (synthetic KV,
 /// prefilled — or radix-matched — at admission) then `max_new_tokens`
@@ -118,6 +122,11 @@ pub struct BatchResult {
     pub tokens: Vec<i32>,
     /// Raw attention outputs per generated token (`[n_heads * d_head]`).
     pub outputs: Vec<Vec<f32>>,
+    /// Final softmax denominators per generated token (`[n_heads]`) — the
+    /// un-normalized state, so recovery tests can assert bit-identity on
+    /// more than the quotient (two wrong (n, d) pairs can produce the
+    /// right n/d).
+    pub dens: Vec<Vec<f32>>,
     /// Virtual time at which the request was admitted (prefill start).
     /// `admit_sim - <run start>` is the queue wait admission control imposed.
     pub admit_sim: f64,
@@ -192,6 +201,14 @@ pub struct BatchMetrics {
     /// deadlocks, scratch bound) on survivor topologies after heals — a
     /// healed batch only ever executes proven schedules.
     pub verified_schedules: usize,
+    /// Previously lost ranks that re-entered the cluster mid-run via
+    /// [`DecodeBatcher::rejoin`]: topology rebuilt (to full strength when
+    /// every loss is recovered), plans invalidated, KV re-sharded.
+    pub rejoins: usize,
+    /// Health-driven plan migrations: rounds where the measured topology
+    /// overlay replaced (or reverted to) the nominal pricing because a
+    /// straggling link pushed observed timings outside the expectation band.
+    pub straggler_replans: usize,
     /// Fault-layer activity (timeouts / drops / retries), summed across the
     /// cluster rebuilds heals perform.
     pub fault: crate::netsim::FaultCounters,
@@ -265,11 +282,35 @@ struct ActiveSession {
     rng: Rng,
     tokens: Vec<i32>,
     outputs: Vec<Vec<f32>>,
+    dens: Vec<Vec<f32>>,
     admit_sim: f64,
     queue_sim: f64,
     prefill_sim: f64,
     first_token_sim: Option<f64>,
 }
+
+/// Typed recovery failure: the one way a heal itself can fail. Carried
+/// inside the `anyhow` chain so callers can distinguish "the cluster is
+/// gone" from an internal bug.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HealError {
+    /// Every worker is confirmed dead — there is no survivor set to heal
+    /// onto. (`survivors` is always 0 today; typed for forward-compat with
+    /// stricter quorum policies.)
+    QuorumLost { survivors: usize },
+}
+
+impl std::fmt::Display for HealError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            HealError::QuorumLost { survivors } => {
+                write!(f, "quorum lost: {survivors} surviving workers; cannot heal")
+            }
+        }
+    }
+}
+
+impl std::error::Error for HealError {}
 
 /// The continuous-batching, strategy-planned decode server.
 pub struct DecodeBatcher {
@@ -277,33 +318,120 @@ pub struct DecodeBatcher {
     pub shape: AttnShape,
     pub scale: f32,
     pub cfg: BatcherConfig,
+    /// Ranks (ORIGINAL numbering) queued for elastic re-entry; applied by
+    /// the serving loop at the first loop top where the rank is actually
+    /// dead. See [`DecodeBatcher::rejoin`].
+    pending_rejoins: Mutex<Vec<usize>>,
 }
 
 /// Historical name from when the batcher was tree-only; the scheduler now
 /// dispatches any planned [`Strategy`], tree included.
 pub type TreeBatcher = DecodeBatcher;
 
+/// Mutable serving-loop state, bundled so the heal/rejoin/health helpers
+/// can share it without threading a dozen `&mut` locals through every call.
+struct RunState {
+    /// World size at run start (the never-failed strength).
+    p0: usize,
+    /// Current world size.
+    p: usize,
+    /// The topology the run started on — rejoining to full strength must
+    /// restore EXACTLY this (same name, same links), so planner fingerprints
+    /// and therefore resolved strategies match a never-failed run.
+    original_topo: Topology,
+    /// The current cluster's nominal shape: `original_topo`, or its
+    /// `degraded(p)` when workers are down.
+    nominal_topo: Topology,
+    /// What the planners price against: `nominal_topo`, or the health
+    /// monitor's measured overlay while a straggling link is outside the
+    /// expectation band.
+    planning_topo: Topology,
+    /// Current rank -> original rank (survivors are compacted onto `0..p`).
+    rank_map: Vec<usize>,
+    /// Fault events not yet fired, in ORIGINAL numbering — the durable copy
+    /// the rebuilds re-install, so a fault aimed at a currently-dead rank
+    /// survives until that rank rejoins ("rejoin-then-kill").
+    fault_schedule: Vec<FaultEvent>,
+    health: HealthMonitor,
+    pool: PagePool,
+    radix: Option<RadixCache>,
+    queue: VecDeque<BatchRequest>,
+    active: Vec<ActiveSession>,
+    done: Vec<BatchResult>,
+    run_start: f64,
+    rounds: usize,
+    peak_active: usize,
+    peak_used_pages: usize,
+    deduped_pages: usize,
+    token_lats: Vec<f64>,
+    comm_bytes: u64,
+    comm_steps: usize,
+    strategy_rounds: BTreeMap<&'static str, usize>,
+    heals: usize,
+    rejoins: usize,
+    straggler_replans: usize,
+    lost_workers: Vec<usize>,
+    evicted_plans: usize,
+    resharded_rows: usize,
+    requeued: usize,
+    verified_schedules: usize,
+    fault: FaultCounters,
+}
+
+/// True when two topologies price identically for the planner: same name
+/// and bit-identical link specs (the planner's fingerprint covers exactly
+/// these, plus shape fields that cannot differ here).
+fn same_pricing(a: &Topology, b: &Topology) -> bool {
+    a.name == b.name
+        && a.intra.bandwidth_bps.to_bits() == b.intra.bandwidth_bps.to_bits()
+        && a.intra.latency_s.to_bits() == b.intra.latency_s.to_bits()
+        && a.inter.bandwidth_bps.to_bits() == b.inter.bandwidth_bps.to_bits()
+        && a.inter.latency_s.to_bits() == b.inter.latency_s.to_bits()
+}
+
 impl DecodeBatcher {
     pub fn new(shape: AttnShape, scale: f32, cfg: BatcherConfig) -> DecodeBatcher {
         assert_eq!(shape.batch, 1, "per-session shape must have batch 1");
         assert!(cfg.max_batch >= 1 && cfg.page_size >= 1 && cfg.pages_per_worker >= 1);
-        DecodeBatcher { shape, scale, cfg }
+        DecodeBatcher { shape, scale, cfg, pending_rejoins: Mutex::new(Vec::new()) }
     }
 
-    /// Resolve the round's strategy for `b` sessions with `total_ctx` KV
+    /// Queue a previously killed rank (ORIGINAL numbering) for elastic
+    /// re-entry. The serving loop applies it at the first loop top where the
+    /// rank is actually dead: the topology is rebuilt (to full strength once
+    /// every loss is recovered), memoized plans for the degraded shape are
+    /// invalidated, and every active session's KV is re-sharded
+    /// deterministically (content-addressed prompt rows + session-RNG
+    /// replay) — after a full-strength rejoin the remaining run is
+    /// bit-identical to one that never failed. Ranks that are alive (or die
+    /// only later) stay queued until their death round arrives; ranks
+    /// outside the original world are rejected immediately.
+    pub fn rejoin(&self, rank: usize) {
+        self.pending_lock().push(rank);
+    }
+
+    fn pending_lock(&self) -> std::sync::MutexGuard<'_, Vec<usize>> {
+        // Plain data behind the lock; a poisoned mutex cannot leave it
+        // logically inconsistent (same rationale as `NetSim::state_lock`).
+        self.pending_rejoins.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
+    /// The planner request for a round of `b` sessions with `total_ctx` KV
     /// tokens between them (the planner keys on the mean per-session
     /// context, quantized to a power of two so steady-state rounds hit the
     /// plan cache instead of re-planning as contexts grow token by token).
-    /// Fixed strategies pass through untouched.
-    fn resolve_round(&self, cluster: &VirtualCluster, b: usize, total_ctx: usize) -> Strategy {
+    fn round_request(&self, b: usize, total_ctx: usize) -> StrategyRequest {
         let ctx = total_ctx.div_ceil(b.max(1)).max(1);
-        crate::planner::resolve_strategy(
-            self.cfg.strategy,
-            cluster.topology(),
-            StrategyRequest::for_shape(self.shape, b, ctx, self.cfg.wire_bpe)
-                .with_allreduce(self.cfg.algo)
-                .bucketed(),
-        )
+        StrategyRequest::for_shape(self.shape, b, ctx, self.cfg.wire_bpe)
+            .with_allreduce(self.cfg.algo)
+            .bucketed()
+    }
+
+    /// Resolve the round's strategy against `topo` (the planning topology —
+    /// nominal, or the measured overlay under a detected straggler). Fixed
+    /// strategies pass through untouched.
+    fn resolve_round(&self, topo: &Topology, b: usize, total_ctx: usize) -> Strategy {
+        crate::planner::resolve_strategy(self.cfg.strategy, topo, self.round_request(b, total_ctx))
     }
 
     fn kv_row(&self) -> usize {
@@ -396,60 +524,76 @@ impl DecodeBatcher {
         backend: &ComputeBackend,
         requests: Vec<BatchRequest>,
     ) -> anyhow::Result<(Vec<BatchResult>, BatchMetrics)> {
-        let mut p = cluster.world_size();
-        let mut pool = PagePool::new(p, self.cfg.pages_per_worker);
-        let mut radix = self.cfg.prefix_share.then(|| RadixCache::new(self.cache_spec(p)));
-        let mut queue: VecDeque<BatchRequest> = requests.into();
-        let mut active: Vec<ActiveSession> = Vec::new();
-        let mut done: Vec<BatchResult> = Vec::new();
-
-        let run_start = cluster.world.max_clock();
-        let mut rounds = 0usize;
-        let mut peak_active = 0usize;
-        let mut peak_used_pages = 0usize;
-        let mut deduped_pages = 0usize;
-        let mut token_lats: Vec<f64> = Vec::new();
-        let mut comm_bytes = 0u64;
-        let mut comm_steps = 0usize;
-        let mut strategy_rounds: BTreeMap<&'static str, usize> = BTreeMap::new();
-        let mut heals = 0usize;
-        let mut lost_workers: Vec<usize> = Vec::new();
-        let mut evicted_plans = 0usize;
-        let mut resharded_rows = 0usize;
-        let mut requeued = 0usize;
-        let mut verified_schedules = 0usize;
-        let mut fault = crate::netsim::FaultCounters::default();
+        let p = cluster.world_size();
+        let original_topo = cluster.topology().clone();
+        let mut st = RunState {
+            p0: p,
+            p,
+            nominal_topo: original_topo.clone(),
+            planning_topo: original_topo.clone(),
+            original_topo,
+            rank_map: (0..p).collect(),
+            fault_schedule: cluster.world.net.pending_events(),
+            health: HealthMonitor::new(p),
+            pool: PagePool::new(p, self.cfg.pages_per_worker),
+            radix: self.cfg.prefix_share.then(|| RadixCache::new(self.cache_spec(p))),
+            queue: requests.into(),
+            active: Vec::new(),
+            done: Vec::new(),
+            run_start: cluster.world.max_clock(),
+            rounds: 0,
+            peak_active: 0,
+            peak_used_pages: 0,
+            deduped_pages: 0,
+            token_lats: Vec::new(),
+            comm_bytes: 0,
+            comm_steps: 0,
+            strategy_rounds: BTreeMap::new(),
+            heals: 0,
+            rejoins: 0,
+            straggler_replans: 0,
+            lost_workers: Vec::new(),
+            evicted_plans: 0,
+            resharded_rows: 0,
+            requeued: 0,
+            verified_schedules: 0,
+            fault: FaultCounters::default(),
+        };
 
         loop {
+            // -- elastic rejoin: queued ranks whose death round has come ----
+            self.try_rejoin(&mut st, cluster, backend)?;
+
             // -- retire sessions that need no (more) decode ----------------
             // (before admission, so freed slots refill in the SAME round —
             // iteration-level continuous batching, not static batching)
             let mut i = 0;
-            while i < active.len() {
-                if active[i].tokens.len() >= active[i].req.max_new_tokens {
-                    let a = active.remove(i);
-                    if let Err(e) = pool.release(&a.reserved) {
+            while i < st.active.len() {
+                if st.active[i].tokens.len() >= st.active[i].req.max_new_tokens {
+                    let a = st.active.remove(i);
+                    if let Err(e) = st.pool.release(&a.reserved) {
                         // A double-retire must not take down the serving
                         // loop (the pool already clamped its counters); it
                         // IS a scheduler bug, so fail loudly in tests.
                         crate::tlog!(Error, "request {}: {e:#}", a.req.id);
                         debug_assert!(false, "request {}: {e:#}", a.req.id);
                     }
-                    if let (Some(r), Some(h)) = (radix.as_mut(), a.prefix) {
+                    if let (Some(r), Some(h)) = (st.radix.as_mut(), a.prefix) {
                         r.release(h);
                     }
                     let now = cluster.world.max_clock();
                     // TTFT/total are measured from SUBMISSION (run start —
                     // all requests arrive together), so queueing delay from
                     // admission control shows up in the latency metrics.
-                    let ttft = a.first_token_sim.map(|t| t - run_start).unwrap_or(0.0);
+                    let ttft = a.first_token_sim.map(|t| t - st.run_start).unwrap_or(0.0);
                     let n_out = a.tokens.len();
-                    let total = now - run_start;
-                    done.push(BatchResult {
+                    let total = now - st.run_start;
+                    st.done.push(BatchResult {
                         id: a.req.id,
                         finish: FinishReason::Completed,
                         tokens: a.tokens,
                         outputs: a.outputs,
+                        dens: a.dens,
                         admit_sim: a.admit_sim,
                         ttft_sim: ttft,
                         queue_sim: a.queue_sim,
@@ -466,15 +610,15 @@ impl DecodeBatcher {
 
             // -- admission: refill free slots in strict FIFO order ---------
             let adm_t0 = cluster.world.max_clock();
-            let active_before_admission = active.len();
-            while let Some(front) = queue.front() {
-                let need_full = self.footprint(p, front);
-                if !pool.fits_capacity(&need_full) {
+            let active_before_admission = st.active.len();
+            while let Some(front) = st.queue.front() {
+                let need_full = self.footprint(st.p, front);
+                if !st.pool.fits_capacity(&need_full) {
                     // Could never run, even on an idle pool with an empty
                     // prefix cache: reject now so it does not wedge the
                     // queue behind it. (Deliberately ignores sharing — the
                     // reject decision must not depend on cache state.)
-                    let Some(req) = queue.pop_front() else { break };
+                    let Some(req) = st.queue.pop_front() else { break };
                     crate::tlog!(
                         Warn,
                         "rejecting request {}: needs {:?} pages, capacity {} per worker",
@@ -482,11 +626,12 @@ impl DecodeBatcher {
                         need_full,
                         self.cfg.pages_per_worker
                     );
-                    done.push(BatchResult {
+                    st.done.push(BatchResult {
                         id: req.id,
                         finish: FinishReason::Rejected,
                         tokens: Vec::new(),
                         outputs: Vec::new(),
+                        dens: Vec::new(),
                         admit_sim: cluster.world.max_clock(),
                         ttft_sim: 0.0,
                         queue_sim: 0.0,
@@ -498,7 +643,7 @@ impl DecodeBatcher {
                     });
                     continue;
                 }
-                if active.len() >= self.cfg.max_batch {
+                if st.active.len() >= self.cfg.max_batch {
                     // Head-of-line blocking is intentional: later (possibly
                     // smaller) requests must NOT overtake — FIFO fairness.
                     break;
@@ -512,30 +657,30 @@ impl DecodeBatcher {
                 // queue head always makes progress.
                 let mut admitted = None;
                 loop {
-                    let handle = radix.as_mut().map(|r| r.acquire(&front.prompt));
+                    let handle = st.radix.as_mut().map(|r| r.acquire(&front.prompt));
                     let matched = handle.map_or(0, |h| h.matched);
                     let shared =
-                        PagePool::pages_for_range(p, 0, matched / self.cfg.page_size);
+                        PagePool::pages_for_range(st.p, 0, matched / self.cfg.page_size);
                     let mut need = need_full.clone();
                     for (n, s) in need.iter_mut().zip(&shared) {
                         *n -= s;
                     }
-                    if pool.try_reserve(&need) {
+                    if st.pool.try_reserve(&need) {
                         admitted = Some((handle, matched, shared, need));
                         break;
                     }
-                    if let Some(r) = radix.as_mut() {
+                    if let Some(r) = st.radix.as_mut() {
                         // Make room by evicting unpinned cached prefixes
                         // (LRU leaf-first); pinned paths are untouchable.
-                        if r.evict_for(&mut pool, &need)? && pool.try_reserve(&need) {
+                        if r.evict_for(&mut st.pool, &need)? && st.pool.try_reserve(&need) {
                             admitted = Some((handle, matched, shared, need));
                             break;
                         }
                     }
-                    if let (Some(r), Some(h)) = (radix.as_mut(), handle) {
+                    if let (Some(r), Some(h)) = (st.radix.as_mut(), handle) {
                         r.release(h);
                     }
-                    if !active.is_empty() || radix.is_none() {
+                    if !st.active.is_empty() || st.radix.is_none() {
                         // FIFO wait: active sessions will retire and free
                         // their pages (without a radix cache an empty pool
                         // always fits the head, so this never wedges).
@@ -546,15 +691,15 @@ impl DecodeBatcher {
                     // footprint and re-match against the shrunken tree
                     // (guaranteed to reserve next attempt — and if eviction
                     // somehow cannot make room, stop rather than spin).
-                    let Some(r) = radix.as_mut() else { break };
-                    if !r.evict_for(&mut pool, &need_full)? {
+                    let Some(r) = st.radix.as_mut() else { break };
+                    if !r.evict_for(&mut st.pool, &need_full)? {
                         break;
                     }
                 }
                 let Some((handle, matched, shared, need)) = admitted else {
                     break;
                 };
-                let Some(req) = queue.pop_front() else { break };
+                let Some(req) = st.queue.pop_front() else { break };
                 let admit_sim = cluster.world.max_clock();
                 let rng = self.session_rng(req.id);
                 let ctx = req.prompt.len();
@@ -562,7 +707,7 @@ impl DecodeBatcher {
                 // Build the full prompt's KV rows: the matched prefix comes
                 // from the tree (bit-identical to regeneration — rows are
                 // content-addressed), the suffix is generated fresh.
-                let (k_flat, v_flat) = match radix.as_ref() {
+                let (k_flat, v_flat) = match st.radix.as_ref() {
                     // matched > 0 implies a radix cache matched the prefix.
                     Some(r) if matched > 0 => {
                         let (mut kp, mut vp) = r.prefix_rows(&req.prompt, matched)?;
@@ -579,22 +724,25 @@ impl DecodeBatcher {
                 // Commit this prompt's full pages to the tree, transferring
                 // their ownership out of our reservation (pool unchanged).
                 let mut reserved = need;
-                if let (Some(r), Some(h)) = (radix.as_mut(), handle.as_ref()) {
+                if let (Some(r), Some(h)) = (st.radix.as_mut(), handle.as_ref()) {
                     let moved = r.insert(h, &req.prompt, &k_layers, &v_layers);
                     for (n, m) in reserved.iter_mut().zip(&moved) {
                         debug_assert!(*n >= *m, "transfer exceeds reservation");
                         *n -= m;
                     }
-                    deduped_pages += shared.iter().sum::<usize>();
+                    st.deduped_pages += shared.iter().sum::<usize>();
                     r.record_lookup(req.prompt.len(), matched);
                 }
 
                 // Install into the sharded cache. After insert, every full
                 // prompt page is cache-owned, so the alias extends to the
                 // page-aligned prompt length (0 without sharing).
-                let aliased =
-                    if radix.is_some() { (ctx / self.cfg.page_size) * self.cfg.page_size } else { 0 };
-                let mut cache = ShardedKvCache::new(self.cache_spec(p));
+                let aliased = if st.radix.is_some() {
+                    (ctx / self.cfg.page_size) * self.cfg.page_size
+                } else {
+                    0
+                };
+                let mut cache = ShardedKvCache::new(self.cache_spec(st.p));
                 cache.install_shared_prefix(ctx, aliased, &k_layers, &v_layers);
 
                 // Prefill cost: causal flash attention over the UNMATCHED
@@ -609,12 +757,12 @@ impl DecodeBatcher {
                         ctx,
                         self.shape.n_heads,
                         self.shape.d_head,
-                    ) / p as f64
+                    ) / st.p as f64
                 } else {
                     0.0
                 };
                 let pf_t0 = cluster.world.max_clock();
-                for w in 0..p {
+                for w in 0..st.p {
                     cluster.world.compute(w, t_pref);
                 }
                 crate::obs::span(
@@ -628,7 +776,7 @@ impl DecodeBatcher {
                     "admitted request {} (ctx {ctx}, prefix hit {matched})",
                     req.id
                 );
-                active.push(ActiveSession {
+                st.active.push(ActiveSession {
                     req,
                     cache,
                     reserved,
@@ -637,8 +785,9 @@ impl DecodeBatcher {
                     rng,
                     tokens: Vec::new(),
                     outputs: Vec::new(),
+                    dens: Vec::new(),
                     admit_sim,
-                    queue_sim: admit_sim - run_start,
+                    queue_sim: admit_sim - st.run_start,
                     prefill_sim: t_pref,
                     first_token_sim: None,
                 });
@@ -646,27 +795,29 @@ impl DecodeBatcher {
             crate::obs::span(
                 crate::obs::DRIVER,
                 crate::obs::EventKind::Admission {
-                    admitted: (active.len() - active_before_admission) as u64,
+                    admitted: (st.active.len() - active_before_admission) as u64,
                 },
                 adm_t0,
                 cluster.world.max_clock(),
             );
-            peak_active = peak_active.max(active.len());
-            peak_used_pages = peak_used_pages.max((0..p).map(|w| pool.used_pages(w)).sum());
+            st.peak_active = st.peak_active.max(st.active.len());
+            st.peak_used_pages =
+                st.peak_used_pages.max((0..st.p).map(|w| st.pool.used_pages(w)).sum());
 
-            if active.is_empty() {
+            if st.active.is_empty() {
                 // Admission admits at least the queue head onto an idle pool
                 // (impossible footprints were rejected above; eviction can
                 // always clear an unpinned cache), so an empty active set
                 // here means the queue is drained too.
-                debug_assert!(queue.is_empty());
+                debug_assert!(st.queue.is_empty());
                 break;
             }
 
             // -- one continuous-batched decode round -----------------------
             // (sessions admitted with max_new_tokens == 0 skip decoding and
             // retire on the next pass)
-            let decode_idx: Vec<usize> = active
+            let decode_idx: Vec<usize> = st
+                .active
                 .iter()
                 .enumerate()
                 .filter(|(_, a)| a.tokens.len() < a.req.max_new_tokens)
@@ -677,7 +828,7 @@ impl DecodeBatcher {
             }
             let mut qs: Vec<Vec<f32>> = Vec::with_capacity(decode_idx.len());
             for &i in &decode_idx {
-                let a = &mut active[i];
+                let a = &mut st.active[i];
                 let (q, k_row, v_row) = self.draw_step(&mut a.rng);
                 a.cache.append_token_layer(0, &k_row, &v_row);
                 qs.push(q);
@@ -685,19 +836,22 @@ impl DecodeBatcher {
             let entries: Vec<BatchEntry<'_>> = decode_idx
                 .iter()
                 .zip(&qs)
-                .map(|(&i, q)| BatchEntry { q, shards: Self::shard_views(&active[i].cache, p) })
+                .map(|(&i, q)| BatchEntry { q, shards: Self::shard_views(&st.active[i].cache, st.p) })
                 .collect();
-            // Plan the round: the live batch width and context lengths are
-            // exactly what the strategy planner keys its cache on.
+            // Plan the round against the PLANNING topology: nominal link
+            // specs, unless the health monitor has adopted a measured
+            // overlay — then the round is priced on observed speeds and a
+            // straggler re-routes the strategy choice.
             let total_ctx: usize = entries
                 .iter()
                 .map(|e| e.shards.iter().map(|s| s.len).sum::<usize>())
                 .sum();
-            let resolved = self.resolve_round(cluster, entries.len(), total_ctx);
+            let planning_topo = st.planning_topo.clone();
+            let resolved = self.resolve_round(&planning_topo, entries.len(), total_ctx);
             let strat = strategy_impl(resolved, self.cfg.algo, self.cfg.wire_bpe)?;
             // Advance the fault clock: an installed FaultPlan fires events
             // scheduled at or before this round.
-            cluster.world.net.set_round(rounds);
+            cluster.world.net.set_round(st.rounds);
             let before = cluster.world.max_clock();
             let round = match strat.decode_batch(cluster, backend, self.shape, self.scale, &entries)
             {
@@ -708,126 +862,210 @@ impl DecodeBatcher {
                     let Some(lost) = crate::netsim::degraded_workers(&err) else {
                         return Err(err);
                     };
-                    // The net layer's dead set is authoritative; the error
-                    // names at least one member of it.
-                    let mut dead = cluster.world.net.dead_ranks();
-                    for r in lost {
-                        if !dead.contains(&r) {
-                            dead.push(r);
-                        }
-                    }
-                    dead.sort_unstable();
-                    let p2 = p - dead.len();
-                    anyhow::ensure!(p2 >= 1, "all {p} workers lost; cannot heal");
-                    let heal_t0 = cluster.world.max_clock();
-                    crate::tlog!(
-                        Warn,
-                        "degraded decode at round {rounds}: lost workers {dead:?}, healing onto {p2} survivors"
-                    );
+                    drop(entries);
+                    self.heal(&mut st, cluster, backend, lost)?;
+                    continue;
+                }
+            };
+            *st.strategy_rounds.entry(resolved.name()).or_insert(0) += 1;
+            let after = cluster.world.max_clock();
+            let round_lat = after - before;
+            crate::obs::span(
+                crate::obs::DRIVER,
+                crate::obs::EventKind::Round {
+                    round: st.rounds as u64,
+                    batch: decode_idx.len() as u64,
+                    strategy: resolved.name(),
+                },
+                before,
+                after,
+            );
+            crate::obs::observe("serve.round_s", round_lat);
+            st.rounds += 1;
+            st.comm_bytes += round.stats.traffic.total_bytes();
+            st.comm_steps += round.stats.comm_steps;
 
-                    // 1. Plans memoized for the dead shape must never be
-                    //    served again — evict them from the global caches.
-                    let (ec, es) = crate::planner::invalidate_topology(cluster.topology());
-                    evicted_plans += ec + es;
+            for ((&i, out), den) in decode_idx.iter().zip(round.outs).zip(round.dens) {
+                let a = &mut st.active[i];
+                a.cache.commit_token()?;
+                a.tokens.push(detokenize_stub(&out));
+                a.outputs.push(out);
+                a.dens.push(den);
+                if a.first_token_sim.is_none() {
+                    a.first_token_sim = Some(after);
+                }
+                st.token_lats.push(round_lat);
+            }
 
-                    // 2. Rebuild the cluster on the surviving topology.
-                    //    Virtual time moves forward through a failure (the
-                    //    retry/backoff charges are already on the clocks),
-                    //    never backward.
-                    fault.absorb(&cluster.world.net.fault_counters());
-                    let t_resume = cluster.world.max_clock();
-                    let survivor_topo = cluster.topology().degraded(p2);
-                    // Prove every allreduce the planner could emit for the
-                    // survivor shape BEFORE any healed round executes — a
-                    // heal that would run an unverifiable schedule is a
-                    // hard error, not a silent corruption.
-                    verified_schedules += crate::verifier::verify_planner_candidates(
-                        &survivor_topo,
-                        active.len().max(1) * self.shape.n_heads,
-                    )?;
-                    *cluster = VirtualCluster::new(survivor_topo);
-                    for w in 0..p2 {
-                        cluster.world.compute(w, t_resume);
-                    }
-                    p = p2;
+            // Feed the health monitor and re-plan if the measured overlay
+            // moved the pricing — straggler-aware adaptive planning.
+            let b = decode_idx.len();
+            self.observe_round(&mut st, resolved, round_lat, b, total_ctx)?;
+        }
 
-                    // 3. Fresh page pool for the survivor shape. The radix
-                    //    cache's pages were laid out for the dead shape and
-                    //    partly lived on the lost worker — drop it; later
-                    //    admissions run unshared (correctness is unaffected:
-                    //    sharing never changes output bits).
-                    pool = PagePool::new(p, self.cfg.pages_per_worker);
-                    radix = None;
+        let total_tokens_out: usize = st.done.iter().map(|r| r.tokens.len()).sum();
+        let sim_elapsed = cluster.world.max_clock() - st.run_start;
+        let completed_with_tokens = |f: fn(&BatchResult) -> f64| -> Vec<f64> {
+            st.done
+                .iter()
+                .filter(|r| r.finish == FinishReason::Completed && !r.tokens.is_empty())
+                .map(f)
+                .collect()
+        };
+        let ttfts = completed_with_tokens(|r| r.ttft_sim);
+        let queues = completed_with_tokens(|r| r.queue_sim);
+        let prefills = completed_with_tokens(|r| r.prefill_sim);
+        st.fault.absorb(&cluster.world.net.fault_counters());
+        let metrics = BatchMetrics {
+            completed: st.done.iter().filter(|r| r.finish == FinishReason::Completed).count(),
+            rejected: st.done.iter().filter(|r| r.finish == FinishReason::Rejected).count(),
+            total_tokens_out,
+            rounds: st.rounds,
+            peak_active: st.peak_active,
+            throughput_sim: if sim_elapsed > 0.0 {
+                total_tokens_out as f64 / sim_elapsed
+            } else {
+                0.0
+            },
+            token_latency: Summary::of(&st.token_lats),
+            ttft: Summary::of(&ttfts),
+            ttft_queue: Summary::of(&queues),
+            ttft_prefill: Summary::of(&prefills),
+            prefix: st.radix.as_ref().map(|r| r.stats).unwrap_or_default(),
+            deduped_pages: st.deduped_pages,
+            peak_used_pages: st.peak_used_pages,
+            comm_bytes: st.comm_bytes,
+            comm_steps: st.comm_steps,
+            strategy_rounds: st.strategy_rounds,
+            heals: st.heals,
+            rejoins: st.rejoins,
+            straggler_replans: st.straggler_replans,
+            lost_workers: st.lost_workers,
+            evicted_plans: st.evicted_plans,
+            resharded_rows: st.resharded_rows,
+            requeued: st.requeued,
+            verified_schedules: st.verified_schedules,
+            fault: st.fault,
+        };
+        Ok((st.done, metrics))
+    }
 
-                    // 4. Re-shard every active session onto the survivors.
-                    //    The dead worker's pages are unrecoverable, so rows
-                    //    are regenerated deterministically (content-addressed
-                    //    prompt KV + replayed decode stream) — the simulated
-                    //    form of re-prefill — and already-emitted outputs are
-                    //    recomputed on the survivor topology, making the
-                    //    completed batch bit-identical to a from-scratch run
-                    //    on the survivors.
-                    let mut kept: Vec<ActiveSession> = Vec::new();
-                    let mut requeue: Vec<BatchRequest> = Vec::new();
-                    for mut a in active.drain(..) {
-                        let need = self.footprint(p, &a.req);
-                        if !pool.fits_capacity(&need) || !pool.try_reserve(&need) {
-                            crate::tlog!(
-                                Warn,
-                                "request {}: no survivor capacity mid-flight; restarting via the queue",
-                                a.req.id
-                            );
-                            requeue.push(a.req);
-                            continue;
-                        }
-                        a.reserved = need;
-                        a.prefix = None;
-                        let ctx = a.req.prompt.len();
-                        let (k_flat, v_flat) = self.gen_prompt_rows(&a.req.prompt, 0);
-                        let mut cache = ShardedKvCache::new(self.cache_spec(p));
-                        cache.install_shared_prefix(ctx, 0, &[k_flat], &[v_flat]);
-                        resharded_rows += ctx;
-                        let t_pref = cluster.gpu.prefill_attention_time(
-                            1,
-                            ctx,
-                            ctx,
-                            self.shape.n_heads,
-                            self.shape.d_head,
-                        ) / p as f64;
-                        for w in 0..p {
-                            cluster.world.compute(w, t_pref);
-                        }
-                        // Replay the decode stream: identical draws, now
-                        // sharded over the survivors.
-                        let mut rng = self.session_rng(a.req.id);
-                        for s in 0..a.tokens.len() {
-                            let (q, k_row, v_row) = self.draw_step(&mut rng);
-                            cache.append_token_layer(0, &k_row, &v_row);
-                            let shards = Self::shard_views(&cache, p);
-                            let sctx: usize = shards.iter().map(|x| x.len).sum();
-                            let r2 = self.resolve_round(cluster, 1, sctx);
-                            let s2 = strategy_impl(r2, self.cfg.algo, self.cfg.wire_bpe)?;
-                            let o =
-                                s2.decode(cluster, backend, self.shape, self.scale, &q, &shards)?;
-                            cache.commit_token()?;
-                            a.tokens[s] = detokenize_stub(&o.out);
-                            a.outputs[s] = o.out;
-                            resharded_rows += 1;
-                        }
-                        a.cache = cache;
-                        // The replayed stream sits exactly where the live one
-                        // sat before the failed round's draw: the next round
-                        // re-draws the same values the dead round consumed.
-                        a.rng = rng;
-                        kept.push(a);
+    /// Apply queued [`DecodeBatcher::rejoin`] requests whose target rank is
+    /// currently dead: rebuild the cluster at the enlarged strength,
+    /// invalidate plans memoized for the shrunken shape, and re-shard every
+    /// in-flight session onto the new world deterministically. Ranks that
+    /// are still alive stay queued (their death round has not come yet);
+    /// ranks outside the original world are dropped with a warning.
+    fn try_rejoin(
+        &self,
+        st: &mut RunState,
+        cluster: &mut VirtualCluster,
+        backend: &ComputeBackend,
+    ) -> anyhow::Result<()> {
+        loop {
+            let rank = {
+                let mut pending = self.pending_lock();
+                let mut pick = None;
+                let mut i = 0;
+                while i < pending.len() {
+                    let r = pending[i];
+                    if r >= st.p0 {
+                        crate::tlog!(
+                            Warn,
+                            "rejoin({r}) ignored: rank outside the original world of {}",
+                            st.p0
+                        );
+                        pending.remove(i);
+                        continue;
                     }
-                    active = kept;
-                    requeue.sort_by_key(|r| r.id);
-                    requeued += requeue.len();
-                    for r in requeue.into_iter().rev() {
-                        queue.push_front(r);
+                    if st.rank_map.contains(&r) {
+                        // Still seated — nothing to rejoin yet. Leave it
+                        // queued for after the rank actually dies.
+                        i += 1;
+                        continue;
                     }
-                    heals += 1;
+                    pending.remove(i);
+                    pick = Some(r);
+                    break;
+                }
+                pick
+            };
+            let Some(rank) = rank else { return Ok(()) };
+            let t0 = cluster.world.max_clock();
+            let mut survivors = st.rank_map.clone();
+            survivors.push(rank);
+            survivors.sort_unstable();
+            crate::tlog!(
+                Info,
+                "rank {rank} rejoining: rebuilding world {} -> {}",
+                st.p,
+                survivors.len()
+            );
+            self.rebuild_cluster(st, cluster, survivors)?;
+            st.rejoins += 1;
+            if let Some(lost) = self.reshard(st, cluster, backend)? {
+                // A fault fired while replaying onto the enlarged world —
+                // fall back to the heal path (which loops until stable).
+                self.heal(st, cluster, backend, lost)?;
+            }
+            crate::obs::span(
+                crate::obs::DRIVER,
+                crate::obs::EventKind::Rejoin { rank: rank as u32, world: st.p as u64 },
+                t0,
+                cluster.world.max_clock(),
+            );
+        }
+    }
+
+    /// Heal onto the survivor set after confirmed worker loss. Iterates:
+    /// if a cascading fault kills another worker while the re-shard replay
+    /// is in flight, the loop re-enters with the enlarged dead set until a
+    /// stable survivor world completes the replay. Total loss is a typed
+    /// [`HealError::QuorumLost`]; a single survivor is a degraded but legal
+    /// world (graceful single-worker fallback).
+    fn heal(
+        &self,
+        st: &mut RunState,
+        cluster: &mut VirtualCluster,
+        backend: &ComputeBackend,
+        mut lost: Vec<usize>,
+    ) -> anyhow::Result<()> {
+        loop {
+            // The net layer's dead set is authoritative; the error names at
+            // least one member of it. Both are in CURRENT numbering.
+            let mut dead = cluster.world.net.dead_ranks();
+            for r in lost.drain(..) {
+                if !dead.contains(&r) {
+                    dead.push(r);
+                }
+            }
+            dead.sort_unstable();
+            let p2 = st.p - dead.len();
+            if p2 == 0 {
+                return Err(anyhow::Error::new(HealError::QuorumLost { survivors: 0 })
+                    .context(format!("all {} workers lost", st.p)));
+            }
+            if p2 == 1 {
+                crate::tlog!(
+                    Warn,
+                    "single-worker fallback: decoding continues on 1 survivor"
+                );
+            }
+            let heal_t0 = cluster.world.max_clock();
+            // Translate to ORIGINAL ranks before the rebuild renumbers.
+            let dead_orig: Vec<usize> = dead.iter().map(|&r| st.rank_map[r]).collect();
+            let survivors_orig: Vec<usize> =
+                st.rank_map.iter().copied().filter(|r| !dead_orig.contains(r)).collect();
+            crate::tlog!(
+                Warn,
+                "degraded decode at round {}: lost workers {dead_orig:?} (original ranks), healing onto {p2} survivors",
+                st.rounds
+            );
+            st.lost_workers.extend(dead_orig);
+            self.rebuild_cluster(st, cluster, survivors_orig)?;
+            st.heals += 1;
+            match self.reshard(st, cluster, backend)? {
+                None => {
                     crate::obs::span(
                         crate::obs::DRIVER,
                         crate::obs::EventKind::Heal {
@@ -837,82 +1075,277 @@ impl DecodeBatcher {
                         heal_t0,
                         cluster.world.max_clock(),
                     );
-                    lost_workers.extend(dead);
-                    continue;
+                    return Ok(());
                 }
-            };
-            *strategy_rounds.entry(resolved.name()).or_insert(0) += 1;
-            let after = cluster.world.max_clock();
-            let round_lat = after - before;
-            crate::obs::span(
-                crate::obs::DRIVER,
-                crate::obs::EventKind::Round {
-                    round: rounds as u64,
-                    batch: decode_idx.len() as u64,
-                    strategy: resolved.name(),
-                },
-                before,
-                after,
-            );
-            crate::obs::observe("serve.round_s", round_lat);
-            rounds += 1;
-            comm_bytes += round.stats.traffic.total_bytes();
-            comm_steps += round.stats.comm_steps;
-
-            for (&i, out) in decode_idx.iter().zip(round.outs) {
-                let a = &mut active[i];
-                a.cache.commit_token()?;
-                a.tokens.push(detokenize_stub(&out));
-                a.outputs.push(out);
-                if a.first_token_sim.is_none() {
-                    a.first_token_sim = Some(after);
+                Some(cascade) => {
+                    // Cascading failure mid-heal: account this iteration,
+                    // then heal again from the enlarged dead set.
+                    crate::obs::span(
+                        crate::obs::DRIVER,
+                        crate::obs::EventKind::Heal {
+                            lost: dead.len() as u64,
+                            survivors: p2 as u64,
+                        },
+                        heal_t0,
+                        cluster.world.max_clock(),
+                    );
+                    lost = cascade;
                 }
-                token_lats.push(round_lat);
             }
         }
+    }
 
-        let total_tokens_out: usize = done.iter().map(|r| r.tokens.len()).sum();
-        let sim_elapsed = cluster.world.max_clock() - run_start;
-        let completed_with_tokens = |f: fn(&BatchResult) -> f64| -> Vec<f64> {
-            done.iter()
-                .filter(|r| r.finish == FinishReason::Completed && !r.tokens.is_empty())
-                .map(f)
-                .collect()
+    /// Rebuild the virtual cluster so exactly `survivors_orig` (ORIGINAL
+    /// rank numbering, sorted) are seated. Shared by heal (shrink) and
+    /// rejoin (grow): carries unfired fault events across the rebuild,
+    /// evicts stale plans, verifies the planner's candidate schedules for
+    /// the new shape, and resets the per-shape serving state (page pool,
+    /// radix cache, health monitor).
+    fn rebuild_cluster(
+        &self,
+        st: &mut RunState,
+        cluster: &mut VirtualCluster,
+        survivors_orig: Vec<usize>,
+    ) -> anyhow::Result<()> {
+        // 1. Sync the fault schedule with what actually fired: an event
+        //    aimed at a currently-seated rank that is no longer pending has
+        //    fired — drop it. Events aimed at unseated (dead) ranks are
+        //    retained for a later rejoin; rank-less events are kept while
+        //    still pending.
+        let still = FaultPlan { events: cluster.world.net.pending_events() }
+            .remap(|r| st.rank_map.get(r).copied())
+            .events;
+        st.fault_schedule.retain(|e| {
+            let seated = e.kind.rank().map_or(true, |r| st.rank_map.contains(&r));
+            !seated || still.contains(e)
+        });
+        st.fault.absorb(&cluster.world.net.fault_counters());
+
+        // 2. Plans memoized for the outgoing shape must never be served
+        //    again — evict them from the global caches (both the nominal
+        //    pricing and, if a measured overlay was adopted, its entries).
+        let (ec, es) = crate::planner::invalidate_topology(&st.planning_topo);
+        st.evicted_plans += ec + es;
+        if !same_pricing(&st.planning_topo, &st.nominal_topo) {
+            let (ec, es) = crate::planner::invalidate_topology(&st.nominal_topo);
+            st.evicted_plans += ec + es;
+        }
+
+        // 3. Rebuild on the new shape. Virtual time moves forward through a
+        //    failure (retry/backoff charges are already on the clocks),
+        //    never backward.
+        let t_resume = cluster.world.max_clock();
+        let p2 = survivors_orig.len();
+        let topo = if p2 == st.p0 {
+            st.original_topo.clone()
+        } else {
+            st.original_topo.degraded(p2)
         };
-        let ttfts = completed_with_tokens(|r| r.ttft_sim);
-        let queues = completed_with_tokens(|r| r.queue_sim);
-        let prefills = completed_with_tokens(|r| r.prefill_sim);
-        fault.absorb(&cluster.world.net.fault_counters());
-        let metrics = BatchMetrics {
-            completed: done.iter().filter(|r| r.finish == FinishReason::Completed).count(),
-            rejected: done.iter().filter(|r| r.finish == FinishReason::Rejected).count(),
-            total_tokens_out,
-            rounds,
-            peak_active,
-            throughput_sim: if sim_elapsed > 0.0 {
-                total_tokens_out as f64 / sim_elapsed
-            } else {
-                0.0
-            },
-            token_latency: Summary::of(&token_lats),
-            ttft: Summary::of(&ttfts),
-            ttft_queue: Summary::of(&queues),
-            ttft_prefill: Summary::of(&prefills),
-            prefix: radix.as_ref().map(|r| r.stats).unwrap_or_default(),
-            deduped_pages,
-            peak_used_pages,
-            comm_bytes,
-            comm_steps,
-            strategy_rounds,
-            heals,
-            lost_workers,
-            evicted_plans,
-            resharded_rows,
-            requeued,
-            verified_schedules,
-            fault,
-        };
-        Ok((done, metrics))
+        // Prove every allreduce the planner could emit for the new shape
+        // BEFORE any round executes on it — a rebuild that would run an
+        // unverifiable schedule is a hard error, not a silent corruption.
+        st.verified_schedules += crate::verifier::verify_planner_candidates(
+            &topo,
+            st.active.len().max(1) * self.shape.n_heads,
+        )?;
+        *cluster = VirtualCluster::new(topo.clone());
+        // Re-arm the unfired remainder of the fault plan, renumbered onto
+        // the new seating (events aimed at unseated ranks stay parked in
+        // `st.fault_schedule` until those ranks rejoin).
+        cluster.world.net.set_fault_plan(
+            FaultPlan { events: st.fault_schedule.clone() }
+                .remap(|orig| survivors_orig.iter().position(|&s| s == orig)),
+        );
+        cluster.world.net.set_round(st.rounds);
+        for w in 0..p2 {
+            cluster.world.compute(w, t_resume);
+        }
+
+        // 4. Per-shape serving state. The radix cache's pages were laid out
+        //    for the outgoing shape — drop it; later admissions run
+        //    unshared (correctness is unaffected: sharing never changes
+        //    output bits). Health statistics priced the old world; reset.
+        st.p = p2;
+        st.rank_map = survivors_orig;
+        st.nominal_topo = topo.clone();
+        st.planning_topo = topo;
+        st.health.reset(p2);
+        st.pool = PagePool::new(p2, self.cfg.pages_per_worker);
+        st.radix = None;
+        Ok(())
+    }
+
+    /// Re-shard every in-flight session onto the (re)built world: rows are
+    /// regenerated deterministically (content-addressed prompt KV + the
+    /// replayed decode stream) — the simulated form of re-prefill — and
+    /// already-emitted outputs are recomputed on the new topology, making
+    /// the completed batch bit-identical to a from-scratch run at that
+    /// strength. Sessions that no longer fit are restarted via the queue.
+    /// Returns `Some(lost)` if a fault fired mid-replay (cascading
+    /// failure); the caller re-enters the heal loop.
+    fn reshard(
+        &self,
+        st: &mut RunState,
+        cluster: &mut VirtualCluster,
+        backend: &ComputeBackend,
+    ) -> anyhow::Result<Option<Vec<usize>>> {
+        let mut pending: std::collections::VecDeque<ActiveSession> =
+            st.active.drain(..).collect();
+        let mut kept: Vec<ActiveSession> = Vec::new();
+        let mut requeue: Vec<BatchRequest> = Vec::new();
+        let mut cascade: Option<Vec<usize>> = None;
+        'sessions: while let Some(mut a) = pending.pop_front() {
+            let need = self.footprint(st.p, &a.req);
+            if !st.pool.fits_capacity(&need) || !st.pool.try_reserve(&need) {
+                crate::tlog!(
+                    Warn,
+                    "request {}: no capacity mid-flight at world {}; restarting via the queue",
+                    a.req.id,
+                    st.p
+                );
+                requeue.push(a.req);
+                continue;
+            }
+            a.reserved = need;
+            a.prefix = None;
+            let ctx = a.req.prompt.len();
+            let (k_flat, v_flat) = self.gen_prompt_rows(&a.req.prompt, 0);
+            let mut cache = ShardedKvCache::new(self.cache_spec(st.p));
+            cache.install_shared_prefix(ctx, 0, &[k_flat], &[v_flat]);
+            st.resharded_rows += ctx;
+            let t_pref = cluster.gpu.prefill_attention_time(
+                1,
+                ctx,
+                ctx,
+                self.shape.n_heads,
+                self.shape.d_head,
+            ) / st.p as f64;
+            for w in 0..st.p {
+                cluster.world.compute(w, t_pref);
+            }
+            // Replay the decode stream: identical draws, now sharded over
+            // the new world.
+            let mut rng = self.session_rng(a.req.id);
+            for s in 0..a.tokens.len() {
+                let (q, k_row, v_row) = self.draw_step(&mut rng);
+                cache.append_token_layer(0, &k_row, &v_row);
+                let shards = Self::shard_views(&cache, st.p);
+                let sctx: usize = shards.iter().map(|x| x.len).sum();
+                let r2 = self.resolve_round(cluster.topology(), 1, sctx);
+                let s2 = strategy_impl(r2, self.cfg.algo, self.cfg.wire_bpe)?;
+                let o = match s2.decode(cluster, backend, self.shape, self.scale, &q, &shards) {
+                    Ok(o) => o,
+                    Err(err) => {
+                        let Some(lost) = crate::netsim::degraded_workers(&err) else {
+                            return Err(err);
+                        };
+                        // Cascading kill mid-replay: keep the session (the
+                        // next reshard pass regenerates it from scratch —
+                        // the replay is idempotent) and bubble up.
+                        a.cache = cache;
+                        kept.push(a);
+                        kept.extend(pending.drain(..));
+                        cascade = Some(lost);
+                        break 'sessions;
+                    }
+                };
+                cache.commit_token()?;
+                a.tokens[s] = detokenize_stub(&o.out);
+                a.outputs[s] = o.out;
+                a.dens[s] = o.den;
+                st.resharded_rows += 1;
+            }
+            a.cache = cache;
+            // The replayed stream sits exactly where the live one sat
+            // before the failed round's draw: the next round re-draws the
+            // same values the dead round consumed.
+            a.rng = rng;
+            kept.push(a);
+        }
+        st.active = kept;
+        requeue.sort_by_key(|r| r.id);
+        st.requeued += requeue.len();
+        for r in requeue.into_iter().rev() {
+            st.queue.push_front(r);
+        }
+        Ok(cascade)
+    }
+
+    /// Feed the health monitor one round's wall-clock and re-plan when the
+    /// measured topology overlay changes the pricing. The expectation is
+    /// the planner's NOMINAL prediction for the strategy that actually ran,
+    /// so detection stays anchored while the planning topology drifts.
+    fn observe_round(
+        &self,
+        st: &mut RunState,
+        resolved: Strategy,
+        round_lat: f64,
+        b: usize,
+        total_ctx: usize,
+    ) -> anyhow::Result<()> {
+        let req = self.round_request(b, total_ctx);
+        let plan = crate::planner::strategy_plan_for(&st.nominal_topo, req);
+        let expected = plan
+            .candidates
+            .iter()
+            .find(|c| c.strategy == resolved)
+            .map_or(plan.predicted_s, |c| c.predicted_s);
+        if !expected.is_finite() || expected <= 0.0 {
+            return Ok(());
+        }
+        // Decode rounds end in a barrier, so per-rank clock deltas carry no
+        // signal here — attribute the round to the slowest tier in play.
+        let tier = if st.nominal_topo.n_nodes > 1 { Tier::Inter } else { Tier::Intra };
+        st.health.record_tier(tier, round_lat, expected);
+        for d in st.health.degradations() {
+            if let crate::health::Degradation::DelayRank { rank, factor } = d {
+                crate::tlog!(
+                    Warn,
+                    "health: rank {rank} running {factor:.1}x slower than the cluster median"
+                );
+            }
+        }
+        match st.health.overlay(&st.nominal_topo) {
+            Some(overlay) if !same_pricing(&overlay, &st.planning_topo) => {
+                // Adopt the measured overlay: verify the planner's schedule
+                // candidates for the re-priced shape, evict plans memoized
+                // for the outgoing pricing, and migrate.
+                st.verified_schedules += crate::verifier::verify_planner_candidates(
+                    &overlay,
+                    st.active.len().max(1) * self.shape.n_heads,
+                )?;
+                let (ec, es) = crate::planner::invalidate_topology(&st.planning_topo);
+                st.evicted_plans += ec + es;
+                crate::planner::note_straggler_replan((ec + es) as u64);
+                st.straggler_replans += 1;
+                crate::tlog!(
+                    Warn,
+                    "health: straggler detected; re-planning on measured overlay '{}' ({} plans evicted)",
+                    overlay.name,
+                    ec + es
+                );
+                st.planning_topo = overlay;
+            }
+            None if !same_pricing(&st.planning_topo, &st.nominal_topo) => {
+                // The degradation cleared — fall back to nominal pricing.
+                st.verified_schedules += crate::verifier::verify_planner_candidates(
+                    &st.nominal_topo,
+                    st.active.len().max(1) * self.shape.n_heads,
+                )?;
+                let (ec, es) = crate::planner::invalidate_topology(&st.planning_topo);
+                st.evicted_plans += ec + es;
+                crate::planner::note_straggler_replan((ec + es) as u64);
+                st.straggler_replans += 1;
+                crate::tlog!(
+                    Info,
+                    "health: degradation cleared; re-planning on nominal topology '{}'",
+                    st.nominal_topo.name
+                );
+                st.planning_topo = st.nominal_topo.clone();
+            }
+            _ => {}
+        }
+        Ok(())
     }
 
     /// Oracle for exactness tests: decode `req` ALONE by looping the
@@ -931,24 +1364,39 @@ impl DecodeBatcher {
         backend: &ComputeBackend,
         req: &BatchRequest,
     ) -> anyhow::Result<Vec<Vec<f32>>> {
+        Ok(self.replay_single_with_dens(cluster, backend, req)?.0)
+    }
+
+    /// [`Self::replay_single`] plus each step's final softmax denominators —
+    /// the oracle for the rejoin/heal exactness claims, which assert
+    /// bit-identity of BOTH the outputs and the denominators the
+    /// distributed reduction folded them through.
+    pub fn replay_single_with_dens(
+        &self,
+        cluster: &mut VirtualCluster,
+        backend: &ComputeBackend,
+        req: &BatchRequest,
+    ) -> anyhow::Result<(Vec<Vec<f32>>, Vec<Vec<f32>>)> {
         let p = cluster.world_size();
         let mut rng = self.session_rng(req.id);
         let mut cache = ShardedKvCache::new(self.cache_spec(p));
         let (k_flat, v_flat) = self.gen_prompt_rows(&req.prompt, 0);
         cache.install_shared_prefix(req.prompt.len(), 0, &[k_flat], &[v_flat]);
         let mut outs = Vec::with_capacity(req.max_new_tokens);
+        let mut dens = Vec::with_capacity(req.max_new_tokens);
         for _ in 0..req.max_new_tokens {
             let (q, k_row, v_row) = self.draw_step(&mut rng);
             cache.append_token_layer(0, &k_row, &v_row);
             let shards = Self::shard_views(&cache, p);
             let ctx: usize = shards.iter().map(|s| s.len).sum();
-            let resolved = self.resolve_round(cluster, 1, ctx);
+            let resolved = self.resolve_round(cluster.topology(), 1, ctx);
             let strat = strategy_impl(resolved, self.cfg.algo, self.cfg.wire_bpe)?;
             let outcome = strat.decode(cluster, backend, self.shape, self.scale, &q, &shards)?;
             outs.push(outcome.out);
+            dens.push(outcome.den);
             cache.commit_token()?;
         }
-        Ok(outs)
+        Ok((outs, dens))
     }
 }
 
@@ -1496,6 +1944,184 @@ mod tests {
         for r in &reqs {
             let got = results.iter().find(|x| x.id == r.id).unwrap();
             let mut c2 = VirtualCluster::new(survivor.clone());
+            let want = b.replay_single(&mut c2, &ComputeBackend::Oracle, r).unwrap();
+            assert_eq!(got.outputs.len(), want.len());
+            for (t, (go, wo)) in got.outputs.iter().zip(&want).enumerate() {
+                let d = crate::attnmath::max_abs_diff(go, wo);
+                assert!(d < 1e-4, "request {} token {t}: diff {d}", r.id);
+            }
+        }
+    }
+
+    #[test]
+    fn rejoin_restores_bit_identical_outputs_and_denominators() {
+        // THE elastic-rejoin claim: kill worker 2, heal to 3 workers, then
+        // seat worker 2 back in. The run must end at full strength with
+        // every request's outputs AND softmax denominators bit-identical to
+        // a run that never failed at all — the rejoin re-shards the KV from
+        // content-addressed rows, so no trace of the 3-worker detour may
+        // survive in the numerics.
+        let b = batcher(8, 8, 256);
+        let mut cluster = VirtualCluster::new(flat(4));
+        cluster.world.net.set_fault_plan(crate::netsim::FaultPlan::kill(2, 1));
+        b.rejoin(2);
+        let reqs = vec![req(0, 13, 5), req(1, 40, 5), req(2, 7, 5)];
+        let (results, metrics) =
+            b.run(&mut cluster, &ComputeBackend::Oracle, reqs.clone()).unwrap();
+        assert_eq!(metrics.completed, 3);
+        assert_eq!(metrics.heals, 1);
+        assert_eq!(metrics.rejoins, 1, "the queued rank must re-enter");
+        assert_eq!(metrics.lost_workers, vec![2]);
+        assert!(metrics.resharded_rows > 0, "rejoin must re-shard KV");
+        for r in &reqs {
+            let got = results.iter().find(|x| x.id == r.id).unwrap();
+            assert_eq!(got.finish, FinishReason::Completed);
+            // Oracle: the NEVER-FAILED 4-worker run.
+            let mut c2 = VirtualCluster::new(flat(4));
+            let (want_outs, want_dens) =
+                b.replay_single_with_dens(&mut c2, &ComputeBackend::Oracle, r).unwrap();
+            assert_eq!(got.outputs, want_outs, "request {}: outputs diverged", r.id);
+            assert_eq!(got.dens, want_dens, "request {}: denominators diverged", r.id);
+        }
+    }
+
+    #[test]
+    fn concurrent_two_rank_kills_heal_in_one_pass() {
+        // Two workers die in the SAME round: one heal pass must resolve the
+        // full survivor set (not two sequential heals), and the outputs must
+        // match solo replays on the 2-worker survivor topology.
+        let b = batcher(8, 8, 256);
+        let mut cluster = VirtualCluster::new(flat(4));
+        cluster.world.net.set_fault_plan(
+            crate::netsim::FaultPlan::none()
+                .with(1, crate::netsim::FaultKind::KillWorker { rank: 1 })
+                .with(1, crate::netsim::FaultKind::KillWorker { rank: 3 }),
+        );
+        let reqs = vec![req(0, 13, 4), req(1, 21, 4)];
+        let (results, metrics) =
+            b.run(&mut cluster, &ComputeBackend::Oracle, reqs.clone()).unwrap();
+        assert_eq!(metrics.completed, 2);
+        assert_eq!(metrics.heals, 1, "one pass must absorb both deaths");
+        assert_eq!(metrics.lost_workers, vec![1, 3]);
+        let survivor = flat(4).degraded(2);
+        for r in &reqs {
+            let got = results.iter().find(|x| x.id == r.id).unwrap();
+            let mut c2 = VirtualCluster::new(survivor.clone());
+            let want = b.replay_single(&mut c2, &ComputeBackend::Oracle, r).unwrap();
+            assert_eq!(got.outputs, want, "request {}", r.id);
+        }
+    }
+
+    #[test]
+    fn cascading_kill_after_heal_heals_again() {
+        // A second worker dies one round after the first heal. The fault
+        // schedule must survive the cluster rebuild (renumbered to the
+        // survivor seating), fire on the renumbered rank, and trigger a
+        // second heal — ending bit-identical to a 2-worker replay.
+        let b = batcher(8, 8, 256);
+        let mut cluster = VirtualCluster::new(flat(4));
+        cluster.world.net.set_fault_plan(
+            crate::netsim::FaultPlan::none()
+                .with(1, crate::netsim::FaultKind::KillWorker { rank: 1 })
+                .with(2, crate::netsim::FaultKind::KillWorker { rank: 2 }),
+        );
+        let reqs = vec![req(0, 13, 5), req(1, 21, 5)];
+        let (results, metrics) =
+            b.run(&mut cluster, &ComputeBackend::Oracle, reqs.clone()).unwrap();
+        assert_eq!(metrics.completed, 2);
+        assert_eq!(metrics.heals, 2, "the carried fault must fire post-rebuild");
+        assert_eq!(metrics.lost_workers, vec![1, 2]);
+        let survivor = flat(4).degraded(2);
+        for r in &reqs {
+            let got = results.iter().find(|x| x.id == r.id).unwrap();
+            let mut c2 = VirtualCluster::new(survivor.clone());
+            let want = b.replay_single(&mut c2, &ComputeBackend::Oracle, r).unwrap();
+            assert_eq!(got.outputs, want, "request {}", r.id);
+        }
+    }
+
+    #[test]
+    fn rejoin_then_kill_fires_the_parked_fault() {
+        // Worker 2 dies, rejoins, then dies AGAIN from a fault that was
+        // parked (unseated) while it was out of the cluster. The schedule
+        // is kept in original numbering precisely so this re-arming works.
+        let b = batcher(8, 8, 256);
+        let mut cluster = VirtualCluster::new(flat(4));
+        cluster.world.net.set_fault_plan(
+            crate::netsim::FaultPlan::none()
+                .with(1, crate::netsim::FaultKind::KillWorker { rank: 2 })
+                .with(3, crate::netsim::FaultKind::KillWorker { rank: 2 }),
+        );
+        b.rejoin(2);
+        let reqs = vec![req(0, 13, 6), req(1, 7, 6)];
+        let (results, metrics) =
+            b.run(&mut cluster, &ComputeBackend::Oracle, reqs.clone()).unwrap();
+        assert_eq!(metrics.completed, 2);
+        assert_eq!(metrics.rejoins, 1);
+        assert_eq!(metrics.heals, 2, "the parked kill must fire after rejoin");
+        assert_eq!(metrics.lost_workers, vec![2, 2], "same worker lost twice");
+        // The final heal re-shards everything onto the 3 survivors, so the
+        // whole history must match a 3-worker replay.
+        let survivor = flat(4).degraded(3);
+        for r in &reqs {
+            let got = results.iter().find(|x| x.id == r.id).unwrap();
+            let mut c2 = VirtualCluster::new(survivor.clone());
+            let want = b.replay_single(&mut c2, &ComputeBackend::Oracle, r).unwrap();
+            assert_eq!(got.outputs, want, "request {}", r.id);
+        }
+    }
+
+    #[test]
+    fn quorum_loss_surfaces_typed_heal_error() {
+        // Killing EVERY worker leaves nothing to heal onto: the run must
+        // fail with the typed HealError (downcastable through the anyhow
+        // chain), not a panic or a generic string.
+        let b = batcher(4, 8, 256);
+        let mut cluster = VirtualCluster::new(flat(2));
+        cluster.world.net.set_fault_plan(
+            crate::netsim::FaultPlan::none()
+                .with(0, crate::netsim::FaultKind::KillWorker { rank: 0 })
+                .with(0, crate::netsim::FaultKind::KillWorker { rank: 1 }),
+        );
+        let reqs = vec![req(0, 9, 3)];
+        let err = b.run(&mut cluster, &ComputeBackend::Oracle, reqs).unwrap_err();
+        match err.downcast_ref::<HealError>() {
+            Some(HealError::QuorumLost { survivors }) => assert_eq!(*survivors, 0),
+            other => panic!("expected QuorumLost, got {other:?} in: {err:#}"),
+        }
+    }
+
+    #[test]
+    fn delayed_rank_triggers_straggler_replan_under_auto() {
+        // A 1ms-per-message straggler dwarfs the microsecond-scale rounds:
+        // the health monitor's expectation band must trip, adopt a measured
+        // overlay, and count a straggler re-plan — while the run completes
+        // and stays exact (to fp tolerance) against solo replays.
+        let shape = AttnShape::new(1, 4, 2, 8);
+        let b = DecodeBatcher::new(
+            shape,
+            0.3,
+            BatcherConfig { max_batch: 4, seed: 45, ..Default::default() },
+        );
+        assert!(b.cfg.strategy.is_auto());
+        let mut cluster = VirtualCluster::new(flat(4));
+        cluster.world.net.set_fault_plan(
+            crate::netsim::FaultPlan::none()
+                .with(1, crate::netsim::FaultKind::DelayRank { rank: 1, extra_s: 1e-3 }),
+        );
+        let reqs = vec![req(0, 13, 6), req(1, 29, 6)];
+        let (results, metrics) =
+            b.run(&mut cluster, &ComputeBackend::Oracle, reqs.clone()).unwrap();
+        assert_eq!(metrics.completed, 2);
+        assert_eq!(metrics.heals, 0, "a slow rank is degraded, not dead");
+        assert!(
+            metrics.straggler_replans >= 1,
+            "the measured overlay must be adopted at least once"
+        );
+        assert!(metrics.verified_schedules > 0, "adopted overlays pass the verifier");
+        for r in &reqs {
+            let got = results.iter().find(|x| x.id == r.id).unwrap();
+            let mut c2 = VirtualCluster::new(flat(4));
             let want = b.replay_single(&mut c2, &ComputeBackend::Oracle, r).unwrap();
             assert_eq!(got.outputs.len(), want.len());
             for (t, (go, wo)) in got.outputs.iter().zip(&want).enumerate() {

@@ -19,7 +19,7 @@ pub mod batcher;
 pub use batcher::{
     synthetic_decode_workload, synthetic_multiturn_workload, synthetic_shared_prefix_workload,
     BatchMetrics, BatchRequest, BatchResult, BatcherConfig, DecodeBatcher, FinishReason,
-    TreeBatcher,
+    HealError, TreeBatcher,
 };
 
 use crate::cluster::VirtualCluster;

@@ -226,12 +226,46 @@ impl Topology {
         assert!(survivors >= 1, "degraded topology needs at least one survivor");
         let single = self.n_nodes == 1;
         Topology {
-            name: format!("{}-deg{survivors}", self.name),
+            name: format!("{}-deg{survivors}", Self::undegraded_name(&self.name)),
             n_nodes: 1,
             gpus_per_node: survivors,
             gpu: self.gpu,
             intra: if single { self.intra } else { self.inter },
             inter: self.inter,
+        }
+    }
+
+    /// Strip a trailing `-deg<N>` suffix so cascading heals compose:
+    /// `degraded(a).degraded(b)` must name (and therefore plan-cache) the
+    /// same shape as `degraded(b)` directly.
+    fn undegraded_name(name: &str) -> &str {
+        if let Some(idx) = name.rfind("-deg") {
+            let digits = &name[idx + 4..];
+            if !digits.is_empty() && digits.bytes().all(|b| b.is_ascii_digit()) {
+                return &name[..idx];
+            }
+        }
+        name
+    }
+
+    /// A copy of this topology whose link tiers are replaced by *measured*
+    /// specs — the health monitor's EWMA estimates of what the fabric is
+    /// actually delivering. The name gains a `-measured` suffix exactly once
+    /// so planner cache entries for the overlay never alias the nominal
+    /// topology, and re-measuring stays idempotent on the name.
+    pub fn with_measured_links(&self, intra: LinkSpec, inter: LinkSpec) -> Topology {
+        let name = if self.name.ends_with("-measured") {
+            self.name.clone()
+        } else {
+            format!("{}-measured", self.name)
+        };
+        Topology {
+            name,
+            n_nodes: self.n_nodes,
+            gpus_per_node: self.gpus_per_node,
+            gpu: self.gpu,
+            intra,
+            inter,
         }
     }
 
@@ -330,6 +364,58 @@ mod tests {
         );
         // Distinct shapes must never share planner cache entries.
         assert_ne!(multi.name, Topology::h100_dgx(2).name);
+    }
+
+    #[test]
+    fn degraded_composes_like_single_application() {
+        // Cascading heal applies `degraded` twice; the result must be
+        // indistinguishable (links, rank numbering, planner-cache name) from
+        // degrading straight to the final survivor count.
+        for topo in [Topology::h100_dgx(2), Topology::rtx4090_pcie(8), Topology::mi300x(2, 4)] {
+            let twice = topo.degraded(6).degraded(3);
+            let once = topo.degraded(3);
+            assert_eq!(twice.name, once.name, "{}: names must compose", topo.name);
+            assert_eq!(twice.world_size(), once.world_size());
+            assert_eq!(twice.n_nodes, once.n_nodes);
+            assert_eq!(twice.gpus_per_node, once.gpus_per_node);
+            assert_eq!(twice.intra, once.intra, "{}: intra spec", topo.name);
+            assert_eq!(twice.inter, once.inter, "{}: inter spec", topo.name);
+            // Rank numbering stays dense node-major in both.
+            for r in 0..once.world_size() {
+                assert_eq!(twice.node_of(r), once.node_of(r));
+                assert_eq!(twice.local_of(r), once.local_of(r));
+            }
+        }
+        // A name that merely *contains* "-deg" without digits is untouched.
+        let odd = Topology::custom(
+            "my-degenerate-rig",
+            1,
+            4,
+            GpuKind::Rtx4090,
+            LinkSpec::pcie4(),
+            LinkSpec::roce(),
+        );
+        assert_eq!(odd.degraded(2).name, "my-degenerate-rig-deg2");
+    }
+
+    #[test]
+    fn measured_overlay_swaps_links_and_tags_name_once() {
+        let base = Topology::h100_dgx(2);
+        let slow_intra = LinkSpec {
+            class: base.intra.class,
+            bandwidth_bps: base.intra.bandwidth_bps / 8.0,
+            latency_s: base.intra.latency_s * 8.0,
+        };
+        let overlay = base.with_measured_links(slow_intra, base.inter);
+        assert_eq!(overlay.name, "h100-dgx-2node-measured");
+        assert_eq!(overlay.world_size(), base.world_size());
+        assert_eq!(overlay.intra, slow_intra);
+        assert_eq!(overlay.inter, base.inter);
+        // Re-measuring is idempotent on the name (no suffix pile-up).
+        let again = overlay.with_measured_links(base.intra, base.inter);
+        assert_eq!(again.name, "h100-dgx-2node-measured");
+        // Distinct shapes must never share planner cache entries.
+        assert_ne!(overlay.name, base.name);
     }
 
     #[test]

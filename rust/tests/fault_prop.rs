@@ -17,8 +17,9 @@ use tree_attention::attnmath::{max_abs_diff, ref_attention, AttnShape};
 use tree_attention::cluster::VirtualCluster;
 use tree_attention::collectives::AllReduceAlgo;
 use tree_attention::gpumodel::GpuKind;
-use tree_attention::netsim::{degraded_workers, FaultPlan};
+use tree_attention::netsim::{degraded_workers, FaultKind, FaultPlan};
 use tree_attention::planner::{resolve_strategy, StrategyRequest};
+use tree_attention::serve::{BatchRequest, BatcherConfig, DecodeBatcher, FinishReason};
 use tree_attention::topology::{LinkSpec, Topology};
 use tree_attention::util::prop::check;
 use tree_attention::util::Rng;
@@ -166,6 +167,207 @@ fn any_single_kill_degrades_typed_and_survivors_match_fresh_run() {
                 max_abs_diff(&h.out, &reference) < 1e-4,
                 "round {r}: survivor output deviates from oracle (p={p}, strat={resolved_s:?})"
             );
+        }
+    });
+}
+
+fn prop_batcher(strategy: Strategy, seed: u64) -> DecodeBatcher {
+    DecodeBatcher::new(
+        AttnShape::new(1, 4, 2, 8),
+        0.3,
+        BatcherConfig {
+            max_batch: 4,
+            page_size: 8,
+            pages_per_worker: 256,
+            strategy,
+            algo: AllReduceAlgo::Tree { fanout: 2 }, // full-buffer: bit-exact combine
+            wire_bpe: 2,
+            seed,
+            prefix_share: false,
+        },
+    )
+}
+
+/// Compare a batched run's outputs against solo replays on `replay_topo`.
+/// Pinned strategies must be bit-identical; `Strategy::Auto` may resolve the
+/// batched and solo points differently, so it gets fp tolerance instead.
+fn assert_matches_replay(
+    b: &DecodeBatcher,
+    reqs: &[BatchRequest],
+    results: &[tree_attention::serve::BatchResult],
+    replay_topo: &Topology,
+    exact: bool,
+    tag: &str,
+) {
+    for r in reqs {
+        let got = results.iter().find(|x| x.id == r.id).unwrap();
+        assert_eq!(got.finish, FinishReason::Completed, "{tag}: request {}", r.id);
+        let mut c2 = VirtualCluster::new(replay_topo.clone());
+        let want = b.replay_single(&mut c2, &ComputeBackend::Oracle, r).unwrap();
+        if exact {
+            assert_eq!(got.outputs, want, "{tag}: request {} outputs diverged", r.id);
+        } else {
+            assert_eq!(got.outputs.len(), want.len(), "{tag}: request {}", r.id);
+            for (t, (go, wo)) in got.outputs.iter().zip(&want).enumerate() {
+                let d = max_abs_diff(go, wo);
+                assert!(d < 1e-4, "{tag}: request {} token {t}: diff {d}", r.id);
+            }
+        }
+    }
+}
+
+#[test]
+fn concurrent_double_kill_heals_once_and_matches_survivor_replay() {
+    // Two workers die in the SAME round — under tree, ring, and auto, on
+    // world sizes including non-powers-of-two — and the batcher must resolve
+    // the full survivor set in ONE heal pass, then match solo replays on the
+    // (p−2)-worker topology.
+    check("kill(two ranks, same round) -> one heal + survivor match", 10, |g| {
+        let p = 3 + g.usize_in(0..14); // 3..=16
+        let kill_round = g.usize_in(0..3);
+        let v1 = g.usize_in(0..p);
+        let mut v2 = g.usize_in(0..p - 1);
+        if v2 >= v1 {
+            v2 += 1;
+        }
+        let strategy = *g.choose(&[Strategy::Tree, Strategy::Ring, Strategy::Auto]);
+        let b = prop_batcher(strategy, 7);
+        let mut cluster = VirtualCluster::new(flat(p));
+        cluster.world.net.set_fault_plan(
+            FaultPlan::none()
+                .with(kill_round, FaultKind::KillWorker { rank: v1 })
+                .with(kill_round, FaultKind::KillWorker { rank: v2 }),
+        );
+        let reqs =
+            vec![BatchRequest::synthetic(0, 2 * p + 5, 4), BatchRequest::synthetic(1, 2 * p + 11, 4)];
+        let (results, metrics) =
+            b.run(&mut cluster, &ComputeBackend::Oracle, reqs.clone()).unwrap();
+        assert_eq!(metrics.completed, 2, "p={p} v=({v1},{v2})");
+        assert_eq!(metrics.heals, 1, "one pass must absorb both deaths (p={p})");
+        assert_eq!(metrics.lost_workers, vec![v1.min(v2), v1.max(v2)]);
+        let survivor = flat(p).degraded(p - 2);
+        assert_matches_replay(
+            &b,
+            &reqs,
+            &results,
+            &survivor,
+            !strategy.is_auto(),
+            &format!("double-kill p={p} strat={strategy:?}"),
+        );
+    });
+}
+
+#[test]
+fn cascading_kill_after_heal_matches_final_survivor_replay() {
+    // A second worker (named in ORIGINAL numbering) dies after the first
+    // heal rebuilt and renumbered the cluster: the carried fault schedule
+    // must fire on the renumbered seat and the final outputs must match a
+    // (p−2)-worker replay bit for bit.
+    check("kill(v1, r), kill(v2, r') across a rebuild -> survivor match", 10, |g| {
+        let p = 4 + g.usize_in(0..13); // 4..=16
+        let r1 = g.usize_in(0..2);
+        let r2 = r1 + 1 + g.usize_in(0..2); // strictly after the first heal
+        let v1 = g.usize_in(0..p);
+        let mut v2 = g.usize_in(0..p - 1);
+        if v2 >= v1 {
+            v2 += 1;
+        }
+        let b = prop_batcher(Strategy::Tree, 11);
+        let mut cluster = VirtualCluster::new(flat(p));
+        cluster.world.net.set_fault_plan(
+            FaultPlan::none()
+                .with(r1, FaultKind::KillWorker { rank: v1 })
+                .with(r2, FaultKind::KillWorker { rank: v2 }),
+        );
+        let reqs =
+            vec![BatchRequest::synthetic(0, 2 * p + 3, 5), BatchRequest::synthetic(1, 2 * p + 9, 5)];
+        let (results, metrics) =
+            b.run(&mut cluster, &ComputeBackend::Oracle, reqs.clone()).unwrap();
+        assert_eq!(metrics.completed, 2, "p={p} v=({v1}@{r1},{v2}@{r2})");
+        assert_eq!(metrics.heals, 2, "the carried kill must fire post-rebuild (p={p})");
+        assert_eq!(metrics.lost_workers, vec![v1, v2], "losses in chronological order");
+        let survivor = flat(p).degraded(p - 2);
+        assert_matches_replay(
+            &b,
+            &reqs,
+            &results,
+            &survivor,
+            true,
+            &format!("cascade p={p} v1={v1}@{r1} v2={v2}@{r2}"),
+        );
+    });
+}
+
+#[test]
+fn rejoin_then_kill_matches_survivor_replay_for_any_victim() {
+    // Elastic rejoin under fire: any victim on any world size dies, rejoins
+    // at full strength, then dies AGAIN from a fault parked while it was
+    // out. Two heals + one rejoin, ending bit-identical to a (p−1) replay.
+    check("kill(v,1) + rejoin(v) + kill(v,3) -> bit-identical (p-1) run", 10, |g| {
+        let p = 3 + g.usize_in(0..14); // 3..=16
+        let v = g.usize_in(0..p);
+        let b = prop_batcher(Strategy::Tree, 13);
+        let mut cluster = VirtualCluster::new(flat(p));
+        cluster.world.net.set_fault_plan(
+            FaultPlan::none()
+                .with(1, FaultKind::KillWorker { rank: v })
+                .with(3, FaultKind::KillWorker { rank: v }),
+        );
+        b.rejoin(v);
+        let reqs =
+            vec![BatchRequest::synthetic(0, 2 * p + 5, 6), BatchRequest::synthetic(1, 2 * p + 7, 6)];
+        let (results, metrics) =
+            b.run(&mut cluster, &ComputeBackend::Oracle, reqs.clone()).unwrap();
+        assert_eq!(metrics.completed, 2, "p={p} v={v}");
+        assert_eq!(metrics.rejoins, 1, "p={p} v={v}");
+        assert_eq!(metrics.heals, 2, "parked kill must fire after rejoin (p={p} v={v})");
+        assert_eq!(metrics.lost_workers, vec![v, v], "same worker lost twice");
+        let survivor = flat(p).degraded(p - 1);
+        assert_matches_replay(&b, &reqs, &results, &survivor, true, &format!("rejoin p={p} v={v}"));
+    });
+}
+
+#[test]
+fn transient_corruption_is_absorbed_bit_identically_under_any_strategy() {
+    // A bounded payload-corruption burst on any rank must be caught by the
+    // checksum layer, retried through, and leave outputs bit-identical to
+    // the fault-free run — no heal, under tree, ring, and auto.
+    check("corrupt(rank, count<=2) -> retries, no heal, identical outputs", 10, |g| {
+        let p = 2 + g.usize_in(0..15); // 2..=16
+        let victim = g.usize_in(0..p);
+        let round = g.usize_in(0..3);
+        let count = 1 + g.usize_in(0..2) as u32;
+        let strategy = *g.choose(&[Strategy::Tree, Strategy::Ring, Strategy::Auto]);
+        let b = prop_batcher(strategy, 17);
+        let reqs =
+            vec![BatchRequest::synthetic(0, 2 * p + 5, 4), BatchRequest::synthetic(1, 2 * p + 9, 4)];
+        let mut healthy = VirtualCluster::new(flat(p));
+        let (want, _) = b.run(&mut healthy, &ComputeBackend::Oracle, reqs.clone()).unwrap();
+        let mut cluster = VirtualCluster::new(flat(p));
+        cluster.world.net.set_fault_plan(
+            FaultPlan::none().with(round, FaultKind::CorruptPayload { rank: victim, count }),
+        );
+        let (got, metrics) = b.run(&mut cluster, &ComputeBackend::Oracle, reqs).unwrap();
+        assert_eq!(metrics.heals, 0, "corruption is transient, never degrades (p={p})");
+        assert!(metrics.fault.corruptions > 0, "checksum must catch the flip (p={p} v={victim})");
+        assert!(metrics.fault.retries > 0, "corrupt messages must be resent (p={p})");
+        for (g_res, w) in got.iter().zip(&want) {
+            assert_eq!(g_res.id, w.id);
+            if strategy.is_auto() {
+                // Retry latency can trip the health band and migrate the
+                // plan mid-run; Auto may then resolve other (equally
+                // correct) strategies than the fault-free run did.
+                assert_eq!(g_res.outputs.len(), w.outputs.len());
+                for (t, (go, wo)) in g_res.outputs.iter().zip(&w.outputs).enumerate() {
+                    let d = max_abs_diff(go, wo);
+                    assert!(d < 1e-4, "p={p} v={victim} token {t}: diff {d}");
+                }
+            } else {
+                assert_eq!(
+                    g_res.outputs, w.outputs,
+                    "p={p} v={victim} strat={strategy:?}: corruption changed data"
+                );
+            }
         }
     });
 }
